@@ -1,0 +1,81 @@
+//! BC workload-distribution demo (paper §2.6, Figs 6/8/10 in miniature).
+//!
+//! Compares the legacy static-randomized BC against BC-G on the same
+//! R-MAT graph: prints per-place busy times, means and standard
+//! deviations — the paper's headline BC result is the σ collapse
+//! (e.g. 4.027 → 1.141 on BGQ; 58.463 → 1.482 on Power 775).
+//!
+//! ```bash
+//! cargo run --release --example bc_workload [scale] [places]
+//! ```
+
+use std::sync::Arc;
+
+use glb::apps::bc::{Graph, InterruptibleBcQueue, RmatParams};
+use glb::baselines::legacy_bc::run_legacy_bc_sim;
+use glb::glb::task_queue::VecSumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::harness::calibrate_bc_cost;
+use glb::sim::{run_sim, BGQ};
+use glb::util::stats::{mean, stddev};
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let scale: u32 = args.next().and_then(|s| s.parse().ok()).unwrap_or(12);
+    let places: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(32);
+
+    let g = Arc::new(Graph::rmat(RmatParams { scale, ..Default::default() }));
+    println!("R-MAT scale {scale}: n={} m={}, {places} places (BGQ profile)\n", g.n(), g.m());
+    let cost = calibrate_bc_cost(&g);
+
+    // Legacy: static randomized, no stealing.
+    let legacy = run_legacy_bc_sim(&g, places, 42, cost.ns_per_unit, BGQ.compute_scale);
+    let legacy_s: Vec<f64> = legacy.busy_ns.iter().map(|&x| x as f64 / 1e9).collect();
+
+    // BC-G: same static seed layout, stealing enabled — the paper's
+    // final variant: interruptible vertices (§2.6.2), max w, minimal
+    // effective granularity (8192-edge chunks).
+    let n = g.n() as u32;
+    let gg = g.clone();
+    let cfg = GlbConfig::new(places, GlbParams::default().with_n(8192).with_w(4).with_l(2));
+    let (run, _) = run_sim(
+        &cfg,
+        &BGQ,
+        cost,
+        move |i, np| {
+            let mut q = InterruptibleBcQueue::new(gg.clone());
+            let per = n / np as u32;
+            let lo = i as u32 * per;
+            let hi = if i == np - 1 { n } else { lo + per };
+            q.assign(lo, hi);
+            q
+        },
+        |_| {},
+        &VecSumReducer,
+    );
+    let glb_s: Vec<f64> = run.log.per_place.iter().map(|s| s.process_ns as f64 / 1e9).collect();
+
+    // The maps must agree (same graph, same sources).
+    let max_err = run
+        .result
+        .iter()
+        .zip(&legacy.bc)
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0f64, f64::max);
+    println!("betweenness maps agree to {max_err:.2e} (legacy vs GLB)\n");
+    assert!(max_err < 1e-9);
+
+    println!("workload distribution (busy seconds per place, virtual):");
+    println!("  BC   : mean={:.4} sd={:.4} makespan={:.4}", mean(&legacy_s), stddev(&legacy_s), legacy.elapsed_ns as f64 / 1e9);
+    println!("  BC-G : mean={:.4} sd={:.4} makespan={:.4}", mean(&glb_s), stddev(&glb_s), run.elapsed_ns as f64 / 1e9);
+    let improvement = stddev(&legacy_s) / stddev(&glb_s).max(1e-12);
+    println!("\nGLB reduced the workload σ by {improvement:.1}x");
+
+    // A terminal bar chart, like the paper's bundled bars.
+    let max = legacy_s.iter().cloned().fold(0.0f64, f64::max).max(1e-12);
+    println!("\nplace  BC {:28} BC-G", "");
+    for i in 0..places.min(40) {
+        let bar = |v: f64| "#".repeat((v / max * 28.0).round() as usize);
+        println!("{i:>5}  {:<30} {:<30}", bar(legacy_s[i]), bar(glb_s[i]));
+    }
+}

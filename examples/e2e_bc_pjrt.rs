@@ -1,0 +1,91 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Proves all layers compose on the request path:
+//!
+//!   L3 rust GLB workers (threads, lifeline stealing, termination)
+//!     -> vertex-interval tasks drained in batches
+//!   L2/L1 AOT artifact (JAX batched Brandes calling the Pallas frontier
+//!     kernel, lowered to HLO text at `make artifacts`)
+//!     -> executed through the PJRT CPU client (runtime::DeviceService)
+//!
+//! on the SSCA2 kernel-4 workload (R-MAT graph, exact betweenness), and
+//! reports the paper's headline metric (edges/s + per-place balance),
+//! cross-validated against the sparse CPU engine.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_bc_pjrt
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
+use glb::glb::task_queue::VecSumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::run_threads;
+use glb::runtime::{default_artifact_dir, DeviceService};
+use glb::util::timefmt::{fmt_ns, fmt_rate};
+
+fn main() -> anyhow::Result<()> {
+    let scale = 8u32; // 256 vertices -> matches the default n=256 artifact
+    let places = 4usize;
+    let g = Arc::new(Graph::rmat(RmatParams { scale, ..Default::default() }));
+    println!("[1/4] workload: SSCA2 R-MAT scale {scale} (n={}, m={})", g.n(), g.m());
+
+    let t = Instant::now();
+    let svc = DeviceService::start(&default_artifact_dir(), g.dense_adjacency(), g.n())?;
+    let handle = svc.handle();
+    println!(
+        "[2/4] PJRT engine up in {}: batched Brandes artifact n={} S={}",
+        fmt_ns(t.elapsed().as_nanos() as u64),
+        handle.n(),
+        handle.batch()
+    );
+
+    let n = g.n() as u32;
+    let cfg = GlbConfig::new(places, GlbParams::default().with_n(64).with_l(2));
+    let t = Instant::now();
+    let h2 = handle.clone();
+    let out = run_threads(
+        &cfg,
+        move |_, _| BcQueue::dense(h2.clone()),
+        |q| q.assign(0, n),
+        &VecSumReducer,
+    );
+    let wall = t.elapsed().as_nanos() as u64;
+    let edges: u64 = out.log.per_place.iter().map(|s| s.units).sum();
+    println!(
+        "[3/4] GLB run: {places} places, {} edges traversed in {} -> {}",
+        edges,
+        fmt_ns(wall),
+        fmt_rate(edges as f64 * 1e9 / wall as f64)
+    );
+    for (i, s) in out.log.per_place.iter().enumerate() {
+        println!(
+            "      place {i}: {:>9} edges, {:>3} chunks, {} loot bags in",
+            s.units, s.chunks, s.loot_bags_received
+        );
+    }
+
+    let t = Instant::now();
+    let (want, want_edges) = sequential_bc(&g);
+    let sparse_ns = t.elapsed().as_nanos() as u64;
+    let max_err = out
+        .result
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0f64, f64::max);
+    println!(
+        "[4/4] validation vs sparse CPU Brandes ({}): max rel err {max_err:.2e}, edges {} vs {}",
+        fmt_ns(sparse_ns),
+        edges,
+        want_edges
+    );
+    anyhow::ensure!(max_err < 1e-3, "betweenness mismatch");
+    anyhow::ensure!(edges == want_edges, "edge-count mismatch");
+    println!("\nE2E OK: all three layers compose.");
+    Ok(())
+}

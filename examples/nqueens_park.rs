@@ -1,0 +1,38 @@
+//! N-Queens state-space search (paper §2.1's example domain), with the
+//! per-worker accounting table (§2.4's logging feature).
+//!
+//! ```bash
+//! cargo run --release --example nqueens_park [board-size] [places]
+//! ```
+
+use glb::apps::nqueens::{NQueensQueue, KNOWN};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::run_threads;
+use glb::util::timefmt::fmt_ns;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let board: u8 = args.next().and_then(|s| s.parse().ok()).unwrap_or(11);
+    let places: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(6);
+
+    let cfg = GlbConfig::new(places, GlbParams::default().with_n(128).with_l(2));
+    let out = run_threads(
+        &cfg,
+        move |_, _| NQueensQueue::new(board),
+        |q| q.init_root(),
+        &SumReducer,
+    );
+
+    println!(
+        "nqueens({board}) = {} solutions in {} on {places} places",
+        out.result,
+        fmt_ns(out.elapsed_ns)
+    );
+    if (board as usize) < KNOWN.len() {
+        assert_eq!(out.result, KNOWN[board as usize], "known count mismatch");
+        println!("matches the known count ✓");
+    }
+    println!("\nper-worker log (paper §2.4):");
+    print!("{}", out.log.render());
+}

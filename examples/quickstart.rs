@@ -1,0 +1,38 @@
+//! Quickstart: the paper's appendix Fibonacci example, in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Mirrors Fig. 11 of the paper: the user supplies a `TaskQueue`
+//! (here the prebuilt [`FibQueue`]), a root initializer, and a reducer;
+//! GLB handles distribution, stealing, termination and reduction.
+
+use glb::apps::fib::{fib, FibQueue};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::run_threads;
+
+fn main() {
+    let n = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(26u64);
+    let places = 4;
+
+    // GLBParameters.Default equivalent; see paper §2.4 for n/w/l/z.
+    let cfg = GlbConfig::new(places, GlbParams::default().with_n(256));
+
+    let out = run_threads(
+        &cfg,
+        |_place, _p| FibQueue::new(), // queue factory, one per place
+        |q| q.init(n),                // root task at place 0
+        &SumReducer,                  // commutative+associative reduce
+    );
+
+    println!("fib-glb({n}) = {} (expected {})", out.result, fib(n));
+    println!(
+        "{} places, {} tasks processed, {} steal responses shipped work",
+        places,
+        out.log.total().items_processed,
+        out.log.total().loot_bags_received,
+    );
+    assert_eq!(out.result, fib(n));
+}

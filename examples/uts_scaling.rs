@@ -1,0 +1,52 @@
+//! UTS scaling demo (paper §2.5, Figs 2–4 in miniature).
+//!
+//! Runs UTS-G on the thread runtime across 1..=8 oversubscribed places
+//! (functional check), then sweeps 1..=1024 simulated places on the
+//! Blue Gene/Q profile and prints the throughput/efficiency series —
+//! the same curve shape as the paper's Figure 3.
+//!
+//! ```bash
+//! cargo run --release --example uts_scaling [depth]
+//! ```
+
+use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::harness::{calibrate_uts_cost, Table};
+use glb::place::run_threads;
+use glb::sim::{run_sim, BGQ};
+use glb::util::timefmt::fmt_rate;
+
+fn main() {
+    let depth = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(9u32);
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: depth };
+    let expect = sequential_count(&up);
+    println!("geometric tree b0=4 r=19 d={depth}: {expect} nodes\n");
+
+    // Functional: real threads.
+    for p in [1usize, 2, 4, 8] {
+        let cfg = GlbConfig::new(p, GlbParams::default());
+        let out = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        assert_eq!(out.result, expect);
+        println!(
+            "threads p={p:<2} -> {} (wall, 1-core oversubscribed)",
+            fmt_rate(out.units_per_sec())
+        );
+    }
+
+    // Scaling shape: the BGQ-profile simulator.
+    println!("\nsimulated Blue Gene/Q sweep (virtual time):");
+    let cost = calibrate_uts_cost();
+    let mut table = Table::new(&["places", "nodes/s", "efficiency"]);
+    let mut base = None;
+    for p in [1usize, 4, 16, 64, 256, 1024] {
+        let cfg = GlbConfig::new(p, GlbParams::default());
+        let (out, _) =
+            run_sim(&cfg, &BGQ, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        assert_eq!(out.result, expect);
+        let rate = out.units_per_sec();
+        let b = *base.get_or_insert(rate);
+        table.row(&[p.to_string(), fmt_rate(rate), format!("{:.3}", rate / p as f64 / b)]);
+    }
+    print!("{}", table.render());
+}

@@ -1,0 +1,106 @@
+"""L1 kernel resource analysis: VMEM footprint + MXU utilization
+estimates for the Pallas frontier matmul on real TPU hardware.
+
+`interpret=True` gives CPU-numpy timings only, which are *not* a TPU
+proxy — so TPU efficiency is estimated structurally from the BlockSpec,
+per the DESIGN.md §8 methodology:
+
+* VMEM working set = A tile + X tile + output accumulator (f32), double-
+  buffered for the HBM→VMEM pipeline;
+* MXU work = 2·N·K·S FLOPs per batch; utilization bound = ratio of
+  MXU-shaped dims (multiples of 128 fill the systolic array; smaller
+  S under-fills the lane dimension);
+* HBM traffic per batch = A streamed once per S-panel + X/O tiles.
+
+Usage:  python -m compile.analysis [--n 256 --s 64]
+Also consumed by tests (pure functions, no side effects).
+"""
+
+import argparse
+from dataclasses import dataclass
+
+from .kernels.bc_frontier import vmem_bytes
+
+MXU_DIM = 128  # systolic array edge (TPU v2+)
+VMEM_BUDGET = 16 << 20  # ~16 MiB/core
+
+
+@dataclass
+class KernelEstimate:
+    n: int
+    k: int
+    s: int
+    bn: int
+    bk: int
+    bs: int
+    vmem_single: int
+    vmem_double_buffered: int
+    flops: int
+    hbm_bytes: int
+    mxu_fill: float
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_double_buffered <= VMEM_BUDGET
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte — compare against the TPU roofline knee."""
+        return self.flops / max(self.hbm_bytes, 1)
+
+
+def estimate(n: int, k: int, s: int, bn: int = 256, bk: int = 256, bs: int = 128) -> KernelEstimate:
+    """Resource estimate for one `frontier_matmul(a[N,K], x[K,S])` call."""
+    bn, bk, bs = min(bn, n), min(bk, k), min(bs, s)
+    single = vmem_bytes(bn, bs, bk)
+    # MXU fill: each dim contributes min(dim, 128)/128 of the array.
+    fill = (min(bn, MXU_DIM) / MXU_DIM) * (min(bs, MXU_DIM) / MXU_DIM)
+    # HBM: A streamed once per S-panel, X once per N-panel, O written once.
+    s_panels = max(s // bs, 1)
+    n_panels = max(n // bn, 1)
+    hbm = 4 * (n * k * s_panels + k * s * n_panels + n * s)
+    return KernelEstimate(
+        n=n,
+        k=k,
+        s=s,
+        bn=bn,
+        bk=bk,
+        bs=bs,
+        vmem_single=single,
+        vmem_double_buffered=2 * single,
+        flops=2 * n * k * s,
+        hbm_bytes=hbm,
+        mxu_fill=fill,
+    )
+
+
+def render_table(shapes) -> str:
+    rows = [
+        f"{'N':>6} {'S':>5} {'tile':>12} {'VMEM(2x)':>10} {'fits':>5} "
+        f"{'MFLOP':>8} {'AI':>6} {'MXU fill':>9}"
+    ]
+    for n, s in shapes:
+        e = estimate(n, n, s)
+        rows.append(
+            f"{e.n:>6} {e.s:>5} {f'{e.bn}x{e.bk}x{e.bs}':>12} "
+            f"{e.vmem_double_buffered / 1024:>9.0f}K {'y' if e.fits_vmem else 'N':>5} "
+            f"{e.flops / 1e6:>8.2f} {e.arithmetic_intensity:>6.1f} {e.mxu_fill:>9.2f}"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=0, help="single shape to analyse")
+    ap.add_argument("--s", type=int, default=64)
+    args = ap.parse_args()
+    shapes = (
+        [(args.n, args.s)]
+        if args.n
+        else [(64, 16), (256, 32), (256, 64), (1024, 128), (4096, 128), (8192, 256)]
+    )
+    print(render_table(shapes))
+
+
+if __name__ == "__main__":
+    main()

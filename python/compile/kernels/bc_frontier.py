@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: blocked frontier matmul for batched Brandes.
+
+The hot operation of dense level-synchronous Brandes is ``A @ X`` where
+``A`` is the (possibly transposed) N x N adjacency and ``X`` an N x S
+batch panel (sigma-weighted frontier on the forward sweep, dependency
+coefficients on the backward sweep).
+
+Hardware adaptation (DESIGN.md "Hardware-Adaptation"): the paper's
+CPU-cluster inner loop becomes an MXU-shaped tiled matmul. ``BlockSpec``
+expresses the HBM->VMEM schedule: the grid walks (rows, batch, K) so each
+(bn x bk) @ (bk x bs) tile pass streams A once per batch column and
+accumulates f32 partials in the output tile, which stays resident across
+the K dimension (``dimension_semantics``: K is the innermost, sequential
+axis). Tile sizes default to 128/256 — MXU-native multiples that keep
+double-buffered tiles well under the ~16 MiB VMEM budget (see
+DESIGN.md section Perf for the footprint table).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs on the rust CPU client. On a real TPU the identical kernel
+body compiles through Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, x_ref, o_ref):
+    """One (bn x bk) @ (bk x bs) tile pass, accumulating into o_ref."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (tiles must evenly
+    divide the operand: Brandes shapes are powers of two by construction,
+    so this is nearly always ``preferred`` itself)."""
+    b = min(dim, preferred)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bs", "bk"))
+def frontier_matmul(a, x, *, bn: int = 256, bs: int = 128, bk: int = 256):
+    """``a @ x`` via the Pallas tiled kernel.
+
+    a: f32[N, K], x: f32[K, S] -> f32[N, S].
+    """
+    n, k = a.shape
+    k2, s = x.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bn = _pick_block(n, bn)
+    bs = _pick_block(s, bs)
+    bk = _pick_block(k, bk)
+    grid = (n // bn, s // bs, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bs), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bs), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, s), jnp.float32),
+        interpret=True,
+    )(a, x)
+
+
+def vmem_bytes(bn: int, bs: int, bk: int) -> int:
+    """Estimated VMEM working set of one grid step (A tile + X tile +
+    output accumulator, f32), for the DESIGN.md roofline table."""
+    return 4 * (bn * bk + bk * bs + bn * bs)

@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy oracles for the L1 kernels and the L2 model.
+
+The CORE correctness chain:
+
+    numpy Brandes (this file, loops, f64)
+      == jnp dense batched Brandes (model.brandes_batch with ref matmul)
+      == Pallas-kernel batched Brandes (model.brandes_batch, default)
+      == rust sparse Brandes (cross-checked in rust tests via fixtures)
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_ref(a, x):
+    """Oracle for kernels.bc_frontier.frontier_matmul."""
+    return jnp.dot(a, x, preferred_element_type=jnp.float32)
+
+
+def uts_expand_ref(h, b0: float = 4.0):
+    """Oracle for kernels.uts_expand.uts_expand (same f32 arithmetic)."""
+    u = (np.asarray(h, dtype=np.uint32) & np.uint32(0x7FFFFFFF)).astype(
+        np.float32
+    ) / np.float32(2**31)
+    p = np.float32(1.0 / (1.0 + b0))
+    return np.floor(np.log1p(-u) / np.log1p(-p)).astype(np.int32)
+
+
+def brandes_ref(adj: np.ndarray, sources) -> tuple[np.ndarray, int]:
+    """Loop-and-queue Brandes in f64 over a dense adjacency.
+
+    Returns (partial betweenness over the given sources, edges traversed).
+    Matches rust/src/apps/bc/brandes.rs semantics (directed edges, ordered
+    pairs, source excluded).
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n)
+    nbrs = [np.nonzero(adj[v])[0] for v in range(n)]
+    bc = np.zeros(n, dtype=np.float64)
+    edges = 0
+    for s in sources:
+        if s < 0:
+            continue
+        dist = np.full(n, -1, dtype=np.int64)
+        sigma = np.zeros(n, dtype=np.float64)
+        dist[s] = 0
+        sigma[s] = 1.0
+        order = [s]
+        head = 0
+        while head < len(order):
+            v = order[head]
+            head += 1
+            for w in nbrs[v]:
+                edges += 1
+                if dist[w] < 0:
+                    dist[w] = dist[v] + 1
+                    order.append(w)
+                if dist[w] == dist[v] + 1:
+                    sigma[w] += sigma[v]
+        delta = np.zeros(n, dtype=np.float64)
+        for v in reversed(order):
+            for w in nbrs[v]:
+                if dist[w] == dist[v] + 1:
+                    delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+            if v != s:
+                bc[v] += delta[v]
+    return bc, edges
+
+
+def random_adjacency(n: int, density: float, seed: int) -> np.ndarray:
+    """Random directed 0/1 adjacency without self-loops."""
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def path_adjacency(n: int) -> np.ndarray:
+    """Undirected path as a dense adjacency."""
+    adj = np.zeros((n, n), dtype=np.float32)
+    for i in range(n - 1):
+        adj[i, i + 1] = 1.0
+        adj[i + 1, i] = 1.0
+    return adj
+
+
+def star_adjacency(k: int) -> np.ndarray:
+    """Undirected star: center 0, k leaves."""
+    adj = np.zeros((k + 1, k + 1), dtype=np.float32)
+    for i in range(1, k + 1):
+        adj[0, i] = 1.0
+        adj[i, 0] = 1.0
+    return adj

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: vectorized UTS geometric child counts.
+
+Demonstrates the integer/elementwise Pallas path: given a batch of node
+hash words (the first 32 bits of each UTS descriptor), produce each
+node's child count under the fixed geometric law with mean ``b0``
+(paper section 2.5.1):
+
+    u        = (h & 0x7fffffff) / 2^31
+    children = floor(log(1 - u) / log(1 - p)),   p = 1 / (1 + b0)
+
+This mirrors ``rust/src/apps/uts/sha1rand.rs::geometric_children`` (the
+request-path implementation); the artifact exists to exercise a second,
+non-matmul kernel through the full AOT pipeline and for batch-expansion
+experiments. VPU-only: no MXU work, one load + a handful of
+transcendentals + one store per lane.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_kernel(h_ref, o_ref, *, b0: float):
+    h = h_ref[...]
+    u = (h & jnp.uint32(0x7FFFFFFF)).astype(jnp.float32) / jnp.float32(2**31)
+    p = jnp.float32(1.0 / (1.0 + b0))
+    denom = jnp.log1p(-p)
+    # u < 1 strictly (31-bit mantissa), so log1p(-u) is finite.
+    kids = jnp.floor(jnp.log1p(-u) / denom)
+    o_ref[...] = kids.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("b0", "block"))
+def uts_expand(h, *, b0: float = 4.0, block: int = 256):
+    """Child counts for a batch of node hash words.
+
+    h: u32[B] -> i32[B].
+    """
+    (b,) = h.shape
+    blk = min(b, block)
+    while b % blk:
+        blk -= 1
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, b0=b0),
+        grid=(b // blk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(h)

@@ -1,0 +1,101 @@
+"""L2 JAX model: batched dense Brandes betweenness centrality.
+
+One call computes the betweenness contribution of a *batch* of S source
+vertices against the replicated N-vertex graph — the unit of work a GLB
+worker requests from the PJRT engine when draining a BC vertex-interval
+task (rust/src/apps/bc/queue.rs, Dense engine).
+
+Structure (all shapes static; S slots padded with source id -1):
+
+* forward: level-synchronous BFS with shortest-path counting. The carry
+  is (level, frontier, sigma, dist), all [N, S]; each level is one
+  ``adj_T @ (sigma * frontier)`` through the L1 Pallas kernel. A
+  ``lax.while_loop`` exits as soon as the *whole batch's* frontier is
+  empty — batches of sources from small components finish in a couple of
+  iterations, which is exactly the per-source imbalance the paper's BC
+  exhibits (DESIGN.md "Imbalance fidelity").
+* backward: dependency accumulation from the deepest level down, one
+  ``adj @ coef`` kernel call per level, also a while_loop (trip count =
+  the forward level count, dynamic).
+* outputs: (bc[N] f32, edges f32 scalar, levels i32 scalar) — partial
+  betweenness summed over the batch, edges traversed (sum of out-degrees
+  of visited vertices, the paper's BC work metric), and the BFS depth.
+
+Python/JAX run only at build time: ``aot.py`` lowers this function to
+HLO text per (N, S) configuration.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.bc_frontier import frontier_matmul
+from .kernels.ref import matmul_ref
+
+_INF = jnp.float32(jnp.inf)
+
+
+def brandes_batch(adj, sources, *, use_kernel: bool = True):
+    """Batched Brandes. adj: f32[N, N]; sources: i32[S] (-1 = padding)."""
+    n = adj.shape[0]
+    s = sources.shape[0]
+    mm = frontier_matmul if use_kernel else matmul_ref
+    adj_t = adj.T
+
+    valid = (sources >= 0).astype(jnp.float32)  # [S]
+    src = jnp.clip(sources, 0, n - 1)
+    x0 = jax.nn.one_hot(src, n, dtype=jnp.float32).T * valid  # [N, S]
+
+    sigma0 = x0
+    dist0 = jnp.where(x0 > 0, 0.0, _INF)  # [N, S]
+    frontier0 = x0
+
+    def fwd_cond(c):
+        _level, frontier, _sigma, _dist = c
+        return jnp.any(frontier > 0)
+
+    def fwd_body(c):
+        level, frontier, sigma, dist = c
+        # Path counts arriving one hop out from the current frontier.
+        contrib = mm(adj_t, sigma * frontier)  # [N, S]
+        new = (contrib > 0) & jnp.isinf(dist)
+        dist = jnp.where(new, jnp.float32(level + 1), dist)
+        sigma = sigma + jnp.where(new, contrib, 0.0)
+        return level + 1, new.astype(jnp.float32), sigma, dist
+
+    levels, _f, sigma, dist = lax.while_loop(
+        fwd_cond, fwd_body, (jnp.int32(0), frontier0, sigma0, dist0)
+    )
+
+    # Backward sweep: lev runs levels-1 .. 0; vertices at lev+1 feed lev.
+    safe_sigma = jnp.maximum(sigma, 1.0)
+
+    def bwd_cond(c):
+        lev, _delta = c
+        return lev >= 0
+
+    def bwd_body(c):
+        lev, delta = c
+        flev = jnp.float32(lev)
+        coef = jnp.where(dist == flev + 1.0, (1.0 + delta) / safe_sigma, 0.0)
+        back = mm(adj, coef)  # back[v] = sum_w adj[v, w] * coef[w]
+        delta = delta + jnp.where(dist == flev, sigma * back, 0.0)
+        return lev - 1, delta
+
+    _lev, delta = lax.while_loop(
+        bwd_cond, bwd_body, (levels - 1, jnp.zeros_like(dist0))
+    )
+
+    visited = jnp.isfinite(dist)
+    # Exclude each batch's own source (dist == 0) from its contribution.
+    bc = jnp.sum(jnp.where(visited & (dist > 0), delta, 0.0), axis=1)  # [N]
+    deg = jnp.sum(adj, axis=1)  # out-degrees [N]
+    edges = jnp.sum(visited.astype(jnp.float32) * deg[:, None])
+    return bc, edges, levels
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def brandes_batch_jit(adj, sources, use_kernel: bool = True):
+    return brandes_batch(adj, sources, use_kernel=use_kernel)

@@ -1,0 +1,39 @@
+"""Resource-analysis sanity: the DESIGN.md §8 claims are derivable."""
+
+from compile.analysis import estimate, render_table, MXU_DIM, VMEM_BUDGET
+
+
+class TestKernelEstimate:
+    def test_default_tiles_fit_vmem(self):
+        # The DESIGN.md claim: default 256x256x128 tiles double-buffered
+        # stay well under the 16 MiB budget.
+        e = estimate(1024, 1024, 128)
+        assert e.bn == 256 and e.bk == 256 and e.bs == 128
+        assert e.fits_vmem
+        assert e.vmem_double_buffered < 2 << 20  # < 2 MiB
+
+    def test_small_shapes_underfill_mxu(self):
+        small = estimate(64, 64, 16)
+        big = estimate(4096, 4096, 128)
+        assert small.mxu_fill < big.mxu_fill
+        assert big.mxu_fill == 1.0, "128-wide tiles fill the array"
+
+    def test_flops_formula(self):
+        e = estimate(256, 256, 32)
+        assert e.flops == 2 * 256 * 256 * 32
+
+    def test_arithmetic_intensity_grows_with_s(self):
+        # Bigger source batches amortize the A stream.
+        lo = estimate(1024, 1024, 16)
+        hi = estimate(1024, 1024, 512)
+        assert hi.arithmetic_intensity > lo.arithmetic_intensity
+
+    def test_vmem_budget_enforced_somewhere(self):
+        # A pathological giant tile must be flagged.
+        e = estimate(16384, 16384, 4096, bn=16384, bk=16384, bs=4096)
+        assert not e.fits_vmem
+        assert VMEM_BUDGET == 16 << 20 and MXU_DIM == 128
+
+    def test_table_renders(self):
+        t = render_table([(256, 32), (1024, 128)])
+        assert "VMEM" in t and "256" in t and "1024" in t

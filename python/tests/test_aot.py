@@ -1,0 +1,63 @@
+"""AOT pipeline: lowering produces loadable HLO text + a valid manifest."""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from compile.aot import lower_brandes, lower_uts_expand, parse_sizes
+
+
+class TestLowering:
+    def test_brandes_hlo_text_shape(self):
+        text = lower_brandes(16, 4)
+        assert "ENTRY" in text
+        assert "while" in text.lower(), "forward/backward loops must lower to HLO While"
+        # Inputs appear with the right shapes.
+        assert "f32[16,16]" in text
+        assert "s32[4]" in text
+
+    def test_uts_expand_hlo_text(self):
+        text = lower_uts_expand(64)
+        assert "ENTRY" in text
+        assert "u32[64]" in text
+        assert "s32[64]" in text
+
+    def test_parse_sizes(self):
+        assert parse_sizes("256:32,1024:64") == [(256, 32), (1024, 64)]
+        assert parse_sizes("128") == [(128, 32)]
+        assert parse_sizes(" 64:8 , ") == [(64, 8)]
+
+
+class TestEndToEndAot:
+    @pytest.fixture(scope="class")
+    def artifact_dir(self, tmp_path_factory):
+        out = tmp_path_factory.mktemp("artifacts")
+        subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                str(out),
+                "--bc-sizes",
+                "16:4",
+                "--uts-batches",
+                "32",
+            ],
+            check=True,
+            cwd=pathlib.Path(__file__).resolve().parents[1],
+        )
+        return out
+
+    def test_files_written(self, artifact_dir):
+        names = {p.name for p in artifact_dir.iterdir()}
+        assert "bc_brandes_n16_s4.hlo.txt" in names
+        assert "uts_expand_b32.hlo.txt" in names
+        assert "manifest.txt" in names
+
+    def test_manifest_contents(self, artifact_dir):
+        text = (artifact_dir / "manifest.txt").read_text()
+        assert "kind=bc_brandes n=16 s=4 file=bc_brandes_n16_s4.hlo.txt" in text
+        assert "kind=uts_expand b=32" in text

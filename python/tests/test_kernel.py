@@ -1,0 +1,98 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; every case asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bc_frontier import frontier_matmul, vmem_bytes
+from compile.kernels.ref import matmul_ref, uts_expand_ref
+from compile.kernels.uts_expand import uts_expand
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape).astype(np.float32)
+
+
+class TestFrontierMatmul:
+    @pytest.mark.parametrize(
+        "n,k,s", [(8, 8, 4), (16, 16, 16), (64, 64, 32), (128, 128, 8), (256, 256, 32)]
+    )
+    def test_matches_ref_square(self, n, k, s):
+        a = _rand((n, k), seed=n + s)
+        x = _rand((k, s), seed=n * 31 + s)
+        got = np.asarray(frontier_matmul(jnp.asarray(a), jnp.asarray(x)))
+        want = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.sampled_from([4, 8, 12, 32, 48, 64]),
+        k=st.sampled_from([4, 8, 16, 32, 64]),
+        s=st.sampled_from([1, 2, 4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, n, k, s, seed):
+        a = _rand((n, k), seed=seed)
+        x = _rand((k, s), seed=seed ^ 0x5EED)
+        got = np.asarray(frontier_matmul(jnp.asarray(a), jnp.asarray(x)))
+        want = a.astype(np.float64) @ x.astype(np.float64)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("bn,bs,bk", [(4, 4, 4), (8, 2, 16), (16, 16, 8)])
+    def test_block_shapes_do_not_change_result(self, bn, bs, bk):
+        a = _rand((32, 32), seed=1)
+        x = _rand((32, 16), seed=2)
+        got = np.asarray(
+            frontier_matmul(jnp.asarray(a), jnp.asarray(x), bn=bn, bs=bs, bk=bk)
+        )
+        want = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_non_power_of_two_dims(self):
+        # _pick_block falls back to divisors for odd shapes.
+        a = _rand((24, 36), seed=3)
+        x = _rand((36, 12), seed=4)
+        got = np.asarray(frontier_matmul(jnp.asarray(a), jnp.asarray(x)))
+        np.testing.assert_allclose(got, a @ x, rtol=1e-5, atol=1e-5)
+
+    def test_zero_input(self):
+        a = jnp.zeros((16, 16), jnp.float32)
+        x = jnp.zeros((16, 8), jnp.float32)
+        assert np.all(np.asarray(frontier_matmul(a, x)) == 0)
+
+    def test_vmem_estimate_default_tiles_fit(self):
+        # Default 256/128/256 tiles: A 256x256 + X 256x128 + O 256x128
+        # = 448 KiB — far under the 16 MiB VMEM budget even double-buffered.
+        assert vmem_bytes(256, 128, 256) < 1 << 20
+
+
+class TestUtsExpand:
+    @pytest.mark.parametrize("b", [1, 16, 256, 1000])
+    def test_matches_ref(self, b):
+        h = np.random.default_rng(b).integers(0, 2**32, size=b, dtype=np.uint32)
+        got = np.asarray(uts_expand(jnp.asarray(h)))
+        want = uts_expand_ref(h)
+        np.testing.assert_array_equal(got, want)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 512),
+        seed=st.integers(0, 2**31 - 1),
+        b0=st.sampled_from([1.5, 4.0, 8.0]),
+    )
+    def test_matches_ref_hypothesis(self, b, seed, b0):
+        h = np.random.default_rng(seed).integers(0, 2**32, size=b, dtype=np.uint32)
+        got = np.asarray(uts_expand(jnp.asarray(h), b0=b0))
+        want = uts_expand_ref(h, b0=b0)
+        np.testing.assert_array_equal(got, want)
+
+    def test_mean_tracks_b0(self):
+        h = np.random.default_rng(7).integers(0, 2**32, size=200_000, dtype=np.uint32)
+        kids = np.asarray(uts_expand(jnp.asarray(h), b0=4.0))
+        assert abs(kids.mean() - 4.0) < 0.05
+        assert kids.min() >= 0
+        assert kids.max() > 12, "geometric long tail"

@@ -1,0 +1,111 @@
+"""L2 model correctness: batched dense Brandes vs the loop oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    brandes_ref,
+    path_adjacency,
+    random_adjacency,
+    star_adjacency,
+)
+from compile.model import brandes_batch_jit
+
+
+def run_model(adj, sources, use_kernel=True):
+    bc, edges, levels = brandes_batch_jit(
+        jnp.asarray(adj), jnp.asarray(np.asarray(sources, dtype=np.int32)),
+        use_kernel=use_kernel,
+    )
+    return np.asarray(bc, dtype=np.float64), float(edges), int(levels)
+
+
+class TestBrandesBatch:
+    def test_path_graph_analytic(self):
+        adj = path_adjacency(5)
+        bc, edges, levels = run_model(adj, list(range(5)))
+        np.testing.assert_allclose(bc, [0.0, 6.0, 8.0, 6.0, 0.0], atol=1e-4)
+        assert levels == 5  # path diameter + 1 BFS rounds for the end source
+        # 5 sources x 8 directed edges fully visited.
+        assert edges == 5 * 8
+
+    def test_star_graph_analytic(self):
+        adj = star_adjacency(4)
+        bc, _e, _l = run_model(adj, list(range(5)))
+        np.testing.assert_allclose(bc, [12.0, 0, 0, 0, 0], atol=1e-4)
+
+    @pytest.mark.parametrize("n,density,seed", [(16, 0.2, 0), (32, 0.1, 1), (64, 0.05, 2)])
+    def test_random_graphs_match_oracle(self, n, density, seed):
+        adj = random_adjacency(n, density, seed)
+        sources = list(range(n))
+        bc, edges, _ = run_model(adj, sources)
+        want, want_edges = brandes_ref(adj, sources)
+        np.testing.assert_allclose(bc, want, rtol=1e-3, atol=1e-3)
+        # Model counts sum-of-degrees over visited vertices per source —
+        # identical to the oracle's per-edge counting on full BFS.
+        assert edges == want_edges
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([8, 16, 24]),
+        density=st.sampled_from([0.08, 0.2, 0.5]),
+        seed=st.integers(0, 10_000),
+    )
+    def test_random_graphs_hypothesis(self, n, density, seed):
+        adj = random_adjacency(n, density, seed)
+        srcs = list(range(0, n, 2))
+        bc, _e, _l = run_model(adj, srcs)
+        want, _ = brandes_ref(adj, srcs)
+        np.testing.assert_allclose(bc, want, rtol=1e-3, atol=1e-3)
+
+    def test_padding_slots_contribute_nothing(self):
+        adj = random_adjacency(16, 0.2, 3)
+        bc_padded, e_padded, _ = run_model(adj, [3, 5, -1, -1])
+        bc_exact, e_exact, _ = run_model(adj, [3, 5])
+        np.testing.assert_allclose(bc_padded, bc_exact, atol=1e-5)
+        assert e_padded == e_exact
+
+    def test_batch_split_invariance(self):
+        # sum over one big batch == sum over two half batches.
+        adj = random_adjacency(24, 0.15, 4)
+        whole, e_whole, _ = run_model(adj, list(range(24)))
+        a, ea, _ = run_model(adj, list(range(12)))
+        b, eb, _ = run_model(adj, list(range(12, 24)))
+        np.testing.assert_allclose(whole, a + b, rtol=1e-4, atol=1e-4)
+        assert e_whole == ea + eb
+
+    def test_kernel_and_ref_matmul_agree(self):
+        adj = random_adjacency(32, 0.12, 5)
+        srcs = list(range(16))
+        k, ek, _ = run_model(adj, srcs, use_kernel=True)
+        r, er, _ = run_model(adj, srcs, use_kernel=False)
+        np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-5)
+        assert ek == er
+
+    def test_disconnected_components_early_exit(self):
+        # Two 4-cliques: BFS from any source exhausts in 2 levels
+        # (early-exit is the imbalance mechanism — see DESIGN.md).
+        n = 8
+        adj = np.zeros((n, n), dtype=np.float32)
+        adj[:4, :4] = 1.0
+        adj[4:, 4:] = 1.0
+        np.fill_diagonal(adj, 0.0)
+        _bc, edges, levels = run_model(adj, [0])
+        assert levels <= 2
+        assert edges == 4 * 3  # the source's component only
+
+    def test_empty_batch_is_zero(self):
+        adj = random_adjacency(8, 0.3, 6)
+        bc, edges, levels = run_model(adj, [-1, -1])
+        assert np.all(bc == 0)
+        assert edges == 0
+        assert levels == 0
+
+    def test_isolated_source(self):
+        adj = np.zeros((6, 6), dtype=np.float32)
+        adj[1, 2] = 1.0
+        bc, edges, _ = run_model(adj, [0])
+        assert np.all(bc == 0)
+        assert edges == 0

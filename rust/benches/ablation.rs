@@ -1,0 +1,104 @@
+//! Ablation benches for the design choices DESIGN.md calls out
+//! (paper §2.4's tuning discussion + §5's comparison to random-only
+//! stealing):
+//!
+//!  1. lifeline vs random-only stealing across place counts;
+//!  2. task granularity `n` sweep (the §2.6 responsiveness trade-off);
+//!  3. random-victim budget `w` sweep;
+//!  4. lifeline arity `l` (hypercube shape) sweep;
+//!  5. GLB vs naive static partitioning of UTS (§2.5.1).
+//!
+//! `cargo bench --bench ablation`
+
+use glb::apps::uts::{UtsParams, UtsQueue};
+use glb::baselines::legacy_uts::random_only_params;
+use glb::baselines::static_uts::run_static_uts_sim;
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::harness::{calibrate_uts_cost, Table};
+use glb::sim::{run_sim, CostModel, BGQ};
+
+fn uts_rate(p: usize, params: GlbParams, depth: u32, cost: CostModel) -> (f64, u64) {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: depth };
+    let cfg = GlbConfig::new(p, params);
+    let (out, rep) = run_sim(
+        &cfg,
+        &BGQ,
+        cost,
+        |_, _| UtsQueue::new(up),
+        |q| q.init_root(),
+        &SumReducer,
+    );
+    (out.units_per_sec(), rep.messages)
+}
+
+fn main() {
+    let cost = calibrate_uts_cost();
+    let depth = 9;
+
+    println!("=== Ablation 1: lifeline vs random-only stealing (UTS d={depth}, BGQ) ===");
+    let mut t = Table::new(&["places", "lifeline nodes/s", "random-only nodes/s", "lifeline advantage"]);
+    for p in [16usize, 64, 256, 1024] {
+        let (lf, _) = uts_rate(p, GlbParams::default(), depth, cost);
+        let (ro, _) = uts_rate(p, random_only_params(1, 2), depth, cost);
+        t.row(&[
+            p.to_string(),
+            format!("{lf:.3e}"),
+            format!("{ro:.3e}"),
+            format!("{:.2}x", lf / ro.max(1e-9)),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Ablation 2: task granularity n (paper §2.4) ===");
+    let mut t = Table::new(&["n", "nodes/s (p=256)", "messages"]);
+    for n in [1usize, 15, 127, 511, 4095, 32767] {
+        let (rate, msgs) = uts_rate(256, GlbParams::default().with_n(n), depth, cost);
+        t.row(&[n.to_string(), format!("{rate:.3e}"), msgs.to_string()]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Ablation 3: random-victim budget w ===");
+    let mut t = Table::new(&["w", "nodes/s (p=256)", "messages"]);
+    for w in [0usize, 1, 2, 4, 8] {
+        let (rate, msgs) = uts_rate(256, GlbParams::default().with_w(w), depth, cost);
+        t.row(&[w.to_string(), format!("{rate:.3e}"), msgs.to_string()]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Ablation 4: lifeline arity l (cube shape) ===");
+    let mut t = Table::new(&["l", "z(derived)", "nodes/s (p=256)"]);
+    for l in [2usize, 4, 16, 32] {
+        let params = GlbParams::default().with_l(l);
+        let (rate, _) = uts_rate(256, params, depth, cost);
+        t.row(&[l.to_string(), params.resolve_z(256).to_string(), format!("{rate:.3e}")]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Ablation 6: efficiency vs per-place work (why the paper's long runs sit at ~1.0) ===");
+    let mut t = Table::new(&["depth", "nodes", "eff at p=256"]);
+    for d in [12u32, 13, 14] {
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: d };
+        let cfg = GlbConfig::new(256, GlbParams::default());
+        let (out, _) = run_sim(&cfg, &BGQ, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        let ideal = out.result as f64 / 256.0 * cost.ns_per_unit / BGQ.compute_scale;
+        t.row(&[d.to_string(), out.result.to_string(), format!("{:.3}", ideal / out.elapsed_ns as f64)]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Ablation 5: GLB vs naive static UTS partitioning (§2.5.1) ===");
+    let mut t = Table::new(&["places", "GLB makespan (ms)", "static makespan (ms)", "static penalty"]);
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: depth };
+    for p in [4usize, 16, 64] {
+        let cfg = GlbConfig::new(p, GlbParams::default());
+        let (out, _) = run_sim(&cfg, &BGQ, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        let st = run_static_uts_sim(&up, p, cost.ns_per_unit / BGQ.compute_scale);
+        t.row(&[
+            p.to_string(),
+            format!("{:.2}", out.elapsed_ns as f64 / 1e6),
+            format!("{:.2}", st.elapsed_ns as f64 / 1e6),
+            format!("{:.2}x", st.elapsed_ns as f64 / out.elapsed_ns as f64),
+        ]);
+    }
+    print!("{}", t.render());
+}

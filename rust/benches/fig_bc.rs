@@ -1,0 +1,58 @@
+//! Bench: regenerate the paper's BC figures (Figs 5–10).
+//!
+//! `cargo bench --bench fig_bc [-- --full]`
+//!
+//! Figs 5/7/9: BC (static randomized) vs BC-G throughput + efficiency on
+//! BGQ / K / Power 775. Figs 6/8/10: the per-place workload distribution
+//! (mean and σ) at the sweep's largest place count — the paper's
+//! headline BC result is the σ collapse (4.027→1.141 on BGQ,
+//! 58.463→1.482 on Power 775).
+
+use glb::glb::GlbParams;
+use glb::harness::{fig_bc_perf, fig_bc_workload, FigOpts};
+use glb::sim::{ArchProfile, BGQ, K, POWER775};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    // Per-place source counts matter: the σ collapse (Figs 6/8/10) is a
+    // diffusion effect that needs O(100+) sources per place, so the sweep
+    // tops out where scale/places keeps that ratio (see EXPERIMENTS.md).
+    let (places, scale) = if full {
+        (vec![1, 4, 16, 32, 64, 128], 14u32)
+    } else {
+        (vec![1, 4, 16, 32], 12u32)
+    };
+
+    let figs: [(&str, &str, &ArchProfile); 3] = [
+        ("Figure 5/6", "Blue Gene/Q", &BGQ),
+        ("Figure 7/8", "K", &K),
+        ("Figure 9/10", "Power 775", &POWER775),
+    ];
+    for (tag, name, arch) in figs {
+        let opts = FigOpts {
+            places: places.clone(),
+            uts_depth: 0,
+            bc_scale: scale,
+            // §2.6: BC-G uses the interruptible state machine with a
+            // sub-vertex edge budget per chunk, and maximized w (the
+            // paper: "maximize w and z and minimize n").
+            params: GlbParams::default().with_n(8192).with_w(4).with_l(2),
+            csv: false,
+        };
+        println!("=== {tag}a: BC/BC-G performance on {name} ===");
+        let f = fig_bc_perf(arch, &opts);
+        print!("{}", f.text);
+        let (l, g) = (f.legacy.last().unwrap(), f.glb.last().unwrap());
+        println!(
+            "[{tag}a] at {} places: BC-G eff={:.3} vs BC eff={:.3} (BC-G/BC rate={:.2})",
+            g.places,
+            g.efficiency,
+            l.efficiency,
+            g.rate / l.rate.max(1e-9)
+        );
+
+        println!("\n=== {tag}b: BC/BC-G workload distribution on {name} ===");
+        let (_table, summary) = fig_bc_workload(arch, &opts);
+        println!("{summary}\n");
+    }
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate the paper's UTS figures (Figs 2, 3, 4).
+//!
+//! `cargo bench --bench fig_uts [-- --full]`
+//!
+//! For each architecture (Power 775 ≤256, BGQ and K to larger sweeps),
+//! prints the legacy-UTS vs UTS-G throughput and efficiency series. The
+//! default sweep is sized for minutes on one core; `--full` pushes the
+//! BGQ/K sweeps to the paper's 8K/16K place counts (slower).
+
+use glb::glb::GlbParams;
+use glb::harness::{fig_uts, FigOpts};
+use glb::sim::{BGQ, K, POWER775};
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    // Depth scales with the sweep (the paper varies d 13–20 by core
+    // count for the same reason: keep per-place work meaningful).
+    // Base depth 9 keeps the default run under a minute per figure with
+    // efficiency ~0.8 at the top of the sweep; the paper's near-1.0
+    // plateau needs its minutes-long per-place workloads, which is what
+    // --full approaches (and ablation 6 in `cargo bench --bench ablation`
+    // demonstrates the convergence on one point). Depth scales with p as
+    // d(p) = base + ceil(log4 p), mirroring the paper's d = 13..20.
+    let (places_small, places_big, depth) = if full {
+        (vec![1, 4, 16, 64, 256, 1024], vec![1, 4, 16, 64, 256, 1024, 4096], 10)
+    } else {
+        (vec![1, 4, 16, 64, 256], vec![1, 4, 16, 64, 256], 9)
+    };
+
+    let opts = |places: Vec<usize>| FigOpts {
+        places,
+        uts_depth: depth,
+        bc_scale: 0,
+        params: GlbParams::default(),
+        csv: false,
+    };
+
+    println!("=== Figure 2: UTS/UTS-G on Power 775 (paper: ≤256 places) ===");
+    let f2 = fig_uts(&POWER775, &opts(places_small.clone()));
+    print!("{}", f2.text);
+    summarize("fig2", &f2);
+
+    println!("\n=== Figure 3: UTS/UTS-G on Blue Gene/Q (paper: ≤16384 places) ===");
+    let f3 = fig_uts(&BGQ, &opts(places_big.clone()));
+    print!("{}", f3.text);
+    summarize("fig3", &f3);
+
+    println!("\n=== Figure 4: UTS/UTS-G on K (paper: ≤8192, droop past 4096) ===");
+    let f4 = fig_uts(&K, &opts(places_big));
+    print!("{}", f4.text);
+    summarize("fig4", &f4);
+}
+
+fn summarize(tag: &str, f: &glb::harness::figures::Figure) {
+    let last = f.glb.last().unwrap();
+    let legacy_last = f.legacy.last().unwrap();
+    println!(
+        "[{tag}] at {} places: UTS-G eff={:.3}, legacy eff={:.3}, UTS-G/legacy rate ratio={:.2}",
+        last.places,
+        last.efficiency,
+        legacy_last.efficiency,
+        last.rate / legacy_last.rate.max(1e-9)
+    );
+}

@@ -1,0 +1,153 @@
+//! Microbenchmarks of the GLB hot paths (the §Perf baseline numbers).
+//!
+//! `cargo bench --bench micro`
+//!
+//! Measures, with repeat-and-best-of timing:
+//!  * UTS node expansion rate (SHA-1 bound — the sequential compute rate
+//!    everything else is normalized by);
+//!  * sparse Brandes edge rate;
+//!  * task-bag split/merge costs at several sizes;
+//!  * thread-runtime steal round-trip latency (2 places);
+//!  * simulator event throughput;
+//!  * PJRT batched-Brandes call latency (if artifacts exist).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use glb::apps::bc::{brandes_source, BrandesScratch, Graph, RmatParams};
+use glb::apps::uts::{UtsBag, UtsParams, UtsQueue, UtsTree};
+use glb::glb::task_bag::{ArrayListTaskBag, TaskBag};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::harness::Table;
+use glb::place::run_threads;
+use glb::sim::{run_sim, CostModel, BGQ};
+use glb::util::timefmt::{fmt_ns, fmt_rate};
+
+/// Best-of-k wall time of `f`, in ns.
+fn best_of<F: FnMut() -> u64>(k: usize, mut f: F) -> (u64, u64) {
+    let mut best = u64::MAX;
+    let mut units = 0;
+    for _ in 0..k {
+        let t = Instant::now();
+        units = f();
+        best = best.min(t.elapsed().as_nanos() as u64);
+    }
+    (best, units)
+}
+
+fn main() {
+    let mut t = Table::new(&["benchmark", "time", "rate"]);
+
+    // UTS expansion.
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 9 };
+    let tree = UtsTree::new(up);
+    let (ns, nodes) = best_of(3, || {
+        let mut bag = UtsBag::with_root(&tree);
+        let mut c = 1u64;
+        loop {
+            let (k, more) = bag.expand_some(&tree, 1 << 16);
+            c += k;
+            if !more {
+                break c;
+            }
+        }
+    });
+    t.row(&[
+        format!("uts expand d=9 ({nodes} nodes)"),
+        fmt_ns(ns),
+        fmt_rate(nodes as f64 * 1e9 / ns as f64) + " nodes/s",
+    ]);
+
+    // Sparse Brandes.
+    let g = Graph::rmat(RmatParams { scale: 11, ..Default::default() });
+    let (ns, edges) = best_of(3, || {
+        let mut bc = vec![0.0; g.n()];
+        let mut sc = BrandesScratch::new(g.n());
+        let mut e = 0u64;
+        for s in 0..256u32 {
+            e += brandes_source(&g, s, &mut bc, &mut sc);
+        }
+        e
+    });
+    t.row(&[
+        format!("brandes 256 sources scale-11"),
+        fmt_ns(ns),
+        fmt_rate(edges as f64 * 1e9 / ns as f64) + " edges/s",
+    ]);
+
+    // Bag split/merge.
+    for size in [64usize, 4096, 262144] {
+        let (ns, _) = best_of(5, || {
+            let mut bag = ArrayListTaskBag::from_vec((0..size as u64).collect());
+            let mut n = 0u64;
+            while let Some(loot) = bag.split() {
+                n += 1;
+                if bag.size() < 2 {
+                    bag.merge(loot);
+                    break;
+                }
+                std::mem::drop(loot);
+            }
+            n
+        });
+        t.row(&[format!("bag split-to-exhaustion ({size})"), fmt_ns(ns), "-".into()]);
+    }
+
+    // Steal round-trip over threads: 2 places, 1 task each chunk forces
+    // constant starvation -> measures protocol overhead.
+    let (ns, chunks) = best_of(3, || {
+        let cfg = GlbConfig::new(2, GlbParams::default().with_n(1).with_l(2));
+        let out = run_threads(
+            &cfg,
+            |_, _| UtsQueue::new(UtsParams { b0: 4.0, seed: 19, max_depth: 5 }),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        out.log.total().chunks
+    });
+    t.row(&[
+        format!("thread runtime n=1 churn ({chunks} chunks)"),
+        fmt_ns(ns),
+        fmt_rate(chunks as f64 * 1e9 / ns as f64) + " chunks/s",
+    ]);
+
+    // Simulator event rate.
+    let (ns, events) = best_of(3, || {
+        let cfg = GlbConfig::new(256, GlbParams::default().with_n(64));
+        let (_, rep) = run_sim(
+            &cfg,
+            &BGQ,
+            CostModel::new(200.0, 60, 32),
+            |_, _| UtsQueue::new(UtsParams { b0: 4.0, seed: 19, max_depth: 8 }),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        rep.events
+    });
+    t.row(&[
+        format!("sim 256 places d=8 ({events} events)"),
+        fmt_ns(ns),
+        fmt_rate(events as f64 * 1e9 / ns as f64) + " events/s",
+    ]);
+
+    // PJRT call latency (needs artifacts).
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        let gg = Arc::new(Graph::rmat(RmatParams { scale: 8, ..Default::default() }));
+        let mut eng = glb::runtime::Engine::new(&dir).unwrap();
+        let be = eng.brandes(&gg.dense_adjacency(), gg.n()).unwrap();
+        let sources: Vec<u32> = (0..be.s as u32).collect();
+        eng.run_brandes(&be, &sources).unwrap(); // warm the compile cache
+        let (ns, edges) = best_of(5, || eng.run_brandes(&be, &sources).unwrap().edges);
+        t.row(&[
+            format!("pjrt brandes n={} S={}", be.n, be.s),
+            fmt_ns(ns),
+            fmt_rate(edges as f64 * 1e9 / ns as f64) + " edges/s",
+        ]);
+    } else {
+        eprintln!("(skipping pjrt bench: run `make artifacts`)");
+    }
+
+    print!("{}", t.render());
+}

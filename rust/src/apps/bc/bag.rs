@@ -1,0 +1,182 @@
+//! The BC task bag (paper §2.6.2): "Each vertex interval is a task item.
+//! We use a tuple (low, high) to represent a vertex interval. Each task
+//! bag is an array of such tuples. To split a TaskBag, we divide each
+//! tuple evenly. To merge a BC taskbag, we simply concatenate."
+
+use crate::glb::task_bag::TaskBag;
+
+/// A bag of half-open source-vertex intervals `[lo, hi)`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BcBag {
+    intervals: Vec<(u32, u32)>,
+}
+
+impl BcBag {
+    pub fn new() -> Self {
+        Self { intervals: Vec::new() }
+    }
+
+    /// A bag holding one interval.
+    pub fn interval(lo: u32, hi: u32) -> Self {
+        assert!(lo <= hi);
+        let mut b = Self::new();
+        if lo < hi {
+            b.intervals.push((lo, hi));
+        }
+        b
+    }
+
+    pub fn intervals(&self) -> &[(u32, u32)] {
+        &self.intervals
+    }
+
+    /// Total vertices pending.
+    pub fn vertices(&self) -> u64 {
+        self.intervals.iter().map(|&(l, h)| (h - l) as u64).sum()
+    }
+
+    /// Take up to `k` source vertices off the bag (from the back — newest
+    /// intervals first, matching the LIFO discipline of the other bags).
+    pub fn take(&mut self, k: usize, out: &mut Vec<u32>) {
+        let mut need = k;
+        while need > 0 {
+            match self.intervals.last_mut() {
+                Some((lo, hi)) => {
+                    let width = (*hi - *lo) as usize;
+                    let grab = width.min(need);
+                    for v in (*hi - grab as u32)..*hi {
+                        out.push(v);
+                    }
+                    *hi -= grab as u32;
+                    need -= grab;
+                    if lo == hi {
+                        self.intervals.pop();
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+impl TaskBag for BcBag {
+    fn size(&self) -> usize {
+        self.vertices() as usize
+    }
+
+    fn split(&mut self) -> Option<Self> {
+        // Paper: divide each tuple evenly. Singleton intervals stay local;
+        // additionally, when everything is singletons but there are at
+        // least two of them, give away every other interval (keeps the
+        // bag splittable down to single vertices, which §2.6 needs when
+        // responsiveness matters).
+        let mut loot = Vec::new();
+        for iv in self.intervals.iter_mut() {
+            let (lo, hi) = *iv;
+            if hi - lo >= 2 {
+                let mid = lo + (hi - lo) / 2;
+                loot.push((mid, hi));
+                iv.1 = mid;
+            }
+        }
+        if loot.is_empty() && self.intervals.len() >= 2 {
+            let give = self.intervals.len() / 2;
+            loot = self.intervals.drain(..give).collect();
+        }
+        if loot.is_empty() {
+            return None;
+        }
+        Some(Self { intervals: loot })
+    }
+
+    fn merge(&mut self, other: Self) {
+        let mut incoming = other.intervals;
+        std::mem::swap(&mut self.intervals, &mut incoming);
+        self.intervals.extend(incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_halves_every_interval() {
+        let mut b = BcBag { intervals: vec![(0, 10), (20, 24)] };
+        let loot = b.split().unwrap();
+        assert_eq!(b.intervals(), &[(0, 5), (20, 22)]);
+        assert_eq!(loot.intervals(), &[(5, 10), (22, 24)]);
+        assert_eq!(b.vertices() + loot.vertices(), 14);
+    }
+
+    #[test]
+    fn split_singletons_partitions_list() {
+        let mut b = BcBag { intervals: vec![(1, 2), (5, 6), (9, 10)] };
+        let loot = b.split().unwrap();
+        assert_eq!(loot.vertices() + b.vertices(), 3);
+        assert!(loot.vertices() >= 1);
+    }
+
+    #[test]
+    fn split_refuses_single_vertex() {
+        let mut b = BcBag::interval(3, 4);
+        assert!(b.split().is_none());
+        let mut empty = BcBag::new();
+        assert!(empty.split().is_none());
+    }
+
+    #[test]
+    fn take_pulls_from_back() {
+        let mut b = BcBag::interval(0, 10);
+        let mut out = Vec::new();
+        b.take(3, &mut out);
+        assert_eq!(out, vec![7, 8, 9]);
+        assert_eq!(b.vertices(), 7);
+        out.clear();
+        b.take(100, &mut out);
+        assert_eq!(out.len(), 7);
+        assert!(b.vertices() == 0);
+    }
+
+    #[test]
+    fn take_spans_intervals() {
+        let mut b = BcBag { intervals: vec![(0, 2), (10, 12)] };
+        let mut out = Vec::new();
+        b.take(3, &mut out);
+        assert_eq!(out, vec![10, 11, 1]);
+        assert_eq!(b.intervals(), &[(0, 1)]);
+    }
+
+    #[test]
+    fn merge_concatenates() {
+        let mut a = BcBag::interval(0, 4);
+        a.merge(BcBag::interval(8, 12));
+        assert_eq!(a.vertices(), 8);
+    }
+
+    #[test]
+    fn every_vertex_appears_exactly_once_under_splits() {
+        let mut b = BcBag::interval(0, 100);
+        let mut parts = vec![];
+        // Split recursively into many bags.
+        for _ in 0..5 {
+            if let Some(l) = b.split() {
+                parts.push(l);
+            }
+        }
+        let mut seen = vec![false; 100];
+        let mut mark = |bag: &BcBag| {
+            for &(lo, hi) in bag.intervals() {
+                for v in lo..hi {
+                    assert!(!seen[v as usize], "vertex {v} duplicated");
+                    seen[v as usize] = true;
+                }
+            }
+        };
+        mark(&b);
+        for p in &parts {
+            mark(p);
+        }
+        assert!(seen.iter().all(|&s| s), "no vertex lost");
+    }
+}

@@ -1,0 +1,193 @@
+//! Sparse single-source Brandes (the reference BC engine).
+//!
+//! Brandes' algorithm (2001) for unweighted graphs: a BFS from the source
+//! accumulating shortest-path counts `sigma`, then a reverse sweep of the
+//! BFS order accumulating dependencies `delta`:
+//!
+//! `delta[v] = Σ_{w : (v,w) ∈ E, dist[w] = dist[v]+1} sigma[v]/sigma[w] · (1 + delta[w])`
+//!
+//! and `BC(v) += delta[v]` for `v ≠ s`. Predecessor lists are not stored;
+//! successors are re-discovered in the reverse sweep via the distance
+//! test (halves the memory, same asymptotics — the SSCA2 reference does
+//! the same).
+
+use super::graph::Graph;
+
+/// Reusable per-worker scratch (allocation-free hot loop).
+#[derive(Debug)]
+pub struct BrandesScratch {
+    dist: Vec<i32>,
+    sigma: Vec<f64>,
+    delta: Vec<f64>,
+    /// BFS visit order (stack for the reverse sweep).
+    order: Vec<u32>,
+    /// BFS queue.
+    queue: Vec<u32>,
+}
+
+impl BrandesScratch {
+    pub fn new(n: usize) -> Self {
+        Self {
+            dist: vec![-1; n],
+            sigma: vec![0.0; n],
+            delta: vec![0.0; n],
+            order: Vec::with_capacity(n),
+            queue: Vec::with_capacity(n),
+        }
+    }
+
+    fn reset(&mut self, touched: &[u32]) {
+        // Only clear what the previous source touched: sources in small
+        // components pay proportionally (this is the imbalance the paper
+        // exploits).
+        for &v in touched {
+            self.dist[v as usize] = -1;
+            self.sigma[v as usize] = 0.0;
+            self.delta[v as usize] = 0.0;
+        }
+        self.order.clear();
+        self.queue.clear();
+    }
+}
+
+/// Run Brandes from source `s`, accumulating into `bc`. Returns the number
+/// of edges traversed (the paper's BC work/throughput unit).
+pub fn brandes_source(g: &Graph, s: u32, bc: &mut [f64], scratch: &mut BrandesScratch) -> u64 {
+    debug_assert_eq!(bc.len(), g.n());
+    let mut edges = 0u64;
+
+    scratch.dist[s as usize] = 0;
+    scratch.sigma[s as usize] = 1.0;
+    scratch.queue.push(s);
+    scratch.order.push(s);
+    let mut head = 0;
+    while head < scratch.queue.len() {
+        let v = scratch.queue[head];
+        head += 1;
+        let dv = scratch.dist[v as usize];
+        let sv = scratch.sigma[v as usize];
+        for &w in g.neighbors(v) {
+            edges += 1;
+            let dw = &mut scratch.dist[w as usize];
+            if *dw < 0 {
+                *dw = dv + 1;
+                scratch.queue.push(w);
+                scratch.order.push(w);
+            }
+            if scratch.dist[w as usize] == dv + 1 {
+                scratch.sigma[w as usize] += sv;
+            }
+        }
+    }
+
+    // Reverse sweep: order holds vertices in non-decreasing distance.
+    for idx in (0..scratch.order.len()).rev() {
+        let v = scratch.order[idx];
+        let dv = scratch.dist[v as usize];
+        let sv = scratch.sigma[v as usize];
+        let mut dv_acc = 0.0;
+        for &w in g.neighbors(v) {
+            if scratch.dist[w as usize] == dv + 1 {
+                dv_acc += sv / scratch.sigma[w as usize] * (1.0 + scratch.delta[w as usize]);
+            }
+        }
+        scratch.delta[v as usize] += dv_acc;
+        if v != s {
+            bc[v as usize] += scratch.delta[v as usize];
+        }
+    }
+
+    // O(|touched|) cleanup for the next source.
+    let touched = std::mem::take(&mut scratch.order);
+    scratch.reset(&touched);
+    scratch.order = touched;
+    scratch.order.clear();
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bc_all(g: &Graph) -> Vec<f64> {
+        let mut bc = vec![0.0; g.n()];
+        let mut sc = BrandesScratch::new(g.n());
+        for s in 0..g.n() as u32 {
+            brandes_source(g, s, &mut bc, &mut sc);
+        }
+        bc
+    }
+
+    #[test]
+    fn path5_analytic() {
+        // Undirected path 0-1-2-3-4. For ordered pairs (s,t), vertex v in
+        // the middle of the unique path: BC(1) = |{(0,2),(0,3),(0,4)}|*2
+        // = 6; BC(2) = pairs crossing the middle = (0,3),(0,4),(1,3),
+        // (1,4) *2 = 8.
+        let g = Graph::path(5);
+        let bc = bc_all(&g);
+        assert_eq!(bc, vec![0.0, 6.0, 8.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn diamond_split_paths() {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3 (directed): two shortest paths 0->3,
+        // each middle vertex carries 1/2.
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let bc = bc_all(&g);
+        assert_eq!(bc[1], 0.5);
+        assert_eq!(bc[2], 0.5);
+        assert_eq!(bc[0], 0.0);
+        assert_eq!(bc[3], 0.0);
+    }
+
+    #[test]
+    fn edges_traversed_counts_component_only() {
+        let g = Graph::two_cliques(3, 5);
+        let mut bc = vec![0.0; g.n()];
+        let mut sc = BrandesScratch::new(g.n());
+        // Source in the 3-clique touches 3*2 = 6 directed edges.
+        let e_small = brandes_source(&g, 0, &mut bc, &mut sc);
+        // Source in the 5-clique touches 5*4 = 20.
+        let e_large = brandes_source(&g, 3, &mut bc, &mut sc);
+        assert_eq!(e_small, 6);
+        assert_eq!(e_large, 20);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        // Running the same source twice (fresh accumulator) must agree —
+        // guards the partial-reset optimization.
+        let g = Graph::rmat(super::super::graph::RmatParams {
+            scale: 6,
+            ..Default::default()
+        });
+        let mut sc = BrandesScratch::new(g.n());
+        let mut bc1 = vec![0.0; g.n()];
+        brandes_source(&g, 5, &mut bc1, &mut sc);
+        let mut bc2 = vec![0.0; g.n()];
+        brandes_source(&g, 5, &mut bc2, &mut sc);
+        assert_eq!(bc1, bc2);
+    }
+
+    #[test]
+    fn isolated_source_is_free() {
+        let g = Graph::from_edges(3, &[(1, 2)]);
+        let mut bc = vec![0.0; 3];
+        let mut sc = BrandesScratch::new(3);
+        let e = brandes_source(&g, 0, &mut bc, &mut sc);
+        assert_eq!(e, 0);
+        assert_eq!(bc, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn triangular_imbalance() {
+        // Paper §2.6.1: in the i<j DAG, early sources do far more work.
+        let g = Graph::triangular(64);
+        let mut bc = vec![0.0; g.n()];
+        let mut sc = BrandesScratch::new(g.n());
+        let e0 = brandes_source(&g, 0, &mut bc, &mut sc);
+        let e_last = brandes_source(&g, 63, &mut bc, &mut sc);
+        assert!(e0 > 100 * (e_last + 1), "e0={e0} e_last={e_last}");
+    }
+}

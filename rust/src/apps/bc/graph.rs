@@ -1,0 +1,272 @@
+//! Graph representation (CSR) and generators.
+//!
+//! The paper's BC benchmark draws its input from SSCA2 v2.2: an R-MAT
+//! power-law generator. We implement R-MAT with the SSCA2 parameters
+//! (a=0.55, b=0.1, c=0.1, d=0.25, edge factor 8) plus the deterministic
+//! test graphs (path/star/cycle/two-components) and the paper's §2.6.1
+//! degenerate triangular DAG that motivates dynamic balancing.
+
+use crate::util::SplitMix64;
+
+/// R-MAT generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    /// log2 of the vertex count (SSCA2 SCALE).
+    pub scale: u32,
+    /// Edges per vertex.
+    pub edge_factor: u32,
+    /// Quadrant probabilities (must sum to 1).
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Generator seed.
+    pub seed: u64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        // SSCA2 v2.2 parameter set.
+        Self { scale: 10, edge_factor: 8, a: 0.55, b: 0.1, c: 0.1, seed: 0x55CA2 }
+    }
+}
+
+/// Directed graph in CSR form. BC treats edges as directed (the SSCA2
+/// generator emits directed edges); undirected test graphs insert both
+/// arcs.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    offsets: Vec<u32>,
+    targets: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list (deduplicated, self-loops dropped).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut uniq: Vec<(u32, u32)> =
+            edges.iter().copied().filter(|&(u, v)| u != v).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let mut offsets = vec![0u32; n + 1];
+        for &(u, _) in &uniq {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let targets = uniq.iter().map(|&(_, v)| v).collect();
+        Self { offsets, targets }
+    }
+
+    /// Vertex count.
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Directed edge count.
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-neighbours of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> u32 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Dense row-major 0/1 adjacency (`adj[u*n + v] = 1` iff `u -> v`)
+    /// for the PJRT engine. O(n^2) memory — BC's replicated-graph
+    /// assumption makes this the intended regime.
+    pub fn dense_adjacency(&self) -> Vec<f32> {
+        let n = self.n();
+        let mut adj = vec![0.0f32; n * n];
+        for u in 0..n as u32 {
+            for &v in self.neighbors(u) {
+                adj[u as usize * n + v as usize] = 1.0;
+            }
+        }
+        adj
+    }
+
+    // ----------------------------------------------------------------
+    // generators
+    // ----------------------------------------------------------------
+
+    /// SSCA2-style R-MAT graph with `2^scale` vertices.
+    pub fn rmat(p: RmatParams) -> Self {
+        let n = 1usize << p.scale;
+        let m = n * p.edge_factor as usize;
+        let mut rng = SplitMix64::new(p.seed);
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let (mut u, mut v) = (0usize, 0usize);
+            let mut span = n >> 1;
+            while span > 0 {
+                let r = rng.next_f64();
+                // Slightly perturb quadrant probabilities per level, as
+                // the R-MAT paper prescribes, to avoid degenerate
+                // striping.
+                let noise = 0.95 + 0.1 * rng.next_f64();
+                let (pa, pb, pc) = (p.a * noise, p.b, p.c);
+                let total = pa + pb + pc + (1.0 - p.a - p.b - p.c);
+                let r = r * total;
+                if r < pa {
+                    // top-left
+                } else if r < pa + pb {
+                    v += span;
+                } else if r < pa + pb + pc {
+                    u += span;
+                } else {
+                    u += span;
+                    v += span;
+                }
+                span >>= 1;
+            }
+            edges.push((u as u32, v as u32));
+        }
+        Self::from_edges(n, &edges)
+    }
+
+    /// Undirected path `0 - 1 - ... - (n-1)`.
+    pub fn path(n: usize) -> Self {
+        let mut e = Vec::new();
+        for i in 0..n.saturating_sub(1) as u32 {
+            e.push((i, i + 1));
+            e.push((i + 1, i));
+        }
+        Self::from_edges(n, &e)
+    }
+
+    /// Undirected star: center 0, leaves `1..=k`.
+    pub fn star(k: usize) -> Self {
+        let mut e = Vec::new();
+        for i in 1..=k as u32 {
+            e.push((0, i));
+            e.push((i, 0));
+        }
+        Self::from_edges(k + 1, &e)
+    }
+
+    /// Undirected cycle of n vertices.
+    pub fn cycle(n: usize) -> Self {
+        let mut e = Vec::new();
+        for i in 0..n as u32 {
+            let j = ((i + 1) as usize % n) as u32;
+            e.push((i, j));
+            e.push((j, i));
+        }
+        Self::from_edges(n, &e)
+    }
+
+    /// The paper's §2.6.1 degenerate imbalance graph: edge `(i, j)` iff
+    /// `i < j`. "The work associated with vertex 1 is much more than the
+    /// work associated with vertex N."
+    pub fn triangular(n: usize) -> Self {
+        let mut e = Vec::new();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                e.push((i, j));
+            }
+        }
+        Self::from_edges(n, &e)
+    }
+
+    /// Two disconnected undirected cliques of sizes `a` and `b` — used to
+    /// test early-exit behaviour on small components.
+    pub fn two_cliques(a: usize, b: usize) -> Self {
+        let mut e = Vec::new();
+        for i in 0..a as u32 {
+            for j in 0..a as u32 {
+                if i != j {
+                    e.push((i, j));
+                }
+            }
+        }
+        for i in 0..b as u32 {
+            for j in 0..b as u32 {
+                if i != j {
+                    e.push((a as u32 + i, a as u32 + j));
+                }
+            }
+        }
+        Self::from_edges(a + b, &e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_roundtrip() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (2, 3), (0, 1), (1, 1)]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 3, "dup (0,1) and self-loop (1,1) dropped");
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[] as &[u32]);
+        assert_eq!(g.degree(2), 1);
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let g = Graph::rmat(RmatParams { scale: 8, ..Default::default() });
+        assert_eq!(g.n(), 256);
+        // After dedup, edge count is below n*ef but should stay substantial.
+        assert!(g.m() > 800, "m={}", g.m());
+        assert!(g.m() <= 256 * 8);
+    }
+
+    #[test]
+    fn rmat_is_deterministic_and_seed_sensitive() {
+        let a = Graph::rmat(RmatParams { scale: 7, ..Default::default() });
+        let b = Graph::rmat(RmatParams { scale: 7, ..Default::default() });
+        assert_eq!(a.targets, b.targets);
+        let c = Graph::rmat(RmatParams { scale: 7, seed: 99, ..Default::default() });
+        assert_ne!(a.targets, c.targets);
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // Power-law: the max degree should far exceed the mean.
+        let g = Graph::rmat(RmatParams { scale: 10, ..Default::default() });
+        let mean = g.m() as f64 / g.n() as f64;
+        let max = (0..g.n() as u32).map(|v| g.degree(v)).max().unwrap();
+        assert!(max as f64 > 5.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn triangular_degrees_decrease() {
+        let g = Graph::triangular(10);
+        assert_eq!(g.degree(0), 9);
+        assert_eq!(g.degree(9), 0);
+    }
+
+    #[test]
+    fn dense_adjacency_matches_csr() {
+        let g = Graph::path(4);
+        let adj = g.dense_adjacency();
+        assert_eq!(adj.len(), 16);
+        assert_eq!(adj[0 * 4 + 1], 1.0);
+        assert_eq!(adj[1 * 4 + 0], 1.0);
+        assert_eq!(adj[0 * 4 + 2], 0.0);
+        let ones = adj.iter().filter(|&&x| x == 1.0).count();
+        assert_eq!(ones, g.m());
+    }
+
+    #[test]
+    fn two_cliques_disconnected() {
+        let g = Graph::two_cliques(3, 4);
+        assert_eq!(g.n(), 7);
+        for v in 0..3u32 {
+            assert!(g.neighbors(v).iter().all(|&t| t < 3));
+        }
+        for v in 3..7u32 {
+            assert!(g.neighbors(v).iter().all(|&t| t >= 3));
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Betweenness Centrality (paper §2.6) — SSCA2 kernel 4.
+//!
+//! The graph is "small enough to fit in the memory of a single place" and
+//! is replicated; the *work* is the per-source Brandes computation, which
+//! GLB balances as vertex-interval tasks. Two compute engines drain those
+//! tasks:
+//!
+//! * [`brandes`] — the sparse CPU Brandes (reference semantics, f64);
+//! * the **dense batched PJRT engine** ([`queue::BcEngine::Dense`]) — the
+//!   L2 JAX / L1 Pallas batched Brandes executed through
+//!   [`crate::runtime::DeviceHandle`], the paper's compute re-thought for
+//!   the MXU (see DESIGN.md §Hardware-Adaptation).
+
+pub mod bag;
+pub mod brandes;
+pub mod graph;
+pub mod interruptible;
+pub mod queue;
+
+pub use bag::BcBag;
+pub use interruptible::InterruptibleBcQueue;
+pub use brandes::{brandes_source, BrandesScratch};
+pub use graph::{Graph, RmatParams};
+pub use queue::{BcEngine, BcQueue};
+
+/// Full sequential BC over all sources (validation + baselines). Returns
+/// (betweenness map, total edges traversed).
+pub fn sequential_bc(g: &Graph) -> (Vec<f64>, u64) {
+    let mut bc = vec![0.0; g.n()];
+    let mut scratch = BrandesScratch::new(g.n());
+    let mut edges = 0;
+    for s in 0..g.n() as u32 {
+        edges += brandes_source(g, s, &mut bc, &mut scratch);
+    }
+    (bc, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_bc_on_path() {
+        // Undirected path 0-1-2: ordered pairs (0,2) and (2,0) pass
+        // through 1 ⇒ BC(1) = 2.
+        let g = Graph::path(3);
+        let (bc, edges) = sequential_bc(&g);
+        assert_eq!(bc, vec![0.0, 2.0, 0.0]);
+        assert!(edges > 0);
+    }
+
+    #[test]
+    fn sequential_bc_on_star() {
+        // Undirected star with center 0 and k = 4 leaves: every ordered
+        // leaf pair routes through the center ⇒ BC(0) = k(k-1) = 12.
+        let g = Graph::star(4);
+        let (bc, _) = sequential_bc(&g);
+        assert_eq!(bc[0], 12.0);
+        assert!(bc[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sequential_bc_on_cycle() {
+        // Symmetric graph: all vertices equal betweenness.
+        let g = Graph::cycle(6);
+        let (bc, _) = sequential_bc(&g);
+        for &v in &bc[1..] {
+            assert!((v - bc[0]).abs() < 1e-9, "{bc:?}");
+        }
+        assert!(bc[0] > 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! The BC task queue (paper §2.6.2): `process(n)` computes Brandes for
+//! the first `n` pending source vertices; `reduce()` adds betweenness
+//! maps element-wise.
+//!
+//! Two engines drain the same bag:
+//!
+//! * [`BcEngine::Sparse`] — CPU Brandes on the replicated CSR graph;
+//! * [`BcEngine::Dense`] — batched dense Brandes through the PJRT device
+//!   service (the L1/L2 AOT artifact). Sources are batched up to the
+//!   artifact's `S`; partial betweenness comes back as `f32` and is
+//!   accumulated in `f64`.
+
+use std::sync::Arc;
+
+use super::bag::BcBag;
+use super::brandes::{brandes_source, BrandesScratch};
+use super::graph::Graph;
+use crate::glb::task_bag::TaskBag;
+use crate::glb::task_queue::{ProcessOutcome, TaskQueue};
+use crate::runtime::DeviceHandle;
+
+/// The compute engine for BC tasks.
+pub enum BcEngine {
+    /// Sparse CPU Brandes on the replicated graph.
+    Sparse { graph: Arc<Graph>, scratch: BrandesScratch },
+    /// Batched dense Brandes on the PJRT device service.
+    Dense { handle: DeviceHandle },
+}
+
+/// Per-place BC state.
+pub struct BcQueue {
+    engine: BcEngine,
+    bag: BcBag,
+    bc: Vec<f64>,
+    /// Edges traversed locally (work units / TEPS accounting).
+    edges: u64,
+    /// Scratch buffer for popped sources.
+    batch: Vec<u32>,
+}
+
+impl BcQueue {
+    /// Sparse-engine queue over a replicated graph.
+    pub fn sparse(graph: Arc<Graph>) -> Self {
+        let n = graph.n();
+        Self {
+            engine: BcEngine::Sparse { scratch: BrandesScratch::new(n), graph },
+            bag: BcBag::new(),
+            bc: vec![0.0; n],
+            edges: 0,
+            batch: Vec::new(),
+        }
+    }
+
+    /// Dense-engine queue speaking to the device service.
+    pub fn dense(handle: DeviceHandle) -> Self {
+        let n = handle.n();
+        Self {
+            engine: BcEngine::Dense { handle },
+            bag: BcBag::new(),
+            bc: vec![0.0; n],
+            edges: 0,
+            batch: Vec::new(),
+        }
+    }
+
+    /// Statically assign the interval `[lo, hi)` to this place (legacy
+    /// layout) or seed the whole range at the root (GLB layout).
+    pub fn assign(&mut self, lo: u32, hi: u32) {
+        TaskBag::merge(&mut self.bag, BcBag::interval(lo, hi));
+    }
+
+    /// Assign an explicit set of source vertices (the randomized legacy
+    /// layout).
+    pub fn assign_sources(&mut self, sources: &[u32]) {
+        for &s in sources {
+            TaskBag::merge(&mut self.bag, BcBag::interval(s, s + 1));
+        }
+    }
+
+    pub fn edges(&self) -> u64 {
+        self.edges
+    }
+
+    pub fn bc(&self) -> &[f64] {
+        &self.bc
+    }
+}
+
+impl TaskQueue for BcQueue {
+    type Bag = BcBag;
+    type Result = Vec<f64>;
+
+    fn process(&mut self, n: usize) -> ProcessOutcome {
+        let before = self.edges;
+        match &mut self.engine {
+            BcEngine::Sparse { graph, scratch } => {
+                self.batch.clear();
+                self.bag.take(n, &mut self.batch);
+                for &s in &self.batch {
+                    self.edges += brandes_source(graph, s, &mut self.bc, scratch);
+                }
+            }
+            BcEngine::Dense { handle } => {
+                let mut remaining = n;
+                while remaining > 0 && self.bag.size() > 0 {
+                    let k = remaining.min(handle.batch());
+                    self.batch.clear();
+                    self.bag.take(k, &mut self.batch);
+                    let out = handle
+                        .brandes(&self.batch)
+                        .expect("device service failed (artifacts missing or shape mismatch)");
+                    debug_assert_eq!(out.bc.len(), self.bc.len());
+                    for (acc, x) in self.bc.iter_mut().zip(&out.bc) {
+                        *acc += *x as f64;
+                    }
+                    self.edges += out.edges;
+                    remaining -= self.batch.len();
+                }
+            }
+        }
+        ProcessOutcome::new(self.bag.size() > 0, self.edges - before)
+    }
+
+    fn split(&mut self) -> Option<BcBag> {
+        self.bag.split()
+    }
+
+    fn merge(&mut self, bag: BcBag) {
+        TaskBag::merge(&mut self.bag, bag);
+    }
+
+    fn result(&self) -> Vec<f64> {
+        self.bc.clone()
+    }
+
+    fn bag_size(&self) -> usize {
+        self.bag.size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::bc::sequential_bc;
+    use crate::glb::task_queue::VecSumReducer;
+    use crate::glb::{GlbConfig, GlbParams};
+    use crate::place::run_threads;
+    use crate::sim::{run_sim, CostModel, POWER775};
+
+    fn close(a: &[f64], b: &[f64]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()), "bc[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn glb_bc_matches_sequential_threads() {
+        let g = Arc::new(Graph::rmat(crate::apps::bc::RmatParams {
+            scale: 7,
+            ..Default::default()
+        }));
+        let (expect, _) = sequential_bc(&g);
+        for &p in &[1usize, 4] {
+            let cfg = GlbConfig::new(p, GlbParams::default().with_n(4).with_l(2));
+            let n = g.n() as u32;
+            let gg = g.clone();
+            let out = run_threads(
+                &cfg,
+                move |_, _| BcQueue::sparse(gg.clone()),
+                |q| q.assign(0, n),
+                &VecSumReducer,
+            );
+            close(&out.result, &expect);
+        }
+    }
+
+    #[test]
+    fn glb_bc_matches_sequential_sim() {
+        let g = Arc::new(Graph::rmat(crate::apps::bc::RmatParams {
+            scale: 6,
+            ..Default::default()
+        }));
+        let (expect, _) = sequential_bc(&g);
+        let cfg = GlbConfig::new(8, GlbParams::default().with_n(2).with_l(2));
+        let n = g.n() as u32;
+        let gg = g.clone();
+        let (out, _) = run_sim(
+            &cfg,
+            &POWER775,
+            CostModel::new(3.0, 80, 8),
+            move |_, _| BcQueue::sparse(gg.clone()),
+            |q| q.assign(0, n),
+            &VecSumReducer,
+        );
+        close(&out.result, &expect);
+    }
+
+    #[test]
+    fn static_assignment_matches_dynamic() {
+        // Seeding each place a slice (BC's "static" layout) must still
+        // produce the full map, since GLB only *rebalances*.
+        let g = Arc::new(Graph::rmat(crate::apps::bc::RmatParams {
+            scale: 6,
+            ..Default::default()
+        }));
+        let (expect, _) = sequential_bc(&g);
+        let p = 4usize;
+        let n = g.n() as u32;
+        let per = n / p as u32;
+        let cfg = GlbConfig::new(p, GlbParams::default().with_n(8).with_l(2));
+        let gg = g.clone();
+        let out = run_threads(
+            &cfg,
+            move |i, np| {
+                let mut q = BcQueue::sparse(gg.clone());
+                let lo = i as u32 * per;
+                let hi = if i == np - 1 { n } else { lo + per };
+                q.assign(lo, hi);
+                q
+            },
+            |_| {},
+            &VecSumReducer,
+        );
+        close(&out.result, &expect);
+    }
+
+    #[test]
+    fn edges_are_counted_as_units() {
+        let g = Arc::new(Graph::path(32));
+        let cfg = GlbConfig::new(2, GlbParams::default().with_n(4).with_l(2));
+        let n = g.n() as u32;
+        let gg = g.clone();
+        let out = run_threads(
+            &cfg,
+            move |_, _| BcQueue::sparse(gg.clone()),
+            |q| q.assign(0, n),
+            &VecSumReducer,
+        );
+        let total_units: u64 = out.log.per_place.iter().map(|s| s.units).sum();
+        // Each of 32 BFS traversals touches all 62 directed edges.
+        assert_eq!(total_units, 32 * 62);
+    }
+}

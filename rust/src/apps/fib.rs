@@ -1,0 +1,119 @@
+//! The appendix's pedagogical Fibonacci example (paper Fig. 11).
+//!
+//! A task is an integer `x`: processing it adds `x` to the local result
+//! when `x < 2`, otherwise it pushes tasks `x-1` and `x-2`. When all bags
+//! drain, the sum-reduction over places is `fib(n)`. Deliberately the
+//! worst possible way to compute Fibonacci — and exactly the paper's
+//! demonstration of how little users must write.
+
+use crate::glb::task_bag::{ArrayListTaskBag, TaskBag};
+use crate::glb::task_queue::{ProcessOutcome, TaskQueue};
+
+/// The Fibonacci task queue of Fig. 11 (`FibTQ`).
+#[derive(Default)]
+pub struct FibQueue {
+    bag: ArrayListTaskBag<u64>,
+    result: u64,
+}
+
+impl FibQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Root initialization (`init(n)` in the paper's listing).
+    pub fn init(&mut self, n: u64) {
+        self.bag.push(n);
+    }
+}
+
+impl TaskQueue for FibQueue {
+    type Bag = ArrayListTaskBag<u64>;
+    type Result = u64;
+
+    fn process(&mut self, n: usize) -> ProcessOutcome {
+        let mut done = 0u64;
+        while (done as usize) < n {
+            match self.bag.pop() {
+                Some(x) => {
+                    done += 1;
+                    if x < 2 {
+                        self.result += x;
+                    } else {
+                        self.bag.push(x - 1);
+                        self.bag.push(x - 2);
+                    }
+                }
+                None => break,
+            }
+        }
+        ProcessOutcome::new(self.bag.size() > 0, done)
+    }
+
+    fn split(&mut self) -> Option<Self::Bag> {
+        self.bag.split()
+    }
+
+    fn merge(&mut self, bag: Self::Bag) {
+        TaskBag::merge(&mut self.bag, bag);
+    }
+
+    fn result(&self) -> u64 {
+        self.result
+    }
+
+    fn bag_size(&self) -> usize {
+        self.bag.size()
+    }
+}
+
+/// Closed-form check value.
+pub fn fib(n: u64) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        let c = a + b;
+        a = b;
+        b = c;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glb::task_queue::SumReducer;
+    use crate::glb::{GlbConfig, GlbParams};
+    use crate::place::run_threads;
+    use crate::sim::{run_sim, CostModel, IDEAL};
+
+    #[test]
+    fn fib_closed_form() {
+        assert_eq!(fib(0), 0);
+        assert_eq!(fib(1), 1);
+        assert_eq!(fib(10), 55);
+        assert_eq!(fib(20), 6765);
+    }
+
+    #[test]
+    fn glb_fib_matches_threads() {
+        for &(p, n) in &[(1usize, 16u64), (4, 18), (8, 20)] {
+            let cfg = GlbConfig::new(p, GlbParams::default().with_n(32).with_l(2));
+            let out = run_threads(&cfg, |_, _| FibQueue::new(), |q| q.init(n), &SumReducer);
+            assert_eq!(out.result, fib(n), "p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn glb_fib_matches_sim() {
+        let cfg = GlbConfig::new(16, GlbParams::default().with_n(16).with_l(2));
+        let (out, _) = run_sim(
+            &cfg,
+            &IDEAL,
+            CostModel::new(5.0, 10, 8),
+            |_, _| FibQueue::new(),
+            |q| q.init(19),
+            &SumReducer,
+        );
+        assert_eq!(out.result, fib(19));
+    }
+}

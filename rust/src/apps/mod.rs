@@ -1,0 +1,15 @@
+//! Benchmark applications on top of the GLB core (paper §2.5, §2.6,
+//! §2.1 and the appendix):
+//!
+//! * [`uts`] — Unbalanced Tree Search (geometric law, SHA-1 splittable
+//!   RNG), the paper's dynamically-balanced workload;
+//! * [`bc`] — Betweenness Centrality over SSCA2/R-MAT graphs (sparse CPU
+//!   Brandes and the dense batched PJRT engine), the paper's
+//!   statically-balanceable workload;
+//! * [`fib`] — the appendix's pedagogical Fibonacci example;
+//! * [`nqueens`] — N-Queens, the §2.1 state-space-search family.
+
+pub mod bc;
+pub mod fib;
+pub mod nqueens;
+pub mod uts;

@@ -1,0 +1,144 @@
+//! N-Queens as a GLB application (paper §2.1: "All state space search
+//! algorithms from AI fall in the GLB problem domain ... An example of
+//! such an application is the famous N-Queens problem").
+//!
+//! A task is a partial placement encoded as three bitmasks (columns, both
+//! diagonal directions) plus the row index — O(1) state per task, ideal
+//! for bag shipping. Processing a task either counts a solution (all rows
+//! placed) or pushes one child task per legal placement in the next row.
+
+use crate::glb::task_bag::{ArrayListTaskBag, TaskBag};
+use crate::glb::task_queue::{ProcessOutcome, TaskQueue};
+
+/// A partial placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Occupied columns.
+    cols: u32,
+    /// Occupied "/" diagonals (shifted left per row).
+    diag1: u32,
+    /// Occupied "\" diagonals (shifted right per row).
+    diag2: u32,
+    /// Rows already placed.
+    row: u8,
+}
+
+impl Placement {
+    pub fn root() -> Self {
+        Self { cols: 0, diag1: 0, diag2: 0, row: 0 }
+    }
+}
+
+/// N-Queens task queue; result = number of solutions.
+pub struct NQueensQueue {
+    n: u8,
+    bag: ArrayListTaskBag<Placement>,
+    solutions: u64,
+}
+
+impl NQueensQueue {
+    pub fn new(n: u8) -> Self {
+        assert!((1..=16).contains(&n), "board size 1..=16");
+        Self { n, bag: ArrayListTaskBag::new(), solutions: 0 }
+    }
+
+    /// Root initialization: the empty board.
+    pub fn init_root(&mut self) {
+        self.bag.push(Placement::root());
+    }
+
+    pub fn solutions(&self) -> u64 {
+        self.solutions
+    }
+}
+
+impl TaskQueue for NQueensQueue {
+    type Bag = ArrayListTaskBag<Placement>;
+    type Result = u64;
+
+    fn process(&mut self, n: usize) -> ProcessOutcome {
+        let full = (1u32 << self.n) - 1;
+        let mut done = 0u64;
+        while (done as usize) < n {
+            let Some(p) = self.bag.pop() else { break };
+            done += 1;
+            if p.row == self.n {
+                self.solutions += 1;
+                continue;
+            }
+            let mut free = full & !(p.cols | p.diag1 | p.diag2);
+            while free != 0 {
+                let bit = free & free.wrapping_neg();
+                free ^= bit;
+                self.bag.push(Placement {
+                    cols: p.cols | bit,
+                    diag1: (p.diag1 | bit) << 1,
+                    diag2: (p.diag2 | bit) >> 1,
+                    row: p.row + 1,
+                });
+            }
+        }
+        ProcessOutcome::new(self.bag.size() > 0, done)
+    }
+
+    fn split(&mut self) -> Option<Self::Bag> {
+        self.bag.split()
+    }
+
+    fn merge(&mut self, bag: Self::Bag) {
+        TaskBag::merge(&mut self.bag, bag);
+    }
+
+    fn result(&self) -> u64 {
+        self.solutions
+    }
+
+    fn bag_size(&self) -> usize {
+        self.bag.size()
+    }
+}
+
+/// Known solution counts for n = 0..=12.
+pub const KNOWN: [u64; 13] = [1, 1, 0, 0, 2, 10, 4, 40, 92, 352, 724, 2680, 14200];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glb::task_queue::SumReducer;
+    use crate::glb::{GlbConfig, GlbParams};
+    use crate::place::run_threads;
+    use crate::sim::{run_sim, CostModel, K};
+
+    fn solve(p: usize, n: u8) -> u64 {
+        let cfg = GlbConfig::new(p, GlbParams::default().with_n(64).with_l(2));
+        run_threads(&cfg, move |_, _| NQueensQueue::new(n), |q| q.init_root(), &SumReducer)
+            .result
+    }
+
+    #[test]
+    fn known_counts_sequential() {
+        for n in 4..=9u8 {
+            assert_eq!(solve(1, n), KNOWN[n as usize], "n={n}");
+        }
+    }
+
+    #[test]
+    fn known_counts_parallel() {
+        assert_eq!(solve(4, 8), 92);
+        assert_eq!(solve(8, 9), 352);
+    }
+
+    #[test]
+    fn sim_matches_known() {
+        let cfg = GlbConfig::new(32, GlbParams::default().with_n(32).with_l(2));
+        let (out, _) = run_sim(
+            &cfg,
+            &K,
+            CostModel::new(25.0, 30, 16),
+            |_, _| NQueensQueue::new(9),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        assert_eq!(out.result, 352);
+    }
+}

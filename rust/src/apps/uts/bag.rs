@@ -1,0 +1,232 @@
+//! The UTS task bag (paper §2.5.2).
+//!
+//! "The internal representation of a UTS tree node is a triple
+//! (descriptor, low, high) ... The representation of a UTS tree is thus
+//! an array of UTS tree nodes." `low..high` is the range of this node's
+//! still-unexplored children.
+//!
+//! * **split**: "we evenly split each UTS node n(d,l,h) to two nodes
+//!   n1(d,l,h1) and n2(d,h2,h) ... If none of the UTS tree nodes has more
+//!   than one child node, then we do not split" — stealing child *ranges*
+//!   rather than single nodes is what lets a thief receive a large chunk
+//!   of frontier with O(1) bytes per entry.
+//! * **merge**: "simply concatenate the incoming TaskBag's UTS node array
+//!   to the local one".
+
+use super::sha1rand::Descriptor;
+use super::tree::UtsTree;
+use crate::glb::task_bag::TaskBag;
+
+/// One frontier entry: a node with unexplored children `lo..hi`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct UtsNode {
+    pub desc: Descriptor,
+    pub depth: u32,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl UtsNode {
+    /// Unexplored children.
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.hi - self.lo
+    }
+}
+
+/// The UTS frontier: an array of nodes with pending child ranges.
+#[derive(Debug, Clone, Default)]
+pub struct UtsBag {
+    nodes: Vec<UtsNode>,
+}
+
+impl UtsBag {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new() }
+    }
+
+    /// A bag holding the tree root's children range.
+    pub fn with_root(tree: &UtsTree) -> Self {
+        let (desc, children) = tree.root();
+        let mut bag = Self::new();
+        if children > 0 {
+            bag.nodes.push(UtsNode { desc, depth: 0, lo: 0, hi: children });
+        }
+        bag
+    }
+
+    pub fn nodes(&self) -> &[UtsNode] {
+        &self.nodes
+    }
+
+    /// Total unexplored children across all entries (a better work
+    /// estimate than the entry count).
+    pub fn pending_children(&self) -> u64 {
+        self.nodes.iter().map(|n| n.width() as u64).sum()
+    }
+
+    /// Expand up to `limit` tree nodes (depth-first: always the last
+    /// entry), returning `(nodes_counted, has_more)`. Each expansion
+    /// counts one child node and pushes it if it has children of its own.
+    pub fn expand_some(&mut self, tree: &UtsTree, limit: usize) -> (u64, bool) {
+        let mut counted = 0u64;
+        while (counted as usize) < limit {
+            let Some(top) = self.nodes.last_mut() else { break };
+            debug_assert!(top.lo < top.hi);
+            let i = top.lo;
+            let (desc, depth) = (top.desc, top.depth);
+            top.lo += 1;
+            let exhausted = top.lo == top.hi;
+            if exhausted {
+                self.nodes.pop();
+            }
+            let child = tree.child(&desc, i);
+            let c = tree.num_children(&child, depth + 1);
+            counted += 1;
+            if c > 0 {
+                self.nodes.push(UtsNode { desc: child, depth: depth + 1, lo: 0, hi: c });
+            }
+        }
+        (counted, !self.nodes.is_empty())
+    }
+}
+
+impl TaskBag for UtsBag {
+    /// GLB sizes bags by task items; for UTS the natural unit is the
+    /// number of unexplored children (what a steal can take half of).
+    fn size(&self) -> usize {
+        self.pending_children() as usize
+    }
+
+    fn split(&mut self) -> Option<Self> {
+        // Paper: halve every entry's child range; entries with a single
+        // child are not split ("it is cheaper to count the node locally
+        // than move it to a remote place").
+        let mut loot = Vec::new();
+        for n in self.nodes.iter_mut() {
+            if n.width() >= 2 {
+                let mid = n.lo + n.width() / 2;
+                loot.push(UtsNode { desc: n.desc, depth: n.depth, lo: mid, hi: n.hi });
+                n.hi = mid;
+            }
+        }
+        if loot.is_empty() {
+            return None;
+        }
+        Some(Self { nodes: loot })
+    }
+
+    fn merge(&mut self, other: Self) {
+        // Concatenate *under* the local frontier so depth-first descent
+        // continues on local work first.
+        let mut incoming = other.nodes;
+        std::mem::swap(&mut self.nodes, &mut incoming);
+        self.nodes.extend(incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::uts::tree::UtsParams;
+
+    fn tree() -> UtsTree {
+        UtsTree::new(UtsParams { b0: 4.0, seed: 19, max_depth: 5 })
+    }
+
+    #[test]
+    fn split_preserves_total_children() {
+        let t = tree();
+        let mut bag = UtsBag::with_root(&t);
+        bag.expand_some(&t, 50);
+        let before = bag.pending_children();
+        assert!(before > 2);
+        let loot = bag.split().expect("wide bag splits");
+        assert_eq!(bag.pending_children() + loot.pending_children(), before);
+        // Each loot entry pairs with the retained entry it was split from
+        // (same descriptor, adjacent non-overlapping ranges). Entries with
+        // a single pending child stay local and have no loot counterpart.
+        let mut loot_iter = loot.nodes().iter().peekable();
+        for a in bag.nodes() {
+            if let Some(b) = loot_iter.peek() {
+                if a.desc == b.desc && a.depth == b.depth {
+                    assert_eq!(a.hi, b.lo, "ranges must partition");
+                    loot_iter.next();
+                }
+            }
+        }
+        assert!(loot_iter.next().is_none(), "every loot entry has a local origin");
+    }
+
+    #[test]
+    fn split_refuses_singletons() {
+        let t = tree();
+        let mut bag = UtsBag::new();
+        bag.nodes.push(UtsNode { desc: t.root().0, depth: 0, lo: 0, hi: 1 });
+        assert!(bag.split().is_none(), "all-singleton bag must not split");
+    }
+
+    #[test]
+    fn split_then_merge_counts_the_same_tree() {
+        let t = tree();
+        // Expand fully in one bag.
+        let mut whole = UtsBag::with_root(&t);
+        let mut count_whole = 1u64;
+        loop {
+            let (c, more) = whole.expand_some(&t, 1 << 20);
+            count_whole += c;
+            if !more {
+                break;
+            }
+        }
+        // Expand with a split/merge round-trip in the middle.
+        let mut a = UtsBag::with_root(&t);
+        let mut count_split = 1u64;
+        let (c, _) = a.expand_some(&t, 30);
+        count_split += c;
+        let mut b = a.split().expect("should split after 30 expansions");
+        loop {
+            let (c, more) = b.expand_some(&t, 1000);
+            count_split += c;
+            if !more {
+                break;
+            }
+        }
+        loop {
+            let (c, more) = a.expand_some(&t, 1000);
+            count_split += c;
+            if !more {
+                break;
+            }
+        }
+        assert_eq!(count_whole, count_split, "partitioned traversal must count the same tree");
+    }
+
+    #[test]
+    fn merge_keeps_local_on_top() {
+        let t = tree();
+        let mut a = UtsBag::with_root(&t);
+        a.expand_some(&t, 3);
+        let top_before = *a.nodes().last().unwrap();
+        let incoming = UtsBag::with_root(&t);
+        TaskBag::merge(&mut a, incoming);
+        assert_eq!(*a.nodes().last().unwrap(), top_before);
+    }
+
+    #[test]
+    fn expansion_respects_limit() {
+        let t = tree();
+        let mut bag = UtsBag::with_root(&t);
+        let (c, _) = bag.expand_some(&t, 7);
+        assert!(c <= 7);
+    }
+
+    #[test]
+    fn empty_bag_expands_to_nothing() {
+        let t = tree();
+        let mut bag = UtsBag::new();
+        let (c, more) = bag.expand_some(&t, 10);
+        assert_eq!(c, 0);
+        assert!(!more);
+    }
+}

@@ -1,0 +1,119 @@
+//! The UTS task queue (paper §2.5.2): `process(n)` counts at most `n`
+//! tree nodes; `reduce()` is a sum over per-place counts.
+
+use super::bag::UtsBag;
+use super::tree::{UtsParams, UtsTree};
+use crate::glb::task_bag::TaskBag;
+use crate::glb::task_queue::{ProcessOutcome, TaskQueue};
+
+/// Per-place UTS state: the frontier bag + the local node count.
+pub struct UtsQueue {
+    tree: UtsTree,
+    bag: UtsBag,
+    count: u64,
+}
+
+impl UtsQueue {
+    /// An empty queue (work arrives by stealing).
+    pub fn new(params: UtsParams) -> Self {
+        Self { tree: UtsTree::new(params), bag: UtsBag::new(), count: 0 }
+    }
+
+    /// Root initialization (place 0): seed the root node. The root itself
+    /// is counted here (children are counted as they are expanded).
+    pub fn init_root(&mut self) {
+        self.bag = UtsBag::with_root(&self.tree);
+        self.count = 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bag(&self) -> &UtsBag {
+        &self.bag
+    }
+}
+
+impl TaskQueue for UtsQueue {
+    type Bag = UtsBag;
+    type Result = u64;
+
+    fn process(&mut self, n: usize) -> ProcessOutcome {
+        let (c, more) = self.bag.expand_some(&self.tree, n);
+        self.count += c;
+        ProcessOutcome::new(more, c)
+    }
+
+    fn split(&mut self) -> Option<UtsBag> {
+        self.bag.split()
+    }
+
+    fn merge(&mut self, bag: UtsBag) {
+        TaskBag::merge(&mut self.bag, bag);
+    }
+
+    fn result(&self) -> u64 {
+        self.count
+    }
+
+    fn bag_size(&self) -> usize {
+        self.bag.size()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::uts::sequential_count;
+    use crate::glb::task_queue::SumReducer;
+    use crate::glb::{GlbConfig, GlbParams};
+    use crate::place::run_threads;
+    use crate::sim::{run_sim, CostModel, BGQ};
+
+    fn params(d: u32) -> UtsParams {
+        UtsParams { b0: 4.0, seed: 19, max_depth: d }
+    }
+
+    #[test]
+    fn glb_threads_match_sequential() {
+        let up = params(6);
+        let expect = sequential_count(&up);
+        for &p in &[1usize, 2, 4, 8] {
+            let cfg = GlbConfig::new(p, GlbParams::default().with_n(64).with_l(2));
+            let out =
+                run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+            assert_eq!(out.result, expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn glb_sim_matches_sequential() {
+        let up = params(6);
+        let expect = sequential_count(&up);
+        for &p in &[1usize, 4, 32] {
+            let cfg = GlbConfig::new(p, GlbParams::default().with_n(64).with_l(2));
+            let (out, _) = run_sim(
+                &cfg,
+                &BGQ,
+                CostModel::new(180.0, 60, 28),
+                |_, _| UtsQueue::new(up),
+                |q| q.init_root(),
+                &SumReducer,
+            );
+            assert_eq!(out.result, expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn different_granularities_same_count() {
+        let up = params(5);
+        let expect = sequential_count(&up);
+        for &n in &[1usize, 7, 511, 10_000] {
+            let cfg = GlbConfig::new(3, GlbParams::default().with_n(n).with_l(2));
+            let out =
+                run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+            assert_eq!(out.result, expect, "n={n}");
+        }
+    }
+}

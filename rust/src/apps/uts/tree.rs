@@ -1,0 +1,105 @@
+//! UTS tree parameters and node expansion.
+
+use super::sha1rand::{child_descriptor, root_descriptor, to_prob, Descriptor};
+
+/// Tree-shape parameters (paper §2.5.1: fixed geometric law, `b0 = 4`,
+/// seed `r = 19`, depth `d` varying 13–20 by core count; our harness uses
+/// smaller `d` scaled to the testbed, see EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtsParams {
+    /// Expected branching factor of the geometric law.
+    pub b0: f64,
+    /// Tree seed (`r`).
+    pub seed: u32,
+    /// Depth cut-off (`d`): nodes at this depth are leaves.
+    pub max_depth: u32,
+}
+
+impl Default for UtsParams {
+    fn default() -> Self {
+        Self { b0: 4.0, seed: 19, max_depth: 10 }
+    }
+}
+
+/// Expansion rules for one tree (cheap, `Copy`-able capture of params).
+#[derive(Debug, Clone, Copy)]
+pub struct UtsTree {
+    params: UtsParams,
+    /// Precomputed `ln(1 - p)` with `p = 1/(1+b0)` — constant per tree,
+    /// hoisted out of the per-node geometric draw (§Perf: one `ln()`
+    /// fewer per node; bit-identical result since the division by it is
+    /// unchanged).
+    log_q: f64,
+}
+
+impl UtsTree {
+    pub fn new(params: UtsParams) -> Self {
+        let p = 1.0 / (1.0 + params.b0);
+        Self { params, log_q: (1.0 - p).ln() }
+    }
+
+    pub fn params(&self) -> &UtsParams {
+        &self.params
+    }
+
+    /// Root descriptor + child count.
+    pub fn root(&self) -> (Descriptor, u32) {
+        let d = root_descriptor(self.params.seed);
+        let c = self.num_children(&d, 0);
+        (d, c)
+    }
+
+    /// Child count for a node at `depth` with descriptor `d`.
+    #[inline]
+    pub fn num_children(&self, d: &Descriptor, depth: u32) -> u32 {
+        if depth >= self.params.max_depth {
+            return 0;
+        }
+        let u = to_prob(d);
+        if u <= 0.0 {
+            return 0;
+        }
+        ((1.0 - u).ln() / self.log_q).floor() as u32
+    }
+
+    /// Descriptor of child `i`.
+    #[inline]
+    pub fn child(&self, d: &Descriptor, i: u32) -> Descriptor {
+        child_descriptor(d, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_cutoff_makes_leaves() {
+        let t = UtsTree::new(UtsParams { b0: 4.0, seed: 19, max_depth: 3 });
+        let (root, _) = t.root();
+        assert_eq!(t.num_children(&root, 3), 0);
+        assert_eq!(t.num_children(&root, 99), 0);
+    }
+
+    #[test]
+    fn fast_child_count_matches_reference_formula() {
+        // The precomputed-log fast path must agree with the reference
+        // geometric draw for every descriptor (same operands, same ops).
+        use super::super::sha1rand::geometric_children;
+        let t = UtsTree::new(UtsParams { b0: 4.0, seed: 19, max_depth: 100 });
+        let mut d = t.root().0;
+        for i in 0..10_000u32 {
+            d = t.child(&d, i % 6);
+            assert_eq!(t.num_children(&d, 1), geometric_children(to_prob(&d), 4.0));
+        }
+    }
+
+    #[test]
+    fn all_depths_use_same_law() {
+        // Paper: "all nodes are treated equally, irrespective of the
+        // current depth" — the child count depends only on the descriptor.
+        let t = UtsTree::new(UtsParams { b0: 4.0, seed: 19, max_depth: 100 });
+        let (root, _) = t.root();
+        assert_eq!(t.num_children(&root, 0), t.num_children(&root, 50));
+    }
+}

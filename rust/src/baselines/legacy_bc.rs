@@ -1,0 +1,181 @@
+//! Legacy BC: static randomized source partition, no stealing (§3.6).
+//!
+//! Each place receives a random subset of the N sources (a seeded global
+//! shuffle sliced into P equal chunks) and computes them to completion
+//! with zero communication; an allreduce folds the betweenness maps. The
+//! per-place busy times are the bars of the paper's workload-distribution
+//! figures (Figs 6, 8, 10) — their spread is what GLB flattens.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::apps::bc::{brandes_source, BrandesScratch, Graph};
+use crate::util::SplitMix64;
+
+/// Output of a legacy-BC run.
+#[derive(Debug, Clone)]
+pub struct LegacyBcOutput {
+    /// Element-wise-summed betweenness map.
+    pub bc: Vec<f64>,
+    /// Per-place busy time, ns (wall clock under threads, virtual under
+    /// the analytic simulator).
+    pub busy_ns: Vec<u64>,
+    /// Per-place edges traversed.
+    pub units: Vec<u64>,
+    /// Makespan, ns (the slowest place — static schedules end when the
+    /// last place finishes).
+    pub elapsed_ns: u64,
+}
+
+impl LegacyBcOutput {
+    /// Aggregate throughput in edges/s.
+    pub fn units_per_sec(&self) -> f64 {
+        let total: u64 = self.units.iter().sum();
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        total as f64 * 1e9 / self.elapsed_ns as f64
+    }
+}
+
+/// The randomized static assignment: a seeded shuffle of `0..n` sliced
+/// into `p` equal chunks.
+pub fn randomized_assignment(n: usize, p: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut vertices: Vec<u32> = (0..n as u32).collect();
+    SplitMix64::new(seed).shuffle(&mut vertices);
+    let mut out = vec![Vec::new(); p];
+    for (i, v) in vertices.into_iter().enumerate() {
+        out[i % p].push(v);
+    }
+    out
+}
+
+/// Run legacy BC with real threads (wall-clock busy times).
+pub fn run_legacy_bc_threads(g: &Arc<Graph>, p: usize, seed: u64) -> LegacyBcOutput {
+    let assign = randomized_assignment(g.n(), p, seed);
+    let t0 = Instant::now();
+    let handles: Vec<_> = assign
+        .into_iter()
+        .map(|sources| {
+            let g = g.clone();
+            std::thread::spawn(move || {
+                let t = Instant::now();
+                let mut bc = vec![0.0; g.n()];
+                let mut scratch = BrandesScratch::new(g.n());
+                let mut units = 0u64;
+                for &s in &sources {
+                    units += brandes_source(&g, s, &mut bc, &mut scratch);
+                }
+                (bc, units, t.elapsed().as_nanos() as u64)
+            })
+        })
+        .collect();
+    let mut bc = vec![0.0; g.n()];
+    let mut busy_ns = Vec::with_capacity(p);
+    let mut units = Vec::with_capacity(p);
+    for h in handles {
+        let (b, u, t) = h.join().expect("legacy place panicked");
+        for (acc, x) in bc.iter_mut().zip(b) {
+            *acc += x;
+        }
+        busy_ns.push(t);
+        units.push(u);
+    }
+    LegacyBcOutput { bc, busy_ns, units, elapsed_ns: t0.elapsed().as_nanos() as u64 }
+}
+
+/// Run legacy BC analytically on the virtual clock: with zero
+/// communication the makespan is exactly the slowest place's work. Uses
+/// the same `ns_per_unit` cost model as the GLB simulator so the two are
+/// comparable (Figs 5/7/9).
+pub fn run_legacy_bc_sim(
+    g: &Graph,
+    p: usize,
+    seed: u64,
+    ns_per_unit: f64,
+    compute_scale: f64,
+) -> LegacyBcOutput {
+    let assign = randomized_assignment(g.n(), p, seed);
+    let mut bc = vec![0.0; g.n()];
+    let mut scratch = BrandesScratch::new(g.n());
+    let mut busy_ns = Vec::with_capacity(p);
+    let mut units = Vec::with_capacity(p);
+    for sources in assign {
+        let mut u = 0u64;
+        for &s in &sources {
+            u += brandes_source(g, s, &mut bc, &mut scratch);
+        }
+        busy_ns.push((u as f64 * ns_per_unit / compute_scale) as u64);
+        units.push(u);
+    }
+    let elapsed_ns = busy_ns.iter().copied().max().unwrap_or(0);
+    LegacyBcOutput { bc, busy_ns, units, elapsed_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::bc::{sequential_bc, RmatParams};
+    use crate::util::stats::{mean, stddev};
+
+    #[test]
+    fn assignment_is_a_partition() {
+        let a = randomized_assignment(100, 7, 3);
+        assert_eq!(a.len(), 7);
+        let mut all: Vec<u32> = a.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn threads_match_sequential() {
+        let g = Arc::new(Graph::rmat(RmatParams { scale: 6, ..Default::default() }));
+        let (expect, _) = sequential_bc(&g);
+        let out = run_legacy_bc_threads(&g, 4, 42);
+        for (i, (x, y)) in out.bc.iter().zip(&expect).enumerate() {
+            assert!((x - y).abs() < 1e-9, "bc[{i}]");
+        }
+        assert_eq!(out.busy_ns.len(), 4);
+    }
+
+    #[test]
+    fn sim_match_and_makespan() {
+        let g = Graph::rmat(RmatParams { scale: 6, ..Default::default() });
+        let (expect, _) = sequential_bc(&g);
+        let out = run_legacy_bc_sim(&g, 8, 42, 2.0, 1.0);
+        for (x, y) in out.bc.iter().zip(&expect) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        assert_eq!(out.elapsed_ns, *out.busy_ns.iter().max().unwrap());
+    }
+
+    #[test]
+    fn randomization_reduces_imbalance() {
+        // §3.6(2): random assignment beats contiguous blocks on skewed
+        // work. Compare busy-time spreads on the triangular graph.
+        let g = Graph::triangular(128);
+        let p = 8;
+        // Contiguous assignment.
+        let mut contiguous = vec![0u64; p];
+        {
+            let mut bc = vec![0.0; g.n()];
+            let mut sc = BrandesScratch::new(g.n());
+            for (i, chunk) in (0..g.n() as u32).collect::<Vec<_>>().chunks(g.n() / p).enumerate()
+            {
+                for &s in chunk {
+                    contiguous[i.min(p - 1)] += brandes_source(&g, s, &mut bc, &mut sc);
+                }
+            }
+        }
+        let rand_out = run_legacy_bc_sim(&g, p, 7, 1.0, 1.0);
+        let c: Vec<f64> = contiguous.iter().map(|&x| x as f64).collect();
+        let r: Vec<f64> = rand_out.units.iter().map(|&x| x as f64).collect();
+        let rel = |xs: &[f64]| stddev(xs) / mean(xs).max(1e-12);
+        assert!(
+            rel(&r) < rel(&c),
+            "randomized spread {:.3} should beat contiguous {:.3}",
+            rel(&r),
+            rel(&c)
+        );
+    }
+}

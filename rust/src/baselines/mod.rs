@@ -1,0 +1,22 @@
+//! The paper's comparators (§3.2, §3.6).
+//!
+//! * [`legacy_bc`] — the legacy BC code: a **static randomized partition**
+//!   of source vertices with no work stealing. "The legacy BC
+//!   implementation randomizes which vertices to compute on each place,
+//!   which effectively reduces the imbalance among places" (§3.6).
+//! * [`legacy_uts`] — the hand-tuned UTS comparator, modelled two ways:
+//!   as GLB with the tuned parameter set the X10 petascale code used
+//!   (the paper's point is that the *library* matches the hand-tuned
+//!   code), and as classic random-only distributed work stealing (the
+//!   ablation quantifying what lifelines buy).
+//! * [`static_uts`] — naive static UTS partitioning (splitting the root
+//!   frontier once, no stealing) to demonstrate why UTS "is a case that
+//!   static load-balancing does not work" (§2.5.1).
+
+pub mod legacy_bc;
+pub mod legacy_uts;
+pub mod static_uts;
+
+pub use legacy_bc::{run_legacy_bc_sim, run_legacy_bc_threads, LegacyBcOutput};
+pub use legacy_uts::{legacy_uts_params, random_only_params};
+pub use static_uts::run_static_uts_sim;

@@ -1,0 +1,93 @@
+//! Naive static UTS: split the frontier once at startup, never steal.
+//!
+//! Demonstrates the paper's §2.5.1 claim that "UTS is a case that static
+//! load-balancing does not work": subtree sizes under the geometric law
+//! are wildly uneven and unknowable in advance, so the makespan is
+//! dominated by whichever place drew the largest subtree.
+
+use crate::apps::uts::{UtsBag, UtsParams, UtsTree};
+use crate::glb::task_bag::TaskBag;
+
+/// Result of an analytic static-UTS run on the virtual clock.
+#[derive(Debug, Clone)]
+pub struct StaticUtsOutput {
+    pub total_nodes: u64,
+    /// Per-place nodes counted.
+    pub per_place: Vec<u64>,
+    /// Virtual makespan (slowest place), ns.
+    pub elapsed_ns: u64,
+}
+
+/// Split the root frontier round-robin into `p` shares and count each to
+/// completion with zero communication.
+pub fn run_static_uts_sim(up: &UtsParams, p: usize, ns_per_node: f64) -> StaticUtsOutput {
+    let tree = UtsTree::new(*up);
+    // Deal the root's children ranges out by repeated halving: bag 0
+    // holds the root, then each empty place grabs half of the largest.
+    let mut bags: Vec<UtsBag> = Vec::with_capacity(p);
+    bags.push(UtsBag::with_root(&tree));
+    while bags.len() < p {
+        // Find the widest bag and halve it (best case for static).
+        let widest = (0..bags.len()).max_by_key(|&i| bags[i].size()).unwrap();
+        match bags[widest].split() {
+            Some(half) => bags.push(half),
+            None => bags.push(UtsBag::new()),
+        }
+    }
+    let mut per_place = Vec::with_capacity(p);
+    let mut total = 1u64; // root
+    for mut bag in bags {
+        let mut c = 0u64;
+        loop {
+            let (k, more) = bag.expand_some(&tree, 1 << 16);
+            c += k;
+            if !more {
+                break;
+            }
+        }
+        total += c;
+        per_place.push(c);
+    }
+    let elapsed_ns = per_place.iter().map(|&c| (c as f64 * ns_per_node) as u64).max().unwrap_or(0);
+    StaticUtsOutput { total_nodes: total, per_place, elapsed_ns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::uts::sequential_count;
+    use crate::util::stats::{mean, stddev};
+
+    #[test]
+    fn static_counts_the_same_tree() {
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: 7 };
+        let expect = sequential_count(&up);
+        for &p in &[1usize, 4, 16] {
+            let out = run_static_uts_sim(&up, p, 100.0);
+            assert_eq!(out.total_nodes, expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn static_is_badly_imbalanced() {
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: 8 };
+        let out = run_static_uts_sim(&up, 16, 100.0);
+        let xs: Vec<f64> = out.per_place.iter().map(|&c| c as f64).collect();
+        let rel = stddev(&xs) / mean(&xs).max(1e-12);
+        assert!(rel > 0.5, "geometric subtrees should spread wildly, rel-std={rel:.3}");
+    }
+
+    #[test]
+    fn static_makespan_exceeds_ideal() {
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: 8 };
+        let p = 16;
+        let out = run_static_uts_sim(&up, p, 100.0);
+        let ideal_ns = (out.total_nodes as f64 * 100.0 / p as f64) as u64;
+        assert!(
+            out.elapsed_ns > 2 * ideal_ns,
+            "static makespan {} should be >2x ideal {}",
+            out.elapsed_ns,
+            ideal_ns
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! The `glb` launcher CLI (hand-rolled: the offline registry has no
+//! `clap`).
+//!
+//! ```text
+//! glb uts      --places 8 --depth 10 [--threads|--sim --arch bgq] [--log]
+//! glb bc       --places 8 --scale 10 [--engine sparse|dense] [--log]
+//! glb fib      --n 30 --places 4
+//! glb nqueens  --n 10 --places 4
+//! glb fig      --id 2..=10 [--csv] [--places 1,2,4,...]
+//! glb calibrate
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed `--key value` / `--flag` arguments plus positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0] and the subcommand). Options
+    /// listed in `flags` take no value.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                if flag_names.contains(&name) {
+                    if inline.is_some() {
+                        bail!("--{name} takes no value");
+                    }
+                    out.flags.push(name.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .with_context(|| format!("--{name} needs a value"))?
+                            .clone(),
+                    };
+                    out.options.insert(name.to_string(), v);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow!("--{name} {v}: {e}")),
+        }
+    }
+
+    /// Comma-separated usize list (e.g. `--places 1,2,4,8`).
+    pub fn parse_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("--{name} {s}: {e}")))
+                .collect(),
+        }
+    }
+
+    /// Reject unknown options (catch typos early).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared GLB parameter flags (`--n --w --l --z --seed --random-only`).
+pub fn glb_params_from(args: &Args) -> Result<crate::glb::GlbParams> {
+    use crate::glb::params::StealPolicy;
+    let mut p = crate::glb::GlbParams::default()
+        .with_n(args.parse_opt("n", 511usize)?)
+        .with_w(args.parse_opt("w", 1usize)?)
+        .with_l(args.parse_opt("l", 32usize)?)
+        .with_z(args.parse_opt("z", 0usize)?)
+        .with_seed(args.parse_opt("seed", 0x51F3_11FEu64)?);
+    if args.flag("random-only") {
+        p = p.with_policy(StealPolicy::RandomOnly { rounds: args.parse_opt("rounds", 2usize)? });
+    }
+    p.validate().map_err(|e| anyhow!(e))?;
+    Ok(p)
+}
+
+pub const USAGE: &str = "\
+glb — lifeline-based global load balancing (GLB, CS.DC 2013 reproduction)
+
+USAGE: glb <command> [options]
+
+COMMANDS
+  uts        Unbalanced Tree Search        --places --depth --b0 --seed-tree
+  bc         Betweenness Centrality        --places --scale --engine sparse|dense
+  fib        Fibonacci (appendix demo)     --fib-n --places
+  nqueens    N-Queens                      --board --places
+  fig        regenerate a paper figure     --id 2..10 [--csv] [--places a,b,c]
+  calibrate  print this machine's cost models
+  smoke      check the PJRT runtime wiring
+
+COMMON OPTIONS
+  --threads | --sim      substrate (default: threads for apps, sim for figs)
+  --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
+  --n --w --l --z        GLB tuning parameters (paper §2.4)
+  --random-only          ablation: random-victim stealing, no lifelines
+  --log                  print the per-worker accounting table (§2.4)
+  --csv                  machine-readable figure output
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = Args::parse(&s(&["--places", "8", "--log", "--depth=10", "pos"]), &["log"])
+            .unwrap();
+        assert_eq!(a.get("places"), Some("8"));
+        assert_eq!(a.get("depth"), Some("10"));
+        assert!(a.flag("log"));
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn typed_parsing_and_defaults() {
+        let a = Args::parse(&s(&["--places", "8"]), &[]).unwrap();
+        assert_eq!(a.parse_opt("places", 1usize).unwrap(), 8);
+        assert_eq!(a.parse_opt("depth", 13u32).unwrap(), 13);
+        assert!(a.parse_opt::<usize>("places", 0).is_ok());
+        let bad = Args::parse(&s(&["--places", "x"]), &[]).unwrap();
+        assert!(bad.parse_opt::<usize>("places", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&s(&["--places", "1,2, 4"]), &[]).unwrap();
+        assert_eq!(a.parse_list("places", &[9]).unwrap(), vec![1, 2, 4]);
+        let d = Args::parse(&[], &[]).unwrap();
+        assert_eq!(d.parse_list("places", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&s(&["--places"]), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = Args::parse(&s(&["--plcaes", "8"]), &[]).unwrap();
+        assert!(a.ensure_known(&["places"]).is_err());
+        let ok = Args::parse(&s(&["--places", "8"]), &[]).unwrap();
+        assert!(ok.ensure_known(&["places"]).is_ok());
+    }
+
+    #[test]
+    fn glb_params_flags() {
+        let a = Args::parse(&s(&["--n", "64", "--w", "3", "--random-only"]), &["random-only"])
+            .unwrap();
+        let p = glb_params_from(&a).unwrap();
+        assert_eq!(p.n, 64);
+        assert_eq!(p.w, 3);
+        assert_eq!(p.random_budget(), 6);
+    }
+}

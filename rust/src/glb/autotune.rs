@@ -1,0 +1,143 @@
+//! GLB parameter auto-tuning — the paper's future-work item (4):
+//! "Provide a mechanism to auto-tune GLB parameters (e.g., task
+//! granularity, size of random victims/lifeline buddies)."
+//!
+//! The tuner encodes the paper's own §2.4 guidance as a model:
+//!
+//! * **granularity `n`** — a worker should probe its mailbox every
+//!   `target_probe_us` of compute (too-large `n` hurts steal response
+//!   latency — the §2.6 BC lesson; too-small `n` wastes time probing),
+//!   so `n ≈ target_probe_us / per_item_us`, clamped to a sane range;
+//! * **random victims `w`** — more victims help only while the chance of
+//!   finding a loaded victim is low; scale gently with `log2 P` (the
+//!   paper found "only improved slightly" beyond small `w`);
+//! * **lifeline arity `l`** — small arity (deep cube) gives more
+//!   lifelines per place, which wins when starvation is frequent
+//!   (irregular workloads); large arity (shallow cube) reduces buddy
+//!   traffic for regular workloads. We pick `l = 2` below the crossover
+//!   place count and `l = 32` (the X10 default) above, with `z`
+//!   derived.
+//!
+//! The model's choices are validated against brute-force sweeps in the
+//! ablation bench — see EXPERIMENTS.md.
+
+use super::params::GlbParams;
+
+/// Workload description for tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadProfile {
+    /// Measured (or estimated) ns of compute per task item.
+    pub ns_per_item: f64,
+    /// How irregular the workload is: `0.0` = perfectly uniform
+    /// (BC-like, statically balanceable), `1.0` = wildly irregular
+    /// (UTS-like). Drives the responsiveness/throughput trade-off.
+    pub irregularity: f64,
+}
+
+impl WorkloadProfile {
+    pub fn new(ns_per_item: f64, irregularity: f64) -> Self {
+        Self { ns_per_item: ns_per_item.max(0.1), irregularity: irregularity.clamp(0.0, 1.0) }
+    }
+}
+
+/// Auto-tune GLB parameters for `p` places running `workload`.
+pub fn autotune(p: usize, workload: WorkloadProfile) -> GlbParams {
+    // Probe interval target: irregular workloads need fast response
+    // (steal requests must not languish behind a long chunk); uniform
+    // workloads amortize. Interpolate 50µs (irregular) .. 400µs (uniform).
+    let target_probe_ns = 50_000.0 + (1.0 - workload.irregularity) * 350_000.0;
+    let n = (target_probe_ns / workload.ns_per_item).round().clamp(1.0, 65_536.0) as usize;
+
+    // w: 1 for small machines, +1 per ~quadrupling beyond 16 places,
+    // capped at 4 (diminishing returns, paper §3.6: "improved slightly").
+    let mut w = 1usize;
+    let mut cap = 16usize;
+    while cap < p && w < 4 {
+        cap *= 4;
+        w += 1;
+    }
+
+    // l: deep binary cubes respond better for irregular workloads or
+    // large machines; the shallow X10 default is fine otherwise.
+    let l = if workload.irregularity > 0.5 || p > 512 { 2 } else { 32 };
+
+    GlbParams::default().with_n(n).with_w(w).with_l(l)
+}
+
+/// Convenience: tune for UTS on this machine (measures the SHA-1 rate).
+pub fn autotune_uts(p: usize) -> GlbParams {
+    let cost = crate::harness::calibrate_uts_cost();
+    autotune(p, WorkloadProfile::new(cost.ns_per_unit, 1.0))
+}
+
+/// Convenience: tune for BC over a given graph (measures edge rate; the
+/// per-"item" cost under the interruptible queue is one edge scan).
+pub fn autotune_bc(p: usize, g: &crate::apps::bc::Graph) -> GlbParams {
+    let cost = crate::harness::calibrate_bc_cost(g);
+    // BC is uniform-ish per edge but needs responsiveness at the tail:
+    // treat as moderately irregular.
+    autotune(p, WorkloadProfile::new(cost.ns_per_unit, 0.6)).with_w(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn granularity_tracks_item_cost() {
+        // Expensive items -> small n; cheap items -> large n.
+        let heavy = autotune(64, WorkloadProfile::new(50_000.0, 1.0)); // 50µs/item
+        let light = autotune(64, WorkloadProfile::new(5.0, 1.0)); // 5ns/item
+        assert!(heavy.n <= 2, "50µs items: probe every item, n={}", heavy.n);
+        assert!(light.n >= 5_000, "5ns items: big chunks, n={}", light.n);
+    }
+
+    #[test]
+    fn uniform_workloads_get_bigger_chunks() {
+        let irregular = autotune(64, WorkloadProfile::new(100.0, 1.0));
+        let uniform = autotune(64, WorkloadProfile::new(100.0, 0.0));
+        assert!(uniform.n > 2 * irregular.n);
+    }
+
+    #[test]
+    fn w_grows_gently_with_places() {
+        assert_eq!(autotune(4, WorkloadProfile::new(100.0, 1.0)).w, 1);
+        assert_eq!(autotune(64, WorkloadProfile::new(100.0, 1.0)).w, 2);
+        assert!(autotune(16_384, WorkloadProfile::new(100.0, 1.0)).w <= 4);
+    }
+
+    #[test]
+    fn deep_cube_for_irregular_or_large() {
+        assert_eq!(autotune(64, WorkloadProfile::new(100.0, 1.0)).l, 2);
+        assert_eq!(autotune(64, WorkloadProfile::new(100.0, 0.0)).l, 32);
+        assert_eq!(autotune(2048, WorkloadProfile::new(100.0, 0.0)).l, 2);
+    }
+
+    #[test]
+    fn tuned_params_validate_and_run() {
+        use crate::apps::uts::{sequential_count, UtsParams, UtsQueue};
+        use crate::glb::task_queue::SumReducer;
+        use crate::glb::GlbConfig;
+        use crate::sim::{run_sim, CostModel, BGQ};
+        let params = autotune(16, WorkloadProfile::new(150.0, 1.0));
+        params.validate().unwrap();
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: 7 };
+        let cfg = GlbConfig::new(16, params);
+        let (out, _) = run_sim(
+            &cfg,
+            &BGQ,
+            CostModel::new(150.0, 60, 32),
+            |_, _| UtsQueue::new(up),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        assert_eq!(out.result, sequential_count(&up));
+    }
+
+    #[test]
+    fn profile_clamps_inputs() {
+        let p = WorkloadProfile::new(-5.0, 7.0);
+        assert!(p.ns_per_item > 0.0);
+        assert_eq!(p.irregularity, 1.0);
+    }
+}

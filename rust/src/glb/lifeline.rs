@@ -1,0 +1,239 @@
+//! The lifeline graph (paper §2.4, item 2; Saraswat et al. PPoPP'11 §4).
+//!
+//! Places are laid out as an `l`-ary `z`-dimensional cube: place `p` is the
+//! base-`l` numeral `(d_{z-1} … d_1 d_0)`. Place `p`'s *outgoing* lifelines
+//! (the buddies it steals from when random stealing fails) are the `z`
+//! places obtained by decrementing one digit modulo `l`; its *incoming*
+//! lifelines (the thieves it must remember and later feed) are the
+//! increments. When `l^z > P` some numerals do not exist; following the
+//! X10 GLB library we keep decrementing that digit until the numeral is a
+//! real place, which preserves the cycle structure per dimension.
+//!
+//! The paper's required properties hold by construction and are checked by
+//! the tests (plus the property suite in `rust/tests/properties.rs`):
+//!
+//! * **connected** — work can flow from any place to any other (each
+//!   dimension's digit positions form a cycle, and cycles compose);
+//! * **low diameter** — `O(z · l)` hops;
+//! * **low out-degree** — at most `z` lifelines per place.
+
+use crate::util::SplitMix64;
+
+/// The lifeline topology for one place.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LifelineGraph {
+    /// This place.
+    pub place: usize,
+    /// Total number of places.
+    pub p: usize,
+    /// Outgoing lifelines: places this place steals from on starvation.
+    pub outgoing: Vec<usize>,
+}
+
+impl LifelineGraph {
+    /// Build the lifeline set for `place` in an `l`-ary `z`-cube over `p`
+    /// places.
+    ///
+    /// If `l^z < p` the numeral space cannot address every place and the
+    /// digit-decrement graph degenerates into disjoint cycles (found by
+    /// the `lifeline-topology` property test), so `z` is raised to the
+    /// smallest dimension that covers `p` — connectivity is a *library
+    /// guarantee* (paper §2.4: "it is a fully connected directed graph"),
+    /// not a user obligation.
+    pub fn new(place: usize, p: usize, l: usize, z: usize) -> Self {
+        assert!(place < p, "place {place} out of range (P={p})");
+        assert!(l >= 2 && z >= 1);
+        let z = z.max(super::params::derive_z(p, l));
+        let mut outgoing = Vec::with_capacity(z);
+        let mut stride = 1usize; // l^k for dimension k
+        for _dim in 0..z {
+            let digit = (place / stride) % l;
+            // Decrement this digit (cyclically), skipping numerals >= p by
+            // continuing to decrement — this keeps each dimension a single
+            // cycle over the places that exist in that slice.
+            let mut steps = 1usize;
+            let buddy = loop {
+                if steps > l {
+                    break None; // dimension degenerate (no other place)
+                }
+                let nd = (digit + l - steps % l) % l;
+                let cand = place - digit * stride + nd * stride;
+                if cand < p && cand != place {
+                    break Some(cand);
+                }
+                if cand == place {
+                    break None;
+                }
+                steps += 1;
+            };
+            if let Some(b) = buddy {
+                if !outgoing.contains(&b) {
+                    outgoing.push(b);
+                }
+            }
+            stride = stride.saturating_mul(l);
+            if stride >= p && _dim + 1 < z {
+                // Higher dimensions have digit 0 for every existing place
+                // only when p <= stride; decrementing digit 0 in a dead
+                // dimension wraps to a numeral >= p which then walks down —
+                // still fine, loop above handles it, but we can stop early
+                // when no higher digit can differ.
+                if p <= stride {
+                    break;
+                }
+            }
+        }
+        Self { place, p, outgoing }
+    }
+
+    /// Incoming lifelines: the set of places that list `self.place` in
+    /// their outgoing lifelines. O(P·z) — used by tests/diagnostics only;
+    /// the protocol discovers incoming thieves dynamically.
+    pub fn incoming(p: usize, l: usize, z: usize, place: usize) -> Vec<usize> {
+        (0..p)
+            .filter(|&q| q != place)
+            .filter(|&q| LifelineGraph::new(q, p, l, z).outgoing.contains(&place))
+            .collect()
+    }
+}
+
+/// Uniform random victim selection excluding self (paper §2.4 item 2,
+/// first round: "chooses at most w random victims").
+#[derive(Debug, Clone)]
+pub struct VictimSelector {
+    place: usize,
+    p: usize,
+    rng: SplitMix64,
+}
+
+impl VictimSelector {
+    pub fn new(place: usize, p: usize, seed: u64) -> Self {
+        // Per-place independent stream.
+        let rng = SplitMix64::new(crate::util::rng::mix64(seed ^ (place as u64).wrapping_mul(0x9E37_79B9)));
+        Self { place, p, rng }
+    }
+
+    /// Pick a victim uniformly among the other `p - 1` places; `None` when
+    /// running single-place.
+    #[inline]
+    pub fn pick(&mut self) -> Option<usize> {
+        if self.p < 2 {
+            return None;
+        }
+        let v = self.rng.next_below(self.p as u64 - 1) as usize;
+        Some(if v >= self.place { v + 1 } else { v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashSet, VecDeque};
+
+    fn reaches_all(p: usize, l: usize, z: usize) -> bool {
+        // BFS over the directed lifeline graph from every vertex would be
+        // O(P^2); strong connectivity of a composition of cycles follows
+        // from reachability from vertex 0 plus reachability *to* vertex 0,
+        // but for the small test sizes we just BFS from each vertex.
+        for start in 0..p {
+            let mut seen = HashSet::from([start]);
+            let mut q = VecDeque::from([start]);
+            while let Some(v) = q.pop_front() {
+                for &n in &LifelineGraph::new(v, p, l, z).outgoing {
+                    if seen.insert(n) {
+                        q.push_back(n);
+                    }
+                }
+            }
+            if seen.len() != p {
+                return false;
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn outdegree_at_most_z() {
+        for &(p, l, z) in &[(16usize, 2usize, 4usize), (10, 3, 3), (32, 32, 1), (100, 4, 4)] {
+            for place in 0..p {
+                let g = LifelineGraph::new(place, p, l, z);
+                assert!(g.outgoing.len() <= z, "P={p} l={l} z={z} place={place}: {:?}", g.outgoing);
+                assert!(!g.outgoing.contains(&place), "no self-lifelines");
+                assert!(g.outgoing.iter().all(|&b| b < p), "buddies must exist");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_hypercube_neighbours() {
+        // P=8, l=2, z=3: decrementing a digit mod 2 flips a bit — the
+        // classic binary hypercube.
+        for place in 0..8usize {
+            let g = LifelineGraph::new(place, 8, 2, 3);
+            let expect: HashSet<usize> = (0..3).map(|k| place ^ (1 << k)).collect();
+            assert_eq!(g.outgoing.iter().copied().collect::<HashSet<_>>(), expect);
+        }
+    }
+
+    #[test]
+    fn connected_for_various_sizes() {
+        assert!(reaches_all(2, 2, 1));
+        assert!(reaches_all(8, 2, 3));
+        assert!(reaches_all(9, 3, 2));
+        assert!(reaches_all(13, 2, 4)); // non-power-of-two place count
+        assert!(reaches_all(37, 4, 3));
+        assert!(reaches_all(60, 32, 2));
+    }
+
+    #[test]
+    fn single_place_has_no_lifelines() {
+        let g = LifelineGraph::new(0, 1, 2, 1);
+        assert!(g.outgoing.is_empty());
+    }
+
+    #[test]
+    fn two_places_point_at_each_other() {
+        let a = LifelineGraph::new(0, 2, 2, 1);
+        let b = LifelineGraph::new(1, 2, 2, 1);
+        assert_eq!(a.outgoing, vec![1]);
+        assert_eq!(b.outgoing, vec![0]);
+    }
+
+    #[test]
+    fn incoming_is_inverse_of_outgoing() {
+        let (p, l, z) = (12usize, 3usize, 3usize);
+        for place in 0..p {
+            for &b in &LifelineGraph::new(place, p, l, z).outgoing {
+                let inc = LifelineGraph::incoming(p, l, z, b);
+                assert!(inc.contains(&place), "{place} -> {b} must be in incoming({b})");
+            }
+        }
+    }
+
+    #[test]
+    fn victim_selector_never_self_and_covers() {
+        let p = 9;
+        let mut sel = VictimSelector::new(4, p, 123);
+        let mut seen = HashSet::new();
+        for _ in 0..2000 {
+            let v = sel.pick().unwrap();
+            assert_ne!(v, 4);
+            assert!(v < p);
+            seen.insert(v);
+        }
+        assert_eq!(seen.len(), p - 1, "all other places should be picked eventually");
+    }
+
+    #[test]
+    fn victim_selector_single_place() {
+        assert!(VictimSelector::new(0, 1, 1).pick().is_none());
+    }
+
+    #[test]
+    fn victim_streams_differ_across_places() {
+        let mut a = VictimSelector::new(0, 64, 7);
+        let mut b = VictimSelector::new(1, 64, 7);
+        let same = (0..64).filter(|_| a.pick() == b.pick()).count();
+        assert!(same < 16, "streams should be (mostly) independent: {same}");
+    }
+}

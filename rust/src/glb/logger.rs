@@ -1,0 +1,189 @@
+//! Per-worker accounting (paper §2.4, "logging functionalities"):
+//!
+//! 1. how much time each worker spent *processing* and *distributing*
+//!    work,
+//! 2. how many (random/lifeline) stealing requests it sent and received,
+//! 3. how many (random/lifeline) stealings it perpetrated (= successful
+//!    steals), and
+//! 4. how much workload (task items) it received/sent.
+
+use crate::util::timefmt::{fmt_count, fmt_ns};
+
+/// Counters and timers for one worker. Counts are updated by the protocol
+/// engine; times are charged by the runtime (wall clock under threads,
+/// virtual clock under the simulator).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerStats {
+    /// Task items fully processed.
+    pub items_processed: u64,
+    /// Abstract work units (see `ProcessOutcome::units`).
+    pub units: u64,
+    /// `process(n)` chunk invocations.
+    pub chunks: u64,
+    /// Times this worker ran dry and entered the steal protocol.
+    pub starvations: u64,
+
+    /// ns spent inside `process`.
+    pub process_ns: u64,
+    /// ns spent splitting/sending loot to thieves.
+    pub distribute_ns: u64,
+    /// ns spent stealing / idling (everything that is not the two above).
+    pub wait_ns: u64,
+
+    /// Steal requests sent (attempts), by kind.
+    pub random_steals_sent: u64,
+    pub lifeline_steals_sent: u64,
+    /// Steal requests received, by kind.
+    pub random_steals_received: u64,
+    pub lifeline_steals_received: u64,
+    /// Successful steals perpetrated by this worker (loot actually merged),
+    /// by kind of the request that produced it.
+    pub random_steals_perpetrated: u64,
+    pub lifeline_steals_perpetrated: u64,
+
+    /// Task items shipped to and received from other places.
+    pub loot_items_sent: u64,
+    pub loot_items_received: u64,
+    /// Loot messages (bags) sent/received.
+    pub loot_bags_sent: u64,
+    pub loot_bags_received: u64,
+}
+
+impl WorkerStats {
+    /// Busy time = processing + distributing (the per-place "calculation
+    /// time" bar of the paper's workload-distribution figures).
+    pub fn busy_ns(&self) -> u64 {
+        self.process_ns + self.distribute_ns
+    }
+
+    /// Merge counters from another worker (for aggregate reports).
+    pub fn merge(&mut self, o: &WorkerStats) {
+        self.items_processed += o.items_processed;
+        self.units += o.units;
+        self.chunks += o.chunks;
+        self.starvations += o.starvations;
+        self.process_ns += o.process_ns;
+        self.distribute_ns += o.distribute_ns;
+        self.wait_ns += o.wait_ns;
+        self.random_steals_sent += o.random_steals_sent;
+        self.lifeline_steals_sent += o.lifeline_steals_sent;
+        self.random_steals_received += o.random_steals_received;
+        self.lifeline_steals_received += o.lifeline_steals_received;
+        self.random_steals_perpetrated += o.random_steals_perpetrated;
+        self.lifeline_steals_perpetrated += o.lifeline_steals_perpetrated;
+        self.loot_items_sent += o.loot_items_sent;
+        self.loot_items_received += o.loot_items_received;
+        self.loot_bags_sent += o.loot_bags_sent;
+        self.loot_bags_received += o.loot_bags_received;
+    }
+
+    /// One row of the `--log` table.
+    pub fn row(&self, place: usize) -> String {
+        format!(
+            "{place:>5}  {:>12}  {:>10}  {:>10}  {:>6}/{:<6}  {:>6}/{:<6}  {:>6}/{:<6}  {:>10}/{:<10}",
+            fmt_count(self.items_processed),
+            fmt_ns(self.process_ns),
+            fmt_ns(self.distribute_ns),
+            self.random_steals_sent,
+            self.lifeline_steals_sent,
+            self.random_steals_received,
+            self.lifeline_steals_received,
+            self.random_steals_perpetrated,
+            self.lifeline_steals_perpetrated,
+            fmt_count(self.loot_items_sent),
+            fmt_count(self.loot_items_received),
+        )
+    }
+
+    /// Header matching [`WorkerStats::row`].
+    pub fn header() -> String {
+        format!(
+            "{:>5}  {:>12}  {:>10}  {:>10}  {:^13}  {:^13}  {:^13}  {:^21}",
+            "place",
+            "items",
+            "process",
+            "distrib",
+            "sent r/l",
+            "recv r/l",
+            "perp r/l",
+            "loot items out/in"
+        )
+    }
+}
+
+/// Aggregate view over all places, printed by `glb ... --log`.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub per_place: Vec<WorkerStats>,
+}
+
+impl RunLog {
+    pub fn new(per_place: Vec<WorkerStats>) -> Self {
+        Self { per_place }
+    }
+
+    pub fn total(&self) -> WorkerStats {
+        let mut t = WorkerStats::default();
+        for s in &self.per_place {
+            t.merge(s);
+        }
+        t
+    }
+
+    /// Per-place busy times in seconds (workload-distribution figures).
+    pub fn busy_secs(&self) -> Vec<f64> {
+        self.per_place.iter().map(|s| s.busy_ns() as f64 / 1e9).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&WorkerStats::header());
+        out.push('\n');
+        for (i, s) in self.per_place.iter().enumerate() {
+            out.push_str(&s.row(i));
+            out.push('\n');
+        }
+        let t = self.total();
+        out.push_str(&format!(
+            "total  items={} units={} starvations={} loot_bags={}/{}\n",
+            fmt_count(t.items_processed),
+            fmt_count(t.units),
+            t.starvations,
+            t.loot_bags_sent,
+            t.loot_bags_received,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = WorkerStats { items_processed: 3, process_ns: 100, ..Default::default() };
+        let b = WorkerStats { items_processed: 4, process_ns: 50, loot_items_sent: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.items_processed, 7);
+        assert_eq!(a.process_ns, 150);
+        assert_eq!(a.loot_items_sent, 7);
+    }
+
+    #[test]
+    fn busy_is_process_plus_distribute() {
+        let s = WorkerStats { process_ns: 70, distribute_ns: 30, wait_ns: 1000, ..Default::default() };
+        assert_eq!(s.busy_ns(), 100);
+    }
+
+    #[test]
+    fn render_contains_totals() {
+        let log = RunLog::new(vec![
+            WorkerStats { items_processed: 5, ..Default::default() },
+            WorkerStats { items_processed: 6, ..Default::default() },
+        ]);
+        let text = log.render();
+        assert!(text.contains("items=11"), "{text}");
+        assert_eq!(log.busy_secs().len(), 2);
+    }
+}

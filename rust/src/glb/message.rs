@@ -1,0 +1,102 @@
+//! Steal-protocol messages exchanged between places.
+//!
+//! The X10 implementation uses synchronous `at` calls for random steals and
+//! asynchronous activations for lifeline pushes; both runtimes here use a
+//! uniform asynchronous request/response protocol with identical semantics:
+//!
+//! * `Steal { thief, lifeline }` — work request. A victim that cannot share
+//!   answers `Loot { bag: None }`; a *lifeline* request is additionally
+//!   remembered by the victim, which will push loot later when it gets
+//!   work (paper §2.4: "it will still remember the request and try to
+//!   satisfy the request when it gets work from others").
+//! * `Loot { victim, bag, lifeline }` — response to a steal, or (with
+//!   `lifeline = true` and an unexpected `victim`) a deferred lifeline
+//!   push.
+//! * `Terminate` — broadcast by the worker that observes global
+//!   quiescence.
+
+/// Identifier of a place (0-based, dense).
+pub type PlaceId = usize;
+
+/// A protocol message carrying bags of type `B`.
+///
+/// `nonce` pairs responses with requests. X10's random steals are
+/// synchronous `at` calls, so a thief can never confuse a deferred
+/// lifeline push with the response it is waiting for; under fully
+/// asynchronous messaging the two are otherwise indistinguishable (same
+/// victim, same kind), which would corrupt the steal loop — see the
+/// `push_race_with_outstanding_request` test.
+#[derive(Debug)]
+pub enum Msg<B> {
+    /// Work request from `thief`.
+    Steal { thief: PlaceId, lifeline: bool, nonce: u64 },
+    /// Response to a steal (`bag: None` = refusal, echoing the request's
+    /// `nonce`) or an unsolicited lifeline push (`bag: Some`,
+    /// `lifeline: true`, `nonce: None`).
+    Loot { victim: PlaceId, bag: Option<B>, lifeline: bool, nonce: Option<u64> },
+    /// Global quiescence: unblock and finish.
+    Terminate,
+}
+
+impl<B> Msg<B> {
+    /// Rough wire size in bytes, for the simulator's bandwidth/occupancy
+    /// model. `item_bytes` is the application's per-task serialized size.
+    pub fn wire_bytes(&self, item_bytes: usize, bag_items: impl Fn(&B) -> usize) -> usize {
+        const HEADER: usize = 64; // envelope: type tag, ids, rendezvous
+        match self {
+            Msg::Steal { .. } | Msg::Terminate => HEADER,
+            Msg::Loot { bag: None, .. } => HEADER,
+            Msg::Loot { bag: Some(b), .. } => HEADER + item_bytes * bag_items(b),
+        }
+    }
+
+    /// Message kind as a short static label (diagnostics / sim traces).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Steal { lifeline: false, .. } => "steal",
+            Msg::Steal { lifeline: true, .. } => "steal-lifeline",
+            Msg::Loot { bag: Some(_), lifeline: false, .. } => "loot",
+            Msg::Loot { bag: Some(_), lifeline: true, .. } => "loot-lifeline",
+            Msg::Loot { bag: None, .. } => "refusal",
+            Msg::Terminate => "terminate",
+        }
+    }
+}
+
+/// Effects a worker asks its runtime to carry out. Keeping I/O out of the
+/// worker lets the thread runtime and the discrete-event simulator share
+/// the exact same protocol engine.
+#[derive(Debug)]
+pub enum Effect<B> {
+    /// Send `msg` to place `to`.
+    Send { to: PlaceId, msg: Msg<B> },
+    /// This worker observed the global token count hit zero: the whole
+    /// computation is quiescent. The runtime must broadcast `Terminate`.
+    Quiescent,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_bytes_scale_with_bag() {
+        let len = |b: &Vec<u32>| b.len();
+        let steal: Msg<Vec<u32>> = Msg::Steal { thief: 1, lifeline: false, nonce: 0 };
+        assert_eq!(steal.wire_bytes(8, len), 64);
+        let loot =
+            Msg::Loot { victim: 0, bag: Some(vec![1, 2, 3]), lifeline: false, nonce: Some(0) };
+        assert_eq!(loot.wire_bytes(8, len), 64 + 24);
+        let refusal: Msg<Vec<u32>> =
+            Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(1) };
+        assert_eq!(refusal.wire_bytes(8, len), 64);
+    }
+
+    #[test]
+    fn kinds() {
+        let m: Msg<Vec<u32>> = Msg::Steal { thief: 0, lifeline: true, nonce: 0 };
+        assert_eq!(m.kind(), "steal-lifeline");
+        let t: Msg<Vec<u32>> = Msg::Terminate;
+        assert_eq!(t.kind(), "terminate");
+    }
+}

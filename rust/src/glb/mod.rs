@@ -1,0 +1,127 @@
+//! # GLB — lifeline-based global load balancing
+//!
+//! The library core: everything the paper's §2 describes, independent of
+//! how places are realized. Users implement [`TaskBag`] + [`TaskQueue`]
+//! (or reuse [`ArrayListTaskBag`]), pick [`GlbParams`], and run under
+//! either execution substrate:
+//!
+//! * [`crate::place::run_threads`] — one OS thread per place (real
+//!   concurrency, wall-clock timing);
+//! * [`crate::sim::run_sim`] — deterministic discrete-event simulation of
+//!   up to tens of thousands of places with per-architecture latency
+//!   models (virtual-clock timing; reproduces the paper's scaling
+//!   figures).
+//!
+//! ```no_run
+//! use glb::glb::{GlbConfig, GlbParams, SumReducer};
+//! use glb::apps::fib::FibQueue;
+//!
+//! let cfg = GlbConfig::new(4, GlbParams::default().with_n(64));
+//! let out = glb::place::run_threads(
+//!     &cfg,
+//!     |_, _| FibQueue::new(),            // per-place queue factory
+//!     |q: &mut FibQueue| q.init(20),     // root initialization (place 0)
+//!     &SumReducer,
+//! );
+//! assert_eq!(out.result, 6765);
+//! ```
+
+pub mod autotune;
+pub mod lifeline;
+pub mod logger;
+pub mod message;
+pub mod params;
+pub mod task_bag;
+pub mod task_queue;
+pub mod termination;
+pub mod worker;
+
+pub use autotune::{autotune, WorkloadProfile};
+pub use lifeline::{LifelineGraph, VictimSelector};
+pub use logger::{RunLog, WorkerStats};
+pub use message::{Effect, Msg, PlaceId};
+pub use params::GlbParams;
+pub use task_bag::{ArrayListTaskBag, TaskBag};
+pub use task_queue::{FnReducer, ProcessOutcome, Reducer, SumReducer, TaskQueue, VecSumReducer};
+pub use termination::{AtomicLedger, Ledger, SimLedger};
+pub use worker::{Phase, StepOutcome, Worker};
+
+/// A GLB run configuration: place count + tuning parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GlbConfig {
+    /// Number of places.
+    pub p: usize,
+    /// Tuning parameters (paper §2.4).
+    pub params: GlbParams,
+}
+
+impl GlbConfig {
+    pub fn new(p: usize, params: GlbParams) -> Self {
+        assert!(p >= 1, "need at least one place");
+        params.validate().expect("invalid GLB parameters");
+        Self { p, params }
+    }
+}
+
+/// The outcome of a GLB run under either substrate.
+#[derive(Debug, Clone)]
+pub struct RunOutput<R> {
+    /// The reduced result (paper: the single value of type `Z`).
+    pub result: R,
+    /// Per-place accounting (paper §2.4 logging).
+    pub log: RunLog,
+    /// End-to-end run time in ns — wall clock under threads, virtual time
+    /// under the simulator.
+    pub elapsed_ns: u64,
+}
+
+impl<R> RunOutput<R> {
+    /// Throughput in `units`/s (UTS: nodes/s; BC: edges/s) — the paper's
+    /// primary y-axis.
+    pub fn units_per_sec(&self) -> f64 {
+        let total: u64 = self.log.per_place.iter().map(|s| s.units).sum();
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        total as f64 * 1e9 / self.elapsed_ns as f64
+    }
+
+    /// Efficiency = units/s/place normalized by a single-place baseline
+    /// rate — the paper's secondary y-axis.
+    pub fn efficiency_vs(&self, single_place_units_per_sec: f64) -> f64 {
+        if single_place_units_per_sec <= 0.0 {
+            return 0.0;
+        }
+        (self.units_per_sec() / self.log.per_place.len() as f64) / single_place_units_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validates() {
+        let c = GlbConfig::new(4, GlbParams::default());
+        assert_eq!(c.p, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one place")]
+    fn zero_places_rejected() {
+        GlbConfig::new(0, GlbParams::default());
+    }
+
+    #[test]
+    fn run_output_rates() {
+        let mut log = RunLog::default();
+        log.per_place = vec![
+            WorkerStats { units: 500, ..Default::default() },
+            WorkerStats { units: 500, ..Default::default() },
+        ];
+        let out = RunOutput { result: 0u64, log, elapsed_ns: 1_000_000_000 };
+        assert!((out.units_per_sec() - 1000.0).abs() < 1e-9);
+        assert!((out.efficiency_vs(500.0) - 1.0).abs() < 1e-9);
+        assert_eq!(out.efficiency_vs(0.0), 0.0);
+    }
+}

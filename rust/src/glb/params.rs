@@ -1,0 +1,182 @@
+//! GLB tuning parameters (paper §2.4).
+//!
+//! The paper exposes three user-facing knobs:
+//!
+//! * `n` — task granularity: how many task items a worker processes per
+//!   `process(n)` call before probing its mailbox for steal requests.
+//! * `w` — number of random-steal attempts per starvation episode.
+//! * `z` — dimension of the lifeline hypercube. Together with the arity
+//!   `l` this fixes the lifeline graph: places are digits of a base-`l`
+//!   number with `z` digits and each place steals from / is fed by its
+//!   `z` cyclic neighbours (see [`crate::glb::lifeline`]).
+//!
+//! Defaults follow the X10 GLB library that shipped with X10 2.4
+//! (`GLBParameters.Default`): `n = 511`, `w = 1`, `l = 32`, with `z`
+//! derived from the place count at startup.
+
+/// Work-stealing policy. [`StealPolicy::Lifeline`] is the paper's
+/// algorithm; [`StealPolicy::RandomOnly`] is the classic distributed
+/// work-stealing comparator (random victims with retry rounds, no
+/// lifelines) used by the ablation benches to quantify what lifelines
+/// buy. Random-only workers that exhaust their rounds idle permanently —
+/// correct (termination still detects quiescence) but they can never be
+/// re-activated, which is precisely the deficiency lifelines fix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Two rounds: `w` random victims, then the lifeline hypercube.
+    Lifeline,
+    /// `rounds` rounds of `w` random victims each; no lifelines.
+    RandomOnly { rounds: usize },
+}
+
+/// Tunable parameters for a GLB run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlbParams {
+    /// Task granularity: items per `process` call between mailbox probes.
+    pub n: usize,
+    /// Random-steal attempts per starvation episode.
+    pub w: usize,
+    /// Arity of the lifeline cube (`l` in the paper).
+    pub l: usize,
+    /// Lifeline cube dimension; `0` means "derive from the place count"
+    /// (smallest `z` with `l^z >= P`).
+    pub z: usize,
+    /// Seed for the victim-selection RNGs (per-place streams are split off
+    /// deterministically, so a run is reproducible given the seed).
+    pub seed: u64,
+    /// Minimum bag size a victim must hold before it will satisfy a steal
+    /// (a bag of fewer than `2` items cannot be split by the default bag).
+    pub steal_threshold: usize,
+    /// Steal policy (lifeline vs random-only ablation).
+    pub policy: StealPolicy,
+}
+
+impl Default for GlbParams {
+    fn default() -> Self {
+        Self {
+            n: 511,
+            w: 1,
+            l: 32,
+            z: 0,
+            seed: 0x51F3_11FE,
+            steal_threshold: 2,
+            policy: StealPolicy::Lifeline,
+        }
+    }
+}
+
+impl GlbParams {
+    /// Resolve the lifeline dimension for `p` places: the configured `z`
+    /// if nonzero, else the smallest `z` such that `l^z >= p`.
+    pub fn resolve_z(&self, p: usize) -> usize {
+        if self.z != 0 {
+            return self.z;
+        }
+        derive_z(p, self.l)
+    }
+
+    /// Builder-style setters (ergonomics for examples/benches).
+    pub fn with_n(mut self, n: usize) -> Self {
+        self.n = n.max(1);
+        self
+    }
+    pub fn with_w(mut self, w: usize) -> Self {
+        self.w = w;
+        self
+    }
+    pub fn with_l(mut self, l: usize) -> Self {
+        self.l = l.max(2);
+        self
+    }
+    pub fn with_z(mut self, z: usize) -> Self {
+        self.z = z;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn with_policy(mut self, policy: StealPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Total random-steal attempts per starvation episode under the
+    /// configured policy.
+    pub fn random_budget(&self) -> usize {
+        match self.policy {
+            StealPolicy::Lifeline => self.w,
+            StealPolicy::RandomOnly { rounds } => self.w.max(1) * rounds.max(1),
+        }
+    }
+
+    /// Validate parameter sanity; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("granularity n must be >= 1".into());
+        }
+        if self.l < 2 {
+            return Err("lifeline arity l must be >= 2".into());
+        }
+        Ok(())
+    }
+}
+
+/// Smallest `z` with `l^z >= p` (and `z >= 1`).
+pub fn derive_z(p: usize, l: usize) -> usize {
+    debug_assert!(l >= 2);
+    let mut z = 1usize;
+    let mut cap = l as u128;
+    while cap < p as u128 {
+        cap *= l as u128;
+        z += 1;
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_x10_glb() {
+        let p = GlbParams::default();
+        assert_eq!(p.n, 511);
+        assert_eq!(p.w, 1);
+        assert_eq!(p.l, 32);
+        assert_eq!(p.z, 0);
+    }
+
+    #[test]
+    fn derive_z_small_counts() {
+        assert_eq!(derive_z(1, 2), 1);
+        assert_eq!(derive_z(2, 2), 1);
+        assert_eq!(derive_z(3, 2), 2);
+        assert_eq!(derive_z(4, 2), 2);
+        assert_eq!(derive_z(5, 2), 3);
+        assert_eq!(derive_z(1024, 32), 2);
+        assert_eq!(derive_z(1025, 32), 3);
+        assert_eq!(derive_z(16384, 32), 3);
+    }
+
+    #[test]
+    fn resolve_z_prefers_explicit() {
+        let p = GlbParams::default().with_z(5);
+        assert_eq!(p.resolve_z(4), 5);
+        let q = GlbParams::default();
+        assert_eq!(q.resolve_z(1024), 2);
+    }
+
+    #[test]
+    fn validation() {
+        assert!(GlbParams::default().validate().is_ok());
+        assert!(GlbParams { n: 0, ..Default::default() }.validate().is_err());
+        assert!(GlbParams { l: 1, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn builders_clamp() {
+        assert_eq!(GlbParams::default().with_n(0).n, 1);
+        assert_eq!(GlbParams::default().with_l(0).l, 2);
+    }
+}

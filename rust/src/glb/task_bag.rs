@@ -1,0 +1,183 @@
+//! The `TaskBag` abstraction (paper §2.3).
+//!
+//! A task bag is a container of *relocatable* tasks. GLB moves work between
+//! places by calling `split` on a victim's bag and `merge` on the thief's.
+//! Relocatability is enforced at compile time by the `Send + 'static`
+//! bound — a bag is handed to another place (thread) by value.
+//!
+//! The paper ships a default `ArrayList`-based bag whose `split` removes
+//! half of the elements from the end and whose `merge` appends; that is
+//! [`ArrayListTaskBag`] below. Applications with richer structure (UTS
+//! node ranges, BC vertex intervals) implement the trait directly.
+
+/// A splittable, mergeable multiset of tasks.
+pub trait TaskBag: Send + 'static {
+    /// Number of task items currently in the bag. GLB uses this only as a
+    /// heuristic (whether the bag is worth splitting); it need not equal
+    /// the eventual amount of *work* (e.g. UTS subtree sizes are unknown).
+    fn size(&self) -> usize;
+
+    /// Split off roughly half of the bag. Returns `None` when the bag is
+    /// too small to split (the paper: "returns null if the TaskBag is too
+    /// small to split").
+    fn split(&mut self) -> Option<Self>
+    where
+        Self: Sized;
+
+    /// Merge another bag into this one.
+    fn merge(&mut self, other: Self);
+
+    /// True when there is nothing left to process.
+    fn is_empty(&self) -> bool {
+        self.size() == 0
+    }
+}
+
+/// The default bag: a `Vec` of task items; `split` removes the second half
+/// from the end (constant amortized per item, preserving LIFO depth-first
+/// order for the retained half), `merge` appends.
+#[derive(Debug, Clone, Default)]
+pub struct ArrayListTaskBag<T> {
+    items: Vec<T>,
+}
+
+impl<T> ArrayListTaskBag<T> {
+    pub fn new() -> Self {
+        Self { items: Vec::new() }
+    }
+
+    pub fn from_vec(items: Vec<T>) -> Self {
+        Self { items }
+    }
+
+    /// Push a task (LIFO end).
+    #[inline]
+    pub fn push(&mut self, t: T) {
+        self.items.push(t);
+    }
+
+    /// Pop the most recently pushed task (depth-first order).
+    #[inline]
+    pub fn pop(&mut self) -> Option<T> {
+        self.items.pop()
+    }
+
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.items
+    }
+}
+
+impl<T: Send + 'static> TaskBag for ArrayListTaskBag<T> {
+    fn size(&self) -> usize {
+        self.items.len()
+    }
+
+    fn split(&mut self) -> Option<Self> {
+        if self.items.len() < 2 {
+            return None;
+        }
+        // Give away the *older* half (front of the Vec): those are the
+        // shallower, typically larger tasks in depth-first expansions —
+        // the classic steal-from-the-top policy. `split_off` keeps the
+        // tail for the loot-free path cheap.
+        let keep_from = self.items.len() / 2;
+        let tail = self.items.split_off(keep_from);
+        let head = std::mem::replace(&mut self.items, tail);
+        Some(Self { items: head })
+    }
+
+    fn merge(&mut self, other: Self) {
+        // Merge under the live tasks so the local LIFO tail keeps priority.
+        let mut incoming = other.items;
+        std::mem::swap(&mut self.items, &mut incoming);
+        self.items.extend(incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_halves_and_preserves_items() {
+        let mut bag = ArrayListTaskBag::from_vec((0..10).collect::<Vec<i32>>());
+        let loot = bag.split().expect("bag of 10 splits");
+        assert_eq!(bag.size() + loot.size(), 10);
+        assert_eq!(loot.size(), 5);
+        let mut all: Vec<i32> =
+            bag.items().iter().chain(loot.items().iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_gives_older_half() {
+        let mut bag = ArrayListTaskBag::from_vec(vec![0, 1, 2, 3]);
+        let loot = bag.split().unwrap();
+        assert_eq!(loot.items(), &[0, 1]); // shallow/old tasks travel
+        assert_eq!(bag.items(), &[2, 3]);
+    }
+
+    #[test]
+    fn too_small_to_split() {
+        let mut empty: ArrayListTaskBag<u8> = ArrayListTaskBag::new();
+        assert!(empty.split().is_none());
+        let mut one = ArrayListTaskBag::from_vec(vec![1u8]);
+        assert!(one.split().is_none());
+        let mut two = ArrayListTaskBag::from_vec(vec![1u8, 2]);
+        assert!(two.split().is_some());
+    }
+
+    #[test]
+    fn odd_split_sizes() {
+        let mut bag = ArrayListTaskBag::from_vec((0..7).collect::<Vec<i32>>());
+        let loot = bag.split().unwrap();
+        assert_eq!(loot.size(), 3);
+        assert_eq!(bag.size(), 4);
+    }
+
+    #[test]
+    fn merge_appends_and_keeps_local_tail() {
+        let mut bag = ArrayListTaskBag::from_vec(vec![10, 11]);
+        bag.merge(ArrayListTaskBag::from_vec(vec![1, 2, 3]));
+        assert_eq!(bag.size(), 5);
+        // Local tasks (10, 11) must still be on top of the LIFO order.
+        assert_eq!(bag.pop(), Some(11));
+        assert_eq!(bag.pop(), Some(10));
+        assert_eq!(bag.pop(), Some(3));
+    }
+
+    #[test]
+    fn merge_into_empty() {
+        let mut bag: ArrayListTaskBag<i32> = ArrayListTaskBag::new();
+        bag.merge(ArrayListTaskBag::from_vec(vec![5, 6]));
+        assert_eq!(bag.size(), 2);
+    }
+
+    #[test]
+    fn push_pop_lifo() {
+        let mut bag = ArrayListTaskBag::new();
+        bag.push(1);
+        bag.push(2);
+        assert_eq!(bag.pop(), Some(2));
+        assert_eq!(bag.pop(), Some(1));
+        assert_eq!(bag.pop(), None);
+        assert!(bag.is_empty());
+    }
+
+    #[test]
+    fn repeated_splits_drain_to_singletons() {
+        let mut bag = ArrayListTaskBag::from_vec((0..64).collect::<Vec<i32>>());
+        let mut loots = Vec::new();
+        while let Some(l) = bag.split() {
+            loots.push(l);
+        }
+        assert_eq!(bag.size(), 1, "splitting stops at a singleton");
+        let sum: usize = bag.size() + loots.iter().map(|l| l.size()).sum::<usize>();
+        assert_eq!(sum, 64, "items conserved across all splits");
+    }
+}

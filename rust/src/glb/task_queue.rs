@@ -1,0 +1,173 @@
+//! The `TaskQueue` abstraction (paper §2.3) — the user-provided sequential
+//! computation plus the split/merge wrappers around its task bag.
+//!
+//! A `TaskQueue` lives on exactly one place. GLB calls:
+//!
+//! * [`TaskQueue::process`] repeatedly while work remains (paper: "It
+//!   processes n items if available and returns true; otherwise it
+//!   processes all available (< n) items and returns false");
+//! * [`TaskQueue::split`] on steal victims and [`TaskQueue::merge`] on
+//!   thieves;
+//! * [`TaskQueue::result`] once, at termination, and folds the per-place
+//!   results with the user's [`Reducer`].
+
+use super::task_bag::TaskBag;
+
+/// Outcome of one `process(n)` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProcessOutcome {
+    /// Whether tasks remain in the local bag (the paper's boolean).
+    pub has_more: bool,
+    /// Abstract work units completed by this call — UTS reports tree nodes
+    /// counted, BC reports edges traversed. Used for throughput reporting
+    /// and for virtual-time accounting in the simulator runtime.
+    pub units: u64,
+}
+
+impl ProcessOutcome {
+    pub fn new(has_more: bool, units: u64) -> Self {
+        Self { has_more, units }
+    }
+}
+
+/// User-provided sequential computation over a task bag.
+pub trait TaskQueue: Send + 'static {
+    /// The bag type work is moved in.
+    type Bag: TaskBag;
+    /// Per-place result type (paper: the `Z` of the reduction).
+    type Result: Send + Clone + 'static;
+
+    /// Process up to `n` task items.
+    fn process(&mut self, n: usize) -> ProcessOutcome;
+
+    /// Split off roughly half of the local bag for a thief, or `None` if
+    /// there is too little work to share.
+    fn split(&mut self) -> Option<Self::Bag>;
+
+    /// Merge stolen loot into the local bag.
+    fn merge(&mut self, bag: Self::Bag);
+
+    /// Current local result (called after global quiescence).
+    fn result(&self) -> Self::Result;
+
+    /// Number of task items currently in the local bag.
+    fn bag_size(&self) -> usize;
+}
+
+/// Commutative, associative reduction of per-place results (paper §2.1:
+/// "the user supplied reduction operator is assumed to be associative and
+/// commutative, [so] the result of execution of the problem is
+/// determinate").
+pub trait Reducer<R>: Send + Sync + 'static {
+    fn identity(&self) -> R;
+    fn reduce(&self, a: R, b: R) -> R;
+
+    /// Fold a collection of per-place results.
+    fn reduce_all<I: IntoIterator<Item = R>>(&self, results: I) -> R {
+        results.into_iter().fold(self.identity(), |a, b| self.reduce(a, b))
+    }
+}
+
+/// Reduction by closure pair — the common case.
+pub struct FnReducer<R, F> {
+    identity: R,
+    f: F,
+}
+
+impl<R: Clone, F: Fn(R, R) -> R> FnReducer<R, F> {
+    pub fn new(identity: R, f: F) -> Self {
+        Self { identity, f }
+    }
+}
+
+impl<R, F> Reducer<R> for FnReducer<R, F>
+where
+    R: Clone + Send + Sync + 'static,
+    F: Fn(R, R) -> R + Send + Sync + 'static,
+{
+    fn identity(&self) -> R {
+        self.identity.clone()
+    }
+    fn reduce(&self, a: R, b: R) -> R {
+        (self.f)(a, b)
+    }
+}
+
+/// Sum reduction for numeric results (UTS node counts, Fib).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SumReducer;
+
+macro_rules! impl_sum_reducer {
+    ($($t:ty),*) => {$(
+        impl Reducer<$t> for SumReducer {
+            fn identity(&self) -> $t { 0 as $t }
+            fn reduce(&self, a: $t, b: $t) -> $t { a + b }
+        }
+    )*};
+}
+impl_sum_reducer!(u64, i64, f64);
+
+/// Element-wise vector sum (BC betweenness maps).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VecSumReducer;
+
+impl Reducer<Vec<f64>> for VecSumReducer {
+    fn identity(&self) -> Vec<f64> {
+        Vec::new()
+    }
+    fn reduce(&self, mut a: Vec<f64>, b: Vec<f64>) -> Vec<f64> {
+        if a.is_empty() {
+            return b;
+        }
+        if b.is_empty() {
+            return a;
+        }
+        assert_eq!(a.len(), b.len(), "betweenness maps must agree in length");
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_reducer_folds() {
+        let r = SumReducer;
+        assert_eq!(r.reduce_all(vec![1u64, 2, 3, 4]), 10);
+        assert_eq!(Reducer::<u64>::identity(&r), 0);
+    }
+
+    #[test]
+    fn vec_sum_handles_identity_on_either_side() {
+        let r = VecSumReducer;
+        let a = vec![1.0, 2.0];
+        assert_eq!(r.reduce(Vec::new(), a.clone()), a);
+        assert_eq!(r.reduce(a.clone(), Vec::new()), a);
+        assert_eq!(r.reduce(vec![1.0, 2.0], vec![10.0, 20.0]), vec![11.0, 22.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must agree in length")]
+    fn vec_sum_rejects_mismatched_lengths() {
+        VecSumReducer.reduce(vec![1.0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn fn_reducer_works() {
+        let r = FnReducer::new(1u64, |a, b| a * b);
+        assert_eq!(r.reduce_all(vec![2, 3, 4]), 24);
+    }
+
+    #[test]
+    fn reduce_all_order_independent_for_commutative_op() {
+        let r = SumReducer;
+        let mut xs = vec![5u64, 9, 1, 7];
+        let a = r.reduce_all(xs.clone());
+        xs.reverse();
+        assert_eq!(a, r.reduce_all(xs));
+    }
+}

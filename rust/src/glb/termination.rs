@@ -1,0 +1,145 @@
+//! Distributed termination detection (paper §2.4 item 3).
+//!
+//! GLB terminates "when all Workers run out of work". The lifeline paper
+//! piggybacks on X10's `finish`; we implement the equivalent *work-token*
+//! ledger:
+//!
+//! * every place whose bag is non-empty holds one token;
+//! * every loot message in flight holds one token (the victim increments
+//!   the count **before** sending);
+//! * a worker releases its token only after its bag is empty, its `w`
+//!   random steals were refused, and it has registered with every
+//!   lifeline buddy;
+//! * a thief that receives loot while it still holds a token destroys the
+//!   message token (decrement); an idle thief adopts it (no change).
+//!
+//! Invariant: the count is zero **iff** every bag is empty and no loot is
+//! in flight — at that instant no message of any kind is in flight (steal
+//! requests and refusals are only outstanding while their thief still
+//! holds a token), so the detecting worker can broadcast `Terminate`
+//! without racing anything. This is checked by the property tests.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// Abstract global token counter so the same worker engine runs under the
+/// multi-threaded runtime (atomic) and the discrete-event simulator
+/// (plain cell).
+pub trait Ledger {
+    /// Acquire one token.
+    fn incr(&self);
+    /// Release one token; `true` when the count reached zero (global
+    /// quiescence observed by this caller, exactly once).
+    fn decr(&self) -> bool;
+    /// Current count (diagnostics, post-run assertions).
+    fn value(&self) -> i64;
+}
+
+/// Thread-safe ledger for the thread runtime.
+#[derive(Debug, Default)]
+pub struct AtomicLedger {
+    count: AtomicI64,
+}
+
+impl AtomicLedger {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { count: AtomicI64::new(0) })
+    }
+}
+
+impl Ledger for Arc<AtomicLedger> {
+    fn incr(&self) {
+        self.count.fetch_add(1, Ordering::AcqRel);
+    }
+
+    fn decr(&self) -> bool {
+        let prev = self.count.fetch_sub(1, Ordering::AcqRel);
+        debug_assert!(prev >= 1, "token ledger underflow (prev={prev})");
+        prev == 1
+    }
+
+    fn value(&self) -> i64 {
+        self.count.load(Ordering::Acquire)
+    }
+}
+
+/// Single-threaded ledger for the simulator runtime.
+#[derive(Debug, Clone, Default)]
+pub struct SimLedger {
+    count: Rc<Cell<i64>>,
+}
+
+impl SimLedger {
+    pub fn new() -> Self {
+        Self { count: Rc::new(Cell::new(0)) }
+    }
+}
+
+impl Ledger for SimLedger {
+    fn incr(&self) {
+        self.count.set(self.count.get() + 1);
+    }
+
+    fn decr(&self) -> bool {
+        let v = self.count.get() - 1;
+        debug_assert!(v >= 0, "token ledger underflow");
+        self.count.set(v);
+        v == 0
+    }
+
+    fn value(&self) -> i64 {
+        self.count.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_ledger_detects_zero_once() {
+        let l = AtomicLedger::new();
+        l.incr();
+        l.incr();
+        assert_eq!(l.value(), 2);
+        assert!(!l.decr());
+        assert!(l.decr());
+        assert_eq!(l.value(), 0);
+    }
+
+    #[test]
+    fn sim_ledger_detects_zero() {
+        let l = SimLedger::new();
+        l.incr();
+        assert!(!{
+            l.incr();
+            l.decr()
+        });
+        assert!(l.decr());
+    }
+
+    #[test]
+    fn atomic_ledger_concurrent_balance() {
+        let l = AtomicLedger::new();
+        // Pre-charge so no thread transiently sees zero mid-run.
+        l.incr();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        l.incr();
+                        assert!(!l.decr(), "count must stay above zero while pre-charged");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(l.decr(), "final release must observe zero");
+        assert_eq!(l.value(), 0);
+    }
+}

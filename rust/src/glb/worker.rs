@@ -1,0 +1,709 @@
+//! The GLB worker protocol engine (paper §2.4).
+//!
+//! A [`Worker`] is a pure state machine: it never blocks, sleeps, or sends
+//! anything itself — it emits [`Effect`]s for its runtime to carry out.
+//! Both the thread runtime ([`crate::place`]) and the discrete-event
+//! simulator ([`crate::sim`]) drive the *same* engine, so every protocol
+//! property validated under the deterministic simulator also holds for the
+//! real concurrent execution, modulo message interleavings — which the
+//! thread-runtime stress tests cover.
+//!
+//! Lifecycle (paper §2.4 items 1–3):
+//!
+//! ```text
+//!          ┌────────── merged loot ───────────────┐
+//!          v                                      │
+//!   Working ──bag empty──> WaitRandom(0..w) ──all refused──> WaitLifeline(0..z)
+//!      │  ^                                                       │
+//!      │  └── unsolicited lifeline push (reactivation) ── Idle <──┘ (all refused,
+//!      │                                                   │       token released)
+//!   respond to steals,                                Terminate
+//!   distribute to recorded                                 │
+//!   lifeline thieves                                      Done
+//! ```
+
+use super::lifeline::{LifelineGraph, VictimSelector};
+use super::logger::WorkerStats;
+use super::message::{Effect, Msg, PlaceId};
+use super::params::GlbParams;
+use super::task_bag::TaskBag;
+use super::task_queue::TaskQueue;
+use super::termination::Ledger;
+
+/// What the worker is doing between runtime invocations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Has (or believes it has) local work; runtime should keep calling
+    /// [`Worker::step`].
+    Working,
+    /// Awaiting a response to random-steal attempt `attempt` from `victim`.
+    WaitRandom { attempt: usize, victim: PlaceId },
+    /// Awaiting a response to a lifeline steal from `outgoing[idx]`.
+    WaitLifeline { idx: usize },
+    /// Out of work, token released, registered on all lifelines; waiting
+    /// for a lifeline push or `Terminate`.
+    Idle,
+    /// Finished (observed or was told about global quiescence).
+    Done,
+}
+
+/// Result of a [`Worker::step`] call, for runtime scheduling decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// Work units completed in this chunk (virtual-time cost basis).
+    pub units: u64,
+    /// Task items processed in this chunk.
+    pub items: u64,
+    /// Whether the worker is still `Working` afterwards.
+    pub more: bool,
+}
+
+/// The protocol engine for one place.
+pub struct Worker<Q: TaskQueue, L: Ledger> {
+    id: PlaceId,
+    p: usize,
+    params: GlbParams,
+    queue: Q,
+    phase: Phase,
+    /// Whether this worker currently holds a work token.
+    active: bool,
+    /// Outgoing lifelines (buddies we steal from).
+    outgoing: Vec<PlaceId>,
+    /// Incoming lifeline thieves that we refused and must feed later.
+    /// Small (≤ z of the inverse graph), so a Vec beats a HashSet.
+    recorded_thieves: Vec<PlaceId>,
+    victims: VictimSelector,
+    ledger: L,
+    stats: WorkerStats,
+    /// Set once this worker (alone, globally) observed quiescence.
+    observed_quiescence: bool,
+    /// Monotonic request id; the nonce of the next steal request.
+    next_nonce: u64,
+    /// Nonce of the in-flight request (`WaitRandom`/`WaitLifeline` only).
+    outstanding: Option<u64>,
+}
+
+impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
+    /// Create the worker for `id` of `p` places. **Must** be called for
+    /// every place before any worker is driven: construction acquires the
+    /// initial work token for non-empty queues, and the termination
+    /// invariant needs all initial tokens counted before the first steal.
+    pub fn new(id: PlaceId, p: usize, params: GlbParams, queue: Q, ledger: L) -> Self {
+        let z = params.resolve_z(p);
+        let outgoing = if p > 1 { LifelineGraph::new(id, p, params.l, z).outgoing } else { Vec::new() };
+        let active = queue.bag_size() > 0;
+        if active {
+            ledger.incr();
+        }
+        let phase = if active { Phase::Working } else { Phase::Idle };
+        // Note: an initially-empty worker starts Idle *without* having
+        // registered on its lifelines — correct: lifeline registration is
+        // only required before *releasing a token*, and this worker never
+        // held one. It will be fed by random/lifeline thieves finding it
+        // only if it acquires work; to receive work it must be discovered
+        // as a *thief*, which happens on its first starvation — but it
+        // starts starved. So: empty-start workers immediately run the
+        // steal protocol when kicked by the runtime via `kick_if_empty`.
+        Self {
+            id,
+            p,
+            params,
+            queue,
+            phase,
+            active,
+            outgoing,
+            recorded_thieves: Vec::new(),
+            victims: VictimSelector::new(id, p, params.seed),
+            ledger,
+            stats: WorkerStats::default(),
+            observed_quiescence: false,
+            next_nonce: 0,
+            outstanding: None,
+        }
+    }
+
+    pub fn id(&self) -> PlaceId {
+        self.id
+    }
+    /// Total number of places in this run.
+    pub fn places(&self) -> usize {
+        self.p
+    }
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+    pub fn stats(&self) -> &WorkerStats {
+        &self.stats
+    }
+    pub fn stats_mut(&mut self) -> &mut WorkerStats {
+        &mut self.stats
+    }
+    pub fn queue(&self) -> &Q {
+        &self.queue
+    }
+    pub fn into_parts(self) -> (Q, WorkerStats) {
+        (self.queue, self.stats)
+    }
+    /// Did *this* worker observe the count hit zero? (exactly one does)
+    pub fn observed_quiescence(&self) -> bool {
+        self.observed_quiescence
+    }
+
+    /// Start the steal protocol for workers that begin with an empty bag
+    /// (all places except the root under dynamic initialization). Runtimes
+    /// call this exactly once, after all workers are constructed.
+    pub fn kick_if_empty(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
+        if self.phase == Phase::Idle && !self.active {
+            // Enter stealing as if we had just starved; we hold no token,
+            // so acquire one first (a stealing worker is "active" for
+            // termination purposes only if it might still receive work
+            // from an in-flight response... it cannot: it has sent
+            // nothing. But the steal it is *about to send* needs the
+            // usual accounting: thief holds a token while any response
+            // is outstanding).
+            self.active = true;
+            self.ledger.incr();
+            self.start_stealing(effects);
+        }
+    }
+
+    /// One processing chunk (paper §2.4 item 1: "repeatedly calls
+    /// process(n) ... between each process(n) call, Worker probes the
+    /// network"). The runtime is responsible for draining the mailbox
+    /// into [`Worker::on_msg`] *before* each step.
+    pub fn step(&mut self, effects: &mut Vec<Effect<Q::Bag>>) -> StepOutcome {
+        debug_assert_eq!(self.phase, Phase::Working, "step() only while Working");
+        // Feed recorded lifeline thieves *before* the chunk (X10 GLB's
+        // `distribute()` runs between `process(n)` calls): a starving
+        // buddy should not wait for our whole next chunk.
+        self.distribute(effects);
+        let before = self.queue.bag_size() as u64;
+        let outcome = self.queue.process(self.params.n);
+        let after = self.queue.bag_size() as u64;
+        // Items processed is not simply n (expansion adds tasks); derive
+        // conservatively for stats: consumed = before + spawned - after.
+        // Applications report exact units; items is best-effort here.
+        let items = (self.params.n as u64).min(before.max(1));
+        self.stats.chunks += 1;
+        self.stats.units += outcome.units;
+        self.stats.items_processed += items.min(before + outcome.units);
+        let _ = after;
+
+        if !outcome.has_more {
+            self.starve(effects);
+        }
+        StepOutcome { units: outcome.units, items, more: self.phase == Phase::Working }
+    }
+
+    /// Handle one incoming message. May be called in any phase.
+    pub fn on_msg(&mut self, msg: Msg<Q::Bag>, effects: &mut Vec<Effect<Q::Bag>>) {
+        match msg {
+            Msg::Steal { thief, lifeline, nonce } => self.on_steal(thief, lifeline, nonce, effects),
+            Msg::Loot { victim, bag, lifeline, nonce } => {
+                self.on_loot(victim, bag, lifeline, nonce, effects)
+            }
+            Msg::Terminate => {
+                debug_assert!(
+                    !self.active,
+                    "place {}: Terminate while holding a token (phase {:?})",
+                    self.id, self.phase
+                );
+                self.phase = Phase::Done;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    fn on_steal(
+        &mut self,
+        thief: PlaceId,
+        lifeline: bool,
+        nonce: u64,
+        effects: &mut Vec<Effect<Q::Bag>>,
+    ) {
+        if lifeline {
+            self.stats.lifeline_steals_received += 1;
+        } else {
+            self.stats.random_steals_received += 1;
+        }
+        let loot = if self.queue.bag_size() >= self.params.steal_threshold {
+            self.queue.split()
+        } else {
+            None
+        };
+        match loot {
+            Some(bag) => {
+                self.send_loot(thief, bag, lifeline, Some(nonce), effects);
+            }
+            None => {
+                if lifeline && !self.recorded_thieves.contains(&thief) {
+                    self.recorded_thieves.push(thief);
+                }
+                effects.push(Effect::Send {
+                    to: thief,
+                    msg: Msg::Loot { victim: self.id, bag: None, lifeline, nonce: Some(nonce) },
+                });
+            }
+        }
+    }
+
+    fn send_loot(
+        &mut self,
+        thief: PlaceId,
+        bag: Q::Bag,
+        lifeline: bool,
+        nonce: Option<u64>,
+        effects: &mut Vec<Effect<Q::Bag>>,
+    ) {
+        // The message token must exist before the send is visible.
+        self.ledger.incr();
+        let items = bag.size() as u64;
+        self.stats.loot_items_sent += items;
+        self.stats.loot_bags_sent += 1;
+        effects.push(Effect::Send {
+            to: thief,
+            msg: Msg::Loot { victim: self.id, bag: Some(bag), lifeline, nonce },
+        });
+    }
+
+    /// Push loot to recorded lifeline thieves (called with surplus work).
+    /// Pushes carry `nonce: None` — they answer no request.
+    fn distribute(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
+        while !self.recorded_thieves.is_empty()
+            && self.queue.bag_size() >= self.params.steal_threshold
+        {
+            match self.queue.split() {
+                Some(bag) => {
+                    let thief = self.recorded_thieves.remove(0);
+                    self.send_loot(thief, bag, true, None, effects);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Bag ran dry: enter the steal protocol (or quiesce on 1 place).
+    fn starve(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
+        debug_assert!(self.active);
+        self.stats.starvations += 1;
+        self.start_stealing(effects);
+    }
+
+    fn start_stealing(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
+        if self.p == 1 {
+            self.release_token(effects);
+            return;
+        }
+        if !self.try_random_steal(0, effects) && !self.try_lifeline_steal(0, effects) {
+            self.release_token(effects);
+        }
+    }
+
+    /// Send random-steal attempt `attempt` if budget remains (under
+    /// `RandomOnly` the budget is `w × rounds`). Returns whether a request
+    /// was sent (phase updated).
+    fn try_random_steal(&mut self, attempt: usize, effects: &mut Vec<Effect<Q::Bag>>) -> bool {
+        if attempt >= self.params.random_budget() {
+            return false;
+        }
+        match self.victims.pick() {
+            Some(victim) => {
+                self.stats.random_steals_sent += 1;
+                self.phase = Phase::WaitRandom { attempt, victim };
+                let nonce = self.fresh_nonce();
+                effects.push(Effect::Send {
+                    to: victim,
+                    msg: Msg::Steal { thief: self.id, lifeline: false, nonce },
+                });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Send lifeline-steal to `outgoing[idx]` if it exists (never under
+    /// the `RandomOnly` ablation policy).
+    fn try_lifeline_steal(&mut self, idx: usize, effects: &mut Vec<Effect<Q::Bag>>) -> bool {
+        if matches!(self.params.policy, super::params::StealPolicy::RandomOnly { .. }) {
+            return false;
+        }
+        if idx >= self.outgoing.len() {
+            return false;
+        }
+        let victim = self.outgoing[idx];
+        self.stats.lifeline_steals_sent += 1;
+        self.phase = Phase::WaitLifeline { idx };
+        let nonce = self.fresh_nonce();
+        effects.push(Effect::Send {
+            to: victim,
+            msg: Msg::Steal { thief: self.id, lifeline: true, nonce },
+        });
+        true
+    }
+
+    fn fresh_nonce(&mut self) -> u64 {
+        let n = self.next_nonce;
+        self.next_nonce += 1;
+        debug_assert!(self.outstanding.is_none(), "one in-flight request at a time");
+        self.outstanding = Some(n);
+        n
+    }
+
+    fn release_token(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
+        debug_assert!(self.active);
+        self.active = false;
+        self.phase = Phase::Idle;
+        if self.ledger.decr() {
+            self.observed_quiescence = true;
+            self.phase = Phase::Done;
+            effects.push(Effect::Quiescent);
+        }
+    }
+
+    fn on_loot(
+        &mut self,
+        victim: PlaceId,
+        bag: Option<Q::Bag>,
+        lifeline: bool,
+        nonce: Option<u64>,
+        effects: &mut Vec<Effect<Q::Bag>>,
+    ) {
+        // Is this the response to our in-flight request? Unsolicited
+        // lifeline pushes carry `nonce: None` and never match.
+        let awaited = nonce.is_some() && nonce == self.outstanding;
+        if awaited {
+            self.outstanding = None;
+            debug_assert!(
+                matches!(self.phase, Phase::WaitRandom { .. } | Phase::WaitLifeline { .. }),
+                "place {}: response while not waiting",
+                self.id
+            );
+        }
+        let _ = victim;
+
+        match bag {
+            Some(bag) => {
+                let items = bag.size() as u64;
+                self.stats.loot_items_received += items;
+                self.stats.loot_bags_received += 1;
+                if lifeline {
+                    self.stats.lifeline_steals_perpetrated += 1;
+                } else {
+                    self.stats.random_steals_perpetrated += 1;
+                }
+                self.queue.merge(bag);
+                if self.active {
+                    // We still hold our token: the message token dies.
+                    let zero = self.ledger.decr();
+                    debug_assert!(!zero, "count cannot reach zero while a worker holds a token");
+                } else {
+                    // Idle thief adopts the message token.
+                    debug_assert_eq!(self.phase, Phase::Idle);
+                    self.active = true;
+                }
+                if awaited || self.phase == Phase::Idle {
+                    self.phase = Phase::Working;
+                }
+                // If not awaited and not idle (an unsolicited push while we
+                // wait on someone else), stay in the wait phase: the
+                // outstanding response will arrive and `on_loot(None)`
+                // below returns us to Working because the bag is non-empty.
+            }
+            None => {
+                if !awaited {
+                    // With nonce-matched responses this cannot happen:
+                    // every request gets exactly one response and the
+                    // thief never abandons an outstanding request.
+                    debug_assert!(awaited, "place {}: refusal with stale nonce {nonce:?}", self.id);
+                    return;
+                }
+                if self.queue.bag_size() > 0 {
+                    // Reactivated by an unsolicited push while waiting.
+                    self.phase = Phase::Working;
+                    return;
+                }
+                let advanced = match self.phase {
+                    Phase::WaitRandom { attempt, .. } => {
+                        self.try_random_steal(attempt + 1, effects) || self.try_lifeline_steal(0, effects)
+                    }
+                    Phase::WaitLifeline { idx } => self.try_lifeline_steal(idx + 1, effects),
+                    _ => unreachable!(),
+                };
+                if !advanced {
+                    self.release_token(effects);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Single-worker protocol unit tests; multi-worker integration lives in
+    //! `rust/tests/glb_integration.rs` and the deterministic simulator
+    //! tests in `rust/tests/sim_integration.rs`.
+    use super::*;
+    use crate::glb::task_bag::ArrayListTaskBag;
+    use crate::glb::task_queue::ProcessOutcome;
+    use crate::glb::termination::SimLedger;
+
+    /// Trivial queue: each task is `k` and processing it just counts it.
+    struct CountQueue {
+        bag: ArrayListTaskBag<u64>,
+        counted: u64,
+    }
+
+    impl CountQueue {
+        fn with(n: usize) -> Self {
+            Self { bag: ArrayListTaskBag::from_vec((0..n as u64).collect()), counted: 0 }
+        }
+    }
+
+    impl TaskQueue for CountQueue {
+        type Bag = ArrayListTaskBag<u64>;
+        type Result = u64;
+
+        fn process(&mut self, n: usize) -> ProcessOutcome {
+            let mut done = 0;
+            while done < n {
+                match self.bag.pop() {
+                    Some(_) => {
+                        self.counted += 1;
+                        done += 1;
+                    }
+                    None => break,
+                }
+            }
+            ProcessOutcome::new(self.bag.size() > 0, done as u64)
+        }
+
+        fn split(&mut self) -> Option<Self::Bag> {
+            TaskBag::split(&mut self.bag)
+        }
+        fn merge(&mut self, bag: Self::Bag) {
+            TaskBag::merge(&mut self.bag, bag);
+        }
+        fn result(&self) -> u64 {
+            self.counted
+        }
+        fn bag_size(&self) -> usize {
+            self.bag.size()
+        }
+    }
+
+    fn params() -> GlbParams {
+        GlbParams::default().with_n(4).with_w(1).with_l(2)
+    }
+
+    #[test]
+    fn single_place_drains_and_quiesces() {
+        let ledger = SimLedger::new();
+        let mut w = Worker::new(0, 1, params(), CountQueue::with(10), ledger.clone());
+        let mut fx = Vec::new();
+        let mut steps = 0;
+        while w.phase() == Phase::Working {
+            w.step(&mut fx);
+            steps += 1;
+            assert!(steps < 100);
+        }
+        assert_eq!(w.phase(), Phase::Done);
+        assert!(w.observed_quiescence());
+        assert!(matches!(fx.last(), Some(Effect::Quiescent)));
+        assert_eq!(w.queue().result(), 10);
+        assert_eq!(ledger.value(), 0);
+    }
+
+    #[test]
+    fn empty_worker_starts_idle_without_token() {
+        let ledger = SimLedger::new();
+        let w = Worker::new(1, 4, params(), CountQueue::with(0), ledger.clone());
+        assert_eq!(w.phase(), Phase::Idle);
+        assert_eq!(ledger.value(), 0);
+    }
+
+    #[test]
+    fn kick_if_empty_starts_steal_protocol() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // pretend some other place holds work
+        let mut w = Worker::new(1, 4, params(), CountQueue::with(0), ledger.clone());
+        let mut fx = Vec::new();
+        w.kick_if_empty(&mut fx);
+        assert!(matches!(w.phase(), Phase::WaitRandom { .. }));
+        assert_eq!(fx.len(), 1);
+        assert!(matches!(&fx[0], Effect::Send { msg: Msg::Steal { lifeline: false, .. }, .. }));
+        assert_eq!(ledger.value(), 2, "stealing worker holds a token");
+    }
+
+    #[test]
+    fn starving_worker_walks_random_then_lifelines_then_idles() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // external work exists, so no quiescence here
+        let mut w = Worker::new(0, 4, params().with_w(2), CountQueue::with(3), ledger.clone());
+        let mut fx = Vec::new();
+        // Drain the 3 tasks (n=4 per chunk): one step empties the bag and
+        // fires the first random steal.
+        w.step(&mut fx);
+        let v1 = match w.phase() {
+            Phase::WaitRandom { attempt: 0, victim } => victim,
+            ph => panic!("expected WaitRandom(0), got {ph:?}"),
+        };
+        // Refusal 1 -> second random attempt.
+        fx.clear();
+        w.on_msg(Msg::Loot { victim: v1, bag: None, lifeline: false, nonce: Some(0) }, &mut fx);
+        let v2 = match w.phase() {
+            Phase::WaitRandom { attempt: 1, victim } => victim,
+            ph => panic!("expected WaitRandom(1), got {ph:?}"),
+        };
+        // Refusal 2 -> first lifeline.
+        fx.clear();
+        w.on_msg(Msg::Loot { victim: v2, bag: None, lifeline: false, nonce: Some(1) }, &mut fx);
+        assert!(matches!(w.phase(), Phase::WaitLifeline { idx: 0 }));
+        let ll0 = match &fx[0] {
+            Effect::Send { to, msg: Msg::Steal { lifeline: true, .. } } => *to,
+            e => panic!("expected lifeline steal, got {e:?}"),
+        };
+        // Lifeline refusals until exhausted -> Idle with token released.
+        let mut current = ll0;
+        let mut nonce = 2u64; // requests 0,1 were the random attempts
+        loop {
+            fx.clear();
+            w.on_msg(Msg::Loot { victim: current, bag: None, lifeline: true, nonce: Some(nonce) }, &mut fx);
+            nonce += 1;
+            match w.phase() {
+                Phase::WaitLifeline { idx } => {
+                    assert!(idx < 4);
+                    current = match &fx[0] {
+                        Effect::Send { to, .. } => *to,
+                        e => panic!("{e:?}"),
+                    };
+                }
+                Phase::Idle => break,
+                ph => panic!("unexpected {ph:?}"),
+            }
+        }
+        assert_eq!(ledger.value(), 1, "worker released its token");
+        assert_eq!(w.stats().random_steals_sent, 2);
+        assert!(w.stats().lifeline_steals_sent >= 1);
+    }
+
+    #[test]
+    fn victim_with_work_shares_and_charges_token() {
+        let ledger = SimLedger::new();
+        let mut w = Worker::new(0, 4, params(), CountQueue::with(100), ledger.clone());
+        assert_eq!(ledger.value(), 1);
+        let mut fx = Vec::new();
+        w.on_msg(Msg::Steal { thief: 2, lifeline: false, nonce: 77 }, &mut fx);
+        assert_eq!(ledger.value(), 2, "loot in flight holds a token");
+        match &fx[0] {
+            Effect::Send { to: 2, msg: Msg::Loot { bag: Some(b), lifeline: false, .. } } => {
+                assert_eq!(b.size(), 50);
+            }
+            e => panic!("expected loot, got {e:?}"),
+        }
+        assert_eq!(w.stats().loot_items_sent, 50);
+        assert_eq!(w.stats().random_steals_received, 1);
+    }
+
+    #[test]
+    fn victim_without_work_records_lifeline_thief_and_feeds_later() {
+        let ledger = SimLedger::new();
+        let mut w = Worker::new(0, 4, params(), CountQueue::with(1), ledger.clone());
+        let mut fx = Vec::new();
+        // Lifeline steal arrives; bag has 1 item (< threshold 2): refuse+record.
+        w.on_msg(Msg::Steal { thief: 3, lifeline: true, nonce: 78 }, &mut fx);
+        assert!(matches!(
+            &fx[0],
+            Effect::Send { to: 3, msg: Msg::Loot { bag: None, lifeline: true, .. } }
+        ));
+        // Now loot arrives from elsewhere, giving surplus. (A real victim
+        // increments the ledger before sending; simulate the in-flight
+        // message token.)
+        ledger.incr();
+        fx.clear();
+        w.on_msg(
+            Msg::Loot { victim: 1, bag: Some(ArrayListTaskBag::from_vec(vec![7, 8, 9, 10])), lifeline: false, nonce: None },
+            &mut fx,
+        );
+        // Next step distributes to the recorded thief.
+        fx.clear();
+        w.step(&mut fx);
+        let pushed = fx.iter().any(|e| {
+            matches!(e, Effect::Send { to: 3, msg: Msg::Loot { bag: Some(_), lifeline: true, .. } })
+        });
+        assert!(pushed, "recorded lifeline thief must be fed: {fx:?}");
+    }
+
+    #[test]
+    fn random_refusal_is_not_recorded() {
+        let ledger = SimLedger::new();
+        let mut w = Worker::new(0, 4, params(), CountQueue::with(0), ledger.clone());
+        let mut fx = Vec::new();
+        w.on_msg(Msg::Steal { thief: 3, lifeline: false, nonce: 79 }, &mut fx);
+        w.on_msg(
+            Msg::Loot { victim: 1, bag: Some(ArrayListTaskBag::from_vec(vec![1, 2, 3, 4])), lifeline: true, nonce: None },
+            &mut fx,
+        );
+        fx.clear();
+        w.step(&mut fx);
+        let pushed = fx.iter().any(|e| matches!(e, Effect::Send { to: 3, .. }));
+        assert!(!pushed, "random thieves are not remembered");
+    }
+
+    #[test]
+    fn idle_worker_adopts_lifeline_loot_token() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // the eventual victim's token
+        let mut w = Worker::new(1, 2, params().with_w(0), CountQueue::with(0), ledger.clone());
+        let mut fx = Vec::new();
+        w.kick_if_empty(&mut fx);
+        // w=0 so it goes straight to its lifeline (place 0).
+        assert!(matches!(w.phase(), Phase::WaitLifeline { idx: 0 }));
+        w.on_msg(Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(0) }, &mut fx);
+        assert_eq!(w.phase(), Phase::Idle);
+        assert_eq!(ledger.value(), 1, "thief token released; victim token still out");
+        // Lifeline push arrives: adopt the message token, resume. (The
+        // sender incremented the ledger before sending.)
+        ledger.incr();
+        w.on_msg(
+            Msg::Loot { victim: 0, bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])), lifeline: true, nonce: None },
+            &mut fx,
+        );
+        assert_eq!(w.phase(), Phase::Working);
+        assert_eq!(ledger.value(), 2, "adopted token + victim token");
+    }
+
+    #[test]
+    fn unsolicited_push_while_waiting_resumes_after_refusal() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // external token so quiescence never fires here
+        let mut w = Worker::new(0, 8, params().with_w(1), CountQueue::with(2), ledger.clone());
+        let mut fx = Vec::new();
+        w.step(&mut fx); // drains 2 tasks, enters WaitRandom
+        let victim = match w.phase() {
+            Phase::WaitRandom { victim, .. } => victim,
+            ph => panic!("{ph:?}"),
+        };
+        // An old lifeline buddy pushes loot before the refusal arrives.
+        w.on_msg(
+            Msg::Loot { victim: 99, bag: Some(ArrayListTaskBag::from_vec(vec![5, 6, 7])), lifeline: true, nonce: None },
+            &mut fx,
+        );
+        assert!(matches!(w.phase(), Phase::WaitRandom { .. }), "still awaiting the response");
+        // The awaited refusal now lands: back to Working (bag non-empty).
+        w.on_msg(Msg::Loot { victim, bag: None, lifeline: false, nonce: Some(0) }, &mut fx);
+        assert_eq!(w.phase(), Phase::Working);
+    }
+
+    #[test]
+    fn terminate_moves_to_done() {
+        let ledger = SimLedger::new();
+        let mut w = Worker::new(1, 4, params(), CountQueue::with(0), ledger);
+        let mut fx = Vec::new();
+        w.on_msg(Msg::Terminate, &mut fx);
+        assert_eq!(w.phase(), Phase::Done);
+        assert!(!w.observed_quiescence());
+    }
+}

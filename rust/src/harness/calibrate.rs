@@ -1,0 +1,85 @@
+//! Cost-model calibration: measure this machine's real per-unit compute
+//! costs so the simulator's virtual clock is anchored to reality.
+//!
+//! The reference core for [`crate::sim::CostModel`] is *this* CPU; the
+//! architecture profiles then scale by their `compute_scale`. Calibration
+//! keeps the simulator honest: UTS nodes/s and BC edges/s at P=1 in the
+//! simulator match a real single-threaded run within measurement noise
+//! (asserted by `rust/tests/sim_integration.rs`).
+
+use std::time::Instant;
+
+use crate::apps::bc::{brandes_source, BrandesScratch, Graph};
+use crate::apps::uts::{UtsBag, UtsParams, UtsTree};
+use crate::sim::CostModel;
+
+/// Serialized bytes of one UTS frontier entry (20-byte descriptor +
+/// depth + lo + hi).
+pub const UTS_ITEM_BYTES: usize = 32;
+/// Serialized bytes of one BC interval task.
+pub const BC_ITEM_BYTES: usize = 8;
+
+/// Measure ns per UTS node on this machine (SHA-1 expansion dominated).
+pub fn calibrate_uts_cost() -> CostModel {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 6 };
+    let tree = UtsTree::new(up);
+    // Warm-up + measure.
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let mut bag = UtsBag::with_root(&tree);
+        let mut count = 1u64;
+        let t = Instant::now();
+        loop {
+            let (c, more) = bag.expand_some(&tree, 1 << 14);
+            count += c;
+            if !more {
+                break;
+            }
+        }
+        let ns = t.elapsed().as_nanos() as f64 / count as f64;
+        best = best.min(ns);
+    }
+    CostModel::new(best, 60, UTS_ITEM_BYTES)
+}
+
+/// Measure ns per BC edge on this machine (sparse Brandes).
+pub fn calibrate_bc_cost(g: &Graph) -> CostModel {
+    let mut bc = vec![0.0; g.n()];
+    let mut scratch = BrandesScratch::new(g.n());
+    let sources = (g.n() / 8).max(4).min(g.n());
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let mut edges = 0u64;
+        let t = Instant::now();
+        for s in 0..sources as u32 {
+            edges += brandes_source(g, s, &mut bc, &mut scratch);
+        }
+        if edges > 0 {
+            best = best.min(t.elapsed().as_nanos() as f64 / edges as f64);
+        }
+    }
+    if !best.is_finite() {
+        best = 5.0; // all-isolated fallback
+    }
+    CostModel::new(best, 80, BC_ITEM_BYTES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::bc::RmatParams;
+
+    #[test]
+    fn uts_cost_is_plausible() {
+        let c = calibrate_uts_cost();
+        // SHA-1 per node: somewhere between 20ns and 20µs on any machine.
+        assert!(c.ns_per_unit > 20.0 && c.ns_per_unit < 20_000.0, "{}", c.ns_per_unit);
+    }
+
+    #[test]
+    fn bc_cost_is_plausible() {
+        let g = Graph::rmat(RmatParams { scale: 8, ..Default::default() });
+        let c = calibrate_bc_cost(&g);
+        assert!(c.ns_per_unit > 0.2 && c.ns_per_unit < 5_000.0, "{}", c.ns_per_unit);
+    }
+}

@@ -1,0 +1,305 @@
+//! Figure regeneration (paper Figs 2–10).
+//!
+//! Each function sweeps place counts under an architecture profile and
+//! prints the same series the paper plots. The simulator substrate runs
+//! the real protocol + real app compute on a virtual clock, so the
+//! *shapes* (linear speedup, flat efficiency, the K droop, the workload
+//! distribution flattening) are reproduced; absolute rates are anchored
+//! by the calibrated cost model but are not the comparison target.
+//!
+//! * Figs 2/3/4 — UTS vs UTS-G throughput + efficiency on
+//!   Power 775 / BGQ / K ([`fig_uts`]).
+//! * Figs 5/7/9 — BC vs BC-G throughput + efficiency on
+//!   BGQ / K / Power 775 ([`fig_bc_perf`]).
+//! * Figs 6/8/10 — BC vs BC-G per-place workload distribution with
+//!   mean/σ ([`fig_bc_workload`]).
+
+use std::sync::Arc;
+
+use super::calibrate::{calibrate_bc_cost, calibrate_uts_cost};
+use super::table::Table;
+use crate::apps::bc::{Graph, InterruptibleBcQueue, RmatParams};
+use crate::apps::uts::{UtsParams, UtsQueue};
+use crate::baselines::legacy_bc::run_legacy_bc_sim;
+use crate::baselines::legacy_uts::legacy_uts_params;
+use crate::glb::task_queue::{SumReducer, VecSumReducer};
+use crate::glb::{GlbConfig, GlbParams};
+use crate::sim::{run_sim, ArchProfile, CostModel};
+use crate::util::stats::{mean, stddev};
+
+/// Options shared by the figure sweeps.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    /// Place counts to sweep (the paper's x axis).
+    pub places: Vec<usize>,
+    /// UTS depth at one place. Like the paper ("tree depth d varying
+    /// from 13 to 20 depending on core counts"), the sweep grows the
+    /// depth with the place count — `d(p) = uts_depth + ceil(log4 p)` —
+    /// so per-place work stays roughly constant (the geometric tree's
+    /// expected size is `b0^d` and `b0 = 4`). Strong-scaling a fixed
+    /// small tree to thousands of places would measure only ramp-up.
+    pub uts_depth: u32,
+    /// R-MAT SCALE for the BC figures.
+    pub bc_scale: u32,
+    /// GLB parameters for the GLB series.
+    pub params: GlbParams,
+    /// Emit CSV instead of the aligned table.
+    pub csv: bool,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self {
+            places: vec![1, 2, 4, 8, 16, 32, 64, 128, 256],
+            uts_depth: 8,
+            bc_scale: 9,
+            params: GlbParams::default(),
+            csv: false,
+        }
+    }
+}
+
+/// One point of a perf series.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfPoint {
+    pub places: usize,
+    /// units/s (UTS: nodes/s; BC: edges/s).
+    pub rate: f64,
+    /// rate / places / single-place-rate.
+    pub efficiency: f64,
+}
+
+/// A complete figure: the two series plus rendered text.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub legacy: Vec<PerfPoint>,
+    pub glb: Vec<PerfPoint>,
+    pub text: String,
+}
+
+/// Figs 2/3/4: UTS (legacy-tuned params) vs UTS-G (library defaults) on
+/// one architecture.
+pub fn fig_uts(arch: &ArchProfile, opts: &FigOpts) -> Figure {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: opts.uts_depth };
+    let cost = calibrate_uts_cost();
+    let legacy = sweep_uts(arch, opts, &up, cost, legacy_uts_params());
+    let glb = sweep_uts(arch, opts, &up, cost, opts.params);
+    render_perf_figure(
+        format!("UTS/UTS-G Performance Comparison (on {})", arch.name),
+        "nodes/s",
+        legacy,
+        glb,
+        opts.csv,
+    )
+}
+
+/// `ceil(log4(p))` — extra tree depth needed to keep per-place work
+/// constant when `b0 = 4`.
+fn depth_boost(p: usize) -> u32 {
+    let mut d = 0u32;
+    let mut cap = 1usize;
+    while cap < p {
+        cap *= 4;
+        d += 1;
+    }
+    d
+}
+
+fn sweep_uts(
+    arch: &ArchProfile,
+    opts: &FigOpts,
+    up: &UtsParams,
+    cost: CostModel,
+    params: GlbParams,
+) -> Vec<PerfPoint> {
+    let mut base_rate = None;
+    let mut out = Vec::new();
+    for &p in &opts.places {
+        let scaled = UtsParams { max_depth: up.max_depth + depth_boost(p), ..*up };
+        let cfg = GlbConfig::new(p, params);
+        let (run, _) = run_sim(
+            &cfg,
+            arch,
+            cost,
+            |_, _| UtsQueue::new(scaled),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        let rate = run.units_per_sec();
+        let base = *base_rate.get_or_insert(rate.max(1e-9));
+        out.push(PerfPoint { places: p, rate, efficiency: rate / p as f64 / base });
+    }
+    out
+}
+
+/// Figs 5/7/9: BC (static randomized) vs BC-G on one architecture.
+pub fn fig_bc_perf(arch: &ArchProfile, opts: &FigOpts) -> Figure {
+    let g = Arc::new(Graph::rmat(RmatParams { scale: opts.bc_scale, ..Default::default() }));
+    let cost = calibrate_bc_cost(&g);
+    let mut legacy = Vec::new();
+    let mut glb = Vec::new();
+    let (mut base_l, mut base_g) = (None, None);
+    for &p in &opts.places {
+        // Legacy: zero-communication static randomized partition.
+        let lo = run_legacy_bc_sim(&g, p, 42, cost.ns_per_unit, arch.compute_scale);
+        let lrate = lo.units_per_sec();
+        let lbase = *base_l.get_or_insert(lrate.max(1e-9));
+        legacy.push(PerfPoint { places: p, rate: lrate, efficiency: lrate / p as f64 / lbase });
+
+        // GLB: every place statically seeded, stealing fixes the skew.
+        // BC-G is the paper's *final* variant: the interruptible-vertex
+        // state machine (§2.6.2) with an edge budget per chunk.
+        let cfg = GlbConfig::new(p, opts.params);
+        let n = g.n() as u32;
+        let gg = g.clone();
+        let (run, _) = run_sim(
+            &cfg,
+            arch,
+            cost,
+            move |i, np| {
+                let mut q = InterruptibleBcQueue::new(gg.clone());
+                let per = n / np as u32;
+                let lo = i as u32 * per;
+                let hi = if i == np - 1 { n } else { lo + per };
+                q.assign(lo, hi);
+                q
+            },
+            |_| {},
+            &VecSumReducer,
+        );
+        let grate = run.units_per_sec();
+        let gbase = *base_g.get_or_insert(grate.max(1e-9));
+        glb.push(PerfPoint { places: p, rate: grate, efficiency: grate / p as f64 / gbase });
+    }
+    render_perf_figure(
+        format!("BC/BC-G Performance (on {})", arch.name),
+        "edges/s",
+        legacy,
+        glb,
+        opts.csv,
+    )
+}
+
+/// Figs 6/8/10: per-place busy-time distribution for legacy BC vs BC-G
+/// at a fixed place count (the sweep's largest), with mean and σ.
+pub fn fig_bc_workload(arch: &ArchProfile, opts: &FigOpts) -> (Table, String) {
+    let p = *opts.places.last().expect("need at least one place count");
+    let g = Arc::new(Graph::rmat(RmatParams { scale: opts.bc_scale, ..Default::default() }));
+    let cost = calibrate_bc_cost(&g);
+
+    let legacy = run_legacy_bc_sim(&g, p, 42, cost.ns_per_unit, arch.compute_scale);
+    let legacy_secs: Vec<f64> = legacy.busy_ns.iter().map(|&x| x as f64 / 1e9).collect();
+
+    let cfg = GlbConfig::new(p, opts.params);
+    let n = g.n() as u32;
+    let gg = g.clone();
+    let (run, _) = run_sim(
+        &cfg,
+        arch,
+        cost,
+        move |i, np| {
+            let mut q = InterruptibleBcQueue::new(gg.clone());
+            let per = n / np as u32;
+            let lo = i as u32 * per;
+            let hi = if i == np - 1 { n } else { lo + per };
+            q.assign(lo, hi);
+            q
+        },
+        |_| {},
+        &VecSumReducer,
+    );
+    let glb_secs: Vec<f64> = run.log.per_place.iter().map(|s| s.process_ns as f64 / 1e9).collect();
+
+    let mut t = Table::new(&["place", "BC busy (s)", "BC-G busy (s)"]);
+    for i in 0..p {
+        t.row(&[i.to_string(), format!("{:.6}", legacy_secs[i]), format!("{:.6}", glb_secs[i])]);
+    }
+    let summary = format!(
+        "BC/BC-G Workload Distribution (on {}) at {p} places\n\
+         BC   : mean={:.4}s sd={:.4}s makespan={:.4}s\n\
+         BC-G : mean={:.4}s sd={:.4}s makespan={:.4}s (virtual total {:.4}s)",
+        arch.name,
+        mean(&legacy_secs),
+        stddev(&legacy_secs),
+        legacy.elapsed_ns as f64 / 1e9,
+        mean(&glb_secs),
+        stddev(&glb_secs),
+        glb_secs.iter().cloned().fold(0.0, f64::max),
+        run.elapsed_ns as f64 / 1e9,
+    );
+    (t, summary)
+}
+
+fn render_perf_figure(
+    title: String,
+    unit: &str,
+    legacy: Vec<PerfPoint>,
+    glb: Vec<PerfPoint>,
+    csv: bool,
+) -> Figure {
+    let mut t = Table::new(&[
+        "places",
+        &format!("legacy {unit}"),
+        "legacy eff",
+        &format!("GLB {unit}"),
+        "GLB eff",
+    ]);
+    for (l, g) in legacy.iter().zip(&glb) {
+        debug_assert_eq!(l.places, g.places);
+        t.row(&[
+            l.places.to_string(),
+            format!("{:.3e}", l.rate),
+            format!("{:.3}", l.efficiency),
+            format!("{:.3e}", g.rate),
+            format!("{:.3}", g.efficiency),
+        ]);
+    }
+    let body = if csv { t.to_csv() } else { t.render() };
+    let text = format!("# {title}\n{body}");
+    Figure { title, legacy, glb, text }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{BGQ, POWER775};
+
+    fn small_opts() -> FigOpts {
+        FigOpts {
+            places: vec![1, 4, 16],
+            // Depth 8 ≈ 90K nodes: enough parallel slack for 16 places
+            // while keeping the test under a second.
+            uts_depth: 8,
+            bc_scale: 6,
+            params: GlbParams::default().with_n(64).with_l(2),
+            csv: false,
+        }
+    }
+
+    #[test]
+    fn uts_figure_has_both_series() {
+        let f = fig_uts(&POWER775, &small_opts());
+        assert_eq!(f.legacy.len(), 3);
+        assert_eq!(f.glb.len(), 3);
+        assert!(f.text.contains("UTS/UTS-G"));
+        // Efficiency at P=1 is 1.0 by construction.
+        assert!((f.glb[0].efficiency - 1.0).abs() < 1e-9);
+        // Throughput grows with places.
+        assert!(f.glb[2].rate > f.glb[0].rate * 4.0);
+    }
+
+    #[test]
+    fn bc_perf_figure_runs() {
+        let f = fig_bc_perf(&BGQ, &small_opts());
+        assert_eq!(f.glb.len(), 3);
+        assert!(f.glb[1].rate > f.glb[0].rate, "BC-G must scale");
+    }
+
+    #[test]
+    fn bc_workload_figure_flattens() {
+        let (t, summary) = fig_bc_workload(&BGQ, &small_opts());
+        assert!(!t.is_empty());
+        assert!(summary.contains("sd="), "{summary}");
+    }
+}

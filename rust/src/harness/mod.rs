@@ -1,0 +1,15 @@
+//! The figure-regeneration harness (paper §3.4–§3.6).
+//!
+//! Every figure in the paper's evaluation maps to a function here that
+//! sweeps the place counts, runs GLB and the legacy comparator under the
+//! right architecture profile, and prints the series the paper plots
+//! (throughput on the primary axis, efficiency on the secondary axis,
+//! or the per-place workload-distribution bars with mean/σ).
+
+pub mod calibrate;
+pub mod figures;
+pub mod table;
+
+pub use calibrate::{calibrate_bc_cost, calibrate_uts_cost};
+pub use figures::{fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
+pub use table::Table;

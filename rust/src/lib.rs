@@ -1,0 +1,39 @@
+//! # glb-rs — Lifeline-based Global Load Balancing
+//!
+//! A production-oriented reproduction of *“GLB: Lifeline-based Global Load
+//! Balancing library in X10”* (Zhang et al., CS.DC 2013) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the GLB coordinator: task bags/queues, the
+//!   lifeline work-stealing protocol, termination detection, two execution
+//!   substrates (threads and a deterministic discrete-event simulator with
+//!   Power 775 / Blue Gene/Q / K interconnect models), the benchmark apps
+//!   (UTS, BC, Fib, N-Queens), the legacy baselines, and the figure
+//!   harness.
+//! * **L2 (python/compile/model.py, build-time)** — batched Brandes
+//!   betweenness-centrality forward/backward as a JAX program, lowered
+//!   once to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — the Pallas frontier
+//!   matmul kernel the L2 model calls, verified against pure-jnp oracles.
+//!
+//! At runtime only Rust executes: `runtime::Engine` loads the AOT HLO
+//! artifacts via the PJRT C API and the BC task queues invoke them on the
+//! request path.
+
+pub mod apps;
+pub mod baselines;
+pub mod cli;
+pub mod glb;
+pub mod harness;
+pub mod place;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Smoke helper used by integration tests: confirm a PJRT CPU client can
+/// be constructed (validates the xla_extension wiring).
+pub fn smoke() -> anyhow::Result<String> {
+    let c = xla::PjRtClient::cpu()?;
+    Ok(c.platform_name())
+}

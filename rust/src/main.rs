@@ -1,0 +1,292 @@
+//! The `glb` launcher binary. See [`glb::cli::USAGE`].
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
+use glb::apps::fib::{fib, FibQueue};
+use glb::apps::nqueens::NQueensQueue;
+use glb::apps::uts::{UtsParams, UtsQueue};
+use glb::cli::{glb_params_from, Args, USAGE};
+use glb::glb::task_queue::{SumReducer, VecSumReducer};
+use glb::glb::GlbConfig;
+use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
+use glb::place::run_threads;
+use glb::runtime::{default_artifact_dir, DeviceService};
+use glb::sim::{run_sim, ArchProfile, BGQ};
+use glb::util::timefmt::{fmt_count, fmt_ns, fmt_rate};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    let code = match dispatch(&cmd, rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const COMMON: &[&str] = &[
+    "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "random-only", "rounds",
+    "log", "csv", "autotune",
+];
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "uts" => cmd_uts(rest),
+        "bc" => cmd_bc(rest),
+        "fib" => cmd_fib(rest),
+        "nqueens" => cmd_nqueens(rest),
+        "fig" => cmd_fig(rest),
+        "calibrate" => cmd_calibrate(),
+        "smoke" => {
+            println!("platform={}", glb::smoke()?);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn arch_from(args: &Args) -> Result<&'static ArchProfile> {
+    let name = args.get("arch").unwrap_or("bgq");
+    ArchProfile::by_name(name).ok_or_else(|| anyhow!("unknown --arch {name}"))
+}
+
+fn finish<R>(out: &glb::glb::RunOutput<R>, unit: &str, log: bool) {
+    println!(
+        "elapsed={}  rate={} {unit}",
+        fmt_ns(out.elapsed_ns),
+        fmt_rate(out.units_per_sec()),
+    );
+    if log {
+        print!("{}", out.log.render());
+    }
+}
+
+fn cmd_uts(rest: &[String]) -> Result<()> {
+    let mut known = COMMON.to_vec();
+    known.extend(["depth", "b0", "seed-tree"]);
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "autotune"])?;
+    args.ensure_known(&known)?;
+    let p = args.parse_opt("places", 4usize)?;
+    let up = UtsParams {
+        b0: args.parse_opt("b0", 4.0f64)?,
+        seed: args.parse_opt("seed-tree", 19u32)?,
+        max_depth: args.parse_opt("depth", 10u32)?,
+    };
+    let params = if args.flag("autotune") {
+        let tuned = glb::glb::autotune::autotune_uts(p);
+        println!("autotuned: n={} w={} l={} (paper future-work item 4)", tuned.n, tuned.w, tuned.l);
+        tuned
+    } else {
+        glb_params_from(&args)?
+    };
+    let cfg = GlbConfig::new(p, params);
+    if args.flag("sim") {
+        let arch = arch_from(&args)?;
+        let cost = calibrate_uts_cost();
+        let (out, rep) =
+            run_sim(&cfg, arch, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        println!("uts-g(sim/{}) places={p} depth={} nodes={}", arch.name, up.max_depth, fmt_count(out.result));
+        println!("virtual messages={} events={}", rep.messages, rep.events);
+        finish(&out, "nodes/s", args.flag("log"));
+    } else {
+        let out = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        println!("uts-g(threads) places={p} depth={} nodes={}", up.max_depth, fmt_count(out.result));
+        finish(&out, "nodes/s", args.flag("log"));
+    }
+    Ok(())
+}
+
+fn cmd_bc(rest: &[String]) -> Result<()> {
+    let mut known = COMMON.to_vec();
+    known.extend(["scale", "engine", "verify"]);
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "verify"])?;
+    args.ensure_known(&known)?;
+    let p = args.parse_opt("places", 4usize)?;
+    let scale = args.parse_opt("scale", 9u32)?;
+    let engine = args.get("engine").unwrap_or("sparse");
+    let params = glb_params_from(&args)?;
+    let g = Arc::new(Graph::rmat(RmatParams { scale, ..Default::default() }));
+    let n = g.n() as u32;
+    println!("graph: n={} m={} (SSCA2 R-MAT scale {scale})", g.n(), g.m());
+    let cfg = GlbConfig::new(p, params);
+
+    let out = match engine {
+        "sparse" => {
+            if args.flag("sim") {
+                let arch = arch_from(&args)?;
+                let cost = calibrate_bc_cost(&g);
+                let gg = g.clone();
+                let (out, _) = run_sim(
+                    &cfg,
+                    arch,
+                    cost,
+                    move |i, np| seeded_queue(&gg, i, np, n),
+                    |_| {},
+                    &VecSumReducer,
+                );
+                out
+            } else {
+                let gg = g.clone();
+                run_threads(&cfg, move |i, np| seeded_queue(&gg, i, np, n), |_| {}, &VecSumReducer)
+            }
+        }
+        "dense" => {
+            let svc = DeviceService::start(&default_artifact_dir(), g.dense_adjacency(), g.n())?;
+            let handle = svc.handle();
+            println!("device: PJRT batched Brandes (S={})", handle.batch());
+            run_threads(
+                &cfg,
+                move |i, np| {
+                    let mut q = BcQueue::dense(handle.clone());
+                    let per = n / np as u32;
+                    let lo = i as u32 * per;
+                    let hi = if i == np - 1 { n } else { lo + per };
+                    q.assign(lo, hi);
+                    q
+                },
+                |_| {},
+                &VecSumReducer,
+            )
+        }
+        other => bail!("unknown --engine {other} (sparse|dense)"),
+    };
+
+    let top = top_vertices(&out.result, 5);
+    println!("bc-g places={p} engine={engine}; top-5 betweenness vertices: {top:?}");
+    if args.flag("verify") {
+        let (expect, _) = sequential_bc(&g);
+        let worst = out
+            .result
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+            .fold(0.0f64, f64::max);
+        println!("verify: max relative error vs sequential = {worst:.2e}");
+        if worst > 1e-3 {
+            bail!("verification failed (rel err {worst:.2e})");
+        }
+    }
+    finish(&out, "edges/s", args.flag("log"));
+    Ok(())
+}
+
+fn seeded_queue(g: &Arc<Graph>, i: usize, np: usize, n: u32) -> BcQueue {
+    let mut q = BcQueue::sparse(g.clone());
+    let per = n / np as u32;
+    let lo = i as u32 * per;
+    let hi = if i == np - 1 { n } else { lo + per };
+    q.assign(lo, hi);
+    q
+}
+
+fn top_vertices(bc: &[f64], k: usize) -> Vec<(usize, f64)> {
+    let mut idx: Vec<usize> = (0..bc.len()).collect();
+    idx.sort_by(|&a, &b| bc[b].partial_cmp(&bc[a]).unwrap());
+    idx.into_iter().take(k).map(|i| (i, (bc[i] * 100.0).round() / 100.0)).collect()
+}
+
+fn cmd_fib(rest: &[String]) -> Result<()> {
+    let mut known = COMMON.to_vec();
+    known.push("fib-n");
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
+    args.ensure_known(&known)?;
+    let p = args.parse_opt("places", 4usize)?;
+    let n = args.parse_opt("fib-n", 24u64)?;
+    let cfg = GlbConfig::new(p, glb_params_from(&args)?);
+    let out = run_threads(&cfg, |_, _| FibQueue::new(), |q| q.init(n), &SumReducer);
+    println!("fib-glb({n}) = {} (closed form {})", out.result, fib(n));
+    finish(&out, "tasks/s", args.flag("log"));
+    if out.result != fib(n) {
+        bail!("fib mismatch!");
+    }
+    Ok(())
+}
+
+fn cmd_nqueens(rest: &[String]) -> Result<()> {
+    let mut known = COMMON.to_vec();
+    known.push("board");
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
+    args.ensure_known(&known)?;
+    let p = args.parse_opt("places", 4usize)?;
+    let b = args.parse_opt("board", 10u8)?;
+    let cfg = GlbConfig::new(p, glb_params_from(&args)?);
+    let out = run_threads(&cfg, move |_, _| NQueensQueue::new(b), |q| q.init_root(), &SumReducer);
+    println!("nqueens({b}) = {} solutions", out.result);
+    finish(&out, "boards/s", args.flag("log"));
+    Ok(())
+}
+
+fn cmd_fig(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["csv", "log"])?;
+    args.ensure_known(&["id", "csv", "log", "places", "depth", "scale", "n", "w", "l", "z", "seed"])?;
+    let id: u32 = args.parse_opt("id", 0u32)?;
+    if !(2..=10).contains(&id) {
+        bail!("--id must be 2..=10 (paper figures)");
+    }
+    // Defaults chosen so each figure finishes in tens of seconds on one
+    // core; override with --places/--depth/--scale for bigger sweeps.
+    let mut opts = FigOpts {
+        csv: args.flag("csv"),
+        params: glb_params_from(&args)?,
+        ..Default::default()
+    };
+    let default_places: &[usize] = match id {
+        2 | 3 | 4 => &[1, 4, 16, 64, 256],
+        _ => &[1, 4, 16, 32],
+    };
+    opts.places = args.parse_list("places", default_places)?;
+    opts.uts_depth = args.parse_opt("depth", 9u32)?;
+    opts.bc_scale = args.parse_opt("scale", 12u32)?;
+    if id >= 5 && args.get("n").is_none() {
+        // BC-G defaults (paper §2.6): interruptible edge budget + max w.
+        opts.params = opts.params.with_n(8192).with_w(4).with_l(2);
+    }
+
+    match id {
+        2 => print!("{}", fig_uts(&glb::sim::POWER775, &opts).text),
+        3 => print!("{}", fig_uts(&BGQ, &opts).text),
+        4 => print!("{}", fig_uts(&glb::sim::K, &opts).text),
+        5 | 7 | 9 => {
+            let arch = match id {
+                5 => &BGQ,
+                7 => &glb::sim::K,
+                _ => &glb::sim::POWER775,
+            };
+            print!("{}", fig_bc_perf(arch, &opts).text);
+        }
+        6 | 8 | 10 => {
+            let arch = match id {
+                6 => &BGQ,
+                8 => &glb::sim::K,
+                _ => &glb::sim::POWER775,
+            };
+            let (t, summary) = fig_bc_workload(arch, &opts);
+            println!("{summary}");
+            if args.flag("log") {
+                print!("{}", if opts.csv { t.to_csv() } else { t.render() });
+            }
+        }
+        _ => unreachable!(),
+    }
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    let uts = calibrate_uts_cost();
+    println!("uts: {:.1} ns/node (SHA-1 expansion)", uts.ns_per_unit);
+    let g = Graph::rmat(RmatParams { scale: 10, ..Default::default() });
+    let bc = calibrate_bc_cost(&g);
+    println!("bc : {:.2} ns/edge (sparse Brandes, scale-10 R-MAT)", bc.ns_per_unit);
+    Ok(())
+}

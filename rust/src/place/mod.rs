@@ -1,0 +1,24 @@
+//! Thread-based place runtime.
+//!
+//! The closest single-machine analogue of X10 places: one OS thread per
+//! place, strictly message-passing communication (every inter-place
+//! interaction moves values through an mpsc mailbox; no task state is
+//! shared), and by-value loot transfer enforced by `Send`.
+//!
+//! The runtime drives the shared [`Worker`] protocol engine:
+//!
+//! * `Working` places drain their mailbox (answering steals — the paper's
+//!   "probes the network" between `process(n)` calls), then run one chunk;
+//! * waiting/idle places block on their mailbox;
+//! * the place that observes global quiescence broadcasts `Terminate`.
+//!
+//! Setup is fully sequential (queues built, workers constructed, empty
+//! workers kicked into the steal protocol) **before** any thread runs, so
+//! the token ledger is complete when the first message flows — see
+//! `glb::termination` for why that matters.
+
+pub mod network;
+pub mod runtime;
+
+pub use network::Transport;
+pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};

@@ -1,0 +1,159 @@
+//! Latency injection for the thread place-runtime.
+//!
+//! By default places exchange messages directly over their mailboxes
+//! (zero added latency — the shared-memory analogue of X10's intra-host
+//! transport). With [`Transport::delayed`], every message is routed
+//! through a router thread that holds it for a fixed delay before
+//! forwarding — a wall-clock analogue of an interconnect round-trip,
+//! used by the stress tests to shake out timing-dependent protocol bugs
+//! on real threads (the virtual-time equivalent lives in the simulator's
+//! architecture profiles, which model latency *structurally*).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::glb::message::{Msg, PlaceId};
+
+/// How messages travel between places.
+pub enum Transport<B> {
+    /// Deliver straight into the destination mailbox.
+    Direct(Vec<Sender<Msg<B>>>),
+    /// Deliver via a router thread after a fixed delay.
+    Delayed(Sender<Routed<B>>),
+}
+
+impl<B> Clone for Transport<B> {
+    fn clone(&self) -> Self {
+        match self {
+            Transport::Direct(txs) => Transport::Direct(txs.clone()),
+            Transport::Delayed(tx) => Transport::Delayed(tx.clone()),
+        }
+    }
+}
+
+/// A message in flight through the router.
+pub struct Routed<B> {
+    pub due: Instant,
+    pub to: PlaceId,
+    pub msg: Msg<B>,
+}
+
+impl<B> Transport<B> {
+    /// Send `msg` to `to` (best-effort; failures only occur during
+    /// post-termination teardown and are ignored by the protocol).
+    pub fn send(&self, to: PlaceId, msg: Msg<B>, delay: Duration) {
+        match self {
+            Transport::Direct(txs) => {
+                let _ = txs[to].send(msg);
+            }
+            Transport::Delayed(tx) => {
+                let _ = tx.send(Routed { due: Instant::now() + delay, to, msg });
+            }
+        }
+    }
+}
+
+/// Router thread body: hold each message until its due time, then
+/// forward to the destination mailbox. Exits when all senders hang up
+/// and the heap drains.
+pub fn router_main<B: Send>(rx: Receiver<Routed<B>>, mailboxes: Vec<Sender<Msg<B>>>) {
+    struct Entry<B>(Instant, u64, PlaceId, Msg<B>);
+    impl<B> PartialEq for Entry<B> {
+        fn eq(&self, o: &Self) -> bool {
+            (self.0, self.1) == (o.0, o.1)
+        }
+    }
+    impl<B> Eq for Entry<B> {}
+    impl<B> PartialOrd for Entry<B> {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl<B> Ord for Entry<B> {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            (self.0, self.1).cmp(&(o.0, o.1))
+        }
+    }
+
+    let mut heap: BinaryHeap<Reverse<Entry<B>>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut closed = false;
+    loop {
+        // Forward everything due.
+        let now = Instant::now();
+        while heap.peek().is_some_and(|Reverse(e)| e.0 <= now) {
+            let Reverse(Entry(_, _, to, msg)) = heap.pop().unwrap();
+            let _ = mailboxes[to].send(msg);
+        }
+        if closed && heap.is_empty() {
+            return;
+        }
+        // Wait for the next due time or the next incoming message.
+        let timeout = heap
+            .peek()
+            .map(|Reverse(e)| e.0.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(r) => {
+                heap.push(Reverse(Entry(r.due, seq, r.to, r.msg)));
+                seq += 1;
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => closed = true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn direct_transport_delivers() {
+        let (tx, rx) = channel::<Msg<Vec<u8>>>();
+        let t = Transport::Direct(vec![tx]);
+        t.send(0, Msg::Terminate, Duration::ZERO);
+        assert!(matches!(rx.recv().unwrap(), Msg::Terminate));
+    }
+
+    #[test]
+    fn delayed_transport_holds_messages() {
+        let (mb_tx, mb_rx) = channel::<Msg<Vec<u8>>>();
+        let (rt_tx, rt_rx) = channel();
+        let router = std::thread::spawn(move || router_main(rt_rx, vec![mb_tx]));
+        let t = Transport::Delayed(rt_tx);
+        let delay = Duration::from_millis(30);
+        let t0 = Instant::now();
+        t.send(0, Msg::Terminate, delay);
+        match mb_rx.recv_timeout(Duration::from_secs(2)) {
+            Ok(Msg::Terminate) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(t0.elapsed() >= delay, "message arrived early: {:?}", t0.elapsed());
+        drop(t);
+        router.join().unwrap();
+    }
+
+    #[test]
+    fn delayed_transport_preserves_order_per_equal_delay() {
+        let (mb_tx, mb_rx) = channel::<Msg<Vec<u8>>>();
+        let (rt_tx, rt_rx) = channel();
+        let router = std::thread::spawn(move || router_main(rt_rx, vec![mb_tx]));
+        let t = Transport::Delayed(rt_tx);
+        let d = Duration::from_millis(5);
+        for i in 0..10u64 {
+            t.send(0, Msg::Steal { thief: i as usize, lifeline: false, nonce: i }, d);
+        }
+        for i in 0..10u64 {
+            match mb_rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+                Msg::Steal { nonce, .. } => assert_eq!(nonce, i, "FIFO within equal delays"),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        drop(t);
+        router.join().unwrap();
+    }
+}

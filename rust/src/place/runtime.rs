@@ -1,0 +1,377 @@
+//! The thread place-runtime implementation. See module docs in
+//! [`crate::place`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::network::{router_main, Transport};
+use crate::glb::message::{Effect, Msg, PlaceId};
+use crate::glb::task_queue::{Reducer, TaskQueue};
+use crate::glb::termination::{AtomicLedger, Ledger};
+use crate::glb::worker::{Phase, Worker};
+use crate::glb::{GlbConfig, RunLog, RunOutput};
+
+/// Options beyond the GLB parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadRunOpts {
+    /// Per-place thread stack size in bytes (places are many and shallow).
+    pub stack_bytes: usize,
+    /// Inject a fixed wall-clock delay on every inter-place message
+    /// (routed through a delay thread). `None` = direct delivery. Used
+    /// by stress tests to widen race windows; the simulator models
+    /// latency structurally instead.
+    pub latency: Option<Duration>,
+}
+
+impl Default for ThreadRunOpts {
+    fn default() -> Self {
+        Self { stack_bytes: 2 << 20, latency: None }
+    }
+}
+
+/// Run a GLB computation with one thread per place.
+///
+/// * `factory(place, p)` builds the (statically initialized) queue for
+///   each place — statically balanced apps seed per-place work here;
+/// * `root_init` runs once on place 0's queue — dynamically balanced apps
+///   seed the root task here (paper §2.3: "If the workload cannot be
+///   statically scheduled across places, users need to provide an
+///   initialize method ... at place 0");
+/// * `reducer` folds per-place results (paper: the type-`Z` reduction).
+pub fn run_threads<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    factory: FQ,
+    root_init: FI,
+    reducer: &R,
+) -> RunOutput<Q::Result>
+where
+    Q: TaskQueue,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    run_threads_opts(cfg, factory, root_init, reducer, ThreadRunOpts::default())
+}
+
+/// [`run_threads`] with explicit [`ThreadRunOpts`].
+pub fn run_threads_opts<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    mut factory: FQ,
+    root_init: FI,
+    reducer: &R,
+    opts: ThreadRunOpts,
+) -> RunOutput<Q::Result>
+where
+    Q: TaskQueue,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    let p = cfg.p;
+    let ledger = AtomicLedger::new();
+
+    // -- sequential setup: queues, workers, mailboxes, initial kicks -----
+    let mut queues: Vec<Q> = (0..p).map(|i| factory(i, p)).collect();
+    root_init(&mut queues[0]);
+
+    let mut txs: Vec<Sender<Msg<Q::Bag>>> = Vec::with_capacity(p);
+    let mut rxs: Vec<Receiver<Msg<Q::Bag>>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // Optional latency injection: a router thread that holds every
+    // message for `latency` before forwarding.
+    let (transport, delay, router) = match opts.latency {
+        None => (Transport::Direct(txs.clone()), Duration::ZERO, None),
+        Some(d) => {
+            let (rt_tx, rt_rx) = channel();
+            let mailboxes = txs.clone();
+            let router = std::thread::Builder::new()
+                .name("glb-router".into())
+                .spawn(move || router_main(rt_rx, mailboxes))
+                .expect("spawn router");
+            (Transport::Delayed(rt_tx), d, Some(router))
+        }
+    };
+
+    let mut workers: Vec<Worker<Q, Arc<AtomicLedger>>> = queues
+        .into_iter()
+        .enumerate()
+        .map(|(i, q)| Worker::new(i, p, cfg.params, q, ledger.clone()))
+        .collect();
+
+    // Kick empty places into the steal protocol *before* any thread runs
+    // so the ledger is complete (no thread can observe a transient zero).
+    let mut fx = Vec::new();
+    for w in workers.iter_mut() {
+        w.kick_if_empty(&mut fx);
+        for e in fx.drain(..) {
+            match e {
+                Effect::Send { to, msg } => {
+                    transport.send(to, msg, delay);
+                }
+                // p == 1 with an empty root: the kick acquires a token,
+                // finds no victim to steal from, and releases it — validly
+                // observing quiescence before any thread runs. The
+                // `ledger.value() == 0` early return below finishes the run.
+                Effect::Quiescent => debug_assert_eq!(ledger.value(), 0),
+            }
+        }
+    }
+
+    // Nothing to do at all? (no place was seeded and none kicked — kicks
+    // always happen for empty workers when p > 1, so this is the p == 1,
+    // empty-root case, or every queue empty with p == 1.)
+    if ledger.value() == 0 {
+        let results: Vec<Q::Result> = workers.iter().map(|w| w.queue().result()).collect();
+        let log = RunLog::new(workers.iter().map(|w| *w.stats()).collect());
+        return RunOutput { result: reducer.reduce_all(results), log, elapsed_ns: 0 };
+    }
+
+    // -- run ---------------------------------------------------------------
+    let t0 = Instant::now();
+    let handles: Vec<_> = workers
+        .into_iter()
+        .zip(rxs)
+        .map(|(worker, rx)| {
+            let transport = transport.clone();
+            std::thread::Builder::new()
+                .name(format!("glb-place-{}", worker.id()))
+                .stack_size(opts.stack_bytes)
+                .spawn(move || place_main(worker, rx, transport, delay))
+                .expect("spawn place thread")
+        })
+        .collect();
+    drop(txs);
+    drop(transport);
+
+    let mut per_place: Vec<(Q::Result, crate::glb::WorkerStats)> = handles
+        .into_iter()
+        .map(|h| h.join().expect("place thread panicked"))
+        .collect();
+    if let Some(r) = router {
+        r.join().expect("router thread panicked");
+    }
+    let elapsed_ns = t0.elapsed().as_nanos() as u64;
+
+    debug_assert_eq!(ledger.value(), 0, "tokens must balance at termination");
+
+    let stats: Vec<_> = per_place.iter().map(|(_, s)| *s).collect();
+    let results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
+    RunOutput { result: reducer.reduce_all(results), log: RunLog::new(stats), elapsed_ns }
+}
+
+/// Per-place thread body: drive the worker until `Done`.
+fn place_main<Q: TaskQueue>(
+    mut worker: Worker<Q, Arc<AtomicLedger>>,
+    rx: Receiver<Msg<Q::Bag>>,
+    transport: Transport<Q::Bag>,
+    delay: Duration,
+) -> (Q::Result, crate::glb::WorkerStats) {
+    let me = worker.id();
+    let p = worker.places();
+    let mut fx: Vec<Effect<Q::Bag>> = Vec::with_capacity(8);
+
+    loop {
+        match worker.phase() {
+            Phase::Working => {
+                // Probe: answer everything pending, then one chunk.
+                let t = Instant::now();
+                while let Ok(m) = rx.try_recv() {
+                    worker.on_msg(m, &mut fx);
+                    pump(me, p, &mut fx, &transport, delay);
+                }
+                let probe_ns = t.elapsed().as_nanos() as u64;
+                worker.stats_mut().distribute_ns += probe_ns;
+                if worker.phase() != Phase::Working {
+                    continue; // a message moved us (cannot happen today, defensive)
+                }
+                let t = Instant::now();
+                worker.step(&mut fx);
+                worker.stats_mut().process_ns += t.elapsed().as_nanos() as u64;
+                pump(me, p, &mut fx, &transport, delay);
+            }
+            Phase::WaitRandom { .. } | Phase::WaitLifeline { .. } | Phase::Idle => {
+                let t = Instant::now();
+                let m = rx.recv().expect("mailbox closed while waiting");
+                worker.stats_mut().wait_ns += t.elapsed().as_nanos() as u64;
+                let t = Instant::now();
+                worker.on_msg(m, &mut fx);
+                pump(me, p, &mut fx, &transport, delay);
+                worker.stats_mut().distribute_ns += t.elapsed().as_nanos() as u64;
+            }
+            Phase::Done => break,
+        }
+    }
+    let (queue, stats) = worker.into_parts();
+    (queue.result(), stats)
+}
+
+/// Carry out the worker's requested effects.
+fn pump<B>(me: PlaceId, p: usize, fx: &mut Vec<Effect<B>>, transport: &Transport<B>, delay: Duration) {
+    for e in fx.drain(..) {
+        match e {
+            Effect::Send { to, msg } => {
+                debug_assert_ne!(to, me, "no self-sends in the protocol");
+                transport.send(to, msg, delay);
+            }
+            Effect::Quiescent => match transport {
+                Transport::Direct(txs) => {
+                    for (i, tx) in txs.iter().enumerate() {
+                        if i != me {
+                            let _ = tx.send(Msg::Terminate);
+                        }
+                    }
+                }
+                Transport::Delayed(_) => {
+                    // Terminate also travels with latency; every place id
+                    // below p gets one (p known to the caller).
+                    for i in (0..p).filter(|&i| i != me) {
+                        transport.send(i, Msg::Terminate, delay);
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glb::task_bag::{ArrayListTaskBag, TaskBag};
+    use crate::glb::task_queue::{ProcessOutcome, SumReducer};
+    use crate::glb::GlbParams;
+
+    /// Queue whose tasks are integers; processing a task of value v > 0
+    /// spawns two tasks of value v - 1 (so the total number of processed
+    /// tasks for a root r is 2^(r+1) - 1) — a tiny irregular workload.
+    struct TreeQueue {
+        bag: ArrayListTaskBag<u32>,
+        processed: u64,
+    }
+
+    impl TreeQueue {
+        fn empty() -> Self {
+            Self { bag: ArrayListTaskBag::new(), processed: 0 }
+        }
+    }
+
+    impl TaskQueue for TreeQueue {
+        type Bag = ArrayListTaskBag<u32>;
+        type Result = u64;
+
+        fn process(&mut self, n: usize) -> ProcessOutcome {
+            let mut c = 0u64;
+            while (c as usize) < n {
+                match self.bag.pop() {
+                    Some(v) => {
+                        self.processed += 1;
+                        c += 1;
+                        if v > 0 {
+                            self.bag.push(v - 1);
+                            self.bag.push(v - 1);
+                        }
+                    }
+                    None => break,
+                }
+            }
+            ProcessOutcome::new(self.bag.size() > 0, c)
+        }
+        fn split(&mut self) -> Option<Self::Bag> {
+            self.bag.split()
+        }
+        fn merge(&mut self, bag: Self::Bag) {
+            TaskBag::merge(&mut self.bag, bag)
+        }
+        fn result(&self) -> u64 {
+            self.processed
+        }
+        fn bag_size(&self) -> usize {
+            self.bag.size()
+        }
+    }
+
+    fn run(p: usize, root: u32, params: GlbParams) -> RunOutput<u64> {
+        let cfg = GlbConfig::new(p, params);
+        run_threads(&cfg, |_, _| TreeQueue::empty(), |q| q.bag.push(root), &SumReducer)
+    }
+
+    #[test]
+    fn single_place_counts_tree() {
+        let out = run(1, 10, GlbParams::default().with_n(8));
+        assert_eq!(out.result, (1 << 11) - 1);
+    }
+
+    #[test]
+    fn two_places_match_single() {
+        let out = run(2, 12, GlbParams::default().with_n(8).with_l(2));
+        assert_eq!(out.result, (1 << 13) - 1);
+    }
+
+    #[test]
+    fn many_places_various_params() {
+        for &(p, n, w, l) in
+            &[(3usize, 4usize, 1usize, 2usize), (4, 16, 2, 2), (7, 1, 1, 3), (8, 64, 3, 2)]
+        {
+            let params = GlbParams::default().with_n(n).with_w(w).with_l(l);
+            let out = run(p, 11, params);
+            assert_eq!(out.result, (1 << 12) - 1, "p={p} n={n} w={w} l={l}");
+            // Every place's stats row exists.
+            assert_eq!(out.log.per_place.len(), p);
+        }
+    }
+
+    #[test]
+    fn work_actually_moves_across_places() {
+        // On a single hardware core the OS may legitimately run place 0
+        // to completion before the thieves are ever scheduled, so spread
+        // is probabilistic here (the *deterministic* spread assertion
+        // lives in the simulator tests). Retry a few times; at least one
+        // run must show loot movement.
+        for attempt in 0..10 {
+            let out = run(4, 14, GlbParams::default().with_n(4).with_l(2));
+            assert_eq!(out.result, (1 << 15) - 1, "attempt {attempt}");
+            let total_loot: u64 = out.log.per_place.iter().map(|s| s.loot_bags_received).sum();
+            if total_loot > 0 {
+                return;
+            }
+        }
+        panic!("no loot moved in any of 10 runs");
+    }
+
+    #[test]
+    fn empty_root_terminates_cleanly() {
+        let cfg = GlbConfig::new(1, GlbParams::default());
+        let out = run_threads(&cfg, |_, _| TreeQueue::empty(), |_| {}, &SumReducer);
+        assert_eq!(out.result, 0);
+    }
+
+    #[test]
+    fn empty_root_multi_place_terminates() {
+        // All places start empty and kick into stealing; everyone refuses
+        // everyone; the tokens drain and someone observes quiescence.
+        let cfg = GlbConfig::new(4, GlbParams::default().with_l(2));
+        let out = run_threads(&cfg, |_, _| TreeQueue::empty(), |_| {}, &SumReducer);
+        assert_eq!(out.result, 0);
+    }
+
+    #[test]
+    fn statically_seeded_places_all_contribute() {
+        // factory seeds every place (the BC pattern) — no root init.
+        let cfg = GlbConfig::new(4, GlbParams::default().with_n(8).with_l(2));
+        let out = run_threads(
+            &cfg,
+            |_i, _p| {
+                let mut q = TreeQueue::empty();
+                q.bag.push(9);
+                q
+            },
+            |_| {},
+            &SumReducer,
+        );
+        assert_eq!(out.result, 4 * ((1 << 10) - 1));
+    }
+}

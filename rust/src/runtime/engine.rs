@@ -1,0 +1,175 @@
+//! The PJRT execution engine (single-thread owner of all PJRT state).
+//!
+//! Calling convention of the `bc_brandes` artifact (must match
+//! `python/compile/aot.py::lower_brandes`):
+//!
+//! * inputs: `adj : f32[N, N]` (dense 0/1 adjacency, row = source),
+//!   `sources : i32[S]` (source vertex ids; `-1` = padding slot, which
+//!   contributes nothing);
+//! * output: 1-tuple of a tuple `(bc : f32[N], edges : f32[], levels :
+//!   i32[])` — the batch's partial betweenness contribution, the number
+//!   of edges traversed (for TEPS reporting) and the BFS levels executed
+//!   (for the imbalance model: small components exit early).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Output of one batched-Brandes execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BrandesOut {
+    /// Partial betweenness contribution of this source batch, length N.
+    pub bc: Vec<f32>,
+    /// Edges traversed (work units; the paper's BC throughput metric).
+    pub edges: u64,
+    /// BFS levels executed before the whole batch's frontier emptied.
+    pub levels: u32,
+}
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(dir)?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (with caching) an artifact by file name.
+    pub fn load(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(file) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            self.cache.insert(file.to_string(), exe);
+        }
+        Ok(&self.cache[file])
+    }
+
+    /// Build a [`BrandesEngine`] for an `N`-vertex graph given as a dense
+    /// row-major 0/1 adjacency. Picks the manifest's largest batch size.
+    ///
+    /// The adjacency is uploaded to the device **once** and kept resident
+    /// (`PjRtBuffer`); per-call inputs are only the S source ids — this
+    /// is the §Perf optimization that removes the N²-float host→device
+    /// copy from every call (see EXPERIMENTS.md §Perf).
+    pub fn brandes(&mut self, adj: &[f32], n: usize) -> Result<BrandesEngine> {
+        self.brandes_with_batch(adj, n, None)
+    }
+
+    /// [`Engine::brandes`] with an upper bound on the source batch size
+    /// (picks the largest artifact with `S <= max_s`). Smaller batches
+    /// exit the level loop earlier on shallow sources; see the §Perf
+    /// batch-size sweep in EXPERIMENTS.md.
+    pub fn brandes_with_batch(
+        &mut self,
+        adj: &[f32],
+        n: usize,
+        max_s: Option<i64>,
+    ) -> Result<BrandesEngine> {
+        if adj.len() != n * n {
+            bail!("adjacency must be {n}x{n}, got {} elements", adj.len());
+        }
+        let entry = self
+            .manifest
+            .find_brandes(n as i64, max_s)
+            .with_context(|| format!("no bc_brandes artifact for n={n}; rerun `make artifacts` (see python/compile/aot.py --bc-sizes)"))?
+            .clone();
+        let s = entry.attr("s")? as usize;
+        let file = entry.file.clone();
+        self.load(&file)?;
+        let adj_buf = self
+            .client
+            .buffer_from_host_buffer(adj, &[n, n], None)
+            .context("uploading adjacency to device")?;
+        Ok(BrandesEngine { file, n, s, adj_buf })
+    }
+
+    /// Execute one batched-Brandes call. `sources` length must be ≤ S;
+    /// the engine pads with `-1` (ignored slots).
+    pub fn run_brandes(&mut self, be: &BrandesEngine, sources: &[u32]) -> Result<BrandesOut> {
+        if sources.len() > be.s {
+            bail!("batch of {} exceeds artifact S={}", sources.len(), be.s);
+        }
+        if sources.is_empty() {
+            return Ok(BrandesOut { bc: vec![0.0; be.n], edges: 0, levels: 0 });
+        }
+        let mut src: Vec<i32> = sources.iter().map(|&v| v as i32).collect();
+        src.resize(be.s, -1);
+        let src_buf = self.client.buffer_from_host_buffer(&src, &[be.s], None)?;
+        let file = be.file.clone();
+        let exe = self.load(&file)?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&[&be.adj_buf, &src_buf])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is the flat
+        // 3-tuple (bc, edges, levels).
+        let (bc_l, edges_l, levels_l) = result.to_tuple3()?;
+        let bc = bc_l.to_vec::<f32>()?;
+        let edges = edges_l.to_vec::<f32>()?[0] as u64;
+        let levels = levels_l.to_vec::<i32>()?[0] as u32;
+        Ok(BrandesOut { bc, edges, levels })
+    }
+}
+
+/// A compiled batched-Brandes executable bound to one replicated graph
+/// (adjacency resident on the device).
+pub struct BrandesEngine {
+    file: String,
+    /// Vertex count.
+    pub n: usize,
+    /// Max sources per call (the artifact's S).
+    pub s: usize,
+    adj_buf: xla::PjRtBuffer,
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests that need real artifacts live in
+    //! `rust/tests/runtime_integration.rs` (they require `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn engine_requires_manifest() {
+        let dir = std::env::temp_dir().join("glb-missing-artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = match Engine::new(&dir) {
+            Ok(_) => panic!("engine must fail without a manifest"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+    }
+
+    #[test]
+    fn brandes_rejects_bad_adjacency() {
+        let dir = std::env::temp_dir().join("glb-empty-manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "").unwrap();
+        let mut eng = Engine::new(&dir).unwrap();
+        assert!(eng.brandes(&[0.0; 10], 4).is_err(), "10 != 4*4");
+        assert!(eng.brandes(&[0.0; 16], 4).is_err(), "no artifact for n=4");
+    }
+}

@@ -1,0 +1,154 @@
+//! Artifact manifest parsing.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`, one line per
+//! artifact, as whitespace-separated `key=value` pairs (no JSON — the
+//! offline environment has no serde_json and the format does not warrant
+//! one):
+//!
+//! ```text
+//! kind=bc_brandes n=256 s=32 maxl=64 file=bc_brandes_n256_s32.hlo.txt
+//! kind=uts_expand b=256 file=uts_expand_b256.hlo.txt
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact kind (`bc_brandes`, `uts_expand`, ...).
+    pub kind: String,
+    /// HLO text file name, relative to the artifact dir.
+    pub file: String,
+    /// All remaining integer attributes (`n`, `s`, `maxl`, `b`, ...).
+    pub attrs: HashMap<String, i64>,
+}
+
+impl ManifestEntry {
+    /// Required integer attribute.
+    pub fn attr(&self, key: &str) -> Result<i64> {
+        self.attrs.get(key).copied().with_context(|| {
+            format!("artifact {} ({}) missing attribute {key}", self.kind, self.file)
+        })
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Parse manifest text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kind = None;
+            let mut file = None;
+            let mut attrs = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", lineno + 1))?;
+                match k {
+                    "kind" => kind = Some(v.to_string()),
+                    "file" => file = Some(v.to_string()),
+                    _ => {
+                        let n: i64 = v.parse().with_context(|| {
+                            format!("manifest line {}: non-integer {k}={v}", lineno + 1)
+                        })?;
+                        attrs.insert(k.to_string(), n);
+                    }
+                }
+            }
+            let (Some(kind), Some(file)) = (kind, file) else {
+                bail!("manifest line {}: needs kind= and file=", lineno + 1);
+            };
+            entries.push(ManifestEntry { kind, file, attrs });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load `manifest.txt` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// All entries of a kind.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ManifestEntry> {
+        self.entries.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// The `bc_brandes` entry with the given graph size, preferring the
+    /// largest source batch ≤ `max_s` (or the largest available).
+    pub fn find_brandes(&self, n: i64, max_s: Option<i64>) -> Option<&ManifestEntry> {
+        self.of_kind("bc_brandes")
+            .filter(|e| e.attr("n").ok() == Some(n))
+            .filter(|e| max_s.is_none_or(|m| e.attr("s").unwrap_or(i64::MAX) <= m))
+            .max_by_key(|e| e.attr("s").unwrap_or(0))
+    }
+
+    /// Absolute path for an entry.
+    pub fn path(&self, dir: &Path, e: &ManifestEntry) -> PathBuf {
+        dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment line
+
+kind=bc_brandes n=256 s=32 maxl=64 file=bc_brandes_n256_s32.hlo.txt
+kind=bc_brandes n=256 s=8 maxl=64 file=bc_brandes_n256_s8.hlo.txt
+kind=uts_expand b=256 file=uts_expand_b256.hlo.txt
+";
+
+    #[test]
+    fn parses_entries_and_attrs() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = &m.entries[0];
+        assert_eq!(e.kind, "bc_brandes");
+        assert_eq!(e.attr("n").unwrap(), 256);
+        assert_eq!(e.attr("s").unwrap(), 32);
+        assert_eq!(e.file, "bc_brandes_n256_s32.hlo.txt");
+        assert!(e.attr("missing").is_err());
+    }
+
+    #[test]
+    fn find_brandes_prefers_largest_batch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.find_brandes(256, None).unwrap().attr("s").unwrap(), 32);
+        assert_eq!(m.find_brandes(256, Some(16)).unwrap().attr("s").unwrap(), 8);
+        assert!(m.find_brandes(1024, None).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("kind=x file").is_err());
+        assert!(Manifest::parse("kind=x n=abc file=f").is_err());
+        assert!(Manifest::parse("n=3 file=f").is_err());
+        assert!(Manifest::parse("").unwrap().entries.is_empty());
+    }
+
+    #[test]
+    fn of_kind_filters() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.of_kind("bc_brandes").count(), 2);
+        assert_eq!(m.of_kind("uts_expand").count(), 1);
+        assert_eq!(m.of_kind("nope").count(), 0);
+    }
+}

@@ -1,0 +1,34 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the L2 JAX model (which calls the L1 Pallas kernels) to **HLO
+//! text** under `artifacts/`. This module is the request-path bridge: it
+//! parses the artifact manifest, compiles the HLO on the PJRT CPU client
+//! (`xla` crate), keeps the replicated BC graph resident as a device
+//! buffer, and executes batched Brandes calls issued by GLB workers.
+//!
+//! HLO *text* — not serialized `HloModuleProto` — is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! `/opt/xla-example/README.md`).
+//!
+//! The `xla` crate's wrappers are `!Send` (raw C++ pointers), so all PJRT
+//! state lives on one dedicated **device service** thread
+//! ([`service::DeviceService`]); GLB places call it through a clonable
+//! [`service::DeviceHandle`] — the same shape as a real accelerator
+//! offload queue.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::{BrandesEngine, BrandesOut, Engine};
+pub use manifest::{Manifest, ManifestEntry};
+pub use service::{DeviceHandle, DeviceService};
+
+use std::path::PathBuf;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("GLB_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,123 @@
+//! The device service: a dedicated thread owning the PJRT [`Engine`],
+//! serving batched-Brandes requests from GLB places over channels.
+//!
+//! Rationale: the `xla` crate's PJRT wrappers are `!Send`, and a real
+//! deployment would funnel accelerator work through an offload queue
+//! anyway (one device per node, many places). The handle is cheap to
+//! clone; requests block the calling place until the reply arrives —
+//! matching the synchronous `process(n)` contract of GLB task queues.
+
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{BrandesOut, Engine};
+
+enum Req {
+    Brandes { sources: Vec<u32>, reply: Sender<Result<BrandesOut>> },
+    Shutdown,
+}
+
+/// Clonable, `Send` handle to the device service.
+#[derive(Clone)]
+pub struct DeviceHandle {
+    tx: Arc<Mutex<Sender<Req>>>,
+    n: usize,
+    s: usize,
+}
+
+impl DeviceHandle {
+    /// Graph size the service was built for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Max sources per call.
+    pub fn batch(&self) -> usize {
+        self.s
+    }
+
+    /// Execute one batched-Brandes call (blocking).
+    pub fn brandes(&self, sources: &[u32]) -> Result<BrandesOut> {
+        let (reply, rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Req::Brandes { sources: sources.to_vec(), reply })
+            .map_err(|_| anyhow!("device service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("device service dropped reply"))?
+    }
+}
+
+/// The running service; dropping it shuts the engine thread down.
+pub struct DeviceService {
+    handle: DeviceHandle,
+    join: Option<JoinHandle<()>>,
+    tx: Sender<Req>,
+}
+
+impl DeviceService {
+    /// Start the engine thread for an `n`-vertex dense adjacency.
+    pub fn start(artifact_dir: &Path, adj: Vec<f32>, n: usize) -> Result<Self> {
+        let (tx, rx) = channel::<Req>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
+        let dir = artifact_dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("glb-device".into())
+            .spawn(move || engine_main(dir, adj, n, rx, ready_tx))
+            .context("spawning device service")?;
+        let (n, s) = ready_rx
+            .recv()
+            .map_err(|_| anyhow!("device service died during startup"))??;
+        let handle = DeviceHandle { tx: Arc::new(Mutex::new(tx.clone())), n, s };
+        Ok(Self { handle, join: Some(join), tx })
+    }
+
+    pub fn handle(&self) -> DeviceHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for DeviceService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn engine_main(
+    dir: std::path::PathBuf,
+    adj: Vec<f32>,
+    n: usize,
+    rx: Receiver<Req>,
+    ready: Sender<Result<(usize, usize)>>,
+) {
+    let mut engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let be = match engine.brandes(&adj, n) {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let _ = ready.send(Ok((be.n, be.s)));
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Brandes { sources, reply } => {
+                let _ = reply.send(engine.run_brandes(&be, &sources));
+            }
+            Req::Shutdown => break,
+        }
+    }
+}

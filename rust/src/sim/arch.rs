@@ -1,0 +1,227 @@
+//! Architecture profiles for the discrete-event simulator (paper §3.3).
+//!
+//! The paper evaluates on three machines; none are available here, so the
+//! simulator models the *ratios that matter to the load balancer*: message
+//! latency (intra- vs inter-node, per torus hop), NIC serialization and
+//! per-message occupancy (shared by all places of a node), per-message
+//! software handling cost, and relative single-core compute speed.
+//!
+//! Parameter values are order-of-magnitude figures assembled from the
+//! machines' public specifications (P775 hub all-to-all ~1–2 µs MPI
+//! latency; BGQ 5-D torus ~2.5 µs neighbour latency, 1.6 GHz in-order A2
+//! cores; K Tofu 6-D mesh/torus ~3 µs, 5 GB/s links, 8 places sharing a
+//! NIC). Absolute numbers are NOT the reproduction target — the scaling
+//! *shape* under each profile is (see EXPERIMENTS.md).
+
+/// Interconnect + compute model for one machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchProfile {
+    pub name: &'static str,
+    /// X10 places per physical node (paper §3.3: 32 on P775, 16 on BGQ
+    /// in c16 mode, 8 on K).
+    pub places_per_node: usize,
+    /// Same-node place-to-place latency (shared memory transport), ns.
+    pub intra_node_ns: u64,
+    /// Cross-node base latency, ns.
+    pub inter_node_base_ns: u64,
+    /// Additional latency per torus hop, ns.
+    pub per_hop_ns: u64,
+    /// Torus dimensionality used for hop counting (0 = all-to-all: one
+    /// hop between any two nodes, the P775 hub model).
+    pub torus_dims: usize,
+    /// NIC serialization bandwidth, bytes/ns (= GB/s).
+    pub nic_bytes_per_ns: f64,
+    /// Per-message NIC occupancy, ns (shared by the node's places; this
+    /// is what makes many-places-per-node contend).
+    pub nic_msg_overhead_ns: u64,
+    /// Software cost to handle one incoming message, ns.
+    pub handle_ns: u64,
+    /// Single-core speed multiplier applied to the app cost model
+    /// (1.0 = the reference core the cost models were calibrated on).
+    pub compute_scale: f64,
+}
+
+/// IBM Power 775 (paper: 2 drawers, 32 places/octant, hub-chip
+/// all-to-all optical interconnect).
+pub const POWER775: ArchProfile = ArchProfile {
+    name: "power775",
+    places_per_node: 32,
+    intra_node_ns: 400,
+    inter_node_base_ns: 1_800,
+    per_hop_ns: 0,
+    torus_dims: 0, // hub: direct
+    nic_bytes_per_ns: 12.0,
+    nic_msg_overhead_ns: 250,
+    handle_ns: 150,
+    compute_scale: 1.0,
+};
+
+/// Blue Gene/Q (Vesta; c16 mode: 1 place per A2 core, 5-D torus).
+pub const BGQ: ArchProfile = ArchProfile {
+    name: "bgq",
+    places_per_node: 16,
+    intra_node_ns: 500,
+    inter_node_base_ns: 2_400,
+    per_hop_ns: 45,
+    torus_dims: 5,
+    nic_bytes_per_ns: 1.8,
+    nic_msg_overhead_ns: 500,
+    handle_ns: 350,
+    compute_scale: 0.38, // 1.6 GHz in-order A2 vs 3.8 GHz P7
+};
+
+/// K computer (RIKEN; SPARC64 VIIIfx, Tofu 6-D mesh/torus, 8 places/node).
+pub const K: ArchProfile = ArchProfile {
+    name: "k",
+    places_per_node: 8,
+    intra_node_ns: 450,
+    inter_node_base_ns: 2_900,
+    per_hop_ns: 120,
+    torus_dims: 3, // Tofu's 6-D folded: effective 3-D torus for hop counts
+    nic_bytes_per_ns: 5.0,
+    nic_msg_overhead_ns: 900,
+    handle_ns: 300,
+    compute_scale: 0.52, // 2.0 GHz SPARC64 VIIIfx
+};
+
+/// An idealized zero-latency machine (protocol testing, ablations).
+pub const IDEAL: ArchProfile = ArchProfile {
+    name: "ideal",
+    places_per_node: 1,
+    intra_node_ns: 0,
+    inter_node_base_ns: 0,
+    per_hop_ns: 0,
+    torus_dims: 0,
+    nic_bytes_per_ns: f64::INFINITY,
+    nic_msg_overhead_ns: 0,
+    handle_ns: 0,
+    compute_scale: 1.0,
+};
+
+impl ArchProfile {
+    /// Look up a profile by CLI name.
+    pub fn by_name(name: &str) -> Option<&'static ArchProfile> {
+        match name {
+            "power775" | "p775" | "power" => Some(&POWER775),
+            "bgq" | "bluegene" => Some(&BGQ),
+            "k" => Some(&K),
+            "ideal" => Some(&IDEAL),
+            _ => None,
+        }
+    }
+
+    /// Node id of a place.
+    #[inline]
+    pub fn node_of(&self, place: usize) -> usize {
+        place / self.places_per_node
+    }
+
+    /// Torus hop count between two nodes for `total_nodes` in the system.
+    /// Nodes are laid out on a near-cubic `torus_dims`-dimensional cyclic
+    /// grid; all-to-all profiles report one hop.
+    pub fn hops(&self, a: usize, b: usize, total_nodes: usize) -> u64 {
+        if a == b {
+            return 0;
+        }
+        if self.torus_dims == 0 || total_nodes <= 2 {
+            return 1;
+        }
+        let side = (total_nodes as f64).powf(1.0 / self.torus_dims as f64).ceil().max(2.0) as usize;
+        let mut hops = 0u64;
+        let (mut ra, mut rb) = (a, b);
+        for _ in 0..self.torus_dims {
+            let (ca, cb) = (ra % side, rb % side);
+            let d = ca.abs_diff(cb);
+            hops += d.min(side - d) as u64; // cyclic distance
+            ra /= side;
+            rb /= side;
+        }
+        hops.max(1)
+    }
+
+    /// Wire latency (excluding NIC occupancy queueing, which the simulator
+    /// models statefully) for a message of `bytes` from `from` to `to`.
+    pub fn wire_latency_ns(&self, from: usize, to: usize, bytes: usize, total_places: usize) -> u64 {
+        let (na, nb) = (self.node_of(from), self.node_of(to));
+        if na == nb {
+            return self.intra_node_ns;
+        }
+        let total_nodes = total_places.div_ceil(self.places_per_node);
+        let ser = if self.nic_bytes_per_ns.is_finite() {
+            (bytes as f64 / self.nic_bytes_per_ns) as u64
+        } else {
+            0
+        };
+        self.inter_node_base_ns + self.per_hop_ns * self.hops(na, nb, total_nodes) + ser
+    }
+
+    /// Scale an app compute cost (ns on the reference core) to this core.
+    #[inline]
+    pub fn compute_ns(&self, reference_ns: f64) -> u64 {
+        (reference_ns / self.compute_scale) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(ArchProfile::by_name("bgq").unwrap().name, "bgq");
+        assert_eq!(ArchProfile::by_name("power775").unwrap().name, "power775");
+        assert_eq!(ArchProfile::by_name("k").unwrap().name, "k");
+        assert!(ArchProfile::by_name("cray").is_none());
+    }
+
+    #[test]
+    fn node_mapping() {
+        assert_eq!(BGQ.node_of(0), 0);
+        assert_eq!(BGQ.node_of(15), 0);
+        assert_eq!(BGQ.node_of(16), 1);
+    }
+
+    #[test]
+    fn intra_beats_inter() {
+        let p = 64;
+        let same = BGQ.wire_latency_ns(0, 1, 64, p);
+        let cross = BGQ.wire_latency_ns(0, 17, 64, p);
+        assert!(same < cross, "{same} vs {cross}");
+        assert_eq!(same, BGQ.intra_node_ns);
+    }
+
+    #[test]
+    fn hops_symmetric_and_zero_on_self() {
+        let nodes = 64;
+        for &(a, b) in &[(0usize, 5usize), (3, 60), (10, 11)] {
+            assert_eq!(K.hops(a, b, nodes), K.hops(b, a, nodes));
+        }
+        assert_eq!(K.hops(7, 7, nodes), 0);
+        assert_eq!(POWER775.hops(0, 63, nodes), 1, "hub is one hop");
+    }
+
+    #[test]
+    fn cyclic_distance_wraps() {
+        // side = 4 for 64 nodes in 3-D: node 0 (0,0,0) vs node 3 (3,0,0)
+        // is 1 hop around the ring, not 3.
+        assert_eq!(K.hops(0, 3, 64), 1);
+    }
+
+    #[test]
+    fn larger_messages_serialize_longer() {
+        let small = BGQ.wire_latency_ns(0, 17, 64, 64);
+        let large = BGQ.wire_latency_ns(0, 17, 64 + 8192, 64);
+        assert!(large > small + 4000, "{large} vs {small}: 8KiB at 1.8 B/ns ≈ 4.5µs");
+    }
+
+    #[test]
+    fn compute_scaling() {
+        assert_eq!(POWER775.compute_ns(100.0), 100);
+        assert!(BGQ.compute_ns(100.0) > 250, "BGQ cores are ~2.6x slower");
+    }
+
+    #[test]
+    fn ideal_is_free() {
+        assert_eq!(IDEAL.wire_latency_ns(0, 1, 1 << 20, 1024), 0);
+    }
+}

@@ -1,0 +1,506 @@
+//! Deterministic discrete-event simulation of a GLB deployment.
+//!
+//! The paper's evaluation runs up to 16,384 cores; this container has one.
+//! The simulator executes the **real** GLB protocol (the same
+//! [`Worker`](crate::glb::Worker) engine as the thread runtime) and the
+//! **real** application compute, but charges time on a virtual clock using
+//! an [`ArchProfile`] (latency, NIC occupancy, core speed) and an
+//! application [`CostModel`] (ns per work unit, calibrated against real
+//! single-core measurements — see `harness::calibrate`).
+//!
+//! Modelling choices (all on the conservative side for a load balancer):
+//!
+//! * a `Working` place answers messages only at `process(n)` chunk
+//!   boundaries — exactly the paper's "probes the network ... between
+//!   each process(n) call", and the mechanism behind its §2.6 BC
+//!   responsiveness discussion;
+//! * a waiting/idle place handles messages immediately (plus a software
+//!   handling cost);
+//! * cross-node messages serialize through the sender node's NIC: a
+//!   per-message occupancy charge on a shared `nic_free_at` clock models
+//!   the contention of many places per node (this is what bends the K
+//!   curve past 4 K places, Fig 4);
+//! * the virtual clock is `u64` ns; event order is total (time, seq), so
+//!   runs are bit-for-bit reproducible for a given seed.
+
+pub mod arch;
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::glb::message::{Effect, Msg};
+use crate::glb::task_queue::{Reducer, TaskQueue};
+use crate::glb::termination::{Ledger, SimLedger};
+use crate::glb::worker::{Phase, Worker};
+use crate::glb::{GlbConfig, RunLog, RunOutput};
+pub use arch::{ArchProfile, BGQ, IDEAL, K, POWER775};
+
+/// Application compute-cost model for virtual-time accounting, calibrated
+/// on the reference core (this machine) and scaled by the profile's
+/// `compute_scale`.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// ns of compute per work unit (UTS: per node; BC: per edge).
+    pub ns_per_unit: f64,
+    /// Fixed ns overhead per `process(n)` chunk (loop setup, probe).
+    pub chunk_overhead_ns: u64,
+    /// Serialized bytes per task item (loot message sizing).
+    pub item_bytes: usize,
+}
+
+impl CostModel {
+    pub fn new(ns_per_unit: f64, chunk_overhead_ns: u64, item_bytes: usize) -> Self {
+        Self { ns_per_unit, chunk_overhead_ns, item_bytes }
+    }
+}
+
+/// Event payloads. `Tick` = a working place finishes its current chunk;
+/// `Deliver` = a message arrives at a place.
+enum Ev<B> {
+    Tick(usize),
+    Deliver(usize, Msg<B>),
+}
+
+/// Min-heap entry: (time, seq) is a total order → deterministic replay.
+struct Entry<B> {
+    t: u64,
+    seq: u64,
+    ev: Ev<B>,
+}
+
+impl<B> PartialEq for Entry<B> {
+    fn eq(&self, o: &Self) -> bool {
+        (self.t, self.seq) == (o.t, o.seq)
+    }
+}
+impl<B> Eq for Entry<B> {}
+impl<B> PartialOrd for Entry<B> {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl<B> Ord for Entry<B> {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(o.t, o.seq))
+    }
+}
+
+/// Simulation report: the standard [`RunOutput`] plus simulator counters.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total messages delivered.
+    pub messages: u64,
+    /// Total events processed.
+    pub events: u64,
+    /// Virtual ns the busiest place computed for (critical path lower
+    /// bound).
+    pub max_busy_ns: u64,
+}
+
+/// Run a GLB computation on the simulator. Mirrors
+/// [`crate::place::run_threads`]; see there for the factory/root-init
+/// contract.
+pub fn run_sim<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    arch: &ArchProfile,
+    cost: CostModel,
+    factory: FQ,
+    root_init: FI,
+    reducer: &R,
+) -> (RunOutput<Q::Result>, SimReport)
+where
+    Q: TaskQueue,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    run_sim_jitter(cfg, arch, cost, 0, factory, root_init, reducer)
+}
+
+/// [`run_sim`] with **fault/jitter injection**: every message delivery is
+/// delayed by a deterministic pseudo-random extra `0..=jitter_ns`.
+/// Because latencies vary per message, deliveries *reorder across
+/// senders* (and, with large jitter, effectively adversarially) — the
+/// protocol's correctness must not depend on timing (see the
+/// `prop_sim_survives_message_jitter` property test).
+pub fn run_sim_jitter<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    arch: &ArchProfile,
+    cost: CostModel,
+    jitter_ns: u64,
+    factory: FQ,
+    root_init: FI,
+    reducer: &R,
+) -> (RunOutput<Q::Result>, SimReport)
+where
+    Q: TaskQueue,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    Sim::new(cfg, arch, cost, jitter_ns, factory, root_init).run(reducer)
+}
+
+struct Sim<Q: TaskQueue> {
+    p: usize,
+    arch: ArchProfile,
+    cost: CostModel,
+    workers: Vec<Worker<Q, SimLedger>>,
+    ledger: SimLedger,
+    heap: BinaryHeap<Reverse<Entry<Q::Bag>>>,
+    /// Messages that arrived while the place was mid-chunk.
+    inboxes: Vec<VecDeque<Msg<Q::Bag>>>,
+    /// Whether a Tick is scheduled for the place (i.e. it is mid-chunk).
+    ticking: Vec<bool>,
+    /// Next free time of each node's NIC (cross-node send serialization).
+    nic_free_at: Vec<u64>,
+    /// Fault injection: extra pseudo-random delay per delivery.
+    jitter_ns: u64,
+    jitter_rng: crate::util::SplitMix64,
+    seq: u64,
+    now: u64,
+    messages: u64,
+    events: u64,
+    done: bool,
+}
+
+impl<Q: TaskQueue> Sim<Q> {
+    fn new<FQ, FI>(
+        cfg: &GlbConfig,
+        arch: &ArchProfile,
+        cost: CostModel,
+        jitter_ns: u64,
+        mut factory: FQ,
+        root_init: FI,
+    ) -> Self
+    where
+        FQ: FnMut(usize, usize) -> Q,
+        FI: FnOnce(&mut Q),
+    {
+        let p = cfg.p;
+        let ledger = SimLedger::new();
+        let mut queues: Vec<Q> = (0..p).map(|i| factory(i, p)).collect();
+        root_init(&mut queues[0]);
+        let workers: Vec<_> = queues
+            .into_iter()
+            .enumerate()
+            .map(|(i, q)| Worker::new(i, p, cfg.params, q, ledger.clone()))
+            .collect();
+        let nodes = p.div_ceil(arch.places_per_node);
+        let mut sim = Self {
+            p,
+            arch: *arch,
+            cost,
+            workers,
+            ledger,
+            heap: BinaryHeap::new(),
+            inboxes: (0..p).map(|_| VecDeque::new()).collect(),
+            ticking: vec![false; p],
+            nic_free_at: vec![0; nodes],
+            jitter_ns,
+            jitter_rng: crate::util::SplitMix64::new(cfg.params.seed ^ 0x7177E2),
+            seq: 0,
+            now: 0,
+            messages: 0,
+            events: 0,
+            done: false,
+        };
+        // Kick empty workers into the steal protocol, then schedule the
+        // first chunk of every working place — all at t = 0.
+        let mut fx = Vec::new();
+        for i in 0..p {
+            sim.workers[i].kick_if_empty(&mut fx);
+            sim.carry_out(i, 0, &mut fx);
+        }
+        for i in 0..p {
+            if sim.workers[i].phase() == Phase::Working {
+                sim.schedule_tick(i, 0);
+            }
+        }
+        sim
+    }
+
+    fn push(&mut self, t: u64, ev: Ev<Q::Bag>) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { t, seq, ev }));
+    }
+
+    fn schedule_tick(&mut self, place: usize, t: u64) {
+        debug_assert!(!self.ticking[place]);
+        self.ticking[place] = true;
+        self.push(t, Ev::Tick(place));
+    }
+
+    /// Send effects produced at virtual time `t` by `from`.
+    fn carry_out(&mut self, from: usize, t: u64, fx: &mut Vec<Effect<Q::Bag>>) {
+        for e in fx.drain(..) {
+            match e {
+                Effect::Send { to, msg } => {
+                    let bytes = msg.wire_bytes(self.cost.item_bytes, |b: &Q::Bag| {
+                        use crate::glb::task_bag::TaskBag;
+                        b.size()
+                    });
+                    let (na, nb) = (self.arch.node_of(from), self.arch.node_of(to));
+                    let deliver_at = if na == nb {
+                        t + self.arch.intra_node_ns
+                    } else {
+                        // Occupy the source NIC: per-message overhead +
+                        // serialization, shared by the node's places.
+                        let occupy = self.arch.nic_msg_overhead_ns
+                            + if self.arch.nic_bytes_per_ns.is_finite() {
+                                (bytes as f64 / self.arch.nic_bytes_per_ns) as u64
+                            } else {
+                                0
+                            };
+                        let start = self.nic_free_at[na].max(t);
+                        self.nic_free_at[na] = start + occupy;
+                        start
+                            + occupy
+                            + self.arch.inter_node_base_ns
+                            + self.arch.per_hop_ns * self.arch.hops(na, nb, self.nic_free_at.len())
+                    };
+                    let deliver_at = if self.jitter_ns > 0 {
+                        deliver_at + self.jitter_rng.next_below(self.jitter_ns + 1)
+                    } else {
+                        deliver_at
+                    };
+                    self.messages += 1;
+                    self.push(deliver_at, Ev::Deliver(to, msg));
+                }
+                Effect::Quiescent => {
+                    self.done = true;
+                }
+            }
+        }
+    }
+
+    fn run<R: Reducer<Q::Result>>(mut self, reducer: &R) -> (RunOutput<Q::Result>, SimReport) {
+        let mut fx: Vec<Effect<Q::Bag>> = Vec::with_capacity(8);
+        if self.ledger.value() == 0 {
+            self.done = true; // nothing was seeded anywhere
+        }
+        while !self.done {
+            let Reverse(Entry { t, ev, .. }) = match self.heap.pop() {
+                Some(e) => e,
+                None => break,
+            };
+            self.now = t;
+            self.events += 1;
+            match ev {
+                Ev::Tick(pl) => {
+                    self.ticking[pl] = false;
+                    // Chunk boundary: probe (drain inbox), then one chunk.
+                    let mut handle_ns = 0;
+                    while let Some(m) = self.inboxes[pl].pop_front() {
+                        self.workers[pl].on_msg(m, &mut fx);
+                        handle_ns += self.arch.handle_ns;
+                    }
+                    self.workers[pl].stats_mut().distribute_ns += handle_ns;
+                    let t = t + handle_ns;
+                    self.carry_out(pl, t, &mut fx);
+                    if self.done {
+                        self.now = t;
+                        break;
+                    }
+                    if self.workers[pl].phase() != Phase::Working {
+                        continue;
+                    }
+                    let outcome = self.workers[pl].step(&mut fx);
+                    let cost_ns = self.arch.compute_ns(outcome.units as f64 * self.cost.ns_per_unit)
+                        + self.cost.chunk_overhead_ns;
+                    self.workers[pl].stats_mut().process_ns += cost_ns;
+                    let end = t + cost_ns;
+                    // Effects (steal requests, loot) leave at chunk end.
+                    self.carry_out(pl, end, &mut fx);
+                    if self.done {
+                        // Quiescence observed at the end of this chunk: the
+                        // makespan includes the chunk that drained the
+                        // last work.
+                        self.now = end;
+                        break;
+                    }
+                    if self.workers[pl].phase() == Phase::Working {
+                        self.schedule_tick(pl, end);
+                    }
+                }
+                Ev::Deliver(pl, msg) => {
+                    if self.ticking[pl] {
+                        // Mid-chunk: queue for the next boundary.
+                        self.inboxes[pl].push_back(msg);
+                        continue;
+                    }
+                    let was = self.workers[pl].phase();
+                    self.workers[pl].on_msg(msg, &mut fx);
+                    self.workers[pl].stats_mut().distribute_ns += self.arch.handle_ns;
+                    let t = t + self.arch.handle_ns;
+                    self.carry_out(pl, t, &mut fx);
+                    if self.done {
+                        self.now = t;
+                        break;
+                    }
+                    if self.workers[pl].phase() == Phase::Working && was != Phase::Working {
+                        self.schedule_tick(pl, t);
+                    }
+                }
+            }
+        }
+
+        debug_assert!(self.done, "simulation drained its event queue without quiescing");
+        debug_assert_eq!(self.ledger.value(), 0, "tokens must balance at termination");
+
+        let elapsed_ns = self.now;
+        let mut stats = Vec::with_capacity(self.p);
+        let mut results = Vec::with_capacity(self.p);
+        let mut max_busy = 0;
+        for w in self.workers {
+            let (q, s) = w.into_parts();
+            max_busy = max_busy.max(s.busy_ns());
+            stats.push(s);
+            results.push(q.result());
+        }
+        let out =
+            RunOutput { result: reducer.reduce_all(results), log: RunLog::new(stats), elapsed_ns };
+        let report =
+            SimReport { messages: self.messages, events: self.events, max_busy_ns: max_busy };
+        (out, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glb::task_bag::{ArrayListTaskBag, TaskBag};
+    use crate::glb::task_queue::{ProcessOutcome, SumReducer};
+    use crate::glb::GlbParams;
+
+    /// The same binary-tree toy workload as the thread-runtime tests.
+    struct TreeQueue {
+        bag: ArrayListTaskBag<u32>,
+        processed: u64,
+    }
+
+    impl TaskQueue for TreeQueue {
+        type Bag = ArrayListTaskBag<u32>;
+        type Result = u64;
+        fn process(&mut self, n: usize) -> ProcessOutcome {
+            let mut c = 0u64;
+            while (c as usize) < n {
+                match self.bag.pop() {
+                    Some(v) => {
+                        self.processed += 1;
+                        c += 1;
+                        if v > 0 {
+                            self.bag.push(v - 1);
+                            self.bag.push(v - 1);
+                        }
+                    }
+                    None => break,
+                }
+            }
+            ProcessOutcome::new(self.bag.size() > 0, c)
+        }
+        fn split(&mut self) -> Option<Self::Bag> {
+            self.bag.split()
+        }
+        fn merge(&mut self, bag: Self::Bag) {
+            TaskBag::merge(&mut self.bag, bag)
+        }
+        fn result(&self) -> u64 {
+            self.processed
+        }
+        fn bag_size(&self) -> usize {
+            self.bag.size()
+        }
+    }
+
+    fn run(p: usize, root: u32, arch: &ArchProfile) -> (RunOutput<u64>, SimReport) {
+        let cfg = GlbConfig::new(p, GlbParams::default().with_n(8).with_l(2));
+        run_sim(
+            &cfg,
+            arch,
+            CostModel::new(100.0, 50, 8),
+            |_, _| TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 },
+            |q| q.bag.push(root),
+            &SumReducer,
+        )
+    }
+
+    #[test]
+    fn sim_counts_tree_correctly() {
+        for &p in &[1usize, 2, 4, 16, 64] {
+            let (out, _) = run(p, 12, &BGQ);
+            assert_eq!(out.result, (1 << 13) - 1, "p={p}");
+        }
+    }
+
+    #[test]
+    fn sim_is_deterministic() {
+        let (a, ra) = run(32, 13, &K);
+        let (b, rb) = run(32, 13, &K);
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.elapsed_ns, b.elapsed_ns, "virtual time must replay exactly");
+        assert_eq!(ra.messages, rb.messages);
+        assert_eq!(ra.events, rb.events);
+    }
+
+    #[test]
+    fn more_places_run_faster_in_virtual_time() {
+        let (one, _) = run(1, 14, &POWER775);
+        let (sixteen, _) = run(16, 14, &POWER775);
+        assert_eq!(one.result, sixteen.result);
+        assert!(
+            (sixteen.elapsed_ns as f64) < one.elapsed_ns as f64 / 8.0,
+            "16 places should be >8x faster: {} vs {}",
+            sixteen.elapsed_ns,
+            one.elapsed_ns
+        );
+    }
+
+    #[test]
+    fn slow_cores_take_longer() {
+        let (p7, _) = run(4, 12, &POWER775);
+        let (a2, _) = run(4, 12, &BGQ);
+        assert!(a2.elapsed_ns > p7.elapsed_ns, "{} vs {}", a2.elapsed_ns, p7.elapsed_ns);
+    }
+
+    #[test]
+    fn empty_workload_terminates() {
+        let cfg = GlbConfig::new(4, GlbParams::default().with_l(2));
+        let (out, _) = run_sim(
+            &cfg,
+            &IDEAL,
+            CostModel::new(1.0, 0, 8),
+            |_, _| TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 },
+            |_| {},
+            &SumReducer,
+        );
+        assert_eq!(out.result, 0);
+    }
+
+    #[test]
+    fn work_spreads_across_sim_places() {
+        let (out, rep) = run(16, 14, &BGQ);
+        let active = out.log.per_place.iter().filter(|s| s.units > 0).count();
+        assert!(active >= 12, "most places should contribute, got {active}");
+        assert!(rep.messages > 0);
+    }
+
+    #[test]
+    fn statically_seeded_sim() {
+        let cfg = GlbConfig::new(8, GlbParams::default().with_n(16).with_l(2));
+        let (out, _) = run_sim(
+            &cfg,
+            &BGQ,
+            CostModel::new(10.0, 10, 8),
+            |_, _| {
+                let mut q = TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 };
+                q.bag.push(9);
+                q
+            },
+            |_| {},
+            &SumReducer,
+        );
+        assert_eq!(out.result, 8 * ((1 << 10) - 1));
+    }
+}

@@ -1,0 +1,134 @@
+//! A small property-testing kit (the offline environment has no
+//! `proptest`): seeded random case generation with failure reporting.
+//!
+//! [`check_cases`] runs a property over `iters` generated cases; on
+//! failure it panics with the *seed* of the failing case so the exact
+//! input replays deterministically:
+//!
+//! ```
+//! use glb::testkit::{check_cases, Gen};
+//! check_cases("sum-commutes", 100, |g: &mut Gen| {
+//!     let (a, b) = (g.u64(0..1000), g.u64(0..1000));
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::SplitMix64;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    rng: SplitMix64,
+    /// The seed that reproduces this case.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), seed }
+    }
+
+    /// Uniform u64 in `[lo, hi)`.
+    pub fn u64(&mut self, range: std::ops::Range<u64>) -> u64 {
+        assert!(range.start < range.end);
+        range.start + self.rng.next_below(range.end - range.start)
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn usize(&mut self, range: std::ops::Range<usize>) -> usize {
+        self.u64(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.f64() < p_true
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+
+    /// A vector of `len` values drawn by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` over `iters` seeded cases. Honours `GLB_PROP_SEED` (replay
+/// a single failing case) and `GLB_PROP_ITERS` (override the count).
+pub fn check_cases(name: &str, iters: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    if let Ok(s) = std::env::var("GLB_PROP_SEED") {
+        let seed: u64 = s.parse().expect("GLB_PROP_SEED must be a u64");
+        let mut g = Gen::from_seed(seed);
+        prop(&mut g);
+        return;
+    }
+    let iters = std::env::var("GLB_PROP_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(iters);
+    for i in 0..iters {
+        // Derive case seeds from the property name so distinct properties
+        // explore distinct inputs.
+        let base = name.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+        let seed = crate::util::rng::mix64(base ^ i);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::from_seed(seed);
+            prop(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed on case {i} (replay with GLB_PROP_SEED={seed}):\n{msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_ranges_hold() {
+        let mut g = Gen::from_seed(1);
+        for _ in 0..1000 {
+            let v = g.u64(5..10);
+            assert!((5..10).contains(&v));
+            let u = g.usize(0..3);
+            assert!(u < 3);
+        }
+    }
+
+    #[test]
+    fn check_cases_passes_good_property() {
+        check_cases("addition-commutes", 50, |g| {
+            let (a, b) = (g.u64(0..1000), g.u64(0..1000));
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with GLB_PROP_SEED=")]
+    fn check_cases_reports_seed_on_failure() {
+        check_cases("always-fails", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn choose_and_vec() {
+        let mut g = Gen::from_seed(2);
+        let v = g.vec(10, |g| g.u64(0..5));
+        assert_eq!(v.len(), 10);
+        let x = *g.choose(&[1, 2, 3]);
+        assert!([1, 2, 3].contains(&x));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained utilities shared across the library.
+//!
+//! This crate builds in an offline environment without `rand`, `clap` or
+//! `criterion`, so the RNG, statistics helpers and time formatting live
+//! here.
+
+pub mod rng;
+pub mod stats;
+pub mod timefmt;
+
+pub use rng::SplitMix64;
+pub use stats::{mean, percentile, stddev, OnlineStats};

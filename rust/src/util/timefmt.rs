@@ -1,0 +1,70 @@
+//! Human-readable formatting of durations and rates for the CLI and the
+//! bench harness output tables.
+
+/// Format nanoseconds adaptively (ns / µs / ms / s).
+pub fn fmt_ns(ns: u64) -> String {
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Format a rate (events per second) with SI prefixes.
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.3}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.3}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.3}K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}/s")
+    }
+}
+
+/// Format a count with thousands separators (`1_234_567`).
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_ranges() {
+        assert_eq!(fmt_ns(12), "12ns");
+        assert_eq!(fmt_ns(1_500), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_210_000_000), "3.210s");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(fmt_rate(12.0), "12.0/s");
+        assert_eq!(fmt_rate(1.5e3), "1.500K/s");
+        assert_eq!(fmt_rate(2.25e6), "2.250M/s");
+        assert_eq!(fmt_rate(7.5e9), "7.500G/s");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1_000), "1_000");
+        assert_eq!(fmt_count(1_234_567), "1_234_567");
+    }
+}

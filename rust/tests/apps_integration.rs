@@ -1,0 +1,176 @@
+//! Application-level integration: UTS / BC / Fib / N-Queens end-to-end
+//! under GLB, against sequential oracles and each other.
+
+use std::sync::Arc;
+
+use glb::apps::bc::{sequential_bc, BcQueue, Graph, InterruptibleBcQueue, RmatParams};
+use glb::apps::nqueens::{NQueensQueue, KNOWN};
+use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
+use glb::baselines::legacy_bc::{run_legacy_bc_sim, run_legacy_bc_threads};
+use glb::glb::task_queue::{SumReducer, VecSumReducer};
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::run_threads;
+use glb::sim::{run_sim, CostModel, BGQ};
+use glb::util::stats::{mean, stddev};
+
+fn close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol * (1.0 + y.abs()), "idx {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn uts_paper_parameters_small_depths() {
+    // b0=4, r=19 (the paper's constants) at several depths, across both
+    // substrates and several place counts.
+    for d in [4u32, 6, 8] {
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: d };
+        let expect = sequential_count(&up);
+        let cfg = GlbConfig::new(4, GlbParams::default().with_n(64).with_l(2));
+        let t = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        assert_eq!(t.result, expect, "d={d}");
+    }
+}
+
+#[test]
+fn uts_other_branching_factors() {
+    for b0 in [1.5f64, 2.0, 8.0] {
+        let up = UtsParams { b0, seed: 19, max_depth: 6 };
+        let expect = sequential_count(&up);
+        let cfg = GlbConfig::new(3, GlbParams::default().with_n(32).with_l(2));
+        let t = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        assert_eq!(t.result, expect, "b0={b0}");
+    }
+}
+
+#[test]
+fn bc_sparse_and_interruptible_agree() {
+    let g = Arc::new(Graph::rmat(RmatParams { scale: 7, ..Default::default() }));
+    let (want, _) = sequential_bc(&g);
+    let n = g.n() as u32;
+
+    let cfg = GlbConfig::new(4, GlbParams::default().with_n(4).with_l(2));
+    let gg = g.clone();
+    let sparse =
+        run_threads(&cfg, move |_, _| BcQueue::sparse(gg.clone()), |q| q.assign(0, n), &VecSumReducer);
+    close(&sparse.result, &want, 1e-9);
+
+    let cfg = GlbConfig::new(4, GlbParams::default().with_n(2000).with_l(2));
+    let gg = g.clone();
+    let inter = run_threads(
+        &cfg,
+        move |_, _| InterruptibleBcQueue::new(gg.clone()),
+        |q| q.assign(0, n),
+        &VecSumReducer,
+    );
+    close(&inter.result, &want, 1e-9);
+}
+
+#[test]
+fn bc_on_the_papers_degenerate_graph() {
+    // §2.6.1's triangular DAG: GLB must still produce the exact map even
+    // though the per-source work is maximally skewed.
+    let g = Arc::new(Graph::triangular(96));
+    let (want, _) = sequential_bc(&g);
+    let n = g.n() as u32;
+    let gg = g.clone();
+    let cfg = GlbConfig::new(6, GlbParams::default().with_n(1).with_l(2));
+    let out =
+        run_threads(&cfg, move |_, _| BcQueue::sparse(gg.clone()), |q| q.assign(0, n), &VecSumReducer);
+    close(&out.result, &want, 1e-9);
+}
+
+#[test]
+fn legacy_bc_threads_and_sim_agree_with_glb() {
+    let g = Arc::new(Graph::rmat(RmatParams { scale: 7, ..Default::default() }));
+    let (want, _) = sequential_bc(&g);
+    let legacy_t = run_legacy_bc_threads(&g, 3, 1);
+    close(&legacy_t.bc, &want, 1e-9);
+    let legacy_s = run_legacy_bc_sim(&g, 5, 2, 3.0, 1.0);
+    close(&legacy_s.bc, &want, 1e-9);
+}
+
+#[test]
+fn glb_flattens_bc_workload_vs_legacy() {
+    // The Figs 6/8/10 effect at test scale: σ(busy) under GLB is well
+    // below σ under the static randomized legacy layout.
+    let g = Arc::new(Graph::rmat(RmatParams { scale: 11, ..Default::default() }));
+    let p = 16usize;
+    let cost = CostModel::new(4.0, 80, 8);
+    let legacy = run_legacy_bc_sim(&g, p, 42, cost.ns_per_unit, BGQ.compute_scale);
+    let lb: Vec<f64> = legacy.busy_ns.iter().map(|&x| x as f64).collect();
+
+    let n = g.n() as u32;
+    let gg = g.clone();
+    let cfg = GlbConfig::new(p, GlbParams::default().with_n(4096).with_w(4).with_l(2));
+    let (out, _) = run_sim(
+        &cfg,
+        &BGQ,
+        cost,
+        move |i, np| {
+            let mut q = InterruptibleBcQueue::new(gg.clone());
+            let per = n / np as u32;
+            let lo = i as u32 * per;
+            let hi = if i == np - 1 { n } else { lo + per };
+            q.assign(lo, hi);
+            q
+        },
+        |_| {},
+        &VecSumReducer,
+    );
+    let gb: Vec<f64> = out.log.per_place.iter().map(|s| s.process_ns as f64).collect();
+    let (l_rel, g_rel) = (stddev(&lb) / mean(&lb), stddev(&gb) / mean(&gb));
+    assert!(
+        g_rel < l_rel * 0.6,
+        "GLB rel-σ {g_rel:.4} should be well under legacy {l_rel:.4}"
+    );
+}
+
+#[test]
+fn nqueens_scales_with_places() {
+    for &p in &[1usize, 2, 6] {
+        let cfg = GlbConfig::new(p, GlbParams::default().with_n(64).with_l(2));
+        let out =
+            run_threads(&cfg, |_, _| NQueensQueue::new(8), |q| q.init_root(), &SumReducer);
+        assert_eq!(out.result, KNOWN[8], "p={p}");
+    }
+}
+
+#[test]
+fn nqueens_sim_bigger_board() {
+    let cfg = GlbConfig::new(24, GlbParams::default().with_n(256).with_l(2));
+    let (out, _) = run_sim(
+        &cfg,
+        &BGQ,
+        CostModel::new(20.0, 40, 16),
+        |_, _| NQueensQueue::new(10),
+        |q| q.init_root(),
+        &SumReducer,
+    );
+    assert_eq!(out.result, KNOWN[10]);
+}
+
+#[test]
+fn bc_star_and_cycle_analytic_under_glb() {
+    for (g, check) in [
+        (Graph::star(6), {
+            let mut v = vec![0.0; 7];
+            v[0] = 30.0; // k(k-1) = 6*5
+            v
+        }),
+        (Graph::path(4), vec![0.0, 4.0, 4.0, 0.0]),
+    ] {
+        let g = Arc::new(g);
+        let n = g.n() as u32;
+        let gg = g.clone();
+        let cfg = GlbConfig::new(2, GlbParams::default().with_n(1).with_l(2));
+        let out = run_threads(
+            &cfg,
+            move |_, _| BcQueue::sparse(gg.clone()),
+            |q| q.assign(0, n),
+            &VecSumReducer,
+        );
+        close(&out.result, &check, 1e-12);
+    }
+}

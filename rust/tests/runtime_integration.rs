@@ -1,0 +1,143 @@
+//! PJRT runtime integration: load the AOT artifacts, execute batched
+//! Brandes from rust, and cross-check against the sparse CPU engine.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
+use glb::glb::task_queue::VecSumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::run_threads;
+use glb::runtime::{DeviceService, Engine, Manifest};
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        None
+    }
+}
+
+/// A graph sized for the n=64 artifact: R-MAT scale 6.
+fn graph64() -> Arc<Graph> {
+    Arc::new(Graph::rmat(RmatParams { scale: 6, ..Default::default() }))
+}
+
+#[test]
+fn manifest_lists_generated_artifacts() {
+    let Some(dir) = artifact_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert!(m.find_brandes(64, None).is_some(), "n=64 artifact expected");
+    assert!(m.find_brandes(256, None).is_some(), "n=256 artifact expected");
+    assert!(m.of_kind("uts_expand").count() >= 1);
+}
+
+#[test]
+fn engine_executes_batched_brandes_and_matches_sparse() {
+    let Some(dir) = artifact_dir() else { return };
+    let g = graph64();
+    let mut eng = Engine::new(&dir).unwrap();
+    let be = eng.brandes(&g.dense_adjacency(), g.n()).unwrap();
+    assert_eq!(be.n, 64);
+
+    // Full BC by batching all sources through the artifact.
+    let mut bc = vec![0.0f64; g.n()];
+    let mut edges = 0u64;
+    let sources: Vec<u32> = (0..g.n() as u32).collect();
+    for chunk in sources.chunks(be.s) {
+        let out = eng.run_brandes(&be, chunk).unwrap();
+        for (acc, x) in bc.iter_mut().zip(&out.bc) {
+            *acc += *x as f64;
+        }
+        edges += out.edges;
+    }
+
+    let (want, want_edges) = sequential_bc(&g);
+    for (i, (a, b)) in bc.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+            "bc[{i}]: pjrt {a} vs sparse {b}"
+        );
+    }
+    assert_eq!(edges, want_edges, "edge accounting must agree exactly");
+}
+
+#[test]
+fn engine_pads_partial_batches() {
+    let Some(dir) = artifact_dir() else { return };
+    let g = graph64();
+    let mut eng = Engine::new(&dir).unwrap();
+    let be = eng.brandes(&g.dense_adjacency(), g.n()).unwrap();
+    let full = eng.run_brandes(&be, &[0, 1, 2]).unwrap();
+    let (a, ea) = {
+        let o = eng.run_brandes(&be, &[0]).unwrap();
+        (o.bc, o.edges)
+    };
+    let (b, eb) = {
+        let o = eng.run_brandes(&be, &[1, 2]).unwrap();
+        (o.bc, o.edges)
+    };
+    for i in 0..g.n() {
+        let sum = a[i] + b[i];
+        assert!((full.bc[i] - sum).abs() < 1e-3, "bc[{i}]: {} vs {}", full.bc[i], sum);
+    }
+    assert_eq!(full.edges, ea + eb);
+    // Empty batch short-circuits.
+    let empty = eng.run_brandes(&be, &[]).unwrap();
+    assert_eq!(empty.edges, 0);
+    assert!(empty.bc.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn device_service_drives_glb_dense_bc() {
+    // The end-to-end L3->PJRT path: GLB workers over threads, each
+    // draining vertex intervals by calling the device service.
+    let Some(dir) = artifact_dir() else { return };
+    let g = graph64();
+    let svc = DeviceService::start(&dir, g.dense_adjacency(), g.n()).unwrap();
+    let handle = svc.handle();
+    let n = g.n() as u32;
+    let cfg = GlbConfig::new(3, GlbParams::default().with_n(8).with_l(2));
+    let out = run_threads(
+        &cfg,
+        move |_, _| BcQueue::dense(handle.clone()),
+        |q| q.assign(0, n),
+        &VecSumReducer,
+    );
+    let (want, want_edges) = sequential_bc(&g);
+    for (i, (a, b)) in out.result.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()), "bc[{i}]: {a} vs {b}");
+    }
+    let units: u64 = out.log.per_place.iter().map(|s| s.units).sum();
+    assert_eq!(units, want_edges);
+}
+
+#[test]
+fn uts_expand_artifact_loads_and_runs() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut eng = Engine::new(&dir).unwrap();
+    let entry = eng.manifest().of_kind("uts_expand").next().unwrap().clone();
+    let b = entry.attr("b").unwrap() as usize;
+    let exe = eng.load(&entry.file).unwrap();
+    // Feed descriptor words; compare against the rust geometric law.
+    let h: Vec<u32> = (0..b as u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+    let lit = xla::Literal::vec1(&h);
+    let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap()
+        .to_tuple1()
+        .unwrap();
+    let kids = out.to_vec::<i32>().unwrap();
+    assert_eq!(kids.len(), b);
+    for (i, (&hash, &k)) in h.iter().zip(&kids).enumerate() {
+        let u = (hash & 0x7FFF_FFFF) as f64 / (1u64 << 31) as f64;
+        let want = glb::apps::uts::sha1rand::geometric_children(u, 4.0) as i32;
+        // f32 kernel vs f64 rust: floor() boundaries may differ by 1 ULP
+        // of probability; allow off-by-one per lane.
+        assert!((k - want).abs() <= 1, "lane {i}: kernel {k} vs rust {want}");
+    }
+}

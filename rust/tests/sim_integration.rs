@@ -1,0 +1,153 @@
+//! Simulator-substrate integration: determinism, calibration honesty,
+//! and the architecture-profile shapes the figures rely on.
+
+use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::harness::calibrate_uts_cost;
+use glb::sim::{run_sim, ArchProfile, CostModel, BGQ, K, POWER775};
+
+fn run_uts(
+    p: usize,
+    d: u32,
+    arch: &ArchProfile,
+    params: GlbParams,
+    cost: CostModel,
+) -> (glb::glb::RunOutput<u64>, glb::sim::SimReport) {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: d };
+    let cfg = GlbConfig::new(p, params);
+    run_sim(&cfg, arch, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)
+}
+
+#[test]
+fn bitwise_deterministic_replay() {
+    let cost = CostModel::new(150.0, 60, 32);
+    for arch in [&POWER775, &BGQ, &K] {
+        let (a, ra) = run_uts(48, 8, arch, GlbParams::default().with_n(64), cost);
+        let (b, rb) = run_uts(48, 8, arch, GlbParams::default().with_n(64), cost);
+        assert_eq!(a.elapsed_ns, b.elapsed_ns, "{}", arch.name);
+        assert_eq!(ra.events, rb.events);
+        assert_eq!(ra.messages, rb.messages);
+        assert_eq!(a.result, b.result);
+        // Per-place stats replay too.
+        for (x, y) in a.log.per_place.iter().zip(&b.log.per_place) {
+            assert_eq!(x.units, y.units);
+            assert_eq!(x.random_steals_sent, y.random_steals_sent);
+        }
+    }
+}
+
+#[test]
+fn calibrated_single_place_rate_matches_reality() {
+    // The simulator's P=1 virtual throughput must track a real
+    // single-threaded run within 2x (the cost model is best-of-k, real
+    // runs carry noise — this guards against order-of-magnitude drift).
+    let cost = calibrate_uts_cost();
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 9 };
+
+    let t0 = std::time::Instant::now();
+    let nodes = sequential_count(&up);
+    let real_rate = nodes as f64 * 1e9 / t0.elapsed().as_nanos() as f64;
+
+    let (out, _) = run_uts(1, 9, &POWER775, GlbParams::default(), cost);
+    let sim_rate = out.units_per_sec();
+    let ratio = sim_rate / real_rate;
+    assert!(
+        (0.5..2.0).contains(&ratio),
+        "sim P=1 rate {sim_rate:.3e} vs real {real_rate:.3e} (ratio {ratio:.2})"
+    );
+}
+
+#[test]
+fn speedup_is_near_linear_in_the_paper_regime() {
+    // Per-place work held constant (depth grows with p): efficiency at
+    // 64 places must stay high — the Figs 2/3 plateau.
+    let cost = CostModel::new(150.0, 60, 32);
+    let (one, _) = run_uts(1, 8, &BGQ, GlbParams::default(), cost);
+    let (sixty_four, _) = run_uts(64, 11, &BGQ, GlbParams::default(), cost);
+    let eff = sixty_four.units_per_sec() / 64.0 / one.units_per_sec();
+    assert!(eff > 0.55, "64-place efficiency too low: {eff:.3}");
+}
+
+#[test]
+fn k_interconnect_is_slower_than_power_hub() {
+    // Fig 4 vs Fig 2: K's per-hop latency + NIC occupancy make large
+    // sweeps less efficient than Power 775's all-to-all hub. Slower
+    // cores *amortize* coordination (K's real profile partially hides
+    // its interconnect), so isolate the interconnect by pinning both
+    // profiles to the same core speed.
+    // In a compute-bound regime schedule chaos (ms-scale tail luck)
+    // dwarfs the µs-scale interconnect difference, so measure in a
+    // *latency-bound* regime (2 ns/node) and average over seeds.
+    let cost = CostModel::new(2.0, 20, 32);
+    let mut pw = POWER775;
+    let mut kk = K;
+    pw.compute_scale = 1.0;
+    kk.compute_scale = 1.0;
+    let mean = |arch: &ArchProfile| -> f64 {
+        (0..5u64)
+            .map(|s| {
+                let (out, _) =
+                    run_uts(256, 10, arch, GlbParams::default().with_n(64).with_seed(s), cost);
+                out.elapsed_ns as f64
+            })
+            .sum::<f64>()
+            / 5.0
+    };
+    let (pw_ns, kk_ns) = (mean(&pw), mean(&kk));
+    assert!(
+        kk_ns > pw_ns * 1.1,
+        "latency-bound: K interconnect ({kk_ns:.0} ns) should clearly trail the P775 hub ({pw_ns:.0} ns)"
+    );
+}
+
+#[test]
+fn nic_contention_model_kicks_in() {
+    // Zeroing the NIC occupancy should help on average — sanity for the
+    // queueing model behind the Fig 4 droop. A single schedule can go
+    // either way (faster messages perturb the chaotic steal pattern), so
+    // compare means over several victim-selection seeds.
+    let cost = CostModel::new(150.0, 60, 32);
+    let mut free_nic = K;
+    free_nic.nic_msg_overhead_ns = 0;
+    free_nic.nic_bytes_per_ns = f64::INFINITY;
+    let mean_elapsed = |arch: &ArchProfile| -> f64 {
+        (0..5u64)
+            .map(|s| {
+                let (out, _) = run_uts(128, 11, arch, GlbParams::default().with_seed(s), cost);
+                out.elapsed_ns as f64
+            })
+            .sum::<f64>()
+            / 5.0
+    };
+    let with = mean_elapsed(&K);
+    let without = mean_elapsed(&free_nic);
+    assert!(
+        without <= with * 1.02,
+        "free NIC mean {without:.0} should not exceed contended mean {with:.0} by >2%"
+    );
+}
+
+#[test]
+fn compute_scale_shifts_absolute_rates() {
+    let cost = CostModel::new(150.0, 60, 32);
+    let (bgq, _) = run_uts(16, 9, &BGQ, GlbParams::default(), cost);
+    let (p7, _) = run_uts(16, 9, &POWER775, GlbParams::default(), cost);
+    assert!(
+        p7.units_per_sec() > 1.5 * bgq.units_per_sec(),
+        "P7 cores are modelled ~2.6x faster: {} vs {}",
+        p7.units_per_sec(),
+        bgq.units_per_sec()
+    );
+}
+
+#[test]
+fn virtual_time_is_invariant_to_host_load() {
+    // Two runs interleaved with host jitter must produce identical
+    // virtual timings (virtual time never reads the wall clock).
+    let cost = CostModel::new(150.0, 60, 32);
+    let (a, _) = run_uts(32, 8, &BGQ, GlbParams::default(), cost);
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    let (b, _) = run_uts(32, 8, &BGQ, GlbParams::default(), cost);
+    assert_eq!(a.elapsed_ns, b.elapsed_ns);
+}
