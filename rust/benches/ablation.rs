@@ -6,7 +6,9 @@
 //!  2. task granularity `n` sweep (the §2.6 responsiveness trade-off);
 //!  3. random-victim budget `w` sweep;
 //!  4. lifeline arity `l` (hypercube shape) sweep;
-//!  5. GLB vs naive static partitioning of UTS (§2.5.1).
+//!  5. GLB vs naive static partitioning of UTS (§2.5.1);
+//!  6. efficiency vs per-place work;
+//!  7. flat vs hierarchical topology (cross-node messages per work unit).
 //!
 //! `cargo bench --bench ablation`
 
@@ -14,21 +16,18 @@ use glb::apps::uts::{UtsParams, UtsQueue};
 use glb::baselines::legacy_uts::random_only_params;
 use glb::baselines::static_uts::run_static_uts_sim;
 use glb::glb::task_queue::SumReducer;
-use glb::glb::{GlbConfig, GlbParams};
+use glb::glb::{GlbConfig, GlbParams, RunOutput};
 use glb::harness::{calibrate_uts_cost, Table};
-use glb::sim::{run_sim, CostModel, BGQ};
+use glb::sim::{run_sim, CostModel, SimReport, BGQ};
 
-fn uts_rate(p: usize, params: GlbParams, depth: u32, cost: CostModel) -> (f64, u64) {
+fn uts_run(p: usize, params: GlbParams, depth: u32, cost: CostModel) -> (RunOutput<u64>, SimReport) {
     let up = UtsParams { b0: 4.0, seed: 19, max_depth: depth };
     let cfg = GlbConfig::new(p, params);
-    let (out, rep) = run_sim(
-        &cfg,
-        &BGQ,
-        cost,
-        |_, _| UtsQueue::new(up),
-        |q| q.init_root(),
-        &SumReducer,
-    );
+    run_sim(&cfg, &BGQ, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)
+}
+
+fn uts_rate(p: usize, params: GlbParams, depth: u32, cost: CostModel) -> (f64, u64) {
+    let (out, rep) = uts_run(p, params, depth, cost);
     (out.units_per_sec(), rep.messages)
 }
 
@@ -101,4 +100,34 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+
+    println!("\n=== Ablation 7: flat vs hierarchical topology (equal workers, BGQ 16 places/node) ===");
+    let mut t = Table::new(&[
+        "workers",
+        "wpn",
+        "nodes/s",
+        "cross msgs",
+        "cross msgs / Mnode",
+        "total msgs",
+    ]);
+    for &(workers, wpn) in
+        &[(64usize, 1usize), (64, 16), (256, 1), (256, 16), (1024, 1), (1024, 16)]
+    {
+        let params = GlbParams::default().with_n(64).with_workers_per_node(wpn);
+        let (out, rep) = uts_run(workers, params, depth, cost);
+        let per_mnode = rep.cross_messages as f64 * 1e6 / out.result as f64;
+        t.row(&[
+            workers.to_string(),
+            wpn.to_string(),
+            format!("{:.3e}", out.units_per_sec()),
+            rep.cross_messages.to_string(),
+            format!("{per_mnode:.1}"),
+            rep.messages.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(wpn=16 builds the lifeline cube over nodes and shares locally through the node bag: \
+         same tree count, far fewer NIC-charged messages per unit of work)"
+    );
 }

@@ -101,15 +101,21 @@ impl Args {
     }
 }
 
-/// Shared GLB parameter flags (`--n --w --l --z --seed --random-only`).
+/// Shared GLB parameter flags
+/// (`--n --w --l --z --seed --workers-per-node --random-only`).
 pub fn glb_params_from(args: &Args) -> Result<crate::glb::GlbParams> {
     use crate::glb::params::StealPolicy;
+    let wpn: usize = args.parse_opt("workers-per-node", 1usize)?;
+    if wpn == 0 {
+        bail!("--workers-per-node must be >= 1 (1 = flat topology)");
+    }
     let mut p = crate::glb::GlbParams::default()
         .with_n(args.parse_opt("n", 511usize)?)
         .with_w(args.parse_opt("w", 1usize)?)
         .with_l(args.parse_opt("l", 32usize)?)
         .with_z(args.parse_opt("z", 0usize)?)
-        .with_seed(args.parse_opt("seed", 0x51F3_11FEu64)?);
+        .with_seed(args.parse_opt("seed", 0x51F3_11FEu64)?)
+        .with_workers_per_node(wpn);
     if args.flag("random-only") {
         p = p.with_policy(StealPolicy::RandomOnly { rounds: args.parse_opt("rounds", 2usize)? });
     }
@@ -135,8 +141,12 @@ COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)
   --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
   --n --w --l --z        GLB tuning parameters (paper §2.4)
+  --workers-per-node K   hierarchical topology: K workers share a node bag
+                         and one representative runs the lifelines over
+                         nodes (default 1 = the paper's flat layout)
   --random-only          ablation: random-victim stealing, no lifelines
-  --log                  print the per-worker accounting table (§2.4)
+  --log                  print the per-worker accounting table (§2.4),
+                         plus the per-node rollup when K > 1
   --csv                  machine-readable figure output
 ";
 
@@ -197,5 +207,15 @@ mod tests {
         assert_eq!(p.n, 64);
         assert_eq!(p.w, 3);
         assert_eq!(p.random_budget(), 6);
+        assert_eq!(p.workers_per_node, 1, "flat unless asked otherwise");
+    }
+
+    #[test]
+    fn workers_per_node_flag() {
+        let a = Args::parse(&s(&["--workers-per-node", "16"]), &[]).unwrap();
+        assert_eq!(glb_params_from(&a).unwrap().workers_per_node, 16);
+        let zero = Args::parse(&s(&["--workers-per-node", "0"]), &[]).unwrap();
+        let err = glb_params_from(&zero).unwrap_err();
+        assert!(format!("{err}").contains("workers-per-node"), "{err}");
     }
 }

@@ -47,6 +47,20 @@ pub struct WorkerStats {
     /// Loot messages (bags) sent/received.
     pub loot_bags_sent: u64,
     pub loot_bags_received: u64,
+
+    /// Hierarchical topology ([`crate::glb::topology`]) counters — all
+    /// zero under the flat layout.
+    ///
+    /// Shards parked in the shared node bag.
+    pub node_donations: u64,
+    /// Shards taken from the node bag (including shards a dry
+    /// representative forwarded to remote thieves).
+    pub node_takes: u64,
+    /// Direct intra-node wake-up pushes sent to hungry local peers
+    /// (also counted in `loot_bags_sent`).
+    pub node_loot_sent: u64,
+    /// Intra-node wake-up pushes received (also in `loot_bags_received`).
+    pub node_loot_received: u64,
 }
 
 impl WorkerStats {
@@ -75,6 +89,10 @@ impl WorkerStats {
         self.loot_items_received += o.loot_items_received;
         self.loot_bags_sent += o.loot_bags_sent;
         self.loot_bags_received += o.loot_bags_received;
+        self.node_donations += o.node_donations;
+        self.node_takes += o.node_takes;
+        self.node_loot_sent += o.node_loot_sent;
+        self.node_loot_received += o.node_loot_received;
     }
 
     /// One row of the `--log` table.
@@ -111,15 +129,26 @@ impl WorkerStats {
     }
 }
 
-/// Aggregate view over all places, printed by `glb ... --log`.
+/// Aggregate view over all places, printed by `glb ... --log`. With a
+/// hierarchical topology the log also rolls the per-worker rows up into
+/// per-node rows (the two-level view: intra-node sharing vs inter-node
+/// stealing).
 #[derive(Debug, Clone, Default)]
 pub struct RunLog {
     pub per_place: Vec<WorkerStats>,
+    /// Workers per node of the run that produced this log (`1` = flat;
+    /// `0` only via `Default` and treated as flat).
+    pub workers_per_node: usize,
 }
 
 impl RunLog {
     pub fn new(per_place: Vec<WorkerStats>) -> Self {
-        Self { per_place }
+        Self { per_place, workers_per_node: 1 }
+    }
+
+    /// [`RunLog::new`] tagged with the run's hierarchical topology.
+    pub fn with_topology(per_place: Vec<WorkerStats>, workers_per_node: usize) -> Self {
+        Self { per_place, workers_per_node: workers_per_node.max(1) }
     }
 
     pub fn total(&self) -> WorkerStats {
@@ -128,6 +157,23 @@ impl RunLog {
             t.merge(s);
         }
         t
+    }
+
+    /// Per-node rollup: consecutive chunks of `workers_per_node` workers
+    /// merged into one row each (the last node may be ragged). Under the
+    /// flat layout this is just `per_place`.
+    pub fn per_node(&self) -> Vec<WorkerStats> {
+        let wpn = self.workers_per_node.max(1);
+        self.per_place
+            .chunks(wpn)
+            .map(|workers| {
+                let mut t = WorkerStats::default();
+                for s in workers {
+                    t.merge(s);
+                }
+                t
+            })
+            .collect()
     }
 
     /// Per-place busy times in seconds (workload-distribution figures).
@@ -152,6 +198,22 @@ impl RunLog {
             t.loot_bags_sent,
             t.loot_bags_received,
         ));
+        if self.workers_per_node > 1 {
+            out.push_str(&format!(
+                "-- per-node rollup (workers_per_node={}; \"place\" column = node id) --\n",
+                self.workers_per_node
+            ));
+            out.push_str(&WorkerStats::header());
+            out.push('\n');
+            for (node, s) in self.per_node().iter().enumerate() {
+                out.push_str(&s.row(node));
+                out.push('\n');
+            }
+            out.push_str(&format!(
+                "node-bag  donations={} takes={} local pushes={}/{}\n",
+                t.node_donations, t.node_takes, t.node_loot_sent, t.node_loot_received,
+            ));
+        }
         out
     }
 }
@@ -185,5 +247,36 @@ mod tests {
         let text = log.render();
         assert!(text.contains("items=11"), "{text}");
         assert_eq!(log.busy_secs().len(), 2);
+    }
+
+    #[test]
+    fn per_node_rollup_merges_worker_chunks() {
+        let stats = |items| WorkerStats { items_processed: items, ..Default::default() };
+        let log = RunLog::with_topology(vec![stats(1), stats(2), stats(4), stats(8), stats(16)], 2);
+        let nodes = log.per_node();
+        assert_eq!(nodes.len(), 3, "5 workers at 2/node = 3 nodes (last ragged)");
+        assert_eq!(nodes[0].items_processed, 3);
+        assert_eq!(nodes[1].items_processed, 12);
+        assert_eq!(nodes[2].items_processed, 16);
+        let text = log.render();
+        assert!(text.contains("per-node rollup"), "{text}");
+    }
+
+    #[test]
+    fn flat_log_has_no_rollup_section() {
+        let log = RunLog::new(vec![WorkerStats::default()]);
+        assert!(!log.render().contains("per-node rollup"));
+        assert_eq!(log.per_node().len(), 1);
+    }
+
+    #[test]
+    fn merge_includes_node_counters() {
+        let mut a = WorkerStats { node_donations: 1, node_takes: 2, ..Default::default() };
+        let b = WorkerStats { node_donations: 3, node_loot_sent: 5, node_loot_received: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.node_donations, 4);
+        assert_eq!(a.node_takes, 2);
+        assert_eq!(a.node_loot_sent, 5);
+        assert_eq!(a.node_loot_received, 7);
     }
 }

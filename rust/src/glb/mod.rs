@@ -25,6 +25,37 @@
 //! );
 //! assert_eq!(out.result, 6765);
 //! ```
+//!
+//! ## Hierarchical topology
+//!
+//! By default every worker is a flat place running the full lifeline
+//! protocol, exactly as in the paper. Setting
+//! [`GlbParams::with_workers_per_node`] (CLI: `--workers-per-node`)
+//! groups workers into nodes ([`topology`]): within a node work moves
+//! through a shared-memory [`NodeBag`] (message-free donate/take plus
+//! direct wake-up pushes), and only each node's representative runs the
+//! lifeline protocol, with the hypercube built over node ids — so
+//! cross-node traffic scales with the node count, not the worker count.
+//! The reduced result is identical either way; only *who moves work*
+//! changes:
+//!
+//! ```no_run
+//! use glb::glb::{GlbConfig, GlbParams, SumReducer};
+//! use glb::apps::fib::FibQueue;
+//!
+//! // 8 workers on 2 nodes: reps 0 and 4 steal across nodes, everyone
+//! // shares locally through the node bag.
+//! let params = GlbParams::default().with_n(64).with_workers_per_node(4);
+//! let cfg = GlbConfig::new(8, params);
+//! let out = glb::place::run_threads(
+//!     &cfg,
+//!     |_, _| FibQueue::new(),
+//!     |q: &mut FibQueue| q.init(20),
+//!     &SumReducer,
+//! );
+//! assert_eq!(out.result, 6765); // same reduction as the flat run
+//! println!("{}", out.log.render()); // includes the per-node rollup
+//! ```
 
 pub mod autotune;
 pub mod lifeline;
@@ -34,6 +65,7 @@ pub mod params;
 pub mod task_bag;
 pub mod task_queue;
 pub mod termination;
+pub mod topology;
 pub mod worker;
 
 pub use autotune::{autotune, WorkloadProfile};
@@ -44,6 +76,7 @@ pub use params::GlbParams;
 pub use task_bag::{ArrayListTaskBag, TaskBag};
 pub use task_queue::{FnReducer, ProcessOutcome, Reducer, SumReducer, TaskQueue, VecSumReducer};
 pub use termination::{AtomicLedger, Ledger, SimLedger};
+pub use topology::{NodeBag, Topology};
 pub use worker::{Phase, StepOutcome, Worker};
 
 /// A GLB run configuration: place count + tuning parameters.
@@ -60,6 +93,12 @@ impl GlbConfig {
         assert!(p >= 1, "need at least one place");
         params.validate().expect("invalid GLB parameters");
         Self { p, params }
+    }
+
+    /// The hierarchical topology of this run (flat when
+    /// `params.workers_per_node == 1`).
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.p, self.params.workers_per_node)
     }
 }
 

@@ -49,6 +49,13 @@ pub struct GlbParams {
     pub steal_threshold: usize,
     /// Steal policy (lifeline vs random-only ablation).
     pub policy: StealPolicy,
+    /// Hierarchical topology: how many workers share a node
+    /// (see [`crate::glb::topology`]). `1` (the default) is the paper's
+    /// flat layout — every place runs the full lifeline protocol. With
+    /// `> 1`, workers on a node share work through a shared-memory node
+    /// bag and only each node's representative runs the lifeline
+    /// protocol, with the hypercube built over *nodes*.
+    pub workers_per_node: usize,
 }
 
 impl Default for GlbParams {
@@ -61,6 +68,7 @@ impl Default for GlbParams {
             seed: 0x51F3_11FE,
             steal_threshold: 2,
             policy: StealPolicy::Lifeline,
+            workers_per_node: 1,
         }
     }
 }
@@ -100,6 +108,10 @@ impl GlbParams {
         self.policy = policy;
         self
     }
+    pub fn with_workers_per_node(mut self, workers_per_node: usize) -> Self {
+        self.workers_per_node = workers_per_node.max(1);
+        self
+    }
 
     /// Total random-steal attempts per starvation episode under the
     /// configured policy.
@@ -117,6 +129,9 @@ impl GlbParams {
         }
         if self.l < 2 {
             return Err("lifeline arity l must be >= 2".into());
+        }
+        if self.workers_per_node == 0 {
+            return Err("workers_per_node must be >= 1 (1 = flat topology)".into());
         }
         Ok(())
     }
@@ -145,6 +160,7 @@ mod tests {
         assert_eq!(p.w, 1);
         assert_eq!(p.l, 32);
         assert_eq!(p.z, 0);
+        assert_eq!(p.workers_per_node, 1, "flat topology by default");
     }
 
     #[test]
@@ -172,11 +188,15 @@ mod tests {
         assert!(GlbParams::default().validate().is_ok());
         assert!(GlbParams { n: 0, ..Default::default() }.validate().is_err());
         assert!(GlbParams { l: 1, ..Default::default() }.validate().is_err());
+        assert!(GlbParams { workers_per_node: 0, ..Default::default() }.validate().is_err());
+        assert!(GlbParams::default().with_workers_per_node(8).validate().is_ok());
     }
 
     #[test]
     fn builders_clamp() {
         assert_eq!(GlbParams::default().with_n(0).n, 1);
         assert_eq!(GlbParams::default().with_l(0).l, 2);
+        assert_eq!(GlbParams::default().with_workers_per_node(0).workers_per_node, 1);
+        assert_eq!(GlbParams::default().with_workers_per_node(16).workers_per_node, 16);
     }
 }

@@ -1,0 +1,315 @@
+//! The hierarchical topology layer: multi-worker nodes with two-level
+//! load balancing.
+//!
+//! The paper treats every core as a flat place, but its own §2.6/Fig 4
+//! discussion (and the simulator's NIC-occupancy model in
+//! [`crate::sim::arch`]) shows that inter-node messaging is the
+//! bottleneck once many places share a node. This module introduces an
+//! explicit node layer:
+//!
+//! * [`Topology`] maps the `P` workers onto `ceil(P / workers_per_node)`
+//!   nodes (the last node may be ragged). Worker `node * W` is the node's
+//!   **representative**.
+//! * Within a node, workers share work through a [`NodeBag`] — a
+//!   lock-light shared-memory exchange with local *donate*/*take* (no
+//!   messages, no per-item ledger traffic: a parked shard carries one
+//!   work token exactly like a loot message in flight).
+//! * Across nodes, only each node's representative runs the lifeline
+//!   protocol, and the lifeline hypercube is built over **node ids**, so
+//!   cross-node traffic scales with the node count instead of the worker
+//!   count.
+//!
+//! `workers_per_node = 1` (the default) is the paper's flat layout: every
+//! worker is its own node's representative, the [`NodeBag`] is never
+//! touched, and the protocol is bit-for-bit the original one.
+//!
+//! Starvation under `workers_per_node > 1` resolves in this order:
+//!
+//! 1. take a parked shard from the node bag (shared memory, message-free);
+//! 2. representatives only: `w` random steals against other nodes'
+//!    representatives, then the node-level lifelines;
+//! 3. register as *hungry* in the node bag and go idle — the next local
+//!    worker with surplus wakes the sleeper with a direct intra-node loot
+//!    push (cheap: same-node messages skip the simulated NIC entirely).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use super::message::PlaceId;
+
+/// Mapping of workers (places) onto nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    p: usize,
+    wpn: usize,
+}
+
+impl Topology {
+    /// `p` workers grouped `workers_per_node` per node (clamped to ≥ 1).
+    pub fn new(p: usize, workers_per_node: usize) -> Self {
+        assert!(p >= 1, "need at least one worker");
+        Self { p, wpn: workers_per_node.max(1) }
+    }
+
+    /// Total workers (places).
+    pub fn places(&self) -> usize {
+        self.p
+    }
+
+    /// Workers per node (the last node may hold fewer).
+    pub fn workers_per_node(&self) -> usize {
+        self.wpn
+    }
+
+    /// Flat layout? (every worker is its own node)
+    pub fn is_flat(&self) -> bool {
+        self.wpn == 1
+    }
+
+    /// Number of nodes.
+    pub fn nodes(&self) -> usize {
+        self.p.div_ceil(self.wpn)
+    }
+
+    /// Node id of a worker.
+    #[inline]
+    pub fn node_of(&self, worker: PlaceId) -> usize {
+        worker / self.wpn
+    }
+
+    /// The representative worker of a node (its first worker): the one
+    /// worker on the node that runs the inter-node lifeline protocol.
+    #[inline]
+    pub fn representative(&self, node: usize) -> PlaceId {
+        node * self.wpn
+    }
+
+    /// Whether `worker` is its node's representative.
+    #[inline]
+    pub fn is_representative(&self, worker: PlaceId) -> bool {
+        worker % self.wpn == 0
+    }
+
+    /// Number of workers on `node` (ragged last node aware).
+    pub fn node_size(&self, node: usize) -> usize {
+        let lo = node * self.wpn;
+        debug_assert!(lo < self.p, "node {node} out of range");
+        (self.p - lo).min(self.wpn)
+    }
+
+    /// The workers of `node`, as a place-id range.
+    pub fn workers_of(&self, node: usize) -> std::ops::Range<PlaceId> {
+        let lo = node * self.wpn;
+        lo..(lo + self.wpn).min(self.p)
+    }
+
+    /// Do two workers share a node?
+    #[inline]
+    pub fn same_node(&self, a: PlaceId, b: PlaceId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// Allocate one shared [`NodeBag`] per node for the runtimes to hand
+    /// to their workers ([`None`] under the flat layout, which never
+    /// touches a bag). Index the result with [`Topology::node_of`].
+    pub fn make_node_bags<B>(&self) -> Option<Vec<Arc<NodeBag<B>>>> {
+        if self.is_flat() {
+            None
+        } else {
+            Some((0..self.nodes()).map(|_| Arc::new(NodeBag::new())).collect())
+        }
+    }
+}
+
+struct NodeBagInner<B> {
+    /// Parked work shards. Each shard holds one work token (the donor
+    /// increments the ledger before parking; the taker balances it),
+    /// exactly like a loot message in flight — which keeps the global
+    /// termination invariant intact with zero extra coordination.
+    shards: Vec<B>,
+    /// Local workers that starved with nothing to take: the next donor
+    /// wakes them with a direct intra-node loot push.
+    hungry: VecDeque<PlaceId>,
+}
+
+/// The per-node shared-memory work exchange. One instance is shared (via
+/// `Arc`) by all workers of a node; a single short-critical-section mutex
+/// guards it — contention is bounded by the node size, never by the
+/// global worker count, and no operation allocates while holding it.
+pub struct NodeBag<B> {
+    inner: Mutex<NodeBagInner<B>>,
+}
+
+impl<B> Default for NodeBag<B> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<B> NodeBag<B> {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(NodeBagInner { shards: Vec::new(), hungry: VecDeque::new() }) }
+    }
+
+    /// Park a work shard for local takers. The caller must have acquired
+    /// the shard's work token (ledger increment) *before* donating.
+    pub fn donate(&self, bag: B) {
+        self.inner.lock().unwrap().shards.push(bag);
+    }
+
+    /// Take one parked shard, if any. The caller must settle the shard's
+    /// work token (destroy it while holding its own, or adopt it).
+    pub fn take(&self) -> Option<B> {
+        self.inner.lock().unwrap().shards.pop()
+    }
+
+    /// Number of parked shards.
+    pub fn shards(&self) -> usize {
+        self.inner.lock().unwrap().shards.len()
+    }
+
+    /// Record a starved local worker awaiting a wake-up push (idempotent).
+    pub fn register_hungry(&self, worker: PlaceId) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.hungry.contains(&worker) {
+            g.hungry.push_back(worker);
+        }
+    }
+
+    /// Pop the longest-waiting hungry worker other than `not` (a donor
+    /// cannot push to itself; a stale self-entry is simply discarded —
+    /// the caller is demonstrably not hungry).
+    pub fn pop_hungry(&self, not: PlaceId) -> Option<PlaceId> {
+        let mut g = self.inner.lock().unwrap();
+        while let Some(w) = g.hungry.pop_front() {
+            if w != not {
+                return Some(w);
+            }
+        }
+        None
+    }
+
+    /// Put a popped-but-unfed worker back at the front of the queue.
+    pub fn unpop_hungry(&self, worker: PlaceId) {
+        let mut g = self.inner.lock().unwrap();
+        if !g.hungry.contains(&worker) {
+            g.hungry.push_front(worker);
+        }
+    }
+
+    /// Number of registered hungry workers.
+    pub fn hungry(&self) -> usize {
+        self.inner.lock().unwrap().hungry.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_topology_is_identity() {
+        let t = Topology::new(5, 1);
+        assert!(t.is_flat());
+        assert_eq!(t.nodes(), 5);
+        for w in 0..5 {
+            assert_eq!(t.node_of(w), w);
+            assert_eq!(t.representative(w), w);
+            assert!(t.is_representative(w));
+            assert_eq!(t.node_size(w), 1);
+        }
+        assert!(!t.same_node(0, 4));
+    }
+
+    #[test]
+    fn grouped_topology_maps_nodes() {
+        let t = Topology::new(8, 4);
+        assert_eq!(t.nodes(), 2);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.representative(1), 4);
+        assert!(t.is_representative(4));
+        assert!(!t.is_representative(5));
+        assert_eq!(t.workers_of(1), 4..8);
+        assert!(t.same_node(5, 7));
+        assert!(!t.same_node(3, 4));
+    }
+
+    #[test]
+    fn ragged_last_node() {
+        let t = Topology::new(10, 4);
+        assert_eq!(t.nodes(), 3);
+        assert_eq!(t.node_size(0), 4);
+        assert_eq!(t.node_size(2), 2);
+        assert_eq!(t.workers_of(2), 8..10);
+        assert_eq!(t.node_of(9), 2);
+    }
+
+    #[test]
+    fn oversized_wpn_collapses_to_one_node() {
+        let t = Topology::new(3, 16);
+        assert_eq!(t.nodes(), 1);
+        assert_eq!(t.node_size(0), 3);
+        assert!(t.same_node(0, 2));
+    }
+
+    #[test]
+    fn node_bag_parks_and_takes_lifo() {
+        let nb: NodeBag<Vec<u8>> = NodeBag::new();
+        assert!(nb.take().is_none());
+        nb.donate(vec![1]);
+        nb.donate(vec![2]);
+        assert_eq!(nb.shards(), 2);
+        assert_eq!(nb.take(), Some(vec![2]));
+        assert_eq!(nb.take(), Some(vec![1]));
+        assert!(nb.take().is_none());
+    }
+
+    #[test]
+    fn hungry_queue_dedups_and_skips_self() {
+        let nb: NodeBag<Vec<u8>> = NodeBag::new();
+        nb.register_hungry(3);
+        nb.register_hungry(3);
+        nb.register_hungry(1);
+        assert_eq!(nb.hungry(), 2);
+        // Worker 3's own stale entry is dropped when it donates.
+        assert_eq!(nb.pop_hungry(3), Some(1));
+        assert_eq!(nb.hungry(), 0);
+        assert_eq!(nb.pop_hungry(0), None);
+    }
+
+    #[test]
+    fn unpop_restores_front_position() {
+        let nb: NodeBag<Vec<u8>> = NodeBag::new();
+        nb.register_hungry(1);
+        nb.register_hungry(2);
+        let w = nb.pop_hungry(0).unwrap();
+        assert_eq!(w, 1);
+        nb.unpop_hungry(w);
+        assert_eq!(nb.pop_hungry(0), Some(1), "unpopped worker keeps its place in line");
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let nb: Arc<NodeBag<Vec<u32>>> = Arc::new(NodeBag::new());
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let nb = nb.clone();
+                std::thread::spawn(move || {
+                    for k in 0..100u32 {
+                        nb.donate(vec![i * 1000 + k]);
+                        let _ = nb.take();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Every donate was matched by a take attempt; at most the races'
+        // leftovers remain, and nothing was lost or duplicated.
+        assert!(nb.shards() <= 400);
+    }
+}

@@ -1,4 +1,5 @@
-//! The GLB worker protocol engine (paper §2.4).
+//! The GLB worker protocol engine (paper §2.4), extended with the
+//! hierarchical topology layer ([`crate::glb::topology`]).
 //!
 //! A [`Worker`] is a pure state machine: it never blocks, sleeps, or sends
 //! anything itself — it emits [`Effect`]s for its runtime to carry out.
@@ -21,6 +22,19 @@
 //!   distribute to recorded                                 │
 //!   lifeline thieves                                      Done
 //! ```
+//!
+//! With `workers_per_node > 1` the steal path is two-level. On
+//! starvation a worker first *takes* a parked shard from its node's
+//! shared-memory [`NodeBag`] (no messages); only the node's
+//! representative then escalates to the original protocol above, run
+//! over **node ids** (random victims and lifeline buddies are other
+//! nodes' representatives). Non-representatives instead register as
+//! *hungry* and idle until a local donor wakes them with a direct
+//! intra-node loot push. With `workers_per_node = 1` (default) every
+//! branch of the hierarchical path is dead and the engine is exactly the
+//! paper's flat protocol.
+
+use std::sync::Arc;
 
 use super::lifeline::{LifelineGraph, VictimSelector};
 use super::logger::WorkerStats;
@@ -29,6 +43,7 @@ use super::params::GlbParams;
 use super::task_bag::TaskBag;
 use super::task_queue::TaskQueue;
 use super::termination::Ledger;
+use super::topology::{NodeBag, Topology};
 
 /// What the worker is doing between runtime invocations.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,8 +55,9 @@ pub enum Phase {
     WaitRandom { attempt: usize, victim: PlaceId },
     /// Awaiting a response to a lifeline steal from `outgoing[idx]`.
     WaitLifeline { idx: usize },
-    /// Out of work, token released, registered on all lifelines; waiting
-    /// for a lifeline push or `Terminate`.
+    /// Out of work, token released, registered on all lifelines (and, on
+    /// a shared node, in the node bag's hungry queue); waiting for a
+    /// lifeline/local push or `Terminate`.
     Idle,
     /// Finished (observed or was told about global quiescence).
     Done,
@@ -67,11 +83,13 @@ pub struct Worker<Q: TaskQueue, L: Ledger> {
     phase: Phase,
     /// Whether this worker currently holds a work token.
     active: bool,
-    /// Outgoing lifelines (buddies we steal from).
+    /// Outgoing lifelines (representatives of the node-level buddies we
+    /// steal from; empty for non-representatives).
     outgoing: Vec<PlaceId>,
     /// Incoming lifeline thieves that we refused and must feed later.
     /// Small (≤ z of the inverse graph), so a Vec beats a HashSet.
     recorded_thieves: Vec<PlaceId>,
+    /// Random victim selection over *node ids* (flat: node id = place id).
     victims: VictimSelector,
     ledger: L,
     stats: WorkerStats,
@@ -81,16 +99,59 @@ pub struct Worker<Q: TaskQueue, L: Ledger> {
     next_nonce: u64,
     /// Nonce of the in-flight request (`WaitRandom`/`WaitLifeline` only).
     outstanding: Option<u64>,
+    /// Hierarchical topology (flat when `workers_per_node == 1`).
+    topo: Topology,
+    /// Cached topology facts for this worker.
+    node: usize,
+    nodes: usize,
+    node_size: usize,
+    is_rep: bool,
+    /// The node's shared work exchange; `None` under the flat layout.
+    node_bag: Option<Arc<NodeBag<Q::Bag>>>,
 }
 
 impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
-    /// Create the worker for `id` of `p` places. **Must** be called for
-    /// every place before any worker is driven: construction acquires the
-    /// initial work token for non-empty queues, and the termination
-    /// invariant needs all initial tokens counted before the first steal.
+    /// Create the worker for `id` of `p` places with no shared node bag
+    /// (the flat layout, or a degraded hierarchical one — see
+    /// [`Worker::with_node_bag`]). **Must** be called for every place
+    /// before any worker is driven: construction acquires the initial
+    /// work token for non-empty queues, and the termination invariant
+    /// needs all initial tokens counted before the first steal.
     pub fn new(id: PlaceId, p: usize, params: GlbParams, queue: Q, ledger: L) -> Self {
-        let z = params.resolve_z(p);
-        let outgoing = if p > 1 { LifelineGraph::new(id, p, params.l, z).outgoing } else { Vec::new() };
+        Self::with_node_bag(id, p, params, queue, ledger, None)
+    }
+
+    /// [`Worker::new`] with the node's shared [`NodeBag`]. Runtimes pass
+    /// the same `Arc` to every worker of a node when
+    /// `params.workers_per_node > 1`; without it the worker still builds
+    /// its lifelines over nodes but cannot share work locally.
+    pub fn with_node_bag(
+        id: PlaceId,
+        p: usize,
+        params: GlbParams,
+        queue: Q,
+        ledger: L,
+        node_bag: Option<Arc<NodeBag<Q::Bag>>>,
+    ) -> Self {
+        let topo = Topology::new(p, params.workers_per_node);
+        let nodes = topo.nodes();
+        let node = topo.node_of(id);
+        let node_size = topo.node_size(node);
+        let is_rep = topo.is_representative(id);
+        let z = params.resolve_z(nodes);
+        // The lifeline hypercube spans *nodes*; only representatives own
+        // outgoing lifelines, pointed at the buddy nodes' representatives.
+        // Flat layout: node id = place id, representative = identity — the
+        // exact original graph.
+        let outgoing: Vec<PlaceId> = if is_rep && nodes > 1 {
+            LifelineGraph::new(node, nodes, params.l, z)
+                .outgoing
+                .iter()
+                .map(|&buddy| topo.representative(buddy))
+                .collect()
+        } else {
+            Vec::new()
+        };
         let active = queue.bag_size() > 0;
         if active {
             ledger.incr();
@@ -113,12 +174,18 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
             active,
             outgoing,
             recorded_thieves: Vec::new(),
-            victims: VictimSelector::new(id, p, params.seed),
+            victims: VictimSelector::new(node, nodes, params.seed),
             ledger,
             stats: WorkerStats::default(),
             observed_quiescence: false,
             next_nonce: 0,
             outstanding: None,
+            topo,
+            node,
+            nodes,
+            node_size,
+            is_rep,
+            node_bag,
         }
     }
 
@@ -128,6 +195,18 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
     /// Total number of places in this run.
     pub fn places(&self) -> usize {
         self.p
+    }
+    /// This worker's node id.
+    pub fn node(&self) -> usize {
+        self.node
+    }
+    /// Whether this worker runs the inter-node lifeline protocol.
+    pub fn is_representative(&self) -> bool {
+        self.is_rep
+    }
+    /// Outgoing lifelines (empty for non-representatives).
+    pub fn lifelines(&self) -> &[PlaceId] {
+        &self.outgoing
     }
     pub fn phase(&self) -> Phase {
         self.phase
@@ -147,6 +226,13 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
     /// Did *this* worker observe the count hit zero? (exactly one does)
     pub fn observed_quiescence(&self) -> bool {
         self.observed_quiescence
+    }
+
+    /// Whether this worker shares a node bag with local peers (always
+    /// false under the flat layout, so every hierarchical branch is dead
+    /// there).
+    fn node_shared(&self) -> bool {
+        self.node_bag.is_some() && self.node_size > 1
     }
 
     /// Start the steal protocol for workers that begin with an empty bag
@@ -239,13 +325,30 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                 self.send_loot(thief, bag, lifeline, Some(nonce), effects);
             }
             None => {
-                if lifeline && !self.recorded_thieves.contains(&thief) {
-                    self.recorded_thieves.push(thief);
+                // A representative whose own queue is dry may still hold
+                // node-level surplus: forward a parked shard so remote
+                // thieves see the node's aggregate work.
+                let shard = match &self.node_bag {
+                    Some(nb) if self.node_size > 1 => nb.take(),
+                    _ => None,
+                };
+                if let Some(bag) = shard {
+                    self.stats.node_takes += 1;
+                    // Token choreography: the loot token (send_loot's
+                    // increment) must exist before the shard token dies,
+                    // or an idle victim could transiently zero the ledger.
+                    self.send_loot(thief, bag, lifeline, Some(nonce), effects);
+                    let zero = self.ledger.decr();
+                    debug_assert!(!zero, "the loot token was just acquired");
+                } else {
+                    if lifeline && !self.recorded_thieves.contains(&thief) {
+                        self.recorded_thieves.push(thief);
+                    }
+                    effects.push(Effect::Send {
+                        to: thief,
+                        msg: Msg::Loot { victim: self.id, bag: None, lifeline, nonce: Some(nonce) },
+                    });
                 }
-                effects.push(Effect::Send {
-                    to: thief,
-                    msg: Msg::Loot { victim: self.id, bag: None, lifeline, nonce: Some(nonce) },
-                });
             }
         }
     }
@@ -269,8 +372,9 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         });
     }
 
-    /// Push loot to recorded lifeline thieves (called with surplus work).
-    /// Pushes carry `nonce: None` — they answer no request.
+    /// Push loot to recorded lifeline thieves and hungry local peers, and
+    /// keep the node bag primed (called with surplus work). Pushes carry
+    /// `nonce: None` — they answer no request.
     fn distribute(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
         while !self.recorded_thieves.is_empty()
             && self.queue.bag_size() >= self.params.steal_threshold
@@ -283,6 +387,49 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                 None => break,
             }
         }
+        if !self.node_shared() {
+            return;
+        }
+        // Wake hungry local peers with direct intra-node pushes (cheap:
+        // same-node messages never touch the NIC).
+        while self.queue.bag_size() >= self.params.steal_threshold {
+            let peer = match &self.node_bag {
+                Some(nb) => nb.pop_hungry(self.id),
+                None => None,
+            };
+            let Some(peer) = peer else { break };
+            match self.queue.split() {
+                Some(bag) => {
+                    self.stats.node_loot_sent += 1;
+                    self.send_loot(peer, bag, false, None, effects);
+                }
+                None => {
+                    // The queue would not split after all: the peer is
+                    // still hungry.
+                    if let Some(nb) = &self.node_bag {
+                        nb.unpop_hungry(peer);
+                    }
+                    break;
+                }
+            }
+        }
+        // Keep one shard parked so the next local starvation resolves in
+        // shared memory, without any message at all.
+        let parked = match &self.node_bag {
+            Some(nb) => nb.shards(),
+            None => 0,
+        };
+        if parked == 0 && self.queue.bag_size() >= 2 * self.params.steal_threshold.max(1) {
+            if let Some(bag) = self.queue.split() {
+                // The parked shard holds one work token, exactly like a
+                // loot message in flight.
+                self.ledger.incr();
+                self.stats.node_donations += 1;
+                if let Some(nb) = &self.node_bag {
+                    nb.donate(bag);
+                }
+            }
+        }
     }
 
     /// Bag ran dry: enter the steal protocol (or quiesce on 1 place).
@@ -293,7 +440,14 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
     }
 
     fn start_stealing(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
-        if self.p == 1 {
+        // Level 1: the shared-memory node bag (message-free).
+        if self.take_from_node_bag() {
+            return;
+        }
+        // Level 2: the inter-node protocol — representatives only. A
+        // non-representative instead parks itself as hungry (inside
+        // `release_token`) and waits for a local wake-up push.
+        if !self.is_rep || self.nodes == 1 {
             self.release_token(effects);
             return;
         }
@@ -302,15 +456,38 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         }
     }
 
+    /// Try to resolve a starvation locally: merge one shard parked in the
+    /// shared node bag. The shard's work token dies against the one we
+    /// hold — the same accounting as loot reaching an active thief.
+    fn take_from_node_bag(&mut self) -> bool {
+        if !self.node_shared() {
+            return false;
+        }
+        let shard = match &self.node_bag {
+            Some(nb) => nb.take(),
+            None => None,
+        };
+        let Some(bag) = shard else { return false };
+        debug_assert!(self.active, "taking requires holding our own token");
+        self.stats.node_takes += 1;
+        self.queue.merge(bag);
+        let zero = self.ledger.decr();
+        debug_assert!(!zero, "count cannot reach zero while a worker holds a token");
+        self.phase = Phase::Working;
+        true
+    }
+
     /// Send random-steal attempt `attempt` if budget remains (under
-    /// `RandomOnly` the budget is `w × rounds`). Returns whether a request
-    /// was sent (phase updated).
+    /// `RandomOnly` the budget is `w × rounds`). Victims are *nodes*; the
+    /// request goes to the victim node's representative. Returns whether
+    /// a request was sent (phase updated).
     fn try_random_steal(&mut self, attempt: usize, effects: &mut Vec<Effect<Q::Bag>>) -> bool {
         if attempt >= self.params.random_budget() {
             return false;
         }
         match self.victims.pick() {
-            Some(victim) => {
+            Some(victim_node) => {
+                let victim = self.topo.representative(victim_node);
                 self.stats.random_steals_sent += 1;
                 self.phase = Phase::WaitRandom { attempt, victim };
                 let nonce = self.fresh_nonce();
@@ -354,6 +531,14 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
 
     fn release_token(&mut self, effects: &mut Vec<Effect<Q::Bag>>) {
         debug_assert!(self.active);
+        if self.node_shared() {
+            // Local peers with surplus revive us via a direct push;
+            // remote revival (representatives only) goes through the
+            // lifelines registered above.
+            if let Some(nb) = &self.node_bag {
+                nb.register_hungry(self.id);
+            }
+        }
         self.active = false;
         self.phase = Phase::Idle;
         if self.ledger.decr() {
@@ -372,7 +557,7 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         effects: &mut Vec<Effect<Q::Bag>>,
     ) {
         // Is this the response to our in-flight request? Unsolicited
-        // lifeline pushes carry `nonce: None` and never match.
+        // lifeline/local pushes carry `nonce: None` and never match.
         let awaited = nonce.is_some() && nonce == self.outstanding;
         if awaited {
             self.outstanding = None;
@@ -382,14 +567,18 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                 self.id
             );
         }
-        let _ = victim;
 
         match bag {
             Some(bag) => {
                 let items = bag.size() as u64;
                 self.stats.loot_items_received += items;
                 self.stats.loot_bags_received += 1;
-                if lifeline {
+                if self.topo.same_node(victim, self.id) {
+                    // An intra-node wake-up push from a local donor
+                    // (never solicited: steal requests only cross nodes).
+                    debug_assert!(!awaited);
+                    self.stats.node_loot_received += 1;
+                } else if lifeline {
                     self.stats.lifeline_steals_perpetrated += 1;
                 } else {
                     self.stats.random_steals_perpetrated += 1;
@@ -420,6 +609,7 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                     debug_assert!(awaited, "place {}: refusal with stale nonce {nonce:?}", self.id);
                     return;
                 }
+                let _ = victim;
                 if self.queue.bag_size() > 0 {
                     // Reactivated by an unsolicited push while waiting.
                     self.phase = Phase::Working;
@@ -427,7 +617,8 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                 }
                 let advanced = match self.phase {
                     Phase::WaitRandom { attempt, .. } => {
-                        self.try_random_steal(attempt + 1, effects) || self.try_lifeline_steal(0, effects)
+                        self.try_random_steal(attempt + 1, effects)
+                            || self.try_lifeline_steal(0, effects)
                     }
                     Phase::WaitLifeline { idx } => self.try_lifeline_steal(idx + 1, effects),
                     _ => unreachable!(),
@@ -570,7 +761,10 @@ mod tests {
         let mut nonce = 2u64; // requests 0,1 were the random attempts
         loop {
             fx.clear();
-            w.on_msg(Msg::Loot { victim: current, bag: None, lifeline: true, nonce: Some(nonce) }, &mut fx);
+            w.on_msg(
+                Msg::Loot { victim: current, bag: None, lifeline: true, nonce: Some(nonce) },
+                &mut fx,
+            );
             nonce += 1;
             match w.phase() {
                 Phase::WaitLifeline { idx } => {
@@ -624,14 +818,22 @@ mod tests {
         ledger.incr();
         fx.clear();
         w.on_msg(
-            Msg::Loot { victim: 1, bag: Some(ArrayListTaskBag::from_vec(vec![7, 8, 9, 10])), lifeline: false, nonce: None },
+            Msg::Loot {
+                victim: 1,
+                bag: Some(ArrayListTaskBag::from_vec(vec![7, 8, 9, 10])),
+                lifeline: false,
+                nonce: None,
+            },
             &mut fx,
         );
         // Next step distributes to the recorded thief.
         fx.clear();
         w.step(&mut fx);
         let pushed = fx.iter().any(|e| {
-            matches!(e, Effect::Send { to: 3, msg: Msg::Loot { bag: Some(_), lifeline: true, .. } })
+            matches!(
+                e,
+                Effect::Send { to: 3, msg: Msg::Loot { bag: Some(_), lifeline: true, .. } }
+            )
         });
         assert!(pushed, "recorded lifeline thief must be fed: {fx:?}");
     }
@@ -643,7 +845,12 @@ mod tests {
         let mut fx = Vec::new();
         w.on_msg(Msg::Steal { thief: 3, lifeline: false, nonce: 79 }, &mut fx);
         w.on_msg(
-            Msg::Loot { victim: 1, bag: Some(ArrayListTaskBag::from_vec(vec![1, 2, 3, 4])), lifeline: true, nonce: None },
+            Msg::Loot {
+                victim: 1,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1, 2, 3, 4])),
+                lifeline: true,
+                nonce: None,
+            },
             &mut fx,
         );
         fx.clear();
@@ -668,7 +875,12 @@ mod tests {
         // sender incremented the ledger before sending.)
         ledger.incr();
         w.on_msg(
-            Msg::Loot { victim: 0, bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])), lifeline: true, nonce: None },
+            Msg::Loot {
+                victim: 0,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])),
+                lifeline: true,
+                nonce: None,
+            },
             &mut fx,
         );
         assert_eq!(w.phase(), Phase::Working);
@@ -688,7 +900,12 @@ mod tests {
         };
         // An old lifeline buddy pushes loot before the refusal arrives.
         w.on_msg(
-            Msg::Loot { victim: 99, bag: Some(ArrayListTaskBag::from_vec(vec![5, 6, 7])), lifeline: true, nonce: None },
+            Msg::Loot {
+                victim: 99,
+                bag: Some(ArrayListTaskBag::from_vec(vec![5, 6, 7])),
+                lifeline: true,
+                nonce: None,
+            },
             &mut fx,
         );
         assert!(matches!(w.phase(), Phase::WaitRandom { .. }), "still awaiting the response");
@@ -705,5 +922,154 @@ mod tests {
         w.on_msg(Msg::Terminate, &mut fx);
         assert_eq!(w.phase(), Phase::Done);
         assert!(!w.observed_quiescence());
+    }
+
+    // ------------------------------------------------------------------
+    // hierarchical topology
+    // ------------------------------------------------------------------
+
+    use crate::glb::topology::NodeBag;
+    use std::sync::Arc;
+
+    #[test]
+    fn flat_worker_never_touches_node_bag() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // external work exists
+        let nb = Arc::new(NodeBag::new());
+        let mut w =
+            Worker::with_node_bag(0, 4, params(), CountQueue::with(3), ledger, Some(nb.clone()));
+        let mut fx = Vec::new();
+        w.step(&mut fx); // drains and enters the steal protocol
+        assert!(matches!(w.phase(), Phase::WaitRandom { .. }));
+        assert_eq!(nb.shards(), 0);
+        assert_eq!(nb.hungry(), 0);
+        assert_eq!(w.stats().node_takes + w.stats().node_donations, 0);
+    }
+
+    #[test]
+    fn lifelines_span_nodes_and_only_reps_have_them() {
+        // p = 8, wpn = 2 -> 4 nodes; l = 2, z = 2 is the binary 2-cube
+        // over nodes, so node 1's buddies are nodes 0 and 3, i.e. the
+        // representative workers 0 and 6.
+        let hp = params().with_workers_per_node(2);
+        let rep = Worker::new(2, 8, hp, CountQueue::with(1), SimLedger::new());
+        assert!(rep.is_representative());
+        assert_eq!(rep.node(), 1);
+        assert_eq!(rep.lifelines(), &[0, 6]);
+        let nonrep = Worker::new(3, 8, hp, CountQueue::with(1), SimLedger::new());
+        assert!(!nonrep.is_representative());
+        assert!(nonrep.lifelines().is_empty(), "non-reps never run the lifeline protocol");
+    }
+
+    #[test]
+    fn non_rep_starves_locally_and_is_revived_by_push() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // external work exists somewhere
+        let nb = Arc::new(NodeBag::new());
+        let hp = params().with_workers_per_node(4);
+        let mut w =
+            Worker::with_node_bag(1, 4, hp, CountQueue::with(0), ledger.clone(), Some(nb.clone()));
+        let mut fx = Vec::new();
+        w.kick_if_empty(&mut fx);
+        assert_eq!(w.phase(), Phase::Idle);
+        assert!(fx.is_empty(), "intra-node starvation sends no messages: {fx:?}");
+        assert_eq!(nb.hungry(), 1);
+        assert_eq!(ledger.value(), 1, "kick token released");
+        // A local donor (worker 0, same node) pushes loot directly.
+        ledger.incr(); // the donor's in-flight loot token
+        w.on_msg(
+            Msg::Loot {
+                victim: 0,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])),
+                lifeline: false,
+                nonce: None,
+            },
+            &mut fx,
+        );
+        assert_eq!(w.phase(), Phase::Working);
+        assert_eq!(w.stats().node_loot_received, 1);
+        assert_eq!(ledger.value(), 2, "adopted the push token");
+    }
+
+    #[test]
+    fn donor_feeds_hungry_peer_with_direct_push() {
+        let ledger = SimLedger::new();
+        let nb = Arc::new(NodeBag::new());
+        let hp = params().with_workers_per_node(2);
+        let mut w =
+            Worker::with_node_bag(0, 2, hp, CountQueue::with(16), ledger, Some(nb.clone()));
+        nb.register_hungry(1);
+        let mut fx = Vec::new();
+        w.step(&mut fx);
+        let pushed = fx.iter().any(|e| {
+            matches!(e, Effect::Send { to: 1, msg: Msg::Loot { bag: Some(_), nonce: None, .. } })
+        });
+        assert!(pushed, "hungry peer must be woken with loot: {fx:?}");
+        assert_eq!(w.stats().node_loot_sent, 1);
+        assert_eq!(nb.hungry(), 0);
+    }
+
+    #[test]
+    fn surplus_parks_one_shard_and_starving_peer_takes_it_silently() {
+        let ledger = SimLedger::new();
+        let nb = Arc::new(NodeBag::new());
+        let hp = params().with_workers_per_node(2);
+        let mut a =
+            Worker::with_node_bag(0, 2, hp, CountQueue::with(64), ledger.clone(), Some(nb.clone()));
+        let mut fx = Vec::new();
+        a.step(&mut fx);
+        assert_eq!(nb.shards(), 1, "donor parks a shard for local takers");
+        assert_eq!(a.stats().node_donations, 1);
+        assert!(fx.is_empty(), "parking is message-free: {fx:?}");
+        // Worker 1 starves: it takes the shard without sending anything.
+        let mut b =
+            Worker::with_node_bag(1, 2, hp, CountQueue::with(0), ledger.clone(), Some(nb.clone()));
+        let mut fxb = Vec::new();
+        b.kick_if_empty(&mut fxb);
+        assert_eq!(b.phase(), Phase::Working);
+        assert!(fxb.is_empty(), "intra-node takes are message-free: {fxb:?}");
+        assert_eq!(nb.shards(), 0);
+        assert_eq!(b.stats().node_takes, 1);
+        assert_eq!(ledger.value(), 2, "a's token + b's token; the shard token died");
+    }
+
+    #[test]
+    fn dry_rep_forwards_parked_shard_to_remote_thief() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // the parked shard's token (a local peer donated it)
+        let nb = Arc::new(NodeBag::new());
+        nb.donate(ArrayListTaskBag::from_vec(vec![9, 9, 9, 9]));
+        let hp = params().with_workers_per_node(2);
+        // p = 4, wpn = 2: nodes {0,1} and {2,3}; worker 0 represents node 0.
+        let mut w =
+            Worker::with_node_bag(0, 4, hp, CountQueue::with(0), ledger.clone(), Some(nb.clone()));
+        let mut fx = Vec::new();
+        w.on_msg(Msg::Steal { thief: 2, lifeline: false, nonce: 5 }, &mut fx);
+        match &fx[0] {
+            Effect::Send { to: 2, msg: Msg::Loot { bag: Some(b), nonce: Some(5), .. } } => {
+                assert_eq!(b.size(), 4, "the whole parked shard is forwarded");
+            }
+            e => panic!("expected forwarded loot, got {e:?}"),
+        }
+        assert_eq!(nb.shards(), 0);
+        assert_eq!(w.stats().node_takes, 1);
+        assert_eq!(ledger.value(), 1, "the shard token became the loot token");
+    }
+
+    #[test]
+    fn rep_random_victims_are_other_nodes_representatives() {
+        let ledger = SimLedger::new();
+        ledger.incr();
+        let hp = params().with_workers_per_node(4);
+        // p = 16, wpn = 4 -> nodes 0..4 with representatives {0, 4, 8, 12}.
+        let mut w = Worker::with_node_bag(0, 16, hp, CountQueue::with(2), ledger, None);
+        let mut fx = Vec::new();
+        w.step(&mut fx); // drains, starves, sends a random steal
+        match w.phase() {
+            Phase::WaitRandom { victim, .. } => {
+                assert!(victim % 4 == 0 && victim != 0, "victim {victim} must be a remote rep");
+            }
+            ph => panic!("expected WaitRandom, got {ph:?}"),
+        }
     }
 }

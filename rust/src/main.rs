@@ -36,8 +36,8 @@ fn main() {
 }
 
 const COMMON: &[&str] = &[
-    "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "random-only", "rounds",
-    "log", "csv", "autotune",
+    "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
+    "random-only", "rounds", "log", "csv", "autotune",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -229,7 +229,10 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
 
 fn cmd_fig(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &["csv", "log"])?;
-    args.ensure_known(&["id", "csv", "log", "places", "depth", "scale", "n", "w", "l", "z", "seed"])?;
+    args.ensure_known(&[
+        "id", "csv", "log", "places", "depth", "scale", "n", "w", "l", "z", "seed",
+        "workers-per-node",
+    ])?;
     let id: u32 = args.parse_opt("id", 0u32)?;
     if !(2..=10).contains(&id) {
         bail!("--id must be 2..=10 (paper figures)");

@@ -53,6 +53,16 @@ impl<B> Transport<B> {
             }
         }
     }
+
+    /// Fan `Terminate` out to every place except `me` — the one broadcast
+    /// in the protocol, issued by the worker that observed global
+    /// quiescence. Terminate travels like any other message (so it also
+    /// honours injected latency).
+    pub fn broadcast_terminate(&self, me: PlaceId, p: usize, delay: Duration) {
+        for i in (0..p).filter(|&i| i != me) {
+            self.send(i, Msg::Terminate, delay);
+        }
+    }
 }
 
 /// Router thread body: hold each message until its due time, then
@@ -135,6 +145,18 @@ mod tests {
         assert!(t0.elapsed() >= delay, "message arrived early: {:?}", t0.elapsed());
         drop(t);
         router.join().unwrap();
+    }
+
+    #[test]
+    fn broadcast_terminate_skips_self() {
+        let (tx0, rx0) = channel::<Msg<Vec<u8>>>();
+        let (tx1, rx1) = channel::<Msg<Vec<u8>>>();
+        let (tx2, rx2) = channel::<Msg<Vec<u8>>>();
+        let t = Transport::Direct(vec![tx0, tx1, tx2]);
+        t.broadcast_terminate(1, 3, Duration::ZERO);
+        assert!(matches!(rx0.try_recv(), Ok(Msg::Terminate)));
+        assert!(rx1.try_recv().is_err(), "no self-terminate");
+        assert!(matches!(rx2.try_recv(), Ok(Msg::Terminate)));
     }
 
     #[test]

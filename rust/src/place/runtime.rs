@@ -97,10 +97,17 @@ where
         }
     };
 
+    // Hierarchical topology: one shared node bag per node, handed to
+    // every worker of that node (flat runs never allocate any).
+    let topo = cfg.topology();
+    let node_bags = topo.make_node_bags::<Q::Bag>();
     let mut workers: Vec<Worker<Q, Arc<AtomicLedger>>> = queues
         .into_iter()
         .enumerate()
-        .map(|(i, q)| Worker::new(i, p, cfg.params, q, ledger.clone()))
+        .map(|(i, q)| {
+            let nb = node_bags.as_ref().map(|bags| bags[topo.node_of(i)].clone());
+            Worker::with_node_bag(i, p, cfg.params, q, ledger.clone(), nb)
+        })
         .collect();
 
     // Kick empty places into the steal protocol *before* any thread runs
@@ -113,21 +120,26 @@ where
                 Effect::Send { to, msg } => {
                     transport.send(to, msg, delay);
                 }
-                // p == 1 with an empty root: the kick acquires a token,
-                // finds no victim to steal from, and releases it — validly
-                // observing quiescence before any thread runs. The
-                // `ledger.value() == 0` early return below finishes the run.
+                // An all-empty run with nobody to steal from (p == 1, or
+                // every worker on one hierarchical node): the kick
+                // acquires a token, finds no victim, and releases it —
+                // validly observing quiescence before any thread runs.
+                // The `ledger.value() == 0` early return below finishes
+                // the run.
                 Effect::Quiescent => debug_assert_eq!(ledger.value(), 0),
             }
         }
     }
 
-    // Nothing to do at all? (no place was seeded and none kicked — kicks
-    // always happen for empty workers when p > 1, so this is the p == 1,
-    // empty-root case, or every queue empty with p == 1.)
+    // Nothing to do at all? (every queue empty and nobody to steal from:
+    // p == 1, or a hierarchical run whose workers all share one node —
+    // either way the kicks above already drained every token.)
     if ledger.value() == 0 {
         let results: Vec<Q::Result> = workers.iter().map(|w| w.queue().result()).collect();
-        let log = RunLog::new(workers.iter().map(|w| *w.stats()).collect());
+        let log = RunLog::with_topology(
+            workers.iter().map(|w| *w.stats()).collect(),
+            cfg.params.workers_per_node,
+        );
         return RunOutput { result: reducer.reduce_all(results), log, elapsed_ns: 0 };
     }
 
@@ -161,7 +173,8 @@ where
 
     let stats: Vec<_> = per_place.iter().map(|(_, s)| *s).collect();
     let results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
-    RunOutput { result: reducer.reduce_all(results), log: RunLog::new(stats), elapsed_ns }
+    let log = RunLog::with_topology(stats, cfg.params.workers_per_node);
+    RunOutput { result: reducer.reduce_all(results), log, elapsed_ns }
 }
 
 /// Per-place thread body: drive the worker until `Done`.
@@ -218,22 +231,7 @@ fn pump<B>(me: PlaceId, p: usize, fx: &mut Vec<Effect<B>>, transport: &Transport
                 debug_assert_ne!(to, me, "no self-sends in the protocol");
                 transport.send(to, msg, delay);
             }
-            Effect::Quiescent => match transport {
-                Transport::Direct(txs) => {
-                    for (i, tx) in txs.iter().enumerate() {
-                        if i != me {
-                            let _ = tx.send(Msg::Terminate);
-                        }
-                    }
-                }
-                Transport::Delayed(_) => {
-                    // Terminate also travels with latency; every place id
-                    // below p gets one (p known to the caller).
-                    for i in (0..p).filter(|&i| i != me) {
-                        transport.send(i, Msg::Terminate, delay);
-                    }
-                }
-            },
+            Effect::Quiescent => transport.broadcast_terminate(me, p, delay),
         }
     }
 }
@@ -354,6 +352,47 @@ mod tests {
         // All places start empty and kick into stealing; everyone refuses
         // everyone; the tokens drain and someone observes quiescence.
         let cfg = GlbConfig::new(4, GlbParams::default().with_l(2));
+        let out = run_threads(&cfg, |_, _| TreeQueue::empty(), |_| {}, &SumReducer);
+        assert_eq!(out.result, 0);
+    }
+
+    #[test]
+    fn hierarchical_nodes_match_flat_result() {
+        // Same tree, same reduction, any node grouping (incl. a ragged
+        // last node at wpn=3) — the topology changes who moves work,
+        // never what is computed.
+        for wpn in [2usize, 3, 4] {
+            let params = GlbParams::default().with_n(8).with_l(2).with_workers_per_node(wpn);
+            let out = run(4, 12, params);
+            assert_eq!(out.result, (1 << 13) - 1, "wpn={wpn}");
+            assert_eq!(out.log.workers_per_node, wpn);
+            let t = out.log.total();
+            assert_eq!(t.node_donations, t.node_takes, "every parked shard is reclaimed");
+            assert_eq!(t.node_loot_sent, t.node_loot_received, "every local push lands");
+        }
+    }
+
+    #[test]
+    fn hierarchical_root_node_feeds_its_hungry_workers() {
+        // p = 4, wpn = 4: a single node. The non-representatives register
+        // hungry during the pre-thread kicks, so the root worker's first
+        // surplus deterministically wakes them with local pushes.
+        let params = GlbParams::default().with_n(8).with_workers_per_node(4);
+        let out = run(4, 12, params);
+        assert_eq!(out.result, (1 << 13) - 1);
+        let t = out.log.total();
+        assert!(t.node_loot_sent > 0, "hungry locals must be fed by pushes");
+        assert_eq!(
+            t.random_steals_sent + t.lifeline_steals_sent,
+            0,
+            "a single node never steals across nodes"
+        );
+    }
+
+    #[test]
+    fn hierarchical_empty_root_terminates() {
+        let params = GlbParams::default().with_l(2).with_workers_per_node(2);
+        let cfg = GlbConfig::new(4, params);
         let out = run_threads(&cfg, |_, _| TreeQueue::empty(), |_| {}, &SumReducer);
         assert_eq!(out.result, 0);
     }

@@ -9,7 +9,6 @@
 
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
@@ -21,10 +20,13 @@ enum Req {
     Shutdown,
 }
 
-/// Clonable, `Send` handle to the device service.
+/// Clonable, `Send` handle to the device service. Each clone owns its own
+/// mpsc `Sender` (already `Clone + Send`), so concurrent GLB places
+/// enqueue offload requests without ever serializing on a lock — the
+/// request channel itself is the queue.
 #[derive(Clone)]
 pub struct DeviceHandle {
-    tx: Arc<Mutex<Sender<Req>>>,
+    tx: Sender<Req>,
     n: usize,
     s: usize,
 }
@@ -44,8 +46,6 @@ impl DeviceHandle {
     pub fn brandes(&self, sources: &[u32]) -> Result<BrandesOut> {
         let (reply, rx) = channel();
         self.tx
-            .lock()
-            .unwrap()
             .send(Req::Brandes { sources: sources.to_vec(), reply })
             .map_err(|_| anyhow!("device service stopped"))?;
         rx.recv().map_err(|_| anyhow!("device service dropped reply"))?
@@ -72,7 +72,7 @@ impl DeviceService {
         let (n, s) = ready_rx
             .recv()
             .map_err(|_| anyhow!("device service died during startup"))??;
-        let handle = DeviceHandle { tx: Arc::new(Mutex::new(tx.clone())), n, s };
+        let handle = DeviceHandle { tx: tx.clone(), n, s };
         Ok(Self { handle, join: Some(join), tx })
     }
 

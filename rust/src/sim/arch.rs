@@ -110,7 +110,13 @@ impl ArchProfile {
         }
     }
 
-    /// Node id of a place.
+    /// Node id of a place. The hardware grid is fixed by the profile —
+    /// a run's GLB topology ([`crate::glb::topology`]) is a *software*
+    /// overlay on it, so sweeping `workers_per_node` compares groupings
+    /// on the *same* simulated machine. Set `workers_per_node =
+    /// places_per_node` to align one GLB node per physical node (the
+    /// deployment the hierarchy is designed for: every intra-node push
+    /// and bag transfer then stays off the NIC).
     #[inline]
     pub fn node_of(&self, place: usize) -> usize {
         place / self.places_per_node
@@ -180,6 +186,7 @@ mod tests {
         assert_eq!(BGQ.node_of(15), 0);
         assert_eq!(BGQ.node_of(16), 1);
     }
+
 
     #[test]
     fn intra_beats_inter() {

@@ -19,7 +19,15 @@
 //! * cross-node messages serialize through the sender node's NIC: a
 //!   per-message occupancy charge on a shared `nic_free_at` clock models
 //!   the contention of many places per node (this is what bends the K
-//!   curve past 4 K places, Fig 4);
+//!   curve past 4 K places, Fig 4); intra-node deliveries skip the NIC
+//!   entirely and pay only the shared-memory latency;
+//! * the hardware node grid is fixed by the [`ArchProfile`]; a
+//!   hierarchical GLB topology (`workers_per_node > 1`, see
+//!   [`crate::glb::topology`]) is a software overlay on it, so sweeping
+//!   the grouping compares configurations on the *same* machine. With
+//!   `workers_per_node = places_per_node` (one GLB node per physical
+//!   node — the intended deployment) the [`SimReport::cross_messages`]
+//!   counter directly measures what the two-level balancer saves;
 //! * the virtual clock is `u64` ns; event order is total (time, seq), so
 //!   runs are bit-for-bit reproducible for a given seed.
 
@@ -90,6 +98,12 @@ impl<B> Ord for Entry<B> {
 pub struct SimReport {
     /// Total messages delivered.
     pub messages: u64,
+    /// Messages that crossed a node boundary (and thus paid the NIC
+    /// occupancy + inter-node latency). `messages - cross_messages` were
+    /// intra-node deliveries that skipped the NIC entirely — the quantity
+    /// the hierarchical topology ([`crate::glb::topology`]) is designed
+    /// to maximize.
+    pub cross_messages: u64,
     /// Total events processed.
     pub events: u64,
     /// Virtual ns the busiest place computed for (critical path lower
@@ -152,6 +166,9 @@ struct Sim<Q: TaskQueue> {
     inboxes: Vec<VecDeque<Msg<Q::Bag>>>,
     /// Whether a Tick is scheduled for the place (i.e. it is mid-chunk).
     ticking: Vec<bool>,
+    /// The run's GLB topology grouping (for the per-node log rollup;
+    /// message accounting always uses the profile's hardware grid).
+    glb_wpn: usize,
     /// Next free time of each node's NIC (cross-node send serialization).
     nic_free_at: Vec<u64>,
     /// Fault injection: extra pseudo-random delay per delivery.
@@ -160,6 +177,7 @@ struct Sim<Q: TaskQueue> {
     seq: u64,
     now: u64,
     messages: u64,
+    cross_messages: u64,
     events: u64,
     done: bool,
 }
@@ -181,10 +199,17 @@ impl<Q: TaskQueue> Sim<Q> {
         let ledger = SimLedger::new();
         let mut queues: Vec<Q> = (0..p).map(|i| factory(i, p)).collect();
         root_init(&mut queues[0]);
+        // Hierarchical topology: shared node bags, one per GLB node
+        // (flat runs allocate none — the seed-identical fast path).
+        let topo = cfg.topology();
+        let node_bags = topo.make_node_bags::<Q::Bag>();
         let workers: Vec<_> = queues
             .into_iter()
             .enumerate()
-            .map(|(i, q)| Worker::new(i, p, cfg.params, q, ledger.clone()))
+            .map(|(i, q)| {
+                let nb = node_bags.as_ref().map(|bags| bags[topo.node_of(i)].clone());
+                Worker::with_node_bag(i, p, cfg.params, q, ledger.clone(), nb)
+            })
             .collect();
         let nodes = p.div_ceil(arch.places_per_node);
         let mut sim = Self {
@@ -196,12 +221,14 @@ impl<Q: TaskQueue> Sim<Q> {
             heap: BinaryHeap::new(),
             inboxes: (0..p).map(|_| VecDeque::new()).collect(),
             ticking: vec![false; p],
+            glb_wpn: cfg.params.workers_per_node,
             nic_free_at: vec![0; nodes],
             jitter_ns,
             jitter_rng: crate::util::SplitMix64::new(cfg.params.seed ^ 0x7177E2),
             seq: 0,
             now: 0,
             messages: 0,
+            cross_messages: 0,
             events: 0,
             done: false,
         };
@@ -243,8 +270,10 @@ impl<Q: TaskQueue> Sim<Q> {
                     });
                     let (na, nb) = (self.arch.node_of(from), self.arch.node_of(to));
                     let deliver_at = if na == nb {
+                        // Intra-node: shared-memory latency, no NIC charge.
                         t + self.arch.intra_node_ns
                     } else {
+                        self.cross_messages += 1;
                         // Occupy the source NIC: per-message overhead +
                         // serialization, shared by the node's places.
                         let occupy = self.arch.nic_msg_overhead_ns
@@ -359,10 +388,17 @@ impl<Q: TaskQueue> Sim<Q> {
             stats.push(s);
             results.push(q.result());
         }
-        let out =
-            RunOutput { result: reducer.reduce_all(results), log: RunLog::new(stats), elapsed_ns };
-        let report =
-            SimReport { messages: self.messages, events: self.events, max_busy_ns: max_busy };
+        let out = RunOutput {
+            result: reducer.reduce_all(results),
+            log: RunLog::with_topology(stats, self.glb_wpn),
+            elapsed_ns,
+        };
+        let report = SimReport {
+            messages: self.messages,
+            cross_messages: self.cross_messages,
+            events: self.events,
+            max_busy_ns: max_busy,
+        };
         (out, report)
     }
 }
@@ -484,6 +520,41 @@ mod tests {
         let active = out.log.per_place.iter().filter(|s| s.units > 0).count();
         assert!(active >= 12, "most places should contribute, got {active}");
         assert!(rep.messages > 0);
+    }
+
+    #[test]
+    fn hierarchical_sim_is_deterministic_and_correct() {
+        let run_hier = || {
+            let params = GlbParams::default().with_n(8).with_l(2).with_workers_per_node(8);
+            let cfg = GlbConfig::new(32, params);
+            run_sim(
+                &cfg,
+                &K,
+                CostModel::new(100.0, 50, 8),
+                |_, _| TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 },
+                |q| q.bag.push(13),
+                &SumReducer,
+            )
+        };
+        let (a, ra) = run_hier();
+        let (b, rb) = run_hier();
+        assert_eq!(a.result, (1 << 14) - 1);
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.elapsed_ns, b.elapsed_ns, "hierarchical runs replay exactly");
+        assert_eq!(ra.messages, rb.messages);
+        assert_eq!(ra.cross_messages, rb.cross_messages);
+        assert!(ra.cross_messages <= ra.messages);
+    }
+
+    #[test]
+    fn flat_report_counts_cross_node_messages() {
+        // 16 places on BGQ (16 places/node) fit one hardware node: every
+        // delivery is intra-node. 64 places span 4 nodes: some must cross.
+        let (_, one_node) = run(16, 10, &BGQ);
+        assert_eq!(one_node.cross_messages, 0, "single node: nothing crosses");
+        let (_, four_nodes) = run(64, 10, &BGQ);
+        assert!(four_nodes.cross_messages > 0, "4 nodes must exchange work");
+        assert!(four_nodes.cross_messages <= four_nodes.messages);
     }
 
     #[test]

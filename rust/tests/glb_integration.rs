@@ -103,6 +103,73 @@ fn random_only_policy_terminates_and_counts() {
 }
 
 #[test]
+fn hierarchical_threads_and_sim_agree_on_uts() {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 7 };
+    let expect = sequential_count(&up);
+    for &(p, wpn) in &[(8usize, 2usize), (8, 4), (6, 3), (9, 4)] {
+        let params = GlbParams::default().with_n(64).with_l(2).with_workers_per_node(wpn);
+        let cfg = GlbConfig::new(p, params);
+        let t = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        let (s, _) =
+            run_sim(&cfg, &BGQ, uts_cost(), |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        assert_eq!(t.result, expect, "threads p={p} wpn={wpn}");
+        assert_eq!(s.result, expect, "sim p={p} wpn={wpn}");
+    }
+}
+
+#[test]
+fn hierarchy_moves_work_through_the_node_layer() {
+    // With every worker on one of two nodes, intra-node sharing (takes +
+    // direct pushes) must carry real traffic, and only the two
+    // representatives may ever exchange cross-node messages.
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 8 };
+    let params = GlbParams::default().with_n(32).with_workers_per_node(4);
+    let cfg = GlbConfig::new(8, params);
+    let (out, _) =
+        run_sim(&cfg, &BGQ, uts_cost(), |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+    assert_eq!(out.result, sequential_count(&up));
+    let t = out.log.total();
+    assert!(t.node_loot_sent + t.node_takes > 0, "the node layer must move work");
+    for (i, s) in out.log.per_place.iter().enumerate() {
+        if i % 4 != 0 {
+            assert_eq!(
+                s.random_steals_sent + s.lifeline_steals_sent,
+                0,
+                "worker {i} is no representative and must not steal across nodes"
+            );
+        }
+    }
+    assert_eq!(out.log.per_node().len(), 2);
+}
+
+#[test]
+fn hierarchy_reduces_cross_node_traffic_at_equal_worker_count() {
+    // The acceptance criterion for the topology layer: at the same total
+    // worker count and identical results, building the lifeline graph
+    // over nodes (16 workers each, matching BGQ's 16 places/node) must
+    // produce fewer cross-node messages per unit of work than the flat
+    // protocol, whose random victims and lifelines mostly cross nodes.
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 9 };
+    let expect = sequential_count(&up);
+    let run = |wpn: usize| {
+        let params = GlbParams::default().with_n(64).with_workers_per_node(wpn);
+        let cfg = GlbConfig::new(64, params);
+        run_sim(&cfg, &BGQ, uts_cost(), |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)
+    };
+    let (flat, flat_rep) = run(1);
+    let (hier, hier_rep) = run(16);
+    assert_eq!(flat.result, expect);
+    assert_eq!(hier.result, expect, "hierarchy never changes the reduction");
+    // Equal work performed, so comparing totals compares per-unit rates.
+    assert!(
+        hier_rep.cross_messages < flat_rep.cross_messages,
+        "two-level balancing must cut cross-node traffic: hier {} vs flat {}",
+        hier_rep.cross_messages,
+        flat_rep.cross_messages
+    );
+}
+
+#[test]
 fn fib_stress_repeated_runs() {
     // Thread interleavings differ run to run; the result must not.
     for round in 0..8 {

@@ -251,6 +251,73 @@ fn prop_sim_survives_message_jitter() {
 }
 
 #[test]
+fn prop_hierarchical_topology_agrees_with_flat() {
+    // The tentpole invariant of the topology layer: grouping workers into
+    // nodes (any wpn, ragged last node included) changes who moves work,
+    // never what is computed. Both substrates' ledgers are debug-asserted
+    // to balance at termination inside the runtimes.
+    check_cases("hier-vs-flat", 30, |g: &mut Gen| {
+        let p = g.usize(2..48);
+        let wpn = g.usize(2..9);
+        let d = g.usize(4..7) as u32;
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: d };
+        let expect = sequential_count(&up);
+        let base = GlbParams::default()
+            .with_n(g.usize(1..300))
+            .with_w(g.usize(0..3))
+            .with_l(g.usize(2..8))
+            .with_seed(g.u64(0..1 << 40));
+        let cost = CostModel::new(g.f64() * 300.0 + 10.0, g.u64(0..150), 32);
+        let run = |params: GlbParams| {
+            let cfg = GlbConfig::new(p, params);
+            run_sim(&cfg, &BGQ, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)
+        };
+        let (flat, _) = run(base);
+        let (hier, _) = run(base.with_workers_per_node(wpn));
+        assert_eq!(flat.result, expect, "flat p={p}");
+        assert_eq!(hier.result, expect, "hier p={p} wpn={wpn}");
+        // Flat runs must never touch the hierarchical machinery.
+        let ft = flat.log.total();
+        assert_eq!(ft.node_donations + ft.node_takes + ft.node_loot_sent, 0);
+        // Hierarchical node-bag accounting balances at termination.
+        let ht = hier.log.total();
+        assert_eq!(ht.node_donations, ht.node_takes, "p={p} wpn={wpn}: parked shards reclaimed");
+        assert_eq!(ht.node_loot_sent, ht.node_loot_received, "local pushes all land");
+        assert_eq!(ht.loot_bags_sent, ht.loot_bags_received, "no loot lost under hierarchy");
+    });
+}
+
+#[test]
+fn prop_hierarchical_threads_agree_with_flat() {
+    // Real-concurrency version: node bags are shared across OS threads,
+    // so this exercises the Mutex paths and the AtomicLedger balance
+    // (debug-asserted zero at termination inside run_threads).
+    check_cases("hier-threads", 10, |g: &mut Gen| {
+        let p = g.usize(2..9);
+        let wpn = g.usize(2..5);
+        let d = g.usize(4..7) as u32;
+        let up = UtsParams { b0: 4.0, seed: 19, max_depth: d };
+        let expect = sequential_count(&up);
+        let params = GlbParams::default()
+            .with_n(g.usize(1..200))
+            .with_l(g.usize(2..5))
+            .with_seed(g.u64(0..1 << 32))
+            .with_workers_per_node(wpn);
+        let cfg = GlbConfig::new(p, params);
+        let out = glb::place::run_threads(
+            &cfg,
+            |_, _| UtsQueue::new(up),
+            |q| q.init_root(),
+            &SumReducer,
+        );
+        assert_eq!(out.result, expect, "p={p} wpn={wpn} d={d}");
+        let t = out.log.total();
+        assert_eq!(t.node_donations, t.node_takes, "p={p} wpn={wpn}");
+        assert_eq!(t.node_loot_sent, t.node_loot_received, "p={p} wpn={wpn}");
+    });
+}
+
+#[test]
 fn prop_autotuned_params_always_valid_and_correct() {
     use glb::glb::autotune::{autotune, WorkloadProfile};
     check_cases("autotune-validity", 30, |g: &mut Gen| {
