@@ -4,6 +4,7 @@
 //! tuple evenly. To merge a BC taskbag, we simply concatenate."
 
 use crate::glb::task_bag::TaskBag;
+use crate::glb::wire::{self, Reader, WireCodec, WireError};
 
 /// A bag of half-open source-vertex intervals `[lo, hi)`.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
@@ -12,8 +13,18 @@ pub struct BcBag {
 }
 
 impl BcBag {
+    /// Serialized bytes per interval on the socket wire (`lo` + `hi`).
+    pub const WIRE_BYTES_PER_INTERVAL: usize = 8;
+
     pub fn new() -> Self {
         Self { intervals: Vec::new() }
+    }
+
+    /// A bag from explicit intervals (codec round-trips, tests). Every
+    /// interval must be non-empty.
+    pub fn from_intervals(intervals: Vec<(u32, u32)>) -> Self {
+        debug_assert!(intervals.iter().all(|&(lo, hi)| lo < hi), "empty interval");
+        Self { intervals }
     }
 
     /// A bag holding one interval.
@@ -93,6 +104,33 @@ impl TaskBag for BcBag {
         let mut incoming = other.intervals;
         std::mem::swap(&mut self.intervals, &mut incoming);
         self.intervals.extend(incoming);
+    }
+}
+
+/// Wire form: `count:u32` then `lo`/`hi` per interval
+/// ([`BcBag::WIRE_BYTES_PER_INTERVAL`] bytes each). Empty intervals are
+/// rejected on decode — the bag invariant keeps them popped.
+impl WireCodec for BcBag {
+    fn encode(&self, out: &mut Vec<u8>) {
+        wire::put_u32(out, self.intervals.len() as u32);
+        for &(lo, hi) in &self.intervals {
+            wire::put_u32(out, lo);
+            wire::put_u32(out, hi);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let count = r.u32()? as usize;
+        let mut intervals = Vec::new();
+        for _ in 0..count {
+            let lo = r.u32()?;
+            let hi = r.u32()?;
+            if lo >= hi {
+                return Err(WireError::Invalid("empty BC vertex interval"));
+            }
+            intervals.push((lo, hi));
+        }
+        Ok(Self { intervals })
     }
 }
 

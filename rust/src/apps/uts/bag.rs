@@ -16,6 +16,7 @@
 use super::sha1rand::Descriptor;
 use super::tree::UtsTree;
 use crate::glb::task_bag::TaskBag;
+use crate::glb::wire::{self, Reader, WireCodec, WireError};
 
 /// One frontier entry: a node with unexplored children `lo..hi`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,14 +36,25 @@ impl UtsNode {
 }
 
 /// The UTS frontier: an array of nodes with pending child ranges.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct UtsBag {
     nodes: Vec<UtsNode>,
 }
 
 impl UtsBag {
+    /// Serialized bytes per frontier entry on the socket wire
+    /// (descriptor + depth + child range).
+    pub const WIRE_BYTES_PER_NODE: usize = 20 + 4 + 4 + 4;
+
     pub fn new() -> Self {
         Self { nodes: Vec::new() }
+    }
+
+    /// A bag from explicit frontier entries (codec round-trips, tests).
+    /// Every entry must have a non-empty child range.
+    pub fn from_nodes(nodes: Vec<UtsNode>) -> Self {
+        debug_assert!(nodes.iter().all(|n| n.lo < n.hi), "empty child range");
+        Self { nodes }
     }
 
     /// A bag holding the tree root's children range.
@@ -122,6 +134,37 @@ impl TaskBag for UtsBag {
         let mut incoming = other.nodes;
         std::mem::swap(&mut self.nodes, &mut incoming);
         self.nodes.extend(incoming);
+    }
+}
+
+/// Wire form: `count:u32` then per entry the 20-byte descriptor, `depth`,
+/// `lo`, `hi` — [`UtsBag::WIRE_BYTES_PER_NODE`] bytes each. Child ranges
+/// are validated on decode (an empty range would corrupt expansion).
+impl WireCodec for UtsBag {
+    fn encode(&self, out: &mut Vec<u8>) {
+        wire::put_u32(out, self.nodes.len() as u32);
+        for n in &self.nodes {
+            out.extend_from_slice(&n.desc);
+            wire::put_u32(out, n.depth);
+            wire::put_u32(out, n.lo);
+            wire::put_u32(out, n.hi);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let count = r.u32()? as usize;
+        let mut nodes = Vec::new();
+        for _ in 0..count {
+            let desc: Descriptor = r.bytes(20)?.try_into().unwrap();
+            let depth = r.u32()?;
+            let lo = r.u32()?;
+            let hi = r.u32()?;
+            if lo >= hi {
+                return Err(WireError::Invalid("empty UTS child range"));
+            }
+            nodes.push(UtsNode { desc, depth, lo, hi });
+        }
+        Ok(Self { nodes })
     }
 }
 

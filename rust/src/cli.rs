@@ -101,6 +101,69 @@ impl Args {
     }
 }
 
+/// Which execution substrate a command should run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// One OS thread per place in this process (default).
+    Thread,
+    /// Deterministic discrete-event simulation.
+    Sim,
+    /// One OS process per GLB node over TCP ([`crate::place::socket`]).
+    Tcp,
+}
+
+/// TCP fleet membership (`--transport tcp` only).
+#[derive(Debug, Clone)]
+pub struct TcpOpts {
+    /// This process's rank (0 = the listening hub).
+    pub rank: usize,
+    /// Total processes in the fleet.
+    pub peers: usize,
+    /// Rank 0's rendezvous port.
+    pub port: u16,
+    /// Rank 0's host.
+    pub host: String,
+}
+
+/// Resolve `--transport tcp|thread|sim`; the legacy `--sim` / `--threads`
+/// flags keep working when `--transport` is absent.
+pub fn transport_from(args: &Args) -> Result<TransportKind> {
+    match args.get("transport") {
+        Some("tcp") => Ok(TransportKind::Tcp),
+        Some("thread") | Some("threads") => Ok(TransportKind::Thread),
+        Some("sim") => Ok(TransportKind::Sim),
+        Some(other) => bail!("unknown --transport {other} (tcp|thread|sim)"),
+        None if args.flag("sim") => Ok(TransportKind::Sim),
+        None => Ok(TransportKind::Thread),
+    }
+}
+
+/// Parse `--rank`/`--peers`/`--port`/`--host` for a TCP fleet member.
+pub fn tcp_opts_from(args: &Args) -> Result<TcpOpts> {
+    let peers: usize = args
+        .get("peers")
+        .context("--transport tcp needs --peers (total processes in the fleet)")?
+        .parse()
+        .map_err(|e| anyhow!("--peers: {e}"))?;
+    if peers == 0 {
+        bail!("--peers must be >= 1");
+    }
+    let rank: usize = args
+        .get("rank")
+        .context("--transport tcp needs --rank (this process's rank, 0-based)")?
+        .parse()
+        .map_err(|e| anyhow!("--rank: {e}"))?;
+    if rank >= peers {
+        bail!("--rank {rank} out of range for --peers {peers}");
+    }
+    Ok(TcpOpts {
+        rank,
+        peers,
+        port: args.parse_opt("port", 7117u16)?,
+        host: args.get("host").unwrap_or("127.0.0.1").to_string(),
+    })
+}
+
 /// Shared GLB parameter flags
 /// (`--n --w --l --z --seed --workers-per-node --random-only`).
 pub fn glb_params_from(args: &Args) -> Result<crate::glb::GlbParams> {
@@ -139,6 +202,13 @@ COMMANDS
 
 COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)
+  --transport KIND       tcp|thread|sim — tcp runs this process as one GLB
+                         node of a multi-process fleet (uts only so far);
+                         launch one process per node:
+                           glb uts --transport tcp --peers 4 --rank 0 ...
+                           glb uts --transport tcp --peers 4 --rank 1 ...
+  --rank R --peers N     fleet membership (tcp; rank 0 listens)
+  --port P --host H      rank 0 rendezvous (default 7117 on 127.0.0.1)
   --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
   --n --w --l --z        GLB tuning parameters (paper §2.4)
   --workers-per-node K   hierarchical topology: K workers share a node bag
@@ -208,6 +278,39 @@ mod tests {
         assert_eq!(p.w, 3);
         assert_eq!(p.random_budget(), 6);
         assert_eq!(p.workers_per_node, 1, "flat unless asked otherwise");
+    }
+
+    #[test]
+    fn transport_selection() {
+        let d = Args::parse(&[], &["sim"]).unwrap();
+        assert_eq!(transport_from(&d).unwrap(), TransportKind::Thread);
+        let sim_flag = Args::parse(&s(&["--sim"]), &["sim"]).unwrap();
+        assert_eq!(transport_from(&sim_flag).unwrap(), TransportKind::Sim);
+        let tcp = Args::parse(&s(&["--transport", "tcp"]), &[]).unwrap();
+        assert_eq!(transport_from(&tcp).unwrap(), TransportKind::Tcp);
+        // Explicit --transport wins over the legacy flag.
+        let both = Args::parse(&s(&["--transport", "thread", "--sim"]), &["sim"]).unwrap();
+        assert_eq!(transport_from(&both).unwrap(), TransportKind::Thread);
+        let bad = Args::parse(&s(&["--transport", "carrier-pigeon"]), &[]).unwrap();
+        assert!(transport_from(&bad).is_err());
+    }
+
+    #[test]
+    fn tcp_opts_parsing() {
+        let a = Args::parse(&s(&["--rank", "2", "--peers", "4"]), &[]).unwrap();
+        let t = tcp_opts_from(&a).unwrap();
+        assert_eq!((t.rank, t.peers, t.port), (2, 4, 7117));
+        assert_eq!(t.host, "127.0.0.1");
+        let full =
+            Args::parse(&s(&["--rank", "0", "--peers", "2", "--port", "9000", "--host", "h"]), &[])
+                .unwrap();
+        let t = tcp_opts_from(&full).unwrap();
+        assert_eq!((t.port, t.host.as_str()), (9000, "h"));
+        // rank must be < peers, and both are required.
+        let oob = Args::parse(&s(&["--rank", "4", "--peers", "4"]), &[]).unwrap();
+        assert!(tcp_opts_from(&oob).is_err());
+        let missing = Args::parse(&s(&["--rank", "0"]), &[]).unwrap();
+        assert!(tcp_opts_from(&missing).is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub type PlaceId = usize;
 /// asynchronous messaging the two are otherwise indistinguishable (same
 /// victim, same kind), which would corrupt the steal loop — see the
 /// `push_race_with_outstanding_request` test.
-#[derive(Debug)]
+#[derive(Debug, PartialEq)]
 pub enum Msg<B> {
     /// Work request from `thief`.
     Steal { thief: PlaceId, lifeline: bool, nonce: u64 },
@@ -41,8 +41,15 @@ pub enum Msg<B> {
 impl<B> Msg<B> {
     /// Rough wire size in bytes, for the simulator's bandwidth/occupancy
     /// model. `item_bytes` is the application's per-task serialized size.
+    /// The envelope is the socket codec's *actual* fixed message framing
+    /// ([`crate::glb::wire::ENVELOPE_BYTES`]: length prefix + prelude),
+    /// pinned by test to `wire::encode_frame` for bag-less messages. Bag
+    /// payloads are approximated by `item_bytes × items` (the codec adds
+    /// a 4-byte count word), and the socket transport's star routing
+    /// adds an 8-byte destination prefix per remote frame that this
+    /// point-to-point model deliberately leaves out.
     pub fn wire_bytes(&self, item_bytes: usize, bag_items: impl Fn(&B) -> usize) -> usize {
-        const HEADER: usize = 64; // envelope: type tag, ids, rendezvous
+        const HEADER: usize = crate::glb::wire::ENVELOPE_BYTES;
         match self {
             Msg::Steal { .. } | Msg::Terminate => HEADER,
             Msg::Loot { bag: None, .. } => HEADER,
@@ -81,15 +88,43 @@ mod tests {
 
     #[test]
     fn wire_bytes_scale_with_bag() {
+        use crate::glb::wire::ENVELOPE_BYTES;
         let len = |b: &Vec<u32>| b.len();
         let steal: Msg<Vec<u32>> = Msg::Steal { thief: 1, lifeline: false, nonce: 0 };
-        assert_eq!(steal.wire_bytes(8, len), 64);
+        assert_eq!(steal.wire_bytes(8, len), ENVELOPE_BYTES);
         let loot =
             Msg::Loot { victim: 0, bag: Some(vec![1, 2, 3]), lifeline: false, nonce: Some(0) };
-        assert_eq!(loot.wire_bytes(8, len), 64 + 24);
+        assert_eq!(loot.wire_bytes(8, len), ENVELOPE_BYTES + 24);
         let refusal: Msg<Vec<u32>> =
             Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(1) };
-        assert_eq!(refusal.wire_bytes(8, len), 64);
+        assert_eq!(refusal.wire_bytes(8, len), ENVELOPE_BYTES);
+    }
+
+    #[test]
+    fn bagless_wire_bytes_match_the_codec_exactly() {
+        // The sim's per-message accounting (`wire_bytes`) must equal the
+        // socket codec's real frame length for every bag-less message,
+        // and envelope + per-entry bytes for loot.
+        use crate::glb::task_bag::ArrayListTaskBag;
+        use crate::glb::wire::{self, BAG_LEN_BYTES};
+        type Bag = ArrayListTaskBag<u64>;
+        let items = |b: &Bag| b.items().len();
+        let bagless = [
+            Msg::<Bag>::Steal { thief: 1, lifeline: true, nonce: 3 },
+            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: false, nonce: Some(7) },
+            Msg::<Bag>::Terminate,
+        ];
+        for m in bagless {
+            assert_eq!(wire::encode_frame(&m).len(), m.wire_bytes(8, items), "{}", m.kind());
+        }
+        let loot = Msg::<Bag>::Loot {
+            victim: 0,
+            bag: Some(ArrayListTaskBag::from_vec(vec![1u64, 2, 3])),
+            lifeline: true,
+            nonce: None,
+        };
+        // u64 items are 8 bytes each; the codec adds only the bag count.
+        assert_eq!(wire::encode_frame(&loot).len(), loot.wire_bytes(8, items) + BAG_LEN_BYTES);
     }
 
     #[test]

@@ -66,6 +66,7 @@ pub mod task_bag;
 pub mod task_queue;
 pub mod termination;
 pub mod topology;
+pub mod wire;
 pub mod worker;
 
 pub use autotune::{autotune, WorkloadProfile};
@@ -77,6 +78,7 @@ pub use task_bag::{ArrayListTaskBag, TaskBag};
 pub use task_queue::{FnReducer, ProcessOutcome, Reducer, SumReducer, TaskQueue, VecSumReducer};
 pub use termination::{AtomicLedger, Ledger, SimLedger};
 pub use topology::{NodeBag, Topology};
+pub use wire::{WireCodec, WireError};
 pub use worker::{Phase, StepOutcome, Worker};
 
 /// A GLB run configuration: place count + tuning parameters.

@@ -36,7 +36,7 @@ pub trait TaskBag: Send + 'static {
 /// The default bag: a `Vec` of task items; `split` removes the second half
 /// from the end (constant amortized per item, preserving LIFO depth-first
 /// order for the retained half), `merge` appends.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ArrayListTaskBag<T> {
     items: Vec<T>,
 }

@@ -1,0 +1,444 @@
+//! Length-prefixed wire codec for the process-level socket transport
+//! ([`crate::place::socket`]). Hand-rolled and offline-safe — the
+//! vendored registry has no `serde`, and the protocol's message shapes
+//! are small and fixed enough that an explicit byte layout is both
+//! simpler and auditable.
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! frame    := len:u32le ++ body                  (len = body.len())
+//! msg body := tag:u8                             (0 Steal, 1 Loot, 2 Terminate)
+//!             lifeline:u8                        (0 | 1)
+//!             place:u64le                        (thief / victim; 0 for Terminate)
+//!             nonce_tag:u8  nonce:u64le          (tag 0 => nonce field is 0)
+//!             bag_tag:u8                         (1 iff a bag payload follows)
+//!             [bag]
+//! bag      := count:u32le ++ count * entry       (entry layout per bag type)
+//! ```
+//!
+//! Every variant writes the full fixed prelude, so the framing overhead
+//! of *any* message is exactly [`ENVELOPE_BYTES`] — the constant
+//! [`Msg::wire_bytes`]'s `HEADER` is derived from, which keeps the
+//! simulator's bandwidth/occupancy accounting aligned with what the TCP
+//! transport actually puts on the wire.
+//!
+//! Decoding is total: truncated or malformed input returns a
+//! [`WireError`], never panics and never allocates proportionally to a
+//! corrupt length field (entries are decoded one at a time, so a lying
+//! `count` hits [`WireError::Truncated`] first).
+
+use std::io::{self, Read, Write};
+
+use super::message::{Msg, PlaceId};
+use super::task_bag::ArrayListTaskBag;
+
+/// Bytes of the `len` prefix in front of every frame body.
+pub const FRAME_LEN_BYTES: usize = 4;
+/// Fixed bytes of every encoded message body (prelude before the bag).
+pub const MSG_FIXED_BYTES: usize = 20;
+/// Total framing overhead of any message: length prefix + fixed prelude.
+pub const ENVELOPE_BYTES: usize = FRAME_LEN_BYTES + MSG_FIXED_BYTES;
+/// Every bag encoding leads with a u32 entry count.
+pub const BAG_LEN_BYTES: usize = 4;
+/// Upper bound accepted by [`read_frame`] (a corrupt length field must
+/// not trigger a giant allocation).
+pub const MAX_FRAME_BYTES: usize = 1 << 28;
+
+const TAG_STEAL: u8 = 0;
+const TAG_LOOT: u8 = 1;
+const TAG_TERMINATE: u8 = 2;
+
+/// Why a decode failed. All variants are errors, never panics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the value was complete.
+    Truncated,
+    /// An unknown enum tag or non-boolean flag byte.
+    BadTag(u8),
+    /// Bytes left over after a complete decode.
+    Trailing(usize),
+    /// A structurally invalid value (e.g. an empty child range).
+    Invalid(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "wire frame truncated"),
+            WireError::BadTag(t) => write!(f, "bad wire tag byte {t:#04x}"),
+            WireError::Trailing(n) => write!(f, "{n} trailing bytes after decode"),
+            WireError::Invalid(what) => write!(f, "invalid wire value: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Cursor over a byte slice; every accessor fails with
+/// [`WireError::Truncated`] instead of slicing out of bounds.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() < n {
+            return Err(WireError::Truncated);
+        }
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        Ok(head)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    /// A strict boolean byte (0 or 1; anything else is [`WireError::BadTag`]).
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(WireError::BadTag(b)),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+}
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// A value with a self-delimiting byte encoding. Task bags implement this
+/// to travel between processes; `encode` followed by `decode` must be the
+/// identity (property-checked in `rust/tests/properties.rs`).
+pub trait WireCodec: Sized {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError>;
+}
+
+impl WireCodec for u32 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, *self);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u32()
+    }
+}
+
+impl WireCodec for u64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, *self);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        r.u64()
+    }
+}
+
+/// The default bag ships as a plain counted item array.
+impl<T: WireCodec + Send + 'static> WireCodec for ArrayListTaskBag<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.items().len() as u32);
+        for item in self.items() {
+            item.encode(out);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let count = r.u32()? as usize;
+        let mut items = Vec::new();
+        for _ in 0..count {
+            items.push(T::decode(r)?);
+        }
+        Ok(Self::from_vec(items))
+    }
+}
+
+/// Encode a message body (no length prefix) into `out`.
+pub fn encode_msg_body<B: WireCodec>(msg: &Msg<B>, out: &mut Vec<u8>) {
+    match msg {
+        Msg::Steal { thief, lifeline, nonce } => {
+            put_u8(out, TAG_STEAL);
+            put_u8(out, *lifeline as u8);
+            put_u64(out, *thief as u64);
+            put_u8(out, 1);
+            put_u64(out, *nonce);
+            put_u8(out, 0);
+        }
+        Msg::Loot { victim, bag, lifeline, nonce } => {
+            put_u8(out, TAG_LOOT);
+            put_u8(out, *lifeline as u8);
+            put_u64(out, *victim as u64);
+            put_u8(out, nonce.is_some() as u8);
+            put_u64(out, nonce.unwrap_or(0));
+            put_u8(out, bag.is_some() as u8);
+            if let Some(b) = bag {
+                b.encode(out);
+            }
+        }
+        Msg::Terminate => {
+            put_u8(out, TAG_TERMINATE);
+            put_u8(out, 0);
+            put_u64(out, 0);
+            put_u8(out, 0);
+            put_u64(out, 0);
+            put_u8(out, 0);
+        }
+    }
+}
+
+/// Decode a message body (no length prefix). Rejects trailing bytes.
+pub fn decode_msg_body<B: WireCodec>(buf: &[u8]) -> Result<Msg<B>, WireError> {
+    let mut r = Reader::new(buf);
+    let tag = r.u8()?;
+    let lifeline = r.bool()?;
+    let place = r.u64()? as PlaceId;
+    let nonce_present = r.bool()?;
+    let nonce = r.u64()?;
+    let bag_present = r.bool()?;
+    let msg = match tag {
+        TAG_STEAL => {
+            if !nonce_present || bag_present {
+                return Err(WireError::Invalid("steal envelope flags"));
+            }
+            Msg::Steal { thief: place, lifeline, nonce }
+        }
+        TAG_LOOT => {
+            let bag = if bag_present { Some(B::decode(&mut r)?) } else { None };
+            Msg::Loot { victim: place, bag, lifeline, nonce: nonce_present.then_some(nonce) }
+        }
+        TAG_TERMINATE => {
+            if lifeline || nonce_present || bag_present || place != 0 || nonce != 0 {
+                return Err(WireError::Invalid("terminate envelope not blank"));
+            }
+            Msg::Terminate
+        }
+        t => return Err(WireError::BadTag(t)),
+    };
+    match r.remaining() {
+        0 => Ok(msg),
+        n => Err(WireError::Trailing(n)),
+    }
+}
+
+/// Wrap an already-encoded body in a length-prefixed frame.
+pub fn frame(body: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_LEN_BYTES + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Encode a message as a complete length-prefixed frame.
+pub fn encode_frame<B: WireCodec>(msg: &Msg<B>) -> Vec<u8> {
+    let mut body = Vec::with_capacity(MSG_FIXED_BYTES);
+    encode_msg_body(msg, &mut body);
+    frame(body)
+}
+
+/// Decode a complete length-prefixed frame. The length prefix must match
+/// the slice exactly (truncated input is [`WireError::Truncated`], excess
+/// is [`WireError::Trailing`]).
+pub fn decode_frame<B: WireCodec>(buf: &[u8]) -> Result<Msg<B>, WireError> {
+    let mut r = Reader::new(buf);
+    let len = r.u32()? as usize;
+    if r.remaining() < len {
+        return Err(WireError::Truncated);
+    }
+    if r.remaining() > len {
+        return Err(WireError::Trailing(r.remaining() - len));
+    }
+    decode_msg_body(r.bytes(len)?)
+}
+
+/// `read_exact`, except a clean EOF *before the first byte* returns
+/// `Ok(false)` (the peer shut down between frames — normal teardown).
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(false);
+                }
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "eof mid-frame"));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Write one length-prefixed frame. Bodies over [`MAX_FRAME_BYTES`] are
+/// refused here, on the sender — otherwise the receiver's cap check
+/// would silently drop the link and hang the peer waiting on it.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    if body.len() > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds cap {MAX_FRAME_BYTES}", body.len()),
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)
+}
+
+/// Read one length-prefixed frame body. `Ok(None)` = clean peer shutdown
+/// between frames; mid-frame EOF and over-`max` lengths are I/O errors.
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut len4 = [0u8; 4];
+    if !read_exact_or_eof(r, &mut len4)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds cap {max}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type Bag = ArrayListTaskBag<u64>;
+
+    #[test]
+    fn fixed_prelude_is_the_documented_size() {
+        for msg in [
+            Msg::<Bag>::Steal { thief: 3, lifeline: true, nonce: 9 },
+            Msg::<Bag>::Loot { victim: 1, bag: None, lifeline: false, nonce: Some(4) },
+            Msg::<Bag>::Terminate,
+        ] {
+            let mut body = Vec::new();
+            encode_msg_body(&msg, &mut body);
+            assert_eq!(body.len(), MSG_FIXED_BYTES, "{}", msg.kind());
+            assert_eq!(encode_frame(&msg).len(), ENVELOPE_BYTES, "{}", msg.kind());
+        }
+    }
+
+    #[test]
+    fn roundtrips_every_variant() {
+        let msgs = [
+            Msg::<Bag>::Steal { thief: 7, lifeline: false, nonce: 41 },
+            Msg::<Bag>::Steal { thief: 0, lifeline: true, nonce: u64::MAX },
+            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: true, nonce: Some(5) },
+            Msg::<Bag>::Loot {
+                victim: 9,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1u64, 2, 3])),
+                lifeline: false,
+                nonce: None,
+            },
+            Msg::<Bag>::Terminate,
+        ];
+        for msg in msgs {
+            let frame = encode_frame(&msg);
+            let back: Msg<Bag> = decode_frame(&frame).expect("decode");
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_not_panic() {
+        let msg = Msg::<Bag>::Loot {
+            victim: 4,
+            bag: Some(ArrayListTaskBag::from_vec(vec![10u64, 20, 30, 40])),
+            lifeline: true,
+            nonce: Some(77),
+        };
+        let frame = encode_frame(&msg);
+        for cut in 0..frame.len() {
+            assert!(decode_frame::<Bag>(&frame[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut extended = frame.clone();
+        extended.push(0);
+        assert_eq!(decode_frame::<Bag>(&extended), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn bad_tags_are_rejected() {
+        let mut body = Vec::new();
+        encode_msg_body(&Msg::<Bag>::Terminate, &mut body);
+        body[0] = 9; // unknown message tag
+        assert_eq!(decode_msg_body::<Bag>(&body), Err(WireError::BadTag(9)));
+        body[0] = TAG_STEAL;
+        body[1] = 2; // non-boolean lifeline byte
+        assert_eq!(decode_msg_body::<Bag>(&body), Err(WireError::BadTag(2)));
+    }
+
+    #[test]
+    fn lying_count_hits_truncated_not_alloc() {
+        // A bag that claims u32::MAX entries but carries none.
+        let mut body = Vec::new();
+        encode_msg_body(
+            &Msg::<Bag>::Loot {
+                victim: 0,
+                bag: Some(ArrayListTaskBag::from_vec(Vec::new())),
+                lifeline: false,
+                nonce: None,
+            },
+            &mut body,
+        );
+        let count_at = MSG_FIXED_BYTES; // bag count is the first bag field
+        body[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(decode_msg_body::<Bag>(&body), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_clean_eof() {
+        let msg = Msg::<Bag>::Steal { thief: 5, lifeline: true, nonce: 12 };
+        let mut body = Vec::new();
+        encode_msg_body(&msg, &mut body);
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, &body).unwrap();
+        write_frame(&mut pipe, &body).unwrap();
+        let mut cursor = &pipe[..];
+        for _ in 0..2 {
+            let got = read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().expect("frame");
+            assert_eq!(decode_msg_body::<Bag>(&got).unwrap(), msg);
+        }
+        assert!(read_frame(&mut cursor, MAX_FRAME_BYTES).unwrap().is_none(), "clean eof");
+        // Mid-frame EOF is an error, not a clean shutdown.
+        let mut partial = &pipe[..7];
+        assert!(read_frame(&mut partial, MAX_FRAME_BYTES).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_without_alloc() {
+        let mut pipe = Vec::new();
+        pipe.extend_from_slice(&(u32::MAX).to_le_bytes());
+        let mut cursor = &pipe[..];
+        assert!(read_frame(&mut cursor, MAX_FRAME_BYTES).is_err());
+    }
+}

@@ -8,11 +8,11 @@ use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
 use glb::apps::fib::{fib, FibQueue};
 use glb::apps::nqueens::NQueensQueue;
 use glb::apps::uts::{UtsParams, UtsQueue};
-use glb::cli::{glb_params_from, Args, USAGE};
+use glb::cli::{glb_params_from, tcp_opts_from, transport_from, Args, TransportKind, USAGE};
 use glb::glb::task_queue::{SumReducer, VecSumReducer};
 use glb::glb::GlbConfig;
 use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
-use glb::place::run_threads;
+use glb::place::{run_sockets, run_threads, SocketRunOpts};
 use glb::runtime::{default_artifact_dir, DeviceService};
 use glb::sim::{run_sim, ArchProfile, BGQ};
 use glb::util::timefmt::{fmt_count, fmt_ns, fmt_rate};
@@ -37,7 +37,8 @@ fn main() {
 
 const COMMON: &[&str] = &[
     "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
-    "random-only", "rounds", "log", "csv", "autotune",
+    "random-only", "rounds", "log", "csv", "autotune", "transport", "rank", "peers", "port",
+    "host",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -77,12 +78,42 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
     known.extend(["depth", "b0", "seed-tree"]);
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "autotune"])?;
     args.ensure_known(&known)?;
-    let p = args.parse_opt("places", 4usize)?;
     let up = UtsParams {
         b0: args.parse_opt("b0", 4.0f64)?,
         seed: args.parse_opt("seed-tree", 19u32)?,
         max_depth: args.parse_opt("depth", 10u32)?,
     };
+    let transport = transport_from(&args)?;
+    if transport == TransportKind::Tcp {
+        // One process per GLB node: this invocation runs rank R of a
+        // --peers N fleet and reports its local share of the count.
+        if args.flag("autotune") {
+            bail!("--autotune is not supported with --transport tcp yet");
+        }
+        let t = tcp_opts_from(&args)?;
+        let params = glb_params_from(&args)?;
+        let p = args.parse_opt("places", t.peers * params.workers_per_node)?;
+        let cfg = GlbConfig::new(p, params);
+        let opts = SocketRunOpts {
+            rank: t.rank,
+            ranks: t.peers,
+            host: t.host.clone(),
+            port: t.port,
+            ..Default::default()
+        };
+        let out =
+            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)?;
+        println!(
+            "uts-g(tcp rank {}/{}) places={p} depth={} local-nodes={} (sum ranks for the total)",
+            t.rank,
+            t.peers,
+            up.max_depth,
+            fmt_count(out.result)
+        );
+        finish(&out, "nodes/s", args.flag("log"));
+        return Ok(());
+    }
+    let p = args.parse_opt("places", 4usize)?;
     let params = if args.flag("autotune") {
         let tuned = glb::glb::autotune::autotune_uts(p);
         println!("autotuned: n={} w={} l={} (paper future-work item 4)", tuned.n, tuned.w, tuned.l);
@@ -91,7 +122,7 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
         glb_params_from(&args)?
     };
     let cfg = GlbConfig::new(p, params);
-    if args.flag("sim") {
+    if transport == TransportKind::Sim {
         let arch = arch_from(&args)?;
         let cost = calibrate_uts_cost();
         let (out, rep) =
@@ -112,6 +143,12 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
     known.extend(["scale", "engine", "verify"]);
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "verify"])?;
     args.ensure_known(&known)?;
+    if transport_from(&args)? == TransportKind::Tcp {
+        bail!(
+            "--transport tcp currently supports the uts command \
+             (the BcBag wire codec is in; fleet BC is a ROADMAP follow-on)"
+        );
+    }
     let p = args.parse_opt("places", 4usize)?;
     let scale = args.parse_opt("scale", 9u32)?;
     let engine = args.get("engine").unwrap_or("sparse");
@@ -201,6 +238,9 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
     known.push("fib-n");
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
+    if transport_from(&args)? == TransportKind::Tcp {
+        bail!("--transport tcp currently supports the uts command");
+    }
     let p = args.parse_opt("places", 4usize)?;
     let n = args.parse_opt("fib-n", 24u64)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);
@@ -218,6 +258,9 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
     known.push("board");
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
+    if transport_from(&args)? == TransportKind::Tcp {
+        bail!("--transport tcp currently supports the uts command");
+    }
     let p = args.parse_opt("places", 4usize)?;
     let b = args.parse_opt("board", 10u8)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);

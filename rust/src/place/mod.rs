@@ -16,9 +16,16 @@
 //! workers kicked into the steal protocol) **before** any thread runs, so
 //! the token ledger is complete when the first message flows — see
 //! `glb::termination` for why that matters.
+//!
+//! The sibling [`socket`] runtime lifts the same engine across OS
+//! *processes*: one process per GLB node, messages as length-prefixed
+//! TCP frames ([`crate::glb::wire`]), and a fleet-wide start barrier
+//! that recreates this sequential-setup guarantee distributedly.
 
 pub mod network;
 pub mod runtime;
+pub mod socket;
 
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
+pub use socket::{run_sockets, SocketRunOpts};

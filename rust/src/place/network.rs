@@ -11,7 +11,9 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::glb::message::{Msg, PlaceId};
@@ -68,7 +70,32 @@ impl<B> Transport<B> {
 /// Router thread body: hold each message until its due time, then
 /// forward to the destination mailbox. Exits when all senders hang up
 /// and the heap drains.
+///
+/// An idle router (empty heap) **blocks** on `recv()` — it used to poll
+/// on a 50 ms timeout forever, burning a wakeup per tick for the whole
+/// (possibly long) stretch of a run in which no latency-injected message
+/// is in flight. [`router_main_counting`] exposes the spurious-wakeup
+/// counter the regression test pins to zero.
 pub fn router_main<B: Send>(rx: Receiver<Routed<B>>, mailboxes: Vec<Sender<Msg<B>>>) {
+    router_loop(rx, mailboxes, None)
+}
+
+/// [`router_main`] with instrumentation: `spurious` is incremented every
+/// time the router wakes from a timed wait and finds nothing due to
+/// forward (the failure mode of the old idle-polling loop).
+pub fn router_main_counting<B: Send>(
+    rx: Receiver<Routed<B>>,
+    mailboxes: Vec<Sender<Msg<B>>>,
+    spurious: Arc<AtomicU64>,
+) {
+    router_loop(rx, mailboxes, Some(spurious))
+}
+
+fn router_loop<B: Send>(
+    rx: Receiver<Routed<B>>,
+    mailboxes: Vec<Sender<Msg<B>>>,
+    spurious: Option<Arc<AtomicU64>>,
+) {
     struct Entry<B>(Instant, u64, PlaceId, Msg<B>);
     impl<B> PartialEq for Entry<B> {
         fn eq(&self, o: &Self) -> bool {
@@ -89,7 +116,6 @@ pub fn router_main<B: Send>(rx: Receiver<Routed<B>>, mailboxes: Vec<Sender<Msg<B
 
     let mut heap: BinaryHeap<Reverse<Entry<B>>> = BinaryHeap::new();
     let mut seq = 0u64;
-    let mut closed = false;
     loop {
         // Forward everything due.
         let now = Instant::now();
@@ -97,21 +123,51 @@ pub fn router_main<B: Send>(rx: Receiver<Routed<B>>, mailboxes: Vec<Sender<Msg<B
             let Reverse(Entry(_, _, to, msg)) = heap.pop().unwrap();
             let _ = mailboxes[to].send(msg);
         }
-        if closed && heap.is_empty() {
-            return;
-        }
-        // Wait for the next due time or the next incoming message.
-        let timeout = heap
-            .peek()
-            .map(|Reverse(e)| e.0.saturating_duration_since(Instant::now()))
-            .unwrap_or(Duration::from_millis(50));
-        match rx.recv_timeout(timeout) {
-            Ok(r) => {
-                heap.push(Reverse(Entry(r.due, seq, r.to, r.msg)));
-                seq += 1;
+        match heap.peek().map(|Reverse(e)| e.0) {
+            // Idle: nothing in flight, so block until traffic arrives or
+            // every sender hangs up — zero wakeups in between.
+            None => match rx.recv() {
+                Ok(r) => {
+                    heap.push(Reverse(Entry(r.due, seq, r.to, r.msg)));
+                    seq += 1;
+                }
+                Err(_) => return,
+            },
+            // Something is in flight: wait for its due time or for the
+            // next incoming message, whichever comes first.
+            Some(next_due) => {
+                let timeout = next_due.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => {
+                        heap.push(Reverse(Entry(r.due, seq, r.to, r.msg)));
+                        seq += 1;
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        // A due-time wakeup; the next loop iteration
+                        // forwards it. Waking with nothing due would be
+                        // the old idle-poll bug.
+                        if let Some(c) = &spurious {
+                            let now = Instant::now();
+                            if !heap.peek().is_some_and(|Reverse(e)| e.0 <= now) {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // Senders gone: deliver the remaining in-flight
+                        // messages at their due times, then exit (the old
+                        // loop busy-spun on the disconnected channel here).
+                        while let Some(Reverse(Entry(due, _, to, msg))) = heap.pop() {
+                            let wait = due.saturating_duration_since(Instant::now());
+                            if !wait.is_zero() {
+                                std::thread::sleep(wait);
+                            }
+                            let _ = mailboxes[to].send(msg);
+                        }
+                        return;
+                    }
+                }
             }
-            Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => closed = true,
         }
     }
 }
@@ -157,6 +213,32 @@ mod tests {
         assert!(matches!(rx0.try_recv(), Ok(Msg::Terminate)));
         assert!(rx1.try_recv().is_err(), "no self-terminate");
         assert!(matches!(rx2.try_recv(), Ok(Msg::Terminate)));
+    }
+
+    #[test]
+    fn idle_router_makes_no_spurious_wakeups() {
+        // Regression: an idle router used to wake every 50 ms forever.
+        // Now it blocks on `recv()`, so a long idle stretch followed by
+        // real traffic must record zero empty wakeups.
+        let (mb_tx, mb_rx) = channel::<Msg<Vec<u8>>>();
+        let (rt_tx, rt_rx) = channel();
+        let wakeups = Arc::new(AtomicU64::new(0));
+        let counter = wakeups.clone();
+        let router =
+            std::thread::spawn(move || router_main_counting(rt_rx, vec![mb_tx], counter));
+        // Idle far longer than the old 50 ms poll interval.
+        std::thread::sleep(Duration::from_millis(260));
+        assert_eq!(wakeups.load(Ordering::Relaxed), 0, "idle router must sleep");
+        // It still forwards traffic promptly after the idle stretch.
+        let t = Transport::Delayed(rt_tx);
+        t.send(0, Msg::Terminate, Duration::from_millis(5));
+        match mb_rx.recv_timeout(Duration::from_secs(2)) {
+            Ok(Msg::Terminate) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(t);
+        router.join().unwrap();
+        assert_eq!(wakeups.load(Ordering::Relaxed), 0, "due-time waits are not spurious");
     }
 
     #[test]

@@ -187,7 +187,6 @@ mod tests {
         assert_eq!(BGQ.node_of(16), 1);
     }
 
-
     #[test]
     fn intra_beats_inter() {
         let p = 64;

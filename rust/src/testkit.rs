@@ -1,5 +1,7 @@
 //! A small property-testing kit (the offline environment has no
-//! `proptest`): seeded random case generation with failure reporting.
+//! `proptest`): seeded random case generation with failure reporting,
+//! plus [`fleet`] — a process-fleet launcher for multi-process socket
+//! transport tests.
 //!
 //! [`check_cases`] runs a property over `iters` generated cases; on
 //! failure it panics with the *seed* of the failing case so the exact
@@ -90,6 +92,216 @@ pub fn check_cases(name: &str, iters: u64, prop: impl Fn(&mut Gen) + std::panic:
             panic!(
                 "property {name:?} failed on case {i} (replay with GLB_PROP_SEED={seed}):\n{msg}"
             );
+        }
+    }
+}
+
+pub mod fleet {
+    //! Deterministic multi-process test harness for the socket transport
+    //! ([`crate::place::socket`]).
+    //!
+    //! A fleet test re-executes **its own test binary** once per rank
+    //! (the classic self-exec pattern: `current_exe()` + `--exact
+    //! <test>` + role environment variables), so the children run the
+    //! exact code under test with no extra binaries to build. The test
+    //! function checks [`child_role`] first: `Some` means "I am rank N
+    //! of a fleet — run the child body and [`emit`] my `RunLog` fields";
+    //! `None` means "I am the orchestrator — [`run`] the fleet and
+    //! assert over the collected [`ProcLog`]s".
+    //!
+    //! Children print their results as single `GLB-FLEET key=value ...`
+    //! lines on stdout; everything else (libtest chatter) is ignored by
+    //! the parser. A watchdog kills the fleet after a deadline so a
+    //! protocol hang fails the test instead of wedging CI.
+
+    use std::collections::HashMap;
+    use std::net::TcpListener;
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+
+    const ENV_RANK: &str = "GLB_FLEET_RANK";
+    const ENV_RANKS: &str = "GLB_FLEET_RANKS";
+    const ENV_PORT: &str = "GLB_FLEET_PORT";
+
+    /// Marker prefix of a child's result line on stdout.
+    pub const LOG_PREFIX: &str = "GLB-FLEET";
+
+    /// This process's role in a fleet, if it was spawned as a child.
+    #[derive(Debug, Clone, Copy)]
+    pub struct ChildRole {
+        pub rank: usize,
+        pub ranks: usize,
+        pub port: u16,
+    }
+
+    /// `Some` iff the process was spawned by [`run`] (fleet environment
+    /// variables present and well-formed).
+    pub fn child_role() -> Option<ChildRole> {
+        let rank = std::env::var(ENV_RANK).ok()?.parse().ok()?;
+        let ranks = std::env::var(ENV_RANKS).ok()?.parse().ok()?;
+        let port = std::env::var(ENV_PORT).ok()?.parse().ok()?;
+        Some(ChildRole { rank, ranks, port })
+    }
+
+    /// Pick a currently-free localhost port for the fleet rendezvous.
+    /// (Bound briefly, then released for rank 0 to claim — the window is
+    /// tiny and ephemeral ports make collisions vanishingly rare.)
+    pub fn free_port() -> u16 {
+        TcpListener::bind(("127.0.0.1", 0))
+            .expect("bind ephemeral port")
+            .local_addr()
+            .expect("local addr")
+            .port()
+    }
+
+    /// Print a child's result line for the orchestrator to collect.
+    pub fn emit(rank: usize, fields: &[(&str, String)]) {
+        let mut line = format!("{LOG_PREFIX} rank={rank}");
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(v);
+        }
+        println!("{line}");
+    }
+
+    /// One child's parsed result line.
+    #[derive(Debug, Clone)]
+    pub struct ProcLog {
+        pub rank: usize,
+        fields: HashMap<String, String>,
+    }
+
+    impl ProcLog {
+        pub fn get(&self, key: &str) -> Option<&str> {
+            self.fields.get(key).map(|s| s.as_str())
+        }
+
+        /// A required numeric field.
+        pub fn u64(&self, key: &str) -> u64 {
+            self.get(key)
+                .unwrap_or_else(|| panic!("fleet log of rank {} lacks {key:?}", self.rank))
+                .parse()
+                .unwrap_or_else(|e| panic!("fleet log field {key:?}: {e}"))
+        }
+    }
+
+    fn parse_line(line: &str) -> ProcLog {
+        let mut fields = HashMap::new();
+        for pair in line.split_whitespace().skip(1) {
+            if let Some((k, v)) = pair.split_once('=') {
+                fields.insert(k.to_string(), v.to_string());
+            }
+        }
+        let rank = fields
+            .get("rank")
+            .and_then(|r| r.parse().ok())
+            .unwrap_or_else(|| panic!("fleet log line lacks a rank: {line:?}"));
+        ProcLog { rank, fields }
+    }
+
+    /// Spawn `ranks` children of the current test binary re-entering
+    /// `exact_test`, wait for all of them (killing the fleet after
+    /// `deadline`), and return their result logs sorted by rank. Panics
+    /// if any child fails or emits no result line.
+    pub fn run(exact_test: &str, ranks: usize, port: u16, deadline: Duration) -> Vec<ProcLog> {
+        assert!(ranks >= 1);
+        let exe = std::env::current_exe().expect("current_exe");
+        let mut children: Vec<(usize, std::process::Child)> = (0..ranks)
+            .map(|rank| {
+                // `--include-ignored`: fleet tests are `#[ignore]`d so the
+                // plain `cargo test` pass doesn't race several process
+                // fleets at once; the child must still run them.
+                let child = Command::new(&exe)
+                    .args([
+                        exact_test,
+                        "--exact",
+                        "--include-ignored",
+                        "--test-threads",
+                        "1",
+                        "--nocapture",
+                    ])
+                    .env(ENV_RANK, rank.to_string())
+                    .env(ENV_RANKS, ranks.to_string())
+                    .env(ENV_PORT, port.to_string())
+                    .stdin(Stdio::null())
+                    .stdout(Stdio::piped())
+                    .stderr(Stdio::piped())
+                    .spawn()
+                    .unwrap_or_else(|e| panic!("spawn fleet rank {rank}: {e}"));
+                (rank, child)
+            })
+            .collect();
+
+        // Watchdog: a wedged fleet must fail loudly, not hang CI. The
+        // children's output is far below the pipe buffer, so polling
+        // exit status without draining pipes cannot deadlock.
+        let give_up = Instant::now() + deadline;
+        loop {
+            let all_done = children
+                .iter_mut()
+                .all(|(_, c)| c.try_wait().expect("poll fleet child").is_some());
+            if all_done {
+                break;
+            }
+            if Instant::now() > give_up {
+                for (_, c) in children.iter_mut() {
+                    let _ = c.kill();
+                }
+                panic!("fleet {exact_test:?} timed out after {deadline:?}");
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+
+        let mut logs: Vec<ProcLog> = Vec::with_capacity(ranks);
+        for (rank, child) in children {
+            let out = child.wait_with_output().expect("collect fleet child output");
+            let stdout = String::from_utf8_lossy(&out.stdout);
+            if !out.status.success() {
+                panic!(
+                    "fleet rank {rank} failed ({}):\n--- stdout\n{stdout}--- stderr\n{}",
+                    out.status,
+                    String::from_utf8_lossy(&out.stderr),
+                );
+            }
+            let line = stdout.lines().find(|l| l.starts_with(LOG_PREFIX)).unwrap_or_else(|| {
+                panic!("fleet rank {rank} emitted no {LOG_PREFIX} line:\n{stdout}")
+            });
+            let log = parse_line(line);
+            assert_eq!(log.rank, rank, "child reported the wrong rank");
+            logs.push(log);
+        }
+        logs.sort_by_key(|l| l.rank);
+        logs
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn log_lines_roundtrip() {
+            let log = parse_line("GLB-FLEET rank=2 result=1023 loot=4");
+            assert_eq!(log.rank, 2);
+            assert_eq!(log.u64("result"), 1023);
+            assert_eq!(log.u64("loot"), 4);
+            assert_eq!(log.get("missing"), None);
+        }
+
+        #[test]
+        fn non_children_have_no_role() {
+            // The test harness itself is never spawned with the fleet
+            // environment, so the orchestrator path must be taken.
+            assert!(child_role().is_none());
+        }
+
+        #[test]
+        fn free_ports_are_usable() {
+            let p = free_port();
+            assert_ne!(p, 0);
+            // The port was released and can be bound again immediately.
+            std::net::TcpListener::bind(("127.0.0.1", p)).expect("rebind freed port");
         }
     }
 }

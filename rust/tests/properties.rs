@@ -7,15 +7,20 @@
 //!   exactly zero afterwards;
 //! * determinism — the simulator replays bit-identically;
 //! * topology — the lifeline graph stays connected with bounded
-//!   out-degree for arbitrary (P, l, z).
+//!   out-degree for arbitrary (P, l, z);
+//! * wire — the socket codec round-trips every message and bag shape,
+//!   and truncated/corrupt frames error instead of panicking.
 
 use std::collections::{HashSet, VecDeque};
 
-use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
+use glb::apps::bc::BcBag;
+use glb::apps::uts::{sequential_count, UtsBag, UtsNode, UtsParams, UtsQueue};
 use glb::glb::lifeline::LifelineGraph;
+use glb::glb::message::Msg;
 use glb::glb::params::StealPolicy;
 use glb::glb::task_bag::{ArrayListTaskBag, TaskBag};
 use glb::glb::task_queue::SumReducer;
+use glb::glb::wire::{self, WireCodec};
 use glb::glb::{GlbConfig, GlbParams};
 use glb::sim::{run_sim, ArchProfile, CostModel, BGQ, K, POWER775};
 use glb::testkit::{check_cases, Gen};
@@ -76,6 +81,147 @@ fn prop_bc_interval_bag_conserves_vertices() {
         let consumed_free: u64 =
             bag.vertices() + shards.iter().map(|s| s.vertices()).sum::<u64>();
         assert!(consumed_free <= n as u64, "never create vertices");
+    });
+}
+
+// ---------------------------------------------------------------------
+// wire codec (the socket transport's frame format)
+// ---------------------------------------------------------------------
+
+fn random_uts_bag(g: &mut Gen) -> UtsBag {
+    let entries = g.usize(0..40);
+    let nodes = (0..entries)
+        .map(|_| {
+            let mut desc = [0u8; 20];
+            for b in desc.iter_mut() {
+                *b = g.u64(0..256) as u8;
+            }
+            let lo = g.u64(0..100_000) as u32;
+            let width = g.u64(1..64) as u32;
+            UtsNode { desc, depth: g.u64(0..64) as u32, lo, hi: lo + width }
+        })
+        .collect();
+    UtsBag::from_nodes(nodes)
+}
+
+fn random_bc_bag(g: &mut Gen) -> BcBag {
+    let entries = g.usize(0..40);
+    let intervals = (0..entries)
+        .map(|_| {
+            let lo = g.u64(0..1_000_000) as u32;
+            let width = g.u64(1..5_000) as u32;
+            (lo, lo + width)
+        })
+        .collect();
+    BcBag::from_intervals(intervals)
+}
+
+/// A random message over `bag` covering every variant / flag combination.
+fn random_msg<B>(g: &mut Gen, bag: B) -> Msg<B> {
+    match g.usize(0..5) {
+        0 => Msg::Steal {
+            thief: g.usize(0..1 << 20),
+            lifeline: g.bool(0.5),
+            nonce: g.u64(0..u64::MAX),
+        },
+        1 => Msg::Loot {
+            victim: g.usize(0..1 << 20),
+            bag: None,
+            lifeline: g.bool(0.5),
+            nonce: Some(g.u64(0..u64::MAX)),
+        },
+        2 => Msg::Loot { victim: g.usize(0..1 << 20), bag: Some(bag), lifeline: true, nonce: None },
+        3 => Msg::Loot {
+            victim: g.usize(0..1 << 20),
+            bag: Some(bag),
+            lifeline: g.bool(0.5),
+            nonce: Some(g.u64(0..u64::MAX)),
+        },
+        _ => Msg::Terminate,
+    }
+}
+
+fn assert_roundtrip<B: WireCodec + PartialEq + std::fmt::Debug>(msg: &Msg<B>) {
+    let frame = wire::encode_frame(msg);
+    let back: Msg<B> = wire::decode_frame(&frame).expect("decode own encoding");
+    assert_eq!(&back, msg);
+}
+
+#[test]
+fn prop_wire_roundtrip_every_msg_variant_uts() {
+    check_cases("wire-roundtrip-uts", 300, |g: &mut Gen| {
+        let bag = random_uts_bag(g);
+        let msg = random_msg(g, bag);
+        assert_roundtrip(&msg);
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_every_msg_variant_bc() {
+    check_cases("wire-roundtrip-bc", 300, |g: &mut Gen| {
+        let bag = random_bc_bag(g);
+        let msg = random_msg(g, bag);
+        assert_roundtrip(&msg);
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_arraylist_bags() {
+    check_cases("wire-roundtrip-arraylist", 200, |g: &mut Gen| {
+        let len = g.usize(0..100);
+        let items = g.vec(len, |g| g.u64(0..u64::MAX));
+        let msg = random_msg(g, ArrayListTaskBag::from_vec(items));
+        assert_roundtrip(&msg);
+    });
+}
+
+#[test]
+fn prop_wire_truncated_frames_error_not_panic() {
+    check_cases("wire-truncation", 120, |g: &mut Gen| {
+        let bag = random_uts_bag(g);
+        let msg = random_msg(g, bag);
+        let frame = wire::encode_frame(&msg);
+        // Every strict prefix must decode to an error (never a panic,
+        // never a silently-short message).
+        for cut in 0..frame.len() {
+            assert!(wire::decode_frame::<UtsBag>(&frame[..cut]).is_err(), "cut={cut}");
+        }
+        // A single flipped byte may decode (e.g. inside a descriptor) or
+        // error — but must never panic. The length prefix is exempt: a
+        // larger claimed length is just Truncated, checked above.
+        let mut corrupt = frame.clone();
+        let at = g.usize(0..corrupt.len());
+        corrupt[at] ^= 1 << g.usize(0..8);
+        let _ = wire::decode_frame::<UtsBag>(&corrupt);
+    });
+}
+
+#[test]
+fn prop_wire_bytes_pin_sim_accounting_to_codec() {
+    // The simulator charges `Msg::wire_bytes` per message; the socket
+    // transport sends `wire::encode_frame`. For bag-less messages the two
+    // must agree to the byte; for loot the codec adds exactly the bag
+    // count word on top of the per-entry payload.
+    check_cases("wire-bytes-vs-codec", 200, |g: &mut Gen| {
+        let entries = |b: &UtsBag| b.nodes().len();
+        let bag = random_uts_bag(g);
+        let msg = random_msg(g, bag);
+        let encoded = wire::encode_frame(&msg).len();
+        match &msg {
+            Msg::Loot { bag: Some(b), .. } => {
+                assert_eq!(
+                    encoded,
+                    wire::ENVELOPE_BYTES
+                        + wire::BAG_LEN_BYTES
+                        + UtsBag::WIRE_BYTES_PER_NODE * b.nodes().len()
+                );
+                assert_eq!(
+                    encoded,
+                    msg.wire_bytes(UtsBag::WIRE_BYTES_PER_NODE, entries) + wire::BAG_LEN_BYTES
+                );
+            }
+            _ => assert_eq!(encoded, msg.wire_bytes(UtsBag::WIRE_BYTES_PER_NODE, entries)),
+        }
     });
 }
 

@@ -1,0 +1,122 @@
+//! Multi-process socket-transport integration tests.
+//!
+//! These tests exercise the real thing: N OS processes (children of this
+//! test binary, via `testkit::fleet`) running the GLB lifeline protocol
+//! over localhost TCP, with the global termination ledger served by rank
+//! 0. The summed fleet result must be bit-identical to the
+//! single-process thread runtime at the same worker count — UTS counts a
+//! deterministic tree, so any protocol bug (lost loot, double-merge,
+//! premature terminate) shows up as a count mismatch.
+//!
+//! Children re-enter the *same test function* with `--exact`; the
+//! `fleet::child_role()` check at the top of each test routes them to
+//! the child body. CI runs this file with `--test-threads=1` (each
+//! orchestrator spawns a process fleet; see .github/workflows/ci.yml).
+
+use std::time::Duration;
+
+use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
+use glb::glb::task_queue::SumReducer;
+use glb::glb::{GlbConfig, GlbParams};
+use glb::place::{run_sockets, run_threads, SocketRunOpts};
+use glb::testkit::fleet;
+
+const DEPTH: u32 = 7;
+const FLEET_DEADLINE: Duration = Duration::from_secs(120);
+
+fn up() -> UtsParams {
+    UtsParams { b0: 4.0, seed: 19, max_depth: DEPTH }
+}
+
+fn params() -> GlbParams {
+    GlbParams::default().with_n(64).with_l(2)
+}
+
+/// Fleet-child body: run this rank's share of the UTS computation and
+/// report the local counters on stdout.
+fn run_child(role: fleet::ChildRole, params: GlbParams, p: usize) {
+    let cfg = GlbConfig::new(p, params);
+    let opts = SocketRunOpts {
+        rank: role.rank,
+        ranks: role.ranks,
+        port: role.port,
+        ..Default::default()
+    };
+    let out =
+        run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up()), |q| q.init_root(), &SumReducer)
+            .expect("fleet child run failed");
+    let t = out.log.total();
+    fleet::emit(
+        role.rank,
+        &[
+            ("result", out.result.to_string()),
+            ("places", out.log.per_place.len().to_string()),
+            ("loot_sent", t.loot_bags_sent.to_string()),
+            ("loot_recv", t.loot_bags_received.to_string()),
+            ("node_donations", t.node_donations.to_string()),
+            ("node_takes", t.node_takes.to_string()),
+        ],
+    );
+}
+
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn four_process_uts_fleet_matches_thread_runtime() {
+    if let Some(role) = fleet::child_role() {
+        run_child(role, params(), 4);
+        return;
+    }
+    let port = fleet::free_port();
+    let logs =
+        fleet::run("four_process_uts_fleet_matches_thread_runtime", 4, port, FLEET_DEADLINE);
+    assert_eq!(logs.len(), 4);
+    for l in &logs {
+        assert_eq!(l.u64("places"), 1, "flat fleet: one worker per process");
+    }
+
+    // The acceptance bar: a 4-process TCP fleet produces results
+    // bit-identical to the thread runtime at equal worker count.
+    let fleet_total: u64 = logs.iter().map(|l| l.u64("result")).sum();
+    let cfg = GlbConfig::new(4, params());
+    let reference = run_threads(&cfg, |_, _| UtsQueue::new(up()), |q| q.init_root(), &SumReducer);
+    assert_eq!(fleet_total, reference.result, "fleet must count the exact same tree");
+    assert_eq!(fleet_total, sequential_count(&up()), "and the tree is the sequential one");
+
+    // Conservation across the wire: every loot bag sent over TCP landed.
+    let sent: u64 = logs.iter().map(|l| l.u64("loot_sent")).sum();
+    let recv: u64 = logs.iter().map(|l| l.u64("loot_recv")).sum();
+    assert_eq!(sent, recv, "loot conservation over TCP");
+    assert!(recv > 0, "a 4-process UTS run must actually move work");
+}
+
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn hierarchical_fleet_shares_in_process_and_steals_across() {
+    // 2 processes × 2 workers: each process is one GLB node whose
+    // representative owns the sockets; the second worker of each node is
+    // fed through the shared-memory NodeBag, never the wire.
+    let hp = params().with_n(32).with_workers_per_node(2);
+    if let Some(role) = fleet::child_role() {
+        run_child(role, hp, 4);
+        return;
+    }
+    let port = fleet::free_port();
+    let logs = fleet::run(
+        "hierarchical_fleet_shares_in_process_and_steals_across",
+        2,
+        port,
+        FLEET_DEADLINE,
+    );
+    assert_eq!(logs.len(), 2);
+    for l in &logs {
+        assert_eq!(l.u64("places"), 2, "each process hosts a 2-worker node");
+        // Node-bag shards never cross a process, so each rank's
+        // donate/take books balance on their own.
+        assert_eq!(l.u64("node_donations"), l.u64("node_takes"), "rank {}", l.rank);
+    }
+    let fleet_total: u64 = logs.iter().map(|l| l.u64("result")).sum();
+    let cfg = GlbConfig::new(4, hp);
+    let reference = run_threads(&cfg, |_, _| UtsQueue::new(up()), |q| q.init_root(), &SumReducer);
+    assert_eq!(fleet_total, reference.result);
+    assert_eq!(fleet_total, sequential_count(&up()));
+}

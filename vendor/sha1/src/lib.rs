@@ -1,0 +1,141 @@
+//! Minimal offline stand-in for the RustCrypto `sha1` crate.
+//!
+//! The build environment has no crates.io access, so this vendored shim
+//! provides the API surface the repository actually uses:
+//!
+//! * [`compress`] — the raw SHA-1 compression function over whole
+//!   64-byte blocks (the UTS hot path hand-pads a single block and
+//!   calls this directly);
+//! * [`Sha1`] + [`Digest::digest`] — one-shot hashing of arbitrary
+//!   messages (used by tests as the streaming oracle).
+//!
+//! The implementation is plain FIPS 180-4 SHA-1 and is bit-identical to
+//! the real crate's output (pinned against reference vectors below).
+//! Swapping in the real `sha1` is a Cargo.toml-only change.
+
+/// One 512-bit message block.
+pub type Block = [u8; 64];
+
+/// SHA-1 initial state (FIPS 180-4 §5.3.1).
+const IV: [u32; 5] = [0x6745_2301, 0xEFCD_AB89, 0x98BA_DCFE, 0x1032_5476, 0xC3D2_E1F0];
+
+/// Apply the SHA-1 compression function to `state` for each block.
+pub fn compress(state: &mut [u32; 5], blocks: &[Block]) {
+    for block in blocks {
+        compress_block(state, block);
+    }
+}
+
+fn compress_block(state: &mut [u32; 5], block: &[u8; 64]) {
+    let mut w = [0u32; 80];
+    for (i, word) in w.iter_mut().take(16).enumerate() {
+        *word = u32::from_be_bytes(block[4 * i..4 * i + 4].try_into().unwrap());
+    }
+    for t in 16..80 {
+        w[t] = (w[t - 3] ^ w[t - 8] ^ w[t - 14] ^ w[t - 16]).rotate_left(1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e] = *state;
+    for (t, &wt) in w.iter().enumerate() {
+        let (f, k) = match t {
+            0..=19 => ((b & c) | (!b & d), 0x5A82_7999u32),
+            20..=39 => (b ^ c ^ d, 0x6ED9_EBA1),
+            40..=59 => ((b & c) | (b & d) | (c & d), 0x8F1B_BCDC),
+            _ => (b ^ c ^ d, 0xCA62_C1D6),
+        };
+        let temp = a
+            .rotate_left(5)
+            .wrapping_add(f)
+            .wrapping_add(e)
+            .wrapping_add(k)
+            .wrapping_add(wt);
+        e = d;
+        d = c;
+        c = b.rotate_left(30);
+        b = a;
+        a = temp;
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+}
+
+/// The subset of the RustCrypto `Digest` trait the repository uses.
+pub trait Digest {
+    /// One-shot hash of `data`.
+    fn digest(data: impl AsRef<[u8]>) -> [u8; 20];
+}
+
+/// The SHA-1 hasher (one-shot API only).
+pub struct Sha1;
+
+impl Digest for Sha1 {
+    fn digest(data: impl AsRef<[u8]>) -> [u8; 20] {
+        let msg = data.as_ref();
+        let mut state = IV;
+        let mut blocks = msg.chunks_exact(64);
+        for block in blocks.by_ref() {
+            compress_block(&mut state, block.try_into().unwrap());
+        }
+        // Padding (§5.1.1): 0x80, zeros, 64-bit big-endian bit length —
+        // one tail block if the remainder leaves >= 9 free bytes, else two.
+        let rem = blocks.remainder();
+        let bit_len = (msg.len() as u64) * 8;
+        let tail_blocks = if rem.len() + 9 <= 64 { 1 } else { 2 };
+        let mut tail = [0u8; 128];
+        tail[..rem.len()].copy_from_slice(rem);
+        tail[rem.len()] = 0x80;
+        tail[tail_blocks * 64 - 8..tail_blocks * 64].copy_from_slice(&bit_len.to_be_bytes());
+        for block in tail[..tail_blocks * 64].chunks_exact(64) {
+            compress_block(&mut state, block.try_into().unwrap());
+        }
+        let mut out = [0u8; 20];
+        for (i, word) in state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(d: [u8; 20]) -> String {
+        d.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn reference_vectors() {
+        // Pinned against Python's hashlib (real SHA-1).
+        assert_eq!(hex(Sha1::digest([0u8; 0])), "da39a3ee5e6b4b0d3255bfef95601890afd80709");
+        assert_eq!(hex(Sha1::digest(b"abc")), "a9993e364706816aba3e25717850c26c9cd0d89d");
+        assert_eq!(hex(Sha1::digest([0u8; 20])), "6768033e216468247bd031a0a2d9876d79818f8f");
+        // Padding edges: 55 bytes (one tail block), 56 (two), 64 (exact).
+        assert_eq!(hex(Sha1::digest([b'a'; 55])), "c1c8bbdc22796e28c0e15163d20899b65621d65a");
+        assert_eq!(hex(Sha1::digest([b'a'; 56])), "c2db330f6083854c99d4b5bfb6e8f29f201be699");
+        assert_eq!(hex(Sha1::digest([0u8; 64])), "c8d7d0ef0eedfa82d2ea1aa592845b9a6d4b02b7");
+        // Multi-block message.
+        let long: Vec<u8> = (0..100u8).collect();
+        assert_eq!(hex(Sha1::digest(&long)), "1e6634bfaebc0348298105923d0f26e47aa33ff5");
+    }
+
+    #[test]
+    fn compress_matches_digest_for_hand_padded_block() {
+        // The UTS hot path pads a short message by hand and calls
+        // `compress` directly; that must equal the streaming digest.
+        let msg = [7u8; 24];
+        let mut block = [0u8; 64];
+        block[..24].copy_from_slice(&msg);
+        block[24] = 0x80;
+        block[56..].copy_from_slice(&(24u64 * 8).to_be_bytes());
+        let mut state = IV;
+        compress(&mut state, &[block]);
+        let mut out = [0u8; 20];
+        for (i, word) in state.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        assert_eq!(out, Sha1::digest(msg));
+    }
+}
