@@ -115,14 +115,21 @@ pub enum TransportKind {
 /// TCP fleet membership (`--transport tcp` only).
 #[derive(Debug, Clone)]
 pub struct TcpOpts {
-    /// This process's rank (0 = the listening hub).
+    /// This process's rank (0 = the bootstrap/discovery rank).
     pub rank: usize,
     /// Total processes in the fleet.
     pub peers: usize,
     /// Rank 0's rendezvous port.
     pub port: u16,
-    /// Rank 0's host.
+    /// Rank 0's *advertised* host (what the fleet dials).
     pub host: String,
+    /// Rank 0's *bind* address. Defaults to `0.0.0.0` when `--host` is
+    /// given (an advertised public address is often not locally
+    /// bindable), else to `host` itself.
+    pub bind: Option<String>,
+    /// This rank's advertised mesh IP (spokes on multi-homed hosts).
+    /// `None` advertises the interface this host reaches rank 0 from.
+    pub advertise: Option<String>,
 }
 
 /// Resolve `--transport tcp|thread|sim`; the legacy `--sim` / `--threads`
@@ -156,11 +163,18 @@ pub fn tcp_opts_from(args: &Args) -> Result<TcpOpts> {
     if rank >= peers {
         bail!("--rank {rank} out of range for --peers {peers}");
     }
+    let explicit_host = args.get("host");
+    let bind = match args.get("bind") {
+        Some(b) => Some(b.to_string()),
+        None => explicit_host.map(|_| "0.0.0.0".to_string()),
+    };
     Ok(TcpOpts {
         rank,
         peers,
         port: args.parse_opt("port", 7117u16)?,
-        host: args.get("host").unwrap_or("127.0.0.1").to_string(),
+        host: explicit_host.unwrap_or("127.0.0.1").to_string(),
+        bind,
+        advertise: args.get("advertise").map(String::from),
     })
 }
 
@@ -203,12 +217,17 @@ COMMANDS
 COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)
   --transport KIND       tcp|thread|sim — tcp runs this process as one GLB
-                         node of a multi-process fleet (uts only so far);
+                         node of a multi-process mesh fleet (uts and bc);
                          launch one process per node:
                            glb uts --transport tcp --peers 4 --rank 0 ...
                            glb uts --transport tcp --peers 4 --rank 1 ...
-  --rank R --peers N     fleet membership (tcp; rank 0 listens)
+  --rank R --peers N     fleet membership (tcp; rank 0 is bootstrap only —
+                         steady-state traffic flows spoke-to-spoke)
   --port P --host H      rank 0 rendezvous (default 7117 on 127.0.0.1)
+  --bind A               rank 0 bind address when --host is not locally
+                         bindable (default 0.0.0.0 whenever --host is set)
+  --advertise IP         this rank's mesh IP for peers to dial (multi-homed
+                         spokes; default: the interface that reaches rank 0)
   --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
   --n --w --l --z        GLB tuning parameters (paper §2.4)
   --workers-per-node K   hierarchical topology: K workers share a node bag
@@ -301,6 +320,7 @@ mod tests {
         let t = tcp_opts_from(&a).unwrap();
         assert_eq!((t.rank, t.peers, t.port), (2, 4, 7117));
         assert_eq!(t.host, "127.0.0.1");
+        assert_eq!(t.bind, None, "default host binds itself");
         let full =
             Args::parse(&s(&["--rank", "0", "--peers", "2", "--port", "9000", "--host", "h"]), &[])
                 .unwrap();
@@ -311,6 +331,34 @@ mod tests {
         assert!(tcp_opts_from(&oob).is_err());
         let missing = Args::parse(&s(&["--rank", "0"]), &[]).unwrap();
         assert!(tcp_opts_from(&missing).is_err());
+    }
+
+    #[test]
+    fn bind_splits_from_advertised_host() {
+        // --host alone: advertise the public address, bind the wildcard
+        // (the advertised address is often not locally bindable).
+        let a = Args::parse(&s(&["--rank", "0", "--peers", "2", "--host", "203.0.113.9"]), &[])
+            .unwrap();
+        let t = tcp_opts_from(&a).unwrap();
+        assert_eq!(t.host, "203.0.113.9");
+        assert_eq!(t.bind.as_deref(), Some("0.0.0.0"));
+        // Explicit --bind wins.
+        let b = Args::parse(
+            &s(&["--rank", "0", "--peers", "2", "--host", "203.0.113.9", "--bind", "10.0.0.2"]),
+            &[],
+        )
+        .unwrap();
+        let t = tcp_opts_from(&b).unwrap();
+        assert_eq!(t.bind.as_deref(), Some("10.0.0.2"));
+        // Multi-homed spokes can pin their advertised mesh IP.
+        let c = Args::parse(
+            &s(&["--rank", "1", "--peers", "2", "--advertise", "10.0.0.7"]),
+            &[],
+        )
+        .unwrap();
+        let t = tcp_opts_from(&c).unwrap();
+        assert_eq!(t.advertise.as_deref(), Some("10.0.0.7"));
+        assert_eq!(t.bind, None);
     }
 
     #[test]

@@ -17,6 +17,13 @@
 //!   traffic for regular workloads. We pick `l = 2` below the crossover
 //!   place count and `l = 32` (the X10 default) above, with `z`
 //!   derived.
+//! * **node grouping `workers_per_node`** — workers that share a machine
+//!   should share a [`crate::glb::topology::NodeBag`] instead of
+//!   message-stealing from each other, so the tuner reads the machine
+//!   shape (`std::thread::available_parallelism`) and groups up to one
+//!   core's worth of workers per node, preferring an even divisor of the
+//!   place count so no node is ragged. Before this, `--autotune`
+//!   silently produced flat topologies on many-core hosts.
 //!
 //! The model's choices are validated against brute-force sweeps in the
 //! ablation bench — see EXPERIMENTS.md.
@@ -61,7 +68,30 @@ pub fn autotune(p: usize, workload: WorkloadProfile) -> GlbParams {
     // large machines; the shallow X10 default is fine otherwise.
     let l = if workload.irregularity > 0.5 || p > 512 { 2 } else { 32 };
 
-    GlbParams::default().with_n(n).with_w(w).with_l(l)
+    GlbParams::default()
+        .with_n(n)
+        .with_w(w)
+        .with_l(l)
+        .with_workers_per_node(default_workers_per_node(p))
+}
+
+/// Node grouping for `p` places on a machine with `cores` hardware
+/// threads: the largest divisor of `p` not exceeding the core count (so
+/// nodes are even and the grouping never outgrows shared memory).
+/// `1` (flat) when either side offers no grouping.
+pub fn workers_per_node_for(p: usize, cores: usize) -> usize {
+    if p <= 1 || cores <= 1 {
+        return 1;
+    }
+    let target = cores.min(p);
+    (1..=target).rev().find(|d| p % d == 0).unwrap_or(1)
+}
+
+/// [`workers_per_node_for`] against this machine's
+/// `std::thread::available_parallelism`.
+pub fn default_workers_per_node(p: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    workers_per_node_for(p, cores)
 }
 
 /// Convenience: tune for UTS on this machine (measures the SHA-1 rate).
@@ -132,6 +162,32 @@ mod tests {
             &SumReducer,
         );
         assert_eq!(out.result, sequential_count(&up));
+    }
+
+    #[test]
+    fn node_grouping_tracks_machine_shape() {
+        // Even divisors, capped by cores, never ragged.
+        assert_eq!(workers_per_node_for(64, 16), 16);
+        assert_eq!(workers_per_node_for(64, 12), 8, "largest divisor <= cores");
+        assert_eq!(workers_per_node_for(10, 4), 2);
+        assert_eq!(workers_per_node_for(7, 4), 1, "prime places stay flat below p cores");
+        assert_eq!(workers_per_node_for(7, 8), 7, "whole machine fits one node");
+        assert_eq!(workers_per_node_for(1, 64), 1);
+        assert_eq!(workers_per_node_for(64, 1), 1, "single core: flat");
+    }
+
+    #[test]
+    fn autotune_groups_workers_and_stays_valid() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        for p in [1usize, 2, 7, 16, 60, 256] {
+            let params = autotune(p, WorkloadProfile::new(100.0, 1.0));
+            params.validate().expect("autotuned params validate");
+            assert_eq!(params.workers_per_node, workers_per_node_for(p, cores), "p={p}");
+            assert!(params.workers_per_node <= p.max(1));
+            if params.workers_per_node > 1 {
+                assert_eq!(p % params.workers_per_node, 0, "grouping divides p");
+            }
+        }
     }
 
     #[test]

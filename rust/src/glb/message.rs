@@ -26,6 +26,13 @@ pub type PlaceId = usize;
 /// asynchronous messaging the two are otherwise indistinguishable (same
 /// victim, same kind), which would corrupt the steal loop — see the
 /// `push_race_with_outstanding_request` test.
+///
+/// `credit` is the distributed-termination weight a loot bag carries
+/// (see [`crate::glb::termination`]): the victim detaches it from its
+/// rank's credit pool ([`crate::glb::termination::Ledger::export_credit`])
+/// and the thief absorbs it. Ledgers with a genuinely global token count
+/// (the thread runtime's atomic, the simulator's cell) ship `0`; a
+/// refusal (`bag: None`) never carries credit.
 #[derive(Debug, PartialEq)]
 pub enum Msg<B> {
     /// Work request from `thief`.
@@ -33,7 +40,7 @@ pub enum Msg<B> {
     /// Response to a steal (`bag: None` = refusal, echoing the request's
     /// `nonce`) or an unsolicited lifeline push (`bag: Some`,
     /// `lifeline: true`, `nonce: None`).
-    Loot { victim: PlaceId, bag: Option<B>, lifeline: bool, nonce: Option<u64> },
+    Loot { victim: PlaceId, bag: Option<B>, lifeline: bool, nonce: Option<u64>, credit: u64 },
     /// Global quiescence: unblock and finish.
     Terminate,
 }
@@ -42,12 +49,15 @@ impl<B> Msg<B> {
     /// Rough wire size in bytes, for the simulator's bandwidth/occupancy
     /// model. `item_bytes` is the application's per-task serialized size.
     /// The envelope is the socket codec's *actual* fixed message framing
-    /// ([`crate::glb::wire::ENVELOPE_BYTES`]: length prefix + prelude),
-    /// pinned by test to `wire::encode_frame` for bag-less messages. Bag
-    /// payloads are approximated by `item_bytes × items` (the codec adds
-    /// a 4-byte count word), and the socket transport's star routing
-    /// adds an 8-byte destination prefix per remote frame that this
-    /// point-to-point model deliberately leaves out.
+    /// ([`crate::glb::wire::ENVELOPE_BYTES`]: length prefix + prelude,
+    /// credit word included), pinned by test to `wire::encode_frame` for
+    /// bag-less messages. Bag payloads are approximated by
+    /// `item_bytes × items` (the codec adds a 4-byte count word). The
+    /// mesh transport's per-frame destination prefix
+    /// ([`crate::glb::wire::DATA_ROUTE_BYTES`]) is *not* part of this
+    /// point-to-point figure — the simulator adds it per cross-node
+    /// message, matching what the socket runtime actually puts on the
+    /// wire.
     pub fn wire_bytes(&self, item_bytes: usize, bag_items: impl Fn(&B) -> usize) -> usize {
         const HEADER: usize = crate::glb::wire::ENVELOPE_BYTES;
         match self {
@@ -92,11 +102,16 @@ mod tests {
         let len = |b: &Vec<u32>| b.len();
         let steal: Msg<Vec<u32>> = Msg::Steal { thief: 1, lifeline: false, nonce: 0 };
         assert_eq!(steal.wire_bytes(8, len), ENVELOPE_BYTES);
-        let loot =
-            Msg::Loot { victim: 0, bag: Some(vec![1, 2, 3]), lifeline: false, nonce: Some(0) };
+        let loot = Msg::Loot {
+            victim: 0,
+            bag: Some(vec![1, 2, 3]),
+            lifeline: false,
+            nonce: Some(0),
+            credit: 5,
+        };
         assert_eq!(loot.wire_bytes(8, len), ENVELOPE_BYTES + 24);
         let refusal: Msg<Vec<u32>> =
-            Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(1) };
+            Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(1), credit: 0 };
         assert_eq!(refusal.wire_bytes(8, len), ENVELOPE_BYTES);
     }
 
@@ -111,7 +126,7 @@ mod tests {
         let items = |b: &Bag| b.items().len();
         let bagless = [
             Msg::<Bag>::Steal { thief: 1, lifeline: true, nonce: 3 },
-            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: false, nonce: Some(7) },
+            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: false, nonce: Some(7), credit: 0 },
             Msg::<Bag>::Terminate,
         ];
         for m in bagless {
@@ -122,6 +137,7 @@ mod tests {
             bag: Some(ArrayListTaskBag::from_vec(vec![1u64, 2, 3])),
             lifeline: true,
             nonce: None,
+            credit: 9,
         };
         // u64 items are 8 bytes each; the codec adds only the bag count.
         assert_eq!(wire::encode_frame(&loot).len(), loot.wire_bytes(8, items) + BAG_LEN_BYTES);

@@ -76,7 +76,7 @@ pub use message::{Effect, Msg, PlaceId};
 pub use params::GlbParams;
 pub use task_bag::{ArrayListTaskBag, TaskBag};
 pub use task_queue::{FnReducer, ProcessOutcome, Reducer, SumReducer, TaskQueue, VecSumReducer};
-pub use termination::{AtomicLedger, Ledger, SimLedger};
+pub use termination::{AtomicLedger, CreditHome, CreditLedger, CreditRoot, Ledger, SimLedger};
 pub use topology::{NodeBag, Topology};
 pub use wire::{WireCodec, WireError};
 pub use worker::{Phase, StepOutcome, Worker};

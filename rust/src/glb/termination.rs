@@ -18,23 +18,73 @@
 //! requests and refusals are only outstanding while their thief still
 //! holds a token), so the detecting worker can broadcast `Terminate`
 //! without racing anything. This is checked by the property tests.
+//!
+//! ## Distributed detection: credit (weight) throwing
+//!
+//! A single shared counter is fine in one address space but serializes a
+//! multi-process fleet on whoever hosts it. The socket runtime instead
+//! uses Mattern-style *credit throwing*, split across three pieces:
+//!
+//! * [`CreditLedger`] — one per rank. `incr`/`decr` touch only a
+//!   rank-local token count (no I/O); the rank additionally holds a pool
+//!   of indivisible *credit atoms*. A loot message leaving the rank
+//!   detaches atoms ([`Ledger::export_credit`]) that travel inside the
+//!   message; the receiving rank absorbs them
+//!   ([`Ledger::import_credit`]). When a rank's token count hits zero it
+//!   deposits its whole pool to the root, asynchronously.
+//! * [`CreditHome`] — how a ledger reaches the root: an async `deposit`
+//!   plus a synchronous `replenish` for the pool-exhaustion case — the
+//!   *only* synchronous credit operation, amortized over many
+//!   cross-rank loot sends (see [`MAX_ATTACH_ATOMS`] for the honest
+//!   worst-case cadence), never per steal/loot event.
+//! * [`CreditRoot`] — the detector. Conservation is the whole proof:
+//!   every atom ever minted is either recovered at the root, in some
+//!   rank's pool, or attached to an in-flight message/deposit; a rank
+//!   holding tokens always holds ≥ 1 atom, and a loot message in flight
+//!   always carries ≥ 1 atom. So `recovered == total` **iff** no rank
+//!   holds a token and no loot is in flight — global quiescence — and
+//!   because replenishes grow `total` before the fresh atoms circulate,
+//!   the root can never observe equality early. Detection is therefore
+//!   asynchronous (the last deposit's arrival), and the root — not a
+//!   worker — broadcasts `Terminate` via [`CreditRoot::on_quiescent`].
+//!
+//! Conservation under arbitrary message delay/reordering is checked by
+//! `prop_credit_conserved_under_reorder` in `rust/tests/properties.rs`.
 
 use std::cell::Cell;
 use std::rc::Rc;
 use std::sync::atomic::{AtomicI64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Abstract global token counter so the same worker engine runs under the
-/// multi-threaded runtime (atomic) and the discrete-event simulator
-/// (plain cell).
+/// multi-threaded runtime (atomic), the discrete-event simulator (plain
+/// cell), and the socket fleet (rank-local credit ledger).
 pub trait Ledger {
     /// Acquire one token.
     fn incr(&self);
     /// Release one token; `true` when the count reached zero (global
-    /// quiescence observed by this caller, exactly once).
+    /// quiescence observed by this caller, exactly once). Distributed
+    /// ledgers always return `false` — their quiescence signal is the
+    /// root detector's, not the caller's.
     fn decr(&self) -> bool;
-    /// Current count (diagnostics, post-run assertions).
+    /// Current count (diagnostics, post-run assertions). For
+    /// [`CreditLedger`] this is the *local* token count.
     fn value(&self) -> i64;
+
+    /// Detach credit for a token leaving this ledger's domain attached to
+    /// an outbound loot message. The caller must have acquired the
+    /// message's token ([`Ledger::incr`]) first; the token count drops by
+    /// one and the returned atoms travel with the message. Ledgers whose
+    /// token count is already global ship no credit (`0`).
+    fn export_credit(&self) -> u64 {
+        0
+    }
+
+    /// Absorb the credit of an arriving loot message, accounting its
+    /// token locally. The receiver then either destroys the token
+    /// ([`Ledger::decr`], active thief) or adopts it (idle thief, no
+    /// call) — exactly the flat protocol's choreography.
+    fn import_credit(&self, _atoms: u64) {}
 }
 
 /// Thread-safe ledger for the thread runtime.
@@ -94,6 +144,258 @@ impl Ledger for SimLedger {
     }
 }
 
+// ---------------------------------------------------------------------
+// credit-based distributed termination
+// ---------------------------------------------------------------------
+
+/// Atoms granted to every rank's pool at fleet start.
+pub const INITIAL_RANK_ATOMS: u64 = 1 << 20;
+/// Atoms minted per synchronous replenish (pool exhaustion fallback).
+pub const REPLENISH_ATOMS: u64 = 1 << 20;
+/// Cap on atoms attached to one loot message — enough for the receiver
+/// to fan work out further without immediately replenishing, small
+/// enough that one chatty rank cannot drain its pool in a few sends.
+///
+/// Worst-case replenish cadence, for honesty's sake: a rank that only
+/// *exports* (never imports, never idles) halves its pool per send
+/// under this cap, so a fresh [`REPLENISH_ATOMS`] pool sustains a few
+/// dozen consecutive exports before one synchronous replenish; and
+/// because an idle rank must deposit its *whole* pool (holding any
+/// back would block detection), a freshly revived rank restarts from
+/// whatever its reviving loot carried (≤ this cap). So the replenish
+/// RPC is exhaustion-only and amortized over dozens-to-thousands of
+/// cross-rank loot sends depending on traffic shape — not one per
+/// steal/loot event like the old hub ledger, but also not vanishingly
+/// rare on adversarial export-only schedules.
+pub const MAX_ATTACH_ATOMS: u64 = 1 << 16;
+
+/// A rank's channel back to the credit root.
+pub trait CreditHome: Send + Sync {
+    /// Asynchronously return `atoms` to the root (the rank went idle, or
+    /// is topping the root up after an export emptied it).
+    fn deposit(&self, atoms: u64);
+    /// Synchronously obtain `want` freshly minted atoms. The root must
+    /// grow its `total` **before** this returns, so a minted atom can
+    /// never be outstanding without the root knowing it exists — the
+    /// property that makes early detection impossible.
+    fn replenish(&self, want: u64) -> u64;
+}
+
+#[derive(Debug)]
+struct CreditState {
+    /// Tokens held by this rank's workers, parked node-bag shards, and
+    /// in-rank loot messages.
+    tokens: i64,
+    /// Credit atoms backing those tokens. Invariant: `pool >= 1` whenever
+    /// `tokens >= 1`.
+    pool: u64,
+}
+
+/// Rank-local work-token ledger with credit throwing (see module docs).
+/// `incr`/`decr` are pure local mutations; the only I/O is the async
+/// deposit when the rank goes idle and the rare synchronous replenish.
+pub struct CreditLedger {
+    state: Mutex<CreditState>,
+    home: Arc<dyn CreditHome>,
+}
+
+impl CreditLedger {
+    pub fn new(home: Arc<dyn CreditHome>, initial_atoms: u64) -> Arc<Self> {
+        assert!(initial_atoms >= 1, "a rank needs at least one credit atom");
+        Arc::new(Self { state: Mutex::new(CreditState { tokens: 0, pool: initial_atoms }), home })
+    }
+
+    /// Current local token count.
+    pub fn tokens(&self) -> i64 {
+        self.state.lock().unwrap().tokens
+    }
+
+    /// Current credit pool (diagnostics and the conservation property).
+    pub fn pool(&self) -> u64 {
+        self.state.lock().unwrap().pool
+    }
+}
+
+impl Ledger for Arc<CreditLedger> {
+    fn incr(&self) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.pool >= 1, "token acquired on an empty credit pool");
+        s.tokens += 1;
+    }
+
+    fn decr(&self) -> bool {
+        let deposit = {
+            let mut s = self.state.lock().unwrap();
+            s.tokens -= 1;
+            debug_assert!(s.tokens >= 0, "credit ledger token underflow");
+            if s.tokens == 0 {
+                std::mem::take(&mut s.pool)
+            } else {
+                0
+            }
+        };
+        if deposit > 0 {
+            self.home.deposit(deposit);
+        }
+        // Local zero is not global quiescence; the root detects.
+        false
+    }
+
+    fn value(&self) -> i64 {
+        self.tokens()
+    }
+
+    fn export_credit(&self) -> u64 {
+        loop {
+            let (attach, deposit) = {
+                let mut s = self.state.lock().unwrap();
+                debug_assert!(s.tokens >= 1, "export without a message token");
+                // Keep one atom per invariant if tokens remain after the
+                // message token leaves.
+                let keep: u64 = if s.tokens > 1 { 1 } else { 0 };
+                if s.pool < 1 + keep {
+                    // Pool exhausted (needs ~REPLENISH_ATOMS exports
+                    // between imports): mint more, synchronously, then
+                    // retry under a fresh lock.
+                    drop(s);
+                    let got = self.home.replenish(REPLENISH_ATOMS);
+                    assert!(got >= 1, "credit root must grant at least one atom");
+                    self.state.lock().unwrap().pool += got;
+                    continue;
+                }
+                s.tokens -= 1;
+                let attach = (s.pool / 2).max(1).min(s.pool - keep).min(MAX_ATTACH_ATOMS);
+                s.pool -= attach;
+                let deposit = if s.tokens == 0 { std::mem::take(&mut s.pool) } else { 0 };
+                (attach, deposit)
+            };
+            if deposit > 0 {
+                self.home.deposit(deposit);
+            }
+            return attach;
+        }
+    }
+
+    fn import_credit(&self, atoms: u64) {
+        debug_assert!(atoms >= 1, "a credited loot message must carry atoms");
+        let mut s = self.state.lock().unwrap();
+        s.pool += atoms;
+        s.tokens += 1;
+    }
+}
+
+#[derive(Debug, Default)]
+struct RootState {
+    /// All atoms ever minted (initial grants + replenishes).
+    total: u64,
+    /// Atoms deposited back by idle ranks.
+    recovered: u64,
+    /// Detection enabled (set once the whole fleet has started; before
+    /// that every rank still holds its unreturned initial grant anyway).
+    armed: bool,
+    /// Quiescence hook already fired.
+    fired: bool,
+}
+
+/// The credit root: tracks minted vs recovered atoms and fires the
+/// quiescence hook exactly once when they meet (see module docs for why
+/// equality is exact and never early).
+#[derive(Default)]
+pub struct CreditRoot {
+    state: Mutex<RootState>,
+    on_quiescent: OnceLock<Box<dyn Fn() + Send + Sync>>,
+}
+
+impl CreditRoot {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Register the callback run (once, on whichever thread detects) when
+    /// all credit has been recovered.
+    pub fn on_quiescent(&self, hook: impl Fn() + Send + Sync + 'static) {
+        if self.on_quiescent.set(Box::new(hook)).is_err() {
+            panic!("quiescence hook already set");
+        }
+    }
+
+    /// Record `atoms` handed out as a rank's initial pool.
+    pub fn grant(&self, atoms: u64) {
+        self.state.lock().unwrap().total += atoms;
+    }
+
+    /// Enable detection. Call after every rank holds its initial grant
+    /// and before any rank can deposit. (Fires immediately in the
+    /// degenerate case where everything was already recovered.)
+    pub fn arm(&self) {
+        let fire = {
+            let mut s = self.state.lock().unwrap();
+            s.armed = true;
+            if !s.fired && s.recovered == s.total {
+                s.fired = true;
+                true
+            } else {
+                false
+            }
+        };
+        if fire {
+            if let Some(hook) = self.on_quiescent.get() {
+                hook();
+            }
+        }
+    }
+
+    /// An idle rank returned `atoms`. May fire the quiescence hook.
+    pub fn deposit(&self, atoms: u64) {
+        let fire = {
+            let mut s = self.state.lock().unwrap();
+            s.recovered += atoms;
+            assert!(
+                s.recovered <= s.total,
+                "credit over-recovered: {} of {}",
+                s.recovered,
+                s.total
+            );
+            if s.armed && !s.fired && s.recovered == s.total {
+                s.fired = true;
+                true
+            } else {
+                false
+            }
+        };
+        if fire {
+            if let Some(hook) = self.on_quiescent.get() {
+                hook();
+            }
+        }
+    }
+
+    /// Mint `want` fresh atoms for a starved rank. `total` grows before
+    /// the atoms are released to the caller, so detection stays exact.
+    pub fn mint(&self, want: u64) -> u64 {
+        let want = want.max(1);
+        self.state.lock().unwrap().total += want;
+        want
+    }
+
+    /// `(total, recovered)` — for assertions and the conservation tests.
+    pub fn totals(&self) -> (u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.total, s.recovered)
+    }
+
+    /// Atoms still outstanding (in rank pools or attached to messages).
+    pub fn outstanding(&self) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.total - s.recovered
+    }
+
+    /// Has the quiescence hook fired?
+    pub fn quiescent(&self) -> bool {
+        self.state.lock().unwrap().fired
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +420,115 @@ mod tests {
             l.decr()
         });
         assert!(l.decr());
+    }
+
+    /// Test home: deposits go straight to the root, replenishes mint.
+    struct DirectHome(Arc<CreditRoot>);
+    impl CreditHome for DirectHome {
+        fn deposit(&self, atoms: u64) {
+            self.0.deposit(atoms);
+        }
+        fn replenish(&self, want: u64) -> u64 {
+            self.0.mint(want)
+        }
+    }
+
+    fn rank(root: &Arc<CreditRoot>, atoms: u64) -> Arc<CreditLedger> {
+        root.grant(atoms);
+        CreditLedger::new(Arc::new(DirectHome(root.clone())), atoms)
+    }
+
+    #[test]
+    fn credit_idle_rank_deposits_whole_pool() {
+        let root = CreditRoot::new();
+        let l = rank(&root, 100);
+        root.arm();
+        l.incr();
+        l.incr();
+        assert_eq!(l.value(), 2);
+        assert!(!l.decr());
+        assert!(!root.quiescent(), "a token is still held");
+        assert!(!l.decr(), "distributed ledgers never observe zero locally");
+        assert_eq!(l.pool(), 0, "idle rank returned everything");
+        assert!(root.quiescent(), "root recovered all atoms");
+    }
+
+    #[test]
+    fn credit_travels_with_loot_and_detection_waits_for_it() {
+        let root = CreditRoot::new();
+        let victim = rank(&root, 64);
+        let thief = rank(&root, 64);
+        root.arm();
+        victim.incr(); // victim's own token
+        victim.incr(); // the loot message's token
+        let attached = victim.export_credit();
+        assert!(attached >= 1);
+        assert_eq!(victim.tokens(), 1);
+        assert!(!victim.decr()); // victim finishes; pool (minus loot) deposited
+        assert!(!root.quiescent(), "loot credit is still in flight");
+        thief.import_credit(attached); // loot lands on an idle thief
+        assert_eq!(thief.tokens(), 1);
+        assert!(!thief.decr());
+        assert!(root.quiescent(), "last deposit completes the recovery");
+        let (total, recovered) = root.totals();
+        assert_eq!(total, recovered);
+        assert_eq!(total, 128, "no mint was needed");
+    }
+
+    #[test]
+    fn credit_exhausted_pool_replenishes_and_total_grows_first() {
+        let root = CreditRoot::new();
+        let l = rank(&root, 1);
+        root.arm();
+        l.incr(); // worker token
+        l.incr(); // loot token — pool of 1 cannot keep 1 AND attach 1
+        let attached = l.export_credit();
+        assert!(attached >= 1);
+        assert!(l.pool() >= 1, "invariant: tokens held => pool non-empty");
+        let (total, _) = root.totals();
+        assert_eq!(total, 1 + REPLENISH_ATOMS, "mint grew total before the atoms moved");
+        // Wind down: destroy the in-flight credit as an active import.
+        l.import_credit(attached);
+        assert!(!l.decr());
+        assert!(!l.decr());
+        assert!(root.quiescent());
+    }
+
+    #[test]
+    fn credit_attach_is_capped_and_leaves_a_reserve() {
+        let root = CreditRoot::new();
+        let l = rank(&root, INITIAL_RANK_ATOMS);
+        root.arm();
+        l.incr();
+        l.incr();
+        let attached = l.export_credit();
+        assert!(attached <= MAX_ATTACH_ATOMS);
+        assert_eq!(l.pool(), INITIAL_RANK_ATOMS - attached);
+        // Balance the books so the run quiesces.
+        l.import_credit(attached);
+        assert!(!l.decr());
+        assert!(!l.decr());
+        assert!(root.quiescent());
+    }
+
+    #[test]
+    fn credit_root_never_fires_twice_or_early() {
+        let root = CreditRoot::new();
+        let fired = Arc::new(AtomicI64::new(0));
+        let f = fired.clone();
+        root.on_quiescent(move || {
+            f.fetch_add(1, Ordering::SeqCst);
+        });
+        root.grant(10);
+        root.arm();
+        root.deposit(4);
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "partial recovery must not fire");
+        root.deposit(6);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // A later mint/deposit cycle cannot re-fire.
+        let got = root.mint(5);
+        root.deposit(got);
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!             lifeline:u8                        (0 | 1)
 //!             place:u64le                        (thief / victim; 0 for Terminate)
 //!             nonce_tag:u8  nonce:u64le          (tag 0 => nonce field is 0)
+//!             credit:u64le                       (termination credit; loot-with-bag only)
 //!             bag_tag:u8                         (1 iff a bag payload follows)
 //!             [bag]
 //! bag      := count:u32le ++ count * entry       (entry layout per bag type)
@@ -22,6 +23,12 @@
 //! [`Msg::wire_bytes`]'s `HEADER` is derived from, which keeps the
 //! simulator's bandwidth/occupancy accounting aligned with what the TCP
 //! transport actually puts on the wire.
+//!
+//! The socket runtime wraps message bodies in a *data frame* that leads
+//! with the destination place ([`DATA_ROUTE_BYTES`]) — mesh links are
+//! per-rank, and a rank may host several places. Its control plane
+//! (bootstrap, credit deposits/replenishes, result gathering) speaks
+//! [`Ctrl`] frames over the rank-0 control link.
 //!
 //! Decoding is total: truncated or malformed input returns a
 //! [`WireError`], never panics and never allocates proportionally to a
@@ -36,11 +43,14 @@ use super::task_bag::ArrayListTaskBag;
 /// Bytes of the `len` prefix in front of every frame body.
 pub const FRAME_LEN_BYTES: usize = 4;
 /// Fixed bytes of every encoded message body (prelude before the bag).
-pub const MSG_FIXED_BYTES: usize = 20;
+pub const MSG_FIXED_BYTES: usize = 28;
 /// Total framing overhead of any message: length prefix + fixed prelude.
 pub const ENVELOPE_BYTES: usize = FRAME_LEN_BYTES + MSG_FIXED_BYTES;
 /// Every bag encoding leads with a u32 entry count.
 pub const BAG_LEN_BYTES: usize = 4;
+/// Destination-place prefix of a mesh data frame (a rank can host
+/// several places, so frames are addressed per *place*).
+pub const DATA_ROUTE_BYTES: usize = 8;
 /// Upper bound accepted by [`read_frame`] (a corrupt length field must
 /// not trigger a giant allocation).
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -159,6 +169,36 @@ impl WireCodec for u64 {
     }
 }
 
+/// `f64` travels as its IEEE-754 bit pattern (exact round-trip — the
+/// fleet BC reduction must be bit-identical to a local one).
+impl WireCodec for f64 {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.to_bits());
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(f64::from_bits(r.u64()?))
+    }
+}
+
+/// Counted sequence of any codec-able element (per-rank result vectors:
+/// the BC partial betweenness map is a `Vec<f64>`).
+impl<T: WireCodec> WireCodec for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.len() as u32);
+        for item in self {
+            item.encode(out);
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let count = r.u32()? as usize;
+        let mut items = Vec::new();
+        for _ in 0..count {
+            items.push(T::decode(r)?);
+        }
+        Ok(items)
+    }
+}
+
 /// The default bag ships as a plain counted item array.
 impl<T: WireCodec + Send + 'static> WireCodec for ArrayListTaskBag<T> {
     fn encode(&self, out: &mut Vec<u8>) {
@@ -187,14 +227,16 @@ pub fn encode_msg_body<B: WireCodec>(msg: &Msg<B>, out: &mut Vec<u8>) {
             put_u64(out, *thief as u64);
             put_u8(out, 1);
             put_u64(out, *nonce);
+            put_u64(out, 0);
             put_u8(out, 0);
         }
-        Msg::Loot { victim, bag, lifeline, nonce } => {
+        Msg::Loot { victim, bag, lifeline, nonce, credit } => {
             put_u8(out, TAG_LOOT);
             put_u8(out, *lifeline as u8);
             put_u64(out, *victim as u64);
             put_u8(out, nonce.is_some() as u8);
             put_u64(out, nonce.unwrap_or(0));
+            put_u64(out, *credit);
             put_u8(out, bag.is_some() as u8);
             if let Some(b) = bag {
                 b.encode(out);
@@ -205,6 +247,7 @@ pub fn encode_msg_body<B: WireCodec>(msg: &Msg<B>, out: &mut Vec<u8>) {
             put_u8(out, 0);
             put_u64(out, 0);
             put_u8(out, 0);
+            put_u64(out, 0);
             put_u64(out, 0);
             put_u8(out, 0);
         }
@@ -219,20 +262,33 @@ pub fn decode_msg_body<B: WireCodec>(buf: &[u8]) -> Result<Msg<B>, WireError> {
     let place = r.u64()? as PlaceId;
     let nonce_present = r.bool()?;
     let nonce = r.u64()?;
+    let credit = r.u64()?;
     let bag_present = r.bool()?;
     let msg = match tag {
         TAG_STEAL => {
             if !nonce_present || bag_present {
                 return Err(WireError::Invalid("steal envelope flags"));
             }
+            if credit != 0 {
+                return Err(WireError::Invalid("steal carries credit"));
+            }
             Msg::Steal { thief: place, lifeline, nonce }
         }
         TAG_LOOT => {
+            if !bag_present && credit != 0 {
+                return Err(WireError::Invalid("refusal carries credit"));
+            }
             let bag = if bag_present { Some(B::decode(&mut r)?) } else { None };
-            Msg::Loot { victim: place, bag, lifeline, nonce: nonce_present.then_some(nonce) }
+            Msg::Loot {
+                victim: place,
+                bag,
+                lifeline,
+                nonce: nonce_present.then_some(nonce),
+                credit,
+            }
         }
         TAG_TERMINATE => {
-            if lifeline || nonce_present || bag_present || place != 0 || nonce != 0 {
+            if lifeline || nonce_present || bag_present || place != 0 || nonce != 0 || credit != 0 {
                 return Err(WireError::Invalid("terminate envelope not blank"));
             }
             Msg::Terminate
@@ -242,6 +298,154 @@ pub fn decode_msg_body<B: WireCodec>(buf: &[u8]) -> Result<Msg<B>, WireError> {
     match r.remaining() {
         0 => Ok(msg),
         n => Err(WireError::Trailing(n)),
+    }
+}
+
+/// Encode a mesh data-frame body: destination place + message body.
+pub fn encode_data_frame_body<B: WireCodec>(to: PlaceId, msg: &Msg<B>) -> Vec<u8> {
+    let mut body = Vec::with_capacity(DATA_ROUTE_BYTES + MSG_FIXED_BYTES);
+    put_u64(&mut body, to as u64);
+    encode_msg_body(msg, &mut body);
+    body
+}
+
+/// Decode a mesh data-frame body into `(destination place, message)`.
+pub fn decode_data_frame_body<B: WireCodec>(buf: &[u8]) -> Result<(PlaceId, Msg<B>), WireError> {
+    let mut r = Reader::new(buf);
+    let to = r.u64()? as PlaceId;
+    let rest = r.remaining();
+    let msg = decode_msg_body(r.bytes(rest)?)?;
+    Ok((to, msg))
+}
+
+// ---------------------------------------------------------------------
+// fleet control plane
+// ---------------------------------------------------------------------
+
+const CTRL_REGISTER: u8 = 0;
+const CTRL_PEER_MAP: u8 = 1;
+const CTRL_READY: u8 = 2;
+const CTRL_GO: u8 = 3;
+const CTRL_DEPOSIT: u8 = 4;
+const CTRL_REPLENISH: u8 = 5;
+const CTRL_GRANT: u8 = 6;
+const CTRL_RESULT: u8 = 7;
+
+/// Fleet control-plane messages, exchanged as length-prefixed frames on
+/// each rank's control link to rank 0. Rank 0 is bootstrap + credit root
+/// only: after [`Ctrl::Go`] the only steady-state control traffic is
+/// asynchronous [`Ctrl::Deposit`]s (idle ranks returning termination
+/// credit) and the rare [`Ctrl::Replenish`]/[`Ctrl::Grant`] pair — no
+/// data frame ever crosses the control link.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Ctrl {
+    /// rank → root: my rank and the `ip:port` my mesh listener accepts on.
+    Register { rank: u64, addr: String },
+    /// root → rank: every rank's mesh address, indexed by rank.
+    PeerMap { addrs: Vec<String> },
+    /// rank → root: mesh wired, workers constructed, initial tokens held.
+    Ready { rank: u64 },
+    /// root → rank: the whole fleet is ready; start the steal protocol.
+    Go,
+    /// rank → root: this rank went idle; here is its whole credit pool.
+    Deposit { atoms: u64 },
+    /// rank → root: credit pool exhausted; mint `want` fresh atoms.
+    Replenish { want: u64 },
+    /// root → rank: the freshly minted atoms (reply to `Replenish`).
+    Grant { atoms: u64 },
+    /// rank → root: the rank's encoded local result, for the fleet-wide
+    /// reduction at rank 0.
+    Result { bytes: Vec<u8> },
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(r: &mut Reader<'_>) -> Result<String, WireError> {
+    let len = r.u32()? as usize;
+    let bytes = r.bytes(len)?;
+    String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Invalid("non-utf8 string"))
+}
+
+impl Ctrl {
+    /// Encode as a frame body (wrap with [`write_frame`] to send).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Ctrl::Register { rank, addr } => {
+                put_u8(out, CTRL_REGISTER);
+                put_u64(out, *rank);
+                put_str(out, addr);
+            }
+            Ctrl::PeerMap { addrs } => {
+                put_u8(out, CTRL_PEER_MAP);
+                put_u32(out, addrs.len() as u32);
+                for a in addrs {
+                    put_str(out, a);
+                }
+            }
+            Ctrl::Ready { rank } => {
+                put_u8(out, CTRL_READY);
+                put_u64(out, *rank);
+            }
+            Ctrl::Go => put_u8(out, CTRL_GO),
+            Ctrl::Deposit { atoms } => {
+                put_u8(out, CTRL_DEPOSIT);
+                put_u64(out, *atoms);
+            }
+            Ctrl::Replenish { want } => {
+                put_u8(out, CTRL_REPLENISH);
+                put_u64(out, *want);
+            }
+            Ctrl::Grant { atoms } => {
+                put_u8(out, CTRL_GRANT);
+                put_u64(out, *atoms);
+            }
+            Ctrl::Result { bytes } => {
+                put_u8(out, CTRL_RESULT);
+                put_u32(out, bytes.len() as u32);
+                out.extend_from_slice(bytes);
+            }
+        }
+    }
+
+    /// Convenience: encoded frame body.
+    pub fn to_body(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        self.encode(&mut out);
+        out
+    }
+
+    /// Decode a control frame body. Total, like [`decode_msg_body`]:
+    /// truncation and bad tags are errors, trailing bytes are rejected.
+    pub fn decode(buf: &[u8]) -> Result<Self, WireError> {
+        let mut r = Reader::new(buf);
+        let msg = match r.u8()? {
+            CTRL_REGISTER => Ctrl::Register { rank: r.u64()?, addr: get_str(&mut r)? },
+            CTRL_PEER_MAP => {
+                let count = r.u32()? as usize;
+                let mut addrs = Vec::new();
+                for _ in 0..count {
+                    addrs.push(get_str(&mut r)?);
+                }
+                Ctrl::PeerMap { addrs }
+            }
+            CTRL_READY => Ctrl::Ready { rank: r.u64()? },
+            CTRL_GO => Ctrl::Go,
+            CTRL_DEPOSIT => Ctrl::Deposit { atoms: r.u64()? },
+            CTRL_REPLENISH => Ctrl::Replenish { want: r.u64()? },
+            CTRL_GRANT => Ctrl::Grant { atoms: r.u64()? },
+            CTRL_RESULT => {
+                let len = r.u32()? as usize;
+                Ctrl::Result { bytes: r.bytes(len)?.to_vec() }
+            }
+            t => return Err(WireError::BadTag(t)),
+        };
+        match r.remaining() {
+            0 => Ok(msg),
+            n => Err(WireError::Trailing(n)),
+        }
     }
 }
 
@@ -338,7 +542,7 @@ mod tests {
     fn fixed_prelude_is_the_documented_size() {
         for msg in [
             Msg::<Bag>::Steal { thief: 3, lifeline: true, nonce: 9 },
-            Msg::<Bag>::Loot { victim: 1, bag: None, lifeline: false, nonce: Some(4) },
+            Msg::<Bag>::Loot { victim: 1, bag: None, lifeline: false, nonce: Some(4), credit: 0 },
             Msg::<Bag>::Terminate,
         ] {
             let mut body = Vec::new();
@@ -353,12 +557,20 @@ mod tests {
         let msgs = [
             Msg::<Bag>::Steal { thief: 7, lifeline: false, nonce: 41 },
             Msg::<Bag>::Steal { thief: 0, lifeline: true, nonce: u64::MAX },
-            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: true, nonce: Some(5) },
+            Msg::<Bag>::Loot { victim: 2, bag: None, lifeline: true, nonce: Some(5), credit: 0 },
             Msg::<Bag>::Loot {
                 victim: 9,
                 bag: Some(ArrayListTaskBag::from_vec(vec![1u64, 2, 3])),
                 lifeline: false,
                 nonce: None,
+                credit: 0,
+            },
+            Msg::<Bag>::Loot {
+                victim: 3,
+                bag: Some(ArrayListTaskBag::from_vec(vec![4u64])),
+                lifeline: true,
+                nonce: Some(8),
+                credit: u64::MAX,
             },
             Msg::<Bag>::Terminate,
         ];
@@ -376,6 +588,7 @@ mod tests {
             bag: Some(ArrayListTaskBag::from_vec(vec![10u64, 20, 30, 40])),
             lifeline: true,
             nonce: Some(77),
+            credit: 12,
         };
         let frame = encode_frame(&msg);
         for cut in 0..frame.len() {
@@ -384,6 +597,27 @@ mod tests {
         let mut extended = frame.clone();
         extended.push(0);
         assert_eq!(decode_frame::<Bag>(&extended), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn credit_on_non_loot_is_rejected() {
+        // Steal, refusal and Terminate must all carry a zero credit word;
+        // a corrupted one is an Invalid, never silently accepted.
+        let credit_at = 1 + 1 + 8 + 1 + 8; // tag, lifeline, place, nonce_tag, nonce
+        for msg in [
+            Msg::<Bag>::Steal { thief: 3, lifeline: false, nonce: 9 },
+            Msg::<Bag>::Loot { victim: 1, bag: None, lifeline: true, nonce: Some(4), credit: 0 },
+            Msg::<Bag>::Terminate,
+        ] {
+            let mut body = Vec::new();
+            encode_msg_body(&msg, &mut body);
+            body[credit_at] = 1;
+            assert!(
+                matches!(decode_msg_body::<Bag>(&body), Err(WireError::Invalid(_))),
+                "{} must reject stray credit",
+                msg.kind()
+            );
+        }
     }
 
     #[test]
@@ -407,12 +641,103 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(Vec::new())),
                 lifeline: false,
                 nonce: None,
+                credit: 1,
             },
             &mut body,
         );
         let count_at = MSG_FIXED_BYTES; // bag count is the first bag field
         body[count_at..count_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(decode_msg_body::<Bag>(&body), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn data_frames_route_and_roundtrip() {
+        let msg = Msg::<Bag>::Loot {
+            victim: 2,
+            bag: Some(ArrayListTaskBag::from_vec(vec![5u64, 6])),
+            lifeline: false,
+            nonce: Some(3),
+            credit: 7,
+        };
+        let body = encode_data_frame_body(11, &msg);
+        assert_eq!(body.len(), DATA_ROUTE_BYTES + MSG_FIXED_BYTES + BAG_LEN_BYTES + 16);
+        let (to, back) = decode_data_frame_body::<Bag>(&body).expect("decode");
+        assert_eq!(to, 11);
+        assert_eq!(back, msg);
+        // Truncation safety: every strict prefix errors.
+        for cut in 0..body.len() {
+            assert!(decode_data_frame_body::<Bag>(&body[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn ctrl_frames_roundtrip() {
+        let msgs = [
+            Ctrl::Register { rank: 3, addr: "10.0.0.7:4471".into() },
+            Ctrl::PeerMap {
+                addrs: vec!["127.0.0.1:7117".into(), "127.0.0.1:9000".into(), String::new()],
+            },
+            Ctrl::Ready { rank: 2 },
+            Ctrl::Go,
+            Ctrl::Deposit { atoms: u64::MAX },
+            Ctrl::Replenish { want: 1 << 20 },
+            Ctrl::Grant { atoms: 1 << 20 },
+            Ctrl::Result { bytes: vec![1, 2, 3, 0xFF] },
+            Ctrl::Result { bytes: Vec::new() },
+        ];
+        for msg in msgs {
+            let body = msg.to_body();
+            assert_eq!(Ctrl::decode(&body).expect("decode"), msg);
+        }
+    }
+
+    #[test]
+    fn ctrl_frames_truncation_safe() {
+        let msgs = [
+            Ctrl::Register { rank: 1, addr: "192.168.0.1:81".into() },
+            Ctrl::PeerMap { addrs: vec!["a:1".into(), "b:2".into()] },
+            Ctrl::Ready { rank: 9 },
+            Ctrl::Deposit { atoms: 77 },
+            Ctrl::Replenish { want: 5 },
+            Ctrl::Grant { atoms: 5 },
+            Ctrl::Result { bytes: vec![9; 32] },
+        ];
+        for msg in msgs {
+            let body = msg.to_body();
+            for cut in 0..body.len() {
+                assert!(Ctrl::decode(&body[..cut]).is_err(), "{msg:?} cut at {cut}");
+            }
+            let mut extended = body.clone();
+            extended.push(0);
+            assert_eq!(Ctrl::decode(&extended), Err(WireError::Trailing(1)));
+        }
+        assert_eq!(Ctrl::decode(&[0xEE]), Err(WireError::BadTag(0xEE)));
+        // A lying Result length cannot over-allocate: the byte slice is
+        // bounds-checked before the copy.
+        let mut lying = Ctrl::Result { bytes: vec![1] }.to_body();
+        let len_at = 1;
+        lying[len_at..len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Ctrl::decode(&lying), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn f64_vectors_roundtrip_bit_exact() {
+        let vals = vec![0.0f64, -0.0, 1.5, f64::MAX, f64::MIN_POSITIVE, 1.0 / 3.0];
+        let mut out = Vec::new();
+        vals.encode(&mut out);
+        let mut r = Reader::new(&out);
+        let back = Vec::<f64>::decode(&mut r).expect("decode");
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact round-trip");
+        }
+        // Truncated vector errors (the count word promises 6 elements, so
+        // every strict prefix runs out of bytes).
+        for cut in 0..out.len() {
+            let mut r = Reader::new(&out[..cut]);
+            assert_eq!(Vec::<f64>::decode(&mut r), Err(WireError::Truncated), "cut at {cut}");
+        }
     }
 
     #[test]

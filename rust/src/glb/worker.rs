@@ -285,8 +285,8 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
     pub fn on_msg(&mut self, msg: Msg<Q::Bag>, effects: &mut Vec<Effect<Q::Bag>>) {
         match msg {
             Msg::Steal { thief, lifeline, nonce } => self.on_steal(thief, lifeline, nonce, effects),
-            Msg::Loot { victim, bag, lifeline, nonce } => {
-                self.on_loot(victim, bag, lifeline, nonce, effects)
+            Msg::Loot { victim, bag, lifeline, nonce, credit } => {
+                self.on_loot(victim, bag, lifeline, nonce, credit, effects)
             }
             Msg::Terminate => {
                 debug_assert!(
@@ -346,7 +346,13 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
                     }
                     effects.push(Effect::Send {
                         to: thief,
-                        msg: Msg::Loot { victim: self.id, bag: None, lifeline, nonce: Some(nonce) },
+                        msg: Msg::Loot {
+                            victim: self.id,
+                            bag: None,
+                            lifeline,
+                            nonce: Some(nonce),
+                            credit: 0,
+                        },
                     });
                 }
             }
@@ -361,14 +367,17 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         nonce: Option<u64>,
         effects: &mut Vec<Effect<Q::Bag>>,
     ) {
-        // The message token must exist before the send is visible.
+        // The message token must exist before the send is visible; under
+        // a credit ledger the token then leaves with the message as
+        // attached credit (a no-op `0` for globally-counted ledgers).
         self.ledger.incr();
+        let credit = self.ledger.export_credit();
         let items = bag.size() as u64;
         self.stats.loot_items_sent += items;
         self.stats.loot_bags_sent += 1;
         effects.push(Effect::Send {
             to: thief,
-            msg: Msg::Loot { victim: self.id, bag: Some(bag), lifeline, nonce },
+            msg: Msg::Loot { victim: self.id, bag: Some(bag), lifeline, nonce, credit },
         });
     }
 
@@ -554,6 +563,7 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         bag: Option<Q::Bag>,
         lifeline: bool,
         nonce: Option<u64>,
+        credit: u64,
         effects: &mut Vec<Effect<Q::Bag>>,
     ) {
         // Is this the response to our in-flight request? Unsolicited
@@ -570,6 +580,11 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
 
         match bag {
             Some(bag) => {
+                // Absorb the message's termination credit first: its token
+                // is accounted locally before the bag is observable, then
+                // either destroyed (active thief, `decr` below) or adopted
+                // (idle thief) — the flat protocol's exact choreography.
+                self.ledger.import_credit(credit);
                 let items = bag.size() as u64;
                 self.stats.loot_items_received += items;
                 self.stats.loot_bags_received += 1;
@@ -743,14 +758,20 @@ mod tests {
         };
         // Refusal 1 -> second random attempt.
         fx.clear();
-        w.on_msg(Msg::Loot { victim: v1, bag: None, lifeline: false, nonce: Some(0) }, &mut fx);
+        w.on_msg(
+            Msg::Loot { victim: v1, bag: None, lifeline: false, nonce: Some(0), credit: 0 },
+            &mut fx,
+        );
         let v2 = match w.phase() {
             Phase::WaitRandom { attempt: 1, victim } => victim,
             ph => panic!("expected WaitRandom(1), got {ph:?}"),
         };
         // Refusal 2 -> first lifeline.
         fx.clear();
-        w.on_msg(Msg::Loot { victim: v2, bag: None, lifeline: false, nonce: Some(1) }, &mut fx);
+        w.on_msg(
+            Msg::Loot { victim: v2, bag: None, lifeline: false, nonce: Some(1), credit: 0 },
+            &mut fx,
+        );
         assert!(matches!(w.phase(), Phase::WaitLifeline { idx: 0 }));
         let ll0 = match &fx[0] {
             Effect::Send { to, msg: Msg::Steal { lifeline: true, .. } } => *to,
@@ -762,7 +783,13 @@ mod tests {
         loop {
             fx.clear();
             w.on_msg(
-                Msg::Loot { victim: current, bag: None, lifeline: true, nonce: Some(nonce) },
+                Msg::Loot {
+                    victim: current,
+                    bag: None,
+                    lifeline: true,
+                    nonce: Some(nonce),
+                    credit: 0,
+                },
                 &mut fx,
             );
             nonce += 1;
@@ -823,6 +850,7 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(vec![7, 8, 9, 10])),
                 lifeline: false,
                 nonce: None,
+                credit: 0,
             },
             &mut fx,
         );
@@ -850,6 +878,7 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(vec![1, 2, 3, 4])),
                 lifeline: true,
                 nonce: None,
+                credit: 0,
             },
             &mut fx,
         );
@@ -868,7 +897,10 @@ mod tests {
         w.kick_if_empty(&mut fx);
         // w=0 so it goes straight to its lifeline (place 0).
         assert!(matches!(w.phase(), Phase::WaitLifeline { idx: 0 }));
-        w.on_msg(Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(0) }, &mut fx);
+        w.on_msg(
+            Msg::Loot { victim: 0, bag: None, lifeline: true, nonce: Some(0), credit: 0 },
+            &mut fx,
+        );
         assert_eq!(w.phase(), Phase::Idle);
         assert_eq!(ledger.value(), 1, "thief token released; victim token still out");
         // Lifeline push arrives: adopt the message token, resume. (The
@@ -880,6 +912,7 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])),
                 lifeline: true,
                 nonce: None,
+                credit: 0,
             },
             &mut fx,
         );
@@ -905,12 +938,16 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(vec![5, 6, 7])),
                 lifeline: true,
                 nonce: None,
+                credit: 0,
             },
             &mut fx,
         );
         assert!(matches!(w.phase(), Phase::WaitRandom { .. }), "still awaiting the response");
         // The awaited refusal now lands: back to Working (bag non-empty).
-        w.on_msg(Msg::Loot { victim, bag: None, lifeline: false, nonce: Some(0) }, &mut fx);
+        w.on_msg(
+            Msg::Loot { victim, bag: None, lifeline: false, nonce: Some(0), credit: 0 },
+            &mut fx,
+        );
         assert_eq!(w.phase(), Phase::Working);
     }
 
@@ -983,6 +1020,7 @@ mod tests {
                 bag: Some(ArrayListTaskBag::from_vec(vec![1, 2])),
                 lifeline: false,
                 nonce: None,
+                credit: 0,
             },
             &mut fx,
         );

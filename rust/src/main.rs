@@ -12,7 +12,7 @@ use glb::cli::{glb_params_from, tcp_opts_from, transport_from, Args, TransportKi
 use glb::glb::task_queue::{SumReducer, VecSumReducer};
 use glb::glb::GlbConfig;
 use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
-use glb::place::{run_sockets, run_threads, SocketRunOpts};
+use glb::place::{run_sockets_reduced, run_threads, SocketRunOpts};
 use glb::runtime::{default_artifact_dir, DeviceService};
 use glb::sim::{run_sim, ArchProfile, BGQ};
 use glb::util::timefmt::{fmt_count, fmt_ns, fmt_rate};
@@ -38,7 +38,7 @@ fn main() {
 const COMMON: &[&str] = &[
     "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
     "random-only", "rounds", "log", "csv", "autotune", "transport", "rank", "peers", "port",
-    "host",
+    "host", "bind", "advertise",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -60,6 +60,18 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
 fn arch_from(args: &Args) -> Result<&'static ArchProfile> {
     let name = args.get("arch").unwrap_or("bgq");
     ArchProfile::by_name(name).ok_or_else(|| anyhow!("unknown --arch {name}"))
+}
+
+fn socket_opts_from(t: &glb::cli::TcpOpts) -> SocketRunOpts {
+    SocketRunOpts {
+        rank: t.rank,
+        ranks: t.peers,
+        host: t.host.clone(),
+        port: t.port,
+        bind: t.bind.clone(),
+        advertise: t.advertise.clone(),
+        ..Default::default()
+    }
 }
 
 fn finish<R>(out: &glb::glb::RunOutput<R>, unit: &str, log: bool) {
@@ -94,29 +106,40 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
         let params = glb_params_from(&args)?;
         let p = args.parse_opt("places", t.peers * params.workers_per_node)?;
         let cfg = GlbConfig::new(p, params);
-        let opts = SocketRunOpts {
-            rank: t.rank,
-            ranks: t.peers,
-            host: t.host.clone(),
-            port: t.port,
-            ..Default::default()
-        };
-        let out =
-            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)?;
-        println!(
-            "uts-g(tcp rank {}/{}) places={p} depth={} local-nodes={} (sum ranks for the total)",
-            t.rank,
-            t.peers,
-            up.max_depth,
-            fmt_count(out.result)
-        );
+        let opts = socket_opts_from(&t);
+        let out = run_sockets_reduced(
+            &cfg,
+            &opts,
+            |_, _| UtsQueue::new(up),
+            |q| q.init_root(),
+            &SumReducer,
+        )?;
+        if t.rank == 0 {
+            println!(
+                "uts-g(tcp mesh of {}) places={p} depth={} nodes={}",
+                t.peers,
+                up.max_depth,
+                fmt_count(out.result)
+            );
+        } else {
+            println!(
+                "uts-g(tcp rank {}/{}) places={p} depth={} local-nodes={}",
+                t.rank,
+                t.peers,
+                up.max_depth,
+                fmt_count(out.result)
+            );
+        }
         finish(&out, "nodes/s", args.flag("log"));
         return Ok(());
     }
     let p = args.parse_opt("places", 4usize)?;
     let params = if args.flag("autotune") {
         let tuned = glb::glb::autotune::autotune_uts(p);
-        println!("autotuned: n={} w={} l={} (paper future-work item 4)", tuned.n, tuned.w, tuned.l);
+        println!(
+            "autotuned: n={} w={} l={} workers-per-node={} (paper future-work item 4)",
+            tuned.n, tuned.w, tuned.l, tuned.workers_per_node
+        );
         tuned
     } else {
         glb_params_from(&args)?
@@ -143,15 +166,52 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
     known.extend(["scale", "engine", "verify"]);
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "verify"])?;
     args.ensure_known(&known)?;
-    if transport_from(&args)? == TransportKind::Tcp {
-        bail!(
-            "--transport tcp currently supports the uts command \
-             (the BcBag wire codec is in; fleet BC is a ROADMAP follow-on)"
-        );
-    }
-    let p = args.parse_opt("places", 4usize)?;
     let scale = args.parse_opt("scale", 9u32)?;
     let engine = args.get("engine").unwrap_or("sparse");
+    if transport_from(&args)? == TransportKind::Tcp {
+        // Fleet BC: every rank builds the same deterministic R-MAT graph
+        // and runs its share of source vertices; the per-rank partial
+        // betweenness vectors are element-wise summed at rank 0 during
+        // result collection (run_sockets_reduced + VecSumReducer).
+        if engine != "sparse" {
+            bail!("--transport tcp supports --engine sparse (dense is PJRT, single-process)");
+        }
+        let t = tcp_opts_from(&args)?;
+        let params = glb_params_from(&args)?;
+        let p = args.parse_opt("places", t.peers * params.workers_per_node)?;
+        let g = Arc::new(Graph::rmat(RmatParams { scale, ..Default::default() }));
+        let n = g.n() as u32;
+        println!("graph: n={} m={} (SSCA2 R-MAT scale {scale})", g.n(), g.m());
+        let cfg = GlbConfig::new(p, params);
+        let opts = socket_opts_from(&t);
+        let gg = g.clone();
+        let out = run_sockets_reduced(
+            &cfg,
+            &opts,
+            move |i, np| seeded_queue(&gg, i, np, n),
+            |_| {},
+            &VecSumReducer,
+        )?;
+        if t.rank == 0 {
+            let top = top_vertices(&out.result, 5);
+            println!(
+                "bc-g(tcp mesh of {}) places={p} engine=sparse; top-5 betweenness \
+                 vertices: {top:?}",
+                t.peers
+            );
+            if args.flag("verify") {
+                verify_bc(&g, &out.result)?;
+            }
+        } else {
+            println!("bc-g(tcp rank {}/{}) places={p} engine=sparse", t.rank, t.peers);
+            if args.flag("verify") {
+                println!("verify: skipped on spokes (rank 0 holds the fleet-wide reduction)");
+            }
+        }
+        finish(&out, "edges/s", args.flag("log"));
+        return Ok(());
+    }
+    let p = args.parse_opt("places", 4usize)?;
     let params = glb_params_from(&args)?;
     let g = Arc::new(Graph::rmat(RmatParams { scale, ..Default::default() }));
     let n = g.n() as u32;
@@ -202,19 +262,24 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
     let top = top_vertices(&out.result, 5);
     println!("bc-g places={p} engine={engine}; top-5 betweenness vertices: {top:?}");
     if args.flag("verify") {
-        let (expect, _) = sequential_bc(&g);
-        let worst = out
-            .result
-            .iter()
-            .zip(&expect)
-            .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
-            .fold(0.0f64, f64::max);
-        println!("verify: max relative error vs sequential = {worst:.2e}");
-        if worst > 1e-3 {
-            bail!("verification failed (rel err {worst:.2e})");
-        }
+        verify_bc(&g, &out.result)?;
     }
     finish(&out, "edges/s", args.flag("log"));
+    Ok(())
+}
+
+/// Check a betweenness map against sequential Brandes on the same graph.
+fn verify_bc(g: &Graph, result: &[f64]) -> Result<()> {
+    let (expect, _) = sequential_bc(g);
+    let worst = result
+        .iter()
+        .zip(&expect)
+        .map(|(a, b)| (a - b).abs() / (1.0 + b.abs()))
+        .fold(0.0f64, f64::max);
+    println!("verify: max relative error vs sequential = {worst:.2e}");
+    if worst > 1e-3 {
+        bail!("verification failed (rel err {worst:.2e})");
+    }
     Ok(())
 }
 
@@ -239,7 +304,7 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
     if transport_from(&args)? == TransportKind::Tcp {
-        bail!("--transport tcp currently supports the uts command");
+        bail!("--transport tcp currently supports the uts and bc commands");
     }
     let p = args.parse_opt("places", 4usize)?;
     let n = args.parse_opt("fib-n", 24u64)?;
@@ -259,7 +324,7 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
     if transport_from(&args)? == TransportKind::Tcp {
-        bail!("--transport tcp currently supports the uts command");
+        bail!("--transport tcp currently supports the uts and bc commands");
     }
     let p = args.parse_opt("places", 4usize)?;
     let b = args.parse_opt("board", 10u8)?;

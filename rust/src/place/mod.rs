@@ -19,8 +19,9 @@
 //!
 //! The sibling [`socket`] runtime lifts the same engine across OS
 //! *processes*: one process per GLB node, messages as length-prefixed
-//! TCP frames ([`crate::glb::wire`]), and a fleet-wide start barrier
-//! that recreates this sequential-setup guarantee distributedly.
+//! TCP frames ([`crate::glb::wire`]) on direct spoke-to-spoke mesh
+//! links, credit-based distributed termination, and a fleet-wide start
+//! barrier that recreates this sequential-setup guarantee distributedly.
 
 pub mod network;
 pub mod runtime;
@@ -28,4 +29,4 @@ pub mod socket;
 
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
-pub use socket::{run_sockets, SocketRunOpts};
+pub use socket::{misrouted_frames, run_sockets, run_sockets_reduced, SocketRunOpts};

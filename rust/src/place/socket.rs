@@ -1,4 +1,6 @@
-//! TCP socket place-runtime: one OS **process** per GLB node.
+//! TCP socket place-runtime: one OS **process** per GLB node, wired as a
+//! direct spoke-to-spoke **mesh** with credit-based distributed
+//! termination.
 //!
 //! This is the process-spanning `Transport` the ROADMAP calls for: the
 //! same [`Worker`] protocol engine as the thread runtime and the
@@ -7,72 +9,100 @@
 //! `ranks` processes runs one GLB *node* each (so with
 //! `workers_per_node > 1` every process hosts several worker threads
 //! sharing a [`NodeBag`], and only the node's representative speaks the
-//! inter-node protocol — the representative owns the sockets in the
-//! sense that all cross-node traffic is its protocol traffic).
+//! inter-node protocol).
 //!
-//! ## Fleet wiring (star over rank 0)
+//! ## Fleet wiring (bootstrap star, steady-state mesh)
 //!
-//! * **rank 0 listens**; every other rank dials it and handshakes
-//!   `[kind, rank]` twice — once for the *data* link (message frames)
-//!   and once for the *ledger* link (termination-token RPCs).
-//! * Data frames are `[to: u64][msg body]` under a length prefix. Rank 0
-//!   delivers frames addressed to its own places and **forwards** the
-//!   raw bytes of everything else to the destination rank's link, so
-//!   spokes never connect to each other and the codec is decoded only at
-//!   the destination.
-//! * The work-token ledger ([`crate::glb::termination`]) must be a
-//!   *global* counter, so rank 0 hosts the authoritative
-//!   [`AtomicLedger`] and remote ranks run every `incr`/`decr` as a
-//!   synchronous RPC over their ledger link. Synchrony is load-bearing:
-//!   a victim's token increment must be applied **before** its loot
-//!   message can be observed by the thief, or the count could
-//!   transiently hit zero and terminate a live computation.
-//! * A **start barrier** (an RPC on the ledger link) keeps the thread
-//!   runtime's sequential-setup guarantee: no rank enters the steal
-//!   protocol until every rank has constructed its workers and
-//!   registered their initial tokens.
+//! Rank 0 is **bootstrap and discovery only** — after the start barrier
+//! no steal/loot/refusal byte transits it on behalf of other ranks:
+//!
+//! 1. every rank binds its own mesh listener; spokes dial rank 0 and
+//!    [`Ctrl::Register`] their advertised `ip:port`;
+//! 2. rank 0 answers with the [`Ctrl::PeerMap`]; each rank then dials
+//!    every lower rank and accepts every higher one, building one duplex
+//!    TCP link per pair (dials succeed through listen backlogs, so the
+//!    strict ordering cannot deadlock);
+//! 3. data frames are `[to: u64][msg body]` under a length prefix, sent
+//!    on the pair's own link and decoded only at the destination — a
+//!    frame for a place the receiving rank does not host is a protocol
+//!    violation (counted in [`misrouted_frames`], asserted zero by the
+//!    fleet tests).
+//!
+//! Rank 0 keeps binding separate from advertising: it binds
+//! [`SocketRunOpts::bind`] (default: the advertised host) so
+//! `--host <public-ip>` works on machines where that address is not
+//! locally bindable (`--bind 0.0.0.0`).
+//!
+//! ## Termination: credit throwing instead of a hub ledger
+//!
+//! The work-token count (paper §2.4 item 3) is distributed via
+//! Mattern-style credit throwing ([`crate::glb::termination`]): every
+//! rank runs a [`CreditLedger`] whose `incr`/`decr` are **local** (no
+//! I/O), loot messages carry credit atoms in their wire envelope, and a
+//! rank that goes idle deposits its atoms to rank 0's [`CreditRoot`]
+//! asynchronously on the control link. The root observes
+//! `recovered == total` exactly when no rank holds a token and no loot
+//! is in flight, then broadcasts `Terminate` to every place over the
+//! mesh. The only synchronous credit operation left is the
+//! pool-exhaustion [`Ctrl::Replenish`], amortized over many cross-rank
+//! loot sends (worst-case cadence documented at
+//! [`crate::glb::termination::MAX_ATTACH_ATOMS`]) — nothing here does a
+//! synchronous RPC per steal/loot event the way the old hub ledger did.
+//!
+//! A fleet-wide start barrier ([`Ctrl::Ready`]/[`Ctrl::Go`] on the
+//! control link) preserves the thread runtime's sequential-setup
+//! guarantee: no rank enters the steal protocol until every rank has
+//! constructed its workers and holds its initial tokens and credit.
 //!
 //! Teardown mirrors the protocol's own guarantee that no message is in
-//! flight after `Terminate`: a finished spoke half-closes its links
-//! (`shutdown(Write)`), rank 0's per-link threads drain to EOF, and rank
-//! 0 returns only after every forwarder has exited — so a broadcast
-//! `Terminate` is always forwarded before the hub goes away.
-//!
-//! Known trade-offs (documented, deliberate): ledger RPCs serialize on
-//! one link per process (fine — ledger traffic is per steal/loot event,
-//! not per task), and the star topology routes spoke-to-spoke traffic
-//! through rank 0 (two hops). Direct mesh links and a distributed
-//! (credit-based) ledger are the natural follow-ons once fleets span
-//! real hosts.
+//! flight after `Terminate`: every rank half-closes the write side of
+//! all its links; mesh readers drain to EOF; rank 0's control servers
+//! exit on their spoke's EOF (after optionally collecting the rank's
+//! encoded result for the fleet-wide reduction of
+//! [`run_sockets_reduced`]).
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::glb::message::{Effect, Msg, PlaceId};
 use crate::glb::task_queue::{Reducer, TaskQueue};
-use crate::glb::termination::{AtomicLedger, Ledger};
+use crate::glb::termination::{
+    AtomicLedger, CreditHome, CreditLedger, CreditRoot, Ledger, INITIAL_RANK_ATOMS,
+};
 use crate::glb::topology::{NodeBag, Topology};
-use crate::glb::wire::{self, WireCodec};
+use crate::glb::wire::{self, Ctrl, WireCodec};
 use crate::glb::worker::{Phase, Worker};
 use crate::glb::{GlbConfig, RunLog, RunOutput};
 
 /// How this process joins the fleet.
 #[derive(Debug, Clone)]
 pub struct SocketRunOpts {
-    /// This process's rank (= its GLB node id). Rank 0 is the hub.
+    /// This process's rank (= its GLB node id). Rank 0 is bootstrap +
+    /// credit root.
     pub rank: usize,
     /// Total processes in the fleet (= GLB node count).
     pub ranks: usize,
-    /// Rank 0's host, for binding (rank 0) and dialing (everyone else).
+    /// Rank 0's *advertised* host: what every other rank dials for
+    /// bootstrap, and what the peer map lists as rank 0's mesh address.
     pub host: String,
     /// Rank 0's rendezvous port. `0` (rank 0 only, single-rank fleets)
     /// binds an ephemeral port.
     pub port: u16,
+    /// Rank 0's *bind* address. `None` binds `host`; set it (CLI default
+    /// `0.0.0.0` when `--host` is given) when the advertised address is
+    /// not locally bindable — NAT'd hosts, load-balanced VIPs, or plain
+    /// `--host <public-ip>` on a box that only has the private interface.
+    pub bind: Option<String>,
+    /// This rank's advertised mesh IP (spokes). `None` advertises the
+    /// interface this host reaches rank 0 from — right for localhost
+    /// fleets and single-homed hosts alike.
+    pub advertise: Option<String>,
     /// How long to wait for the whole fleet to connect / handshake.
     pub handshake_timeout: Duration,
     /// Per-place worker thread stack size in bytes.
@@ -86,6 +116,8 @@ impl Default for SocketRunOpts {
             ranks: 1,
             host: "127.0.0.1".into(),
             port: 0,
+            bind: None,
+            advertise: None,
             handshake_timeout: Duration::from_secs(30),
             stack_bytes: 2 << 20,
         }
@@ -93,103 +125,121 @@ impl Default for SocketRunOpts {
 }
 
 // Handshake connection kinds.
-const HS_DATA: u8 = 0;
-const HS_LEDGER: u8 = 1;
+const HS_CTRL: u8 = 0;
+const HS_MESH: u8 = 1;
 
-// Ledger RPC opcodes and the generic acknowledgement byte.
-const OP_INCR: u8 = 1;
-const OP_DECR: u8 = 2;
-const OP_VALUE: u8 = 3;
-const OP_BARRIER: u8 = 4;
-const OP_ACK: u8 = 0xA5;
+/// Data frames that arrived at a rank not hosting their destination
+/// place — star-style relay traffic, which the mesh must never produce.
+/// Monotonic per process; the fleet integration tests assert it stays
+/// zero on every rank.
+static MISROUTED_FRAMES: AtomicU64 = AtomicU64::new(0);
 
-/// Bytes of a routed data-frame prefix (the destination place id).
-const ROUTE_BYTES: usize = 8;
+/// Data frames this process received for places it does not host (see
+/// [`MISROUTED_FRAMES`]). Zero on every rank of a healthy mesh.
+pub fn misrouted_frames() -> u64 {
+    MISROUTED_FRAMES.load(Ordering::Relaxed)
+}
 
 /// A shared, mutex-serialized write half of a TCP link.
 type Link = Arc<Mutex<TcpStream>>;
-/// Rank 0's per-rank link table (index = rank; `[0]` unused).
-type LinkTable = Arc<Vec<Option<Link>>>;
 /// Mailbox sender per *global* place id (`None` for remote places).
 type Mailboxes<B> = Arc<Vec<Option<Sender<Msg<B>>>>>;
+/// Per-rank slots for gathered result payloads (rank 0 only).
+type ResultSlots = Arc<Mutex<Vec<Option<Vec<u8>>>>>;
 
-/// The global work-token counter, as seen from one fleet process.
+/// The work-token ledger, as seen from one fleet process.
+#[derive(Clone)]
 enum FleetLedger {
-    /// Rank 0: the authoritative counter, updated in-process.
+    /// Single-rank fleet: the plain in-process counter.
     Local(Arc<AtomicLedger>),
-    /// Other ranks: synchronous RPCs over the ledger link to rank 0.
-    Remote(Link),
-}
-
-impl Clone for FleetLedger {
-    fn clone(&self) -> Self {
-        match self {
-            FleetLedger::Local(l) => FleetLedger::Local(l.clone()),
-            FleetLedger::Remote(s) => FleetLedger::Remote(s.clone()),
-        }
-    }
-}
-
-impl FleetLedger {
-    /// One synchronous request/reply on the ledger link. Panics on I/O
-    /// failure: a dead ledger link mid-run is unrecoverable (the global
-    /// count is gone), and all ledger traffic stops before teardown.
-    fn rpc(stream: &Mutex<TcpStream>, op: u8, reply: &mut [u8]) {
-        let mut s = stream.lock().unwrap();
-        s.write_all(&[op]).expect("fleet ledger link lost (write)");
-        s.read_exact(reply).expect("fleet ledger link lost (read)");
-    }
-
-    /// Rank > 0 only: arrive at the fleet-wide start barrier and block
-    /// until every rank has registered its initial tokens.
-    fn barrier(&self) {
-        match self {
-            FleetLedger::Local(_) => unreachable!("rank 0 arrives at the barrier in-process"),
-            FleetLedger::Remote(s) => {
-                let mut ack = [0u8; 1];
-                Self::rpc(s, OP_BARRIER, &mut ack);
-                debug_assert_eq!(ack[0], OP_ACK);
-            }
-        }
-    }
+    /// Mesh member: rank-local credit ledger (see module docs).
+    Credit(Arc<CreditLedger>),
 }
 
 impl Ledger for FleetLedger {
     fn incr(&self) {
         match self {
             FleetLedger::Local(l) => l.incr(),
-            FleetLedger::Remote(s) => {
-                let mut ack = [0u8; 1];
-                Self::rpc(s, OP_INCR, &mut ack);
-                debug_assert_eq!(ack[0], OP_ACK);
-            }
+            FleetLedger::Credit(l) => l.incr(),
         }
     }
 
     fn decr(&self) -> bool {
         match self {
             FleetLedger::Local(l) => l.decr(),
-            FleetLedger::Remote(s) => {
-                let mut reply = [0u8; 1];
-                Self::rpc(s, OP_DECR, &mut reply);
-                reply[0] == 1
-            }
+            FleetLedger::Credit(l) => l.decr(),
         }
     }
 
     fn value(&self) -> i64 {
         match self {
             FleetLedger::Local(l) => l.value(),
-            FleetLedger::Remote(s) => {
-                let mut reply = [0u8; 8];
-                Self::rpc(s, OP_VALUE, &mut reply);
-                i64::from_le_bytes(reply)
-            }
+            FleetLedger::Credit(l) => l.value(),
+        }
+    }
+
+    fn export_credit(&self) -> u64 {
+        match self {
+            FleetLedger::Local(l) => l.export_credit(),
+            FleetLedger::Credit(l) => l.export_credit(),
+        }
+    }
+
+    fn import_credit(&self, atoms: u64) {
+        match self {
+            FleetLedger::Local(l) => l.import_credit(atoms),
+            FleetLedger::Credit(l) => l.import_credit(atoms),
         }
     }
 }
 
-/// All ranks register their initial work tokens before any rank steals.
+/// A spoke's credit home: async deposits and the rare synchronous
+/// replenish, both on the control link. Panics on I/O failure — a dead
+/// control link loses termination credit, which is unrecoverable (the
+/// fleet could never quiesce), and all credit traffic stops before
+/// teardown.
+struct CtrlHome {
+    link: Link,
+}
+
+impl CreditHome for CtrlHome {
+    fn deposit(&self, atoms: u64) {
+        let mut s = self.link.lock().unwrap();
+        wire::write_frame(&mut *s, &Ctrl::Deposit { atoms }.to_body())
+            .expect("fleet control link lost (deposit)");
+    }
+
+    fn replenish(&self, want: u64) -> u64 {
+        let mut s = self.link.lock().unwrap();
+        wire::write_frame(&mut *s, &Ctrl::Replenish { want }.to_body())
+            .expect("fleet control link lost (replenish)");
+        let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
+            .expect("fleet control link lost (grant)")
+            .expect("fleet control link closed awaiting grant");
+        match Ctrl::decode(&body) {
+            Ok(Ctrl::Grant { atoms }) => atoms,
+            other => panic!("expected credit grant, got {other:?}"),
+        }
+    }
+}
+
+/// Rank 0's credit home: the root lives in-process.
+struct RootHome {
+    root: Arc<CreditRoot>,
+}
+
+impl CreditHome for RootHome {
+    fn deposit(&self, atoms: u64) {
+        self.root.deposit(atoms);
+    }
+
+    fn replenish(&self, want: u64) -> u64 {
+        self.root.mint(want)
+    }
+}
+
+/// All ranks construct their workers (holding their initial tokens and
+/// credit) before any rank steals.
 struct StartBarrier {
     arrived: Mutex<usize>,
     cv: Condvar,
@@ -213,23 +263,14 @@ impl StartBarrier {
     }
 }
 
-/// Where remote frames leave this process.
-#[derive(Clone)]
-enum Links {
-    /// Rank 0: one write link per remote rank.
-    Hub(LinkTable),
-    /// Rank > 0: everything remote goes to the hub, which forwards.
-    Spoke(Link),
-}
-
 /// The per-process message fabric: local mailboxes for this rank's
-/// places, TCP links for everyone else.
+/// places, one direct mesh link per remote rank.
 struct SocketTransport<B> {
     rank: usize,
     topo: Topology,
     p: usize,
     local: Mailboxes<B>,
-    links: Links,
+    links: Arc<Vec<Option<Link>>>,
 }
 
 impl<B> Clone for SocketTransport<B> {
@@ -245,9 +286,10 @@ impl<B> Clone for SocketTransport<B> {
 }
 
 impl<B: WireCodec> SocketTransport<B> {
-    /// Send `msg` to place `to` (best-effort; write failures only occur
-    /// during post-termination teardown, exactly like the thread
-    /// runtime's mailbox sends).
+    /// Send `msg` to place `to` — the local mailbox, or the destination
+    /// rank's own mesh link (never a relay). Best-effort on I/O failure:
+    /// writes only fail once the peer is gone, at which point the run is
+    /// already lost, exactly like the thread runtime's mailbox sends.
     fn send(&self, to: PlaceId, msg: Msg<B>) {
         let dest_rank = self.topo.node_of(to);
         if dest_rank == self.rank {
@@ -256,24 +298,25 @@ impl<B: WireCodec> SocketTransport<B> {
             }
             return;
         }
-        let mut body = Vec::with_capacity(ROUTE_BYTES + wire::MSG_FIXED_BYTES);
-        wire::put_u64(&mut body, to as u64);
-        wire::encode_msg_body(&msg, &mut body);
-        let link = match &self.links {
-            Links::Hub(links) => match &links[dest_rank] {
-                Some(l) => l.clone(),
-                None => return, // unreachable: every remote rank has a link
-            },
-            Links::Spoke(hub) => hub.clone(),
-        };
-        let mut s = link.lock().unwrap();
-        let _ = wire::write_frame(&mut *s, &body);
+        let body = wire::encode_data_frame_body(to, &msg);
+        if let Some(link) = &self.links[dest_rank] {
+            let mut s = link.lock().unwrap();
+            let _ = wire::write_frame(&mut *s, &body);
+        }
     }
 
-    /// The one broadcast in the protocol, issued by the worker that
-    /// observed global quiescence.
+    /// The worker-observed quiescence broadcast — only reachable in
+    /// single-rank fleets (mesh fleets detect at the credit root).
     fn broadcast_terminate(&self, me: PlaceId) {
         for i in (0..self.p).filter(|&i| i != me) {
+            self.send(i, Msg::Terminate);
+        }
+    }
+
+    /// The credit root observed global quiescence: tell every place in
+    /// the fleet (rank 0's own included) to finish.
+    fn terminate_fleet(&self) {
+        for i in 0..self.p {
             self.send(i, Msg::Terminate);
         }
     }
@@ -338,10 +381,10 @@ where
     (queue.result(), stats)
 }
 
-/// Rank 0's per-remote-rank data thread: deliver frames addressed to
-/// rank 0's places, forward everything else (raw bytes, no decode) to
-/// the destination rank's link. Exits on the remote's EOF.
-fn hub_reader<B>(mut stream: TcpStream, topo: Topology, links: LinkTable, local: Mailboxes<B>)
+/// A mesh link's read side: decode frames from one peer rank straight
+/// into this rank's mailboxes. Exits on the peer's EOF (clean teardown)
+/// or a protocol violation.
+fn mesh_reader<B>(mut stream: TcpStream, my_rank: usize, topo: Topology, local: Mailboxes<B>)
 where
     B: WireCodec + Send + 'static,
 {
@@ -350,81 +393,90 @@ where
             Ok(Some(b)) => b,
             Ok(None) | Err(_) => return,
         };
-        if body.len() < ROUTE_BYTES {
-            return; // malformed peer; drop the link
-        }
-        let to = u64::from_le_bytes(body[..ROUTE_BYTES].try_into().unwrap()) as usize;
-        if to >= topo.places() {
+        let (to, msg) = match wire::decode_data_frame_body::<B>(&body) {
+            Ok(x) => x,
+            Err(_) => return, // malformed peer; drop the link
+        };
+        if to >= topo.places() || topo.node_of(to) != my_rank {
+            // A frame for a place this rank does not host would need
+            // star-style forwarding — which the mesh must never produce.
+            MISROUTED_FRAMES.fetch_add(1, Ordering::Relaxed);
+            debug_assert!(false, "data frame for place {to} arrived at rank {my_rank}");
             return;
         }
-        if topo.node_of(to) == 0 {
-            match wire::decode_msg_body::<B>(&body[ROUTE_BYTES..]) {
-                Ok(msg) => {
-                    if let Some(tx) = &local[to] {
-                        let _ = tx.send(msg);
-                    }
-                }
-                Err(_) => return,
-            }
-        } else if let Some(link) = &links[topo.node_of(to)] {
-            let mut s = link.lock().unwrap();
-            let _ = wire::write_frame(&mut *s, &body);
+        if let Some(tx) = &local[to] {
+            let _ = tx.send(msg);
         }
     }
 }
 
-/// A spoke's data thread: decode frames from the hub into the local
-/// mailboxes. Exits on the hub's EOF (or process exit).
-fn spoke_reader<B>(mut stream: TcpStream, local: Mailboxes<B>)
-where
-    B: WireCodec + Send + 'static,
-{
+/// Rank 0's per-spoke control servant: barrier arrivals, credit
+/// deposits/replenishes, and result collection. Exits on the spoke's
+/// clean half-close (after its workers finished) or a violation.
+fn control_server(
+    mut stream: TcpStream,
+    rank: usize,
+    root: Arc<CreditRoot>,
+    barrier: Arc<StartBarrier>,
+    results: ResultSlots,
+) {
     loop {
         let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
             Ok(Some(b)) => b,
             Ok(None) | Err(_) => return,
         };
-        if body.len() < ROUTE_BYTES {
-            return;
-        }
-        let to = u64::from_le_bytes(body[..ROUTE_BYTES].try_into().unwrap()) as usize;
-        match wire::decode_msg_body::<B>(&body[ROUTE_BYTES..]) {
-            Ok(msg) => {
-                if let Some(tx) = local.get(to).and_then(|o| o.as_ref()) {
-                    let _ = tx.send(msg);
-                }
-            }
-            Err(_) => return,
-        }
-    }
-}
-
-/// Rank 0's per-remote-rank ledger thread: apply token RPCs to the
-/// authoritative counter, in arrival order, one reply per request.
-fn ledger_server(mut stream: TcpStream, ledger: Arc<AtomicLedger>, barrier: Arc<StartBarrier>) {
-    let mut op = [0u8; 1];
-    loop {
-        if stream.read_exact(&mut op).is_err() {
-            return; // peer finished (clean half-close) or died
-        }
-        let written = match op[0] {
-            OP_INCR => {
-                ledger.incr();
-                stream.write_all(&[OP_ACK])
-            }
-            OP_DECR => {
-                let zero = ledger.decr();
-                stream.write_all(&[zero as u8])
-            }
-            OP_VALUE => stream.write_all(&ledger.value().to_le_bytes()),
-            OP_BARRIER => {
+        let ok = match Ctrl::decode(&body) {
+            Ok(Ctrl::Ready { .. }) => {
                 barrier.arrive_and_wait();
-                stream.write_all(&[OP_ACK])
+                wire::write_frame(&mut stream, &Ctrl::Go.to_body()).is_ok()
             }
-            _ => return,
+            Ok(Ctrl::Deposit { atoms }) => {
+                root.deposit(atoms);
+                true
+            }
+            Ok(Ctrl::Replenish { want }) => {
+                let atoms = root.mint(want);
+                wire::write_frame(&mut stream, &Ctrl::Grant { atoms }.to_body()).is_ok()
+            }
+            Ok(Ctrl::Result { bytes }) => {
+                results.lock().unwrap()[rank] = Some(bytes);
+                true
+            }
+            _ => false, // protocol violation; drop the link
         };
-        if written.is_err() {
+        if !ok {
             return;
+        }
+    }
+}
+
+/// Accept one fleet connection from a nonblocking `listener` before
+/// `deadline`: the stream comes back blocking, nodelay, with its
+/// 9-byte `[kind, rank]` handshake already read (under `timeout`, which
+/// is left set — callers clear it once their per-kind setup is done).
+fn accept_handshake(
+    listener: &TcpListener,
+    deadline: Instant,
+    timeout: Duration,
+) -> Result<(TcpStream, u8, usize)> {
+    loop {
+        match listener.accept() {
+            Ok((mut s, _addr)) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(Some(timeout))?;
+                let mut hs = [0u8; 9];
+                s.read_exact(&mut hs).context("read fleet handshake")?;
+                let r = u64::from_le_bytes(hs[1..].try_into().unwrap()) as usize;
+                return Ok((s, hs[0], r));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    bail!("timed out waiting for fleet connection(s)");
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e.into()),
         }
     }
 }
@@ -438,7 +490,7 @@ fn connect_retry(host: &str, port: u16, deadline: Instant) -> Result<TcpStream> 
             }
             Err(e) => {
                 if Instant::now() > deadline {
-                    bail!("could not reach fleet hub at {host}:{port}: {e}");
+                    bail!("could not reach fleet peer at {host}:{port}: {e}");
                 }
                 std::thread::sleep(Duration::from_millis(25));
             }
@@ -453,6 +505,49 @@ fn handshake_bytes(kind: u8, rank: usize) -> [u8; 9] {
     hs
 }
 
+/// How (whether) per-rank results funnel to rank 0 after the run.
+trait ResultPlan<R>: Copy {
+    const GATHER: bool;
+    fn encode(&self, result: &R) -> Vec<u8>;
+    fn decode(&self, bytes: &[u8]) -> Result<R>;
+}
+
+/// [`run_sockets`]: every rank keeps its local reduction.
+#[derive(Clone, Copy)]
+struct LocalOnly;
+
+impl<R> ResultPlan<R> for LocalOnly {
+    const GATHER: bool = false;
+    fn encode(&self, _result: &R) -> Vec<u8> {
+        unreachable!("no result gathering")
+    }
+    fn decode(&self, _bytes: &[u8]) -> Result<R> {
+        unreachable!("no result gathering")
+    }
+}
+
+/// [`run_sockets_reduced`]: results travel the control link as their
+/// wire encoding and rank 0 folds the fleet.
+#[derive(Clone, Copy)]
+struct GatherWire;
+
+impl<R: WireCodec> ResultPlan<R> for GatherWire {
+    const GATHER: bool = true;
+    fn encode(&self, result: &R) -> Vec<u8> {
+        let mut out = Vec::new();
+        result.encode(&mut out);
+        out
+    }
+    fn decode(&self, bytes: &[u8]) -> Result<R> {
+        let mut r = wire::Reader::new(bytes);
+        let v = R::decode(&mut r).map_err(|e| anyhow!("decode fleet result: {e}"))?;
+        if r.remaining() != 0 {
+            bail!("trailing bytes after fleet result");
+        }
+        Ok(v)
+    }
+}
+
 /// Run this process's share of a fleet-wide GLB computation.
 ///
 /// The factory/root-init/reducer contract matches
@@ -460,11 +555,13 @@ fn handshake_bytes(kind: u8, rank: usize) -> [u8; 9] {
 /// is called only for this rank's places (still with global `(place, p)`
 /// arguments), and the returned [`RunOutput`] holds the reduction of
 /// **this rank's** per-place results plus the local [`RunLog`] — the
-/// caller (or the `testkit::fleet` harness) combines ranks.
+/// caller (or the `testkit::fleet` harness) combines ranks. Use
+/// [`run_sockets_reduced`] to get the fleet-wide reduction at rank 0
+/// instead.
 pub fn run_sockets<Q, R, FQ, FI>(
     cfg: &GlbConfig,
     opts: &SocketRunOpts,
-    mut factory: FQ,
+    factory: FQ,
     root_init: FI,
     reducer: &R,
 ) -> Result<RunOutput<Q::Result>>
@@ -474,6 +571,48 @@ where
     R: Reducer<Q::Result>,
     FQ: FnMut(usize, usize) -> Q,
     FI: FnOnce(&mut Q),
+{
+    run_sockets_plan(cfg, opts, factory, root_init, reducer, LocalOnly)
+}
+
+/// [`run_sockets`] plus a fleet-wide result reduction: every spoke ships
+/// its locally reduced result (as its [`WireCodec`] encoding) to rank 0
+/// over the control link after the run, and rank 0's [`RunOutput`] holds
+/// the reduction over **all** ranks. Spokes still return their local
+/// share.
+pub fn run_sockets_reduced<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    opts: &SocketRunOpts,
+    factory: FQ,
+    root_init: FI,
+    reducer: &R,
+) -> Result<RunOutput<Q::Result>>
+where
+    Q: TaskQueue,
+    Q::Bag: WireCodec,
+    Q::Result: WireCodec,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    run_sockets_plan(cfg, opts, factory, root_init, reducer, GatherWire)
+}
+
+fn run_sockets_plan<Q, R, FQ, FI, P>(
+    cfg: &GlbConfig,
+    opts: &SocketRunOpts,
+    mut factory: FQ,
+    root_init: FI,
+    reducer: &R,
+    plan: P,
+) -> Result<RunOutput<Q::Result>>
+where
+    Q: TaskQueue,
+    Q::Bag: WireCodec,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+    P: ResultPlan<Q::Result>,
 {
     let p = cfg.p;
     let topo = cfg.topology();
@@ -502,122 +641,182 @@ where
         local_tx[i] = Some(tx);
         rxs.push(rx);
     }
-    let local_tx = Arc::new(local_tx);
+    let local_tx: Mailboxes<Q::Bag> = Arc::new(local_tx);
 
     // -- fleet wiring ----------------------------------------------------
     let deadline = Instant::now() + opts.handshake_timeout;
-    let mut hub_readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut ledger_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut spoke_streams: Option<(Link, Link)> = None;
+    let mut mesh_readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut control_servers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let results: ResultSlots = Arc::new(Mutex::new((0..ranks).map(|_| None).collect()));
 
-    let (links, ledger, hub_barrier, hub_atomic) = if rank == 0 {
-        let atomic = AtomicLedger::new();
-        let barrier = Arc::new(StartBarrier::new(ranks));
-        let mut data_read: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
-        let mut data_write: Vec<Option<Link>> = (0..ranks).map(|_| None).collect();
-        let mut ledger_slots: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
-        if ranks > 1 {
-            let listener = TcpListener::bind((opts.host.as_str(), opts.port))
-                .with_context(|| format!("bind fleet hub on {}:{}", opts.host, opts.port))?;
-            listener.set_nonblocking(true)?;
-            let mut need = 2 * (ranks - 1);
-            while need > 0 {
-                match listener.accept() {
-                    Ok((mut s, _addr)) => {
-                        s.set_nonblocking(false)?;
-                        s.set_nodelay(true)?;
-                        s.set_read_timeout(Some(opts.handshake_timeout))?;
-                        let mut hs = [0u8; 9];
-                        s.read_exact(&mut hs).context("read fleet handshake")?;
-                        s.set_read_timeout(None)?;
-                        let r = u64::from_le_bytes(hs[1..].try_into().unwrap()) as usize;
-                        if r == 0 || r >= ranks {
-                            bail!("fleet handshake from invalid rank {r}");
-                        }
-                        match hs[0] {
-                            HS_DATA => {
-                                if data_write[r].is_some() {
-                                    bail!("duplicate data link from rank {r}");
-                                }
-                                data_read[r] = Some(s.try_clone()?);
-                                data_write[r] = Some(Arc::new(Mutex::new(s)));
-                            }
-                            HS_LEDGER => {
-                                if ledger_slots[r].is_some() {
-                                    bail!("duplicate ledger link from rank {r}");
-                                }
-                                ledger_slots[r] = Some(s);
-                            }
-                            k => bail!("bad fleet handshake kind {k}"),
-                        }
-                        need -= 1;
+    let mut links: Vec<Option<Link>> = (0..ranks).map(|_| None).collect();
+    let mut mesh_read: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+    let mut ctrl_link: Option<Link> = None;
+    let mut root: Option<Arc<CreditRoot>> = None;
+    let mut hub_barrier: Option<Arc<StartBarrier>> = None;
+
+    let ledger = if ranks == 1 {
+        FleetLedger::Local(AtomicLedger::new())
+    } else if rank == 0 {
+        // --- bootstrap: accept every control + mesh connection ----------
+        let bind_addr = opts.bind.clone().unwrap_or_else(|| opts.host.clone());
+        let listener = TcpListener::bind((bind_addr.as_str(), opts.port))
+            .with_context(|| format!("bind fleet bootstrap on {bind_addr}:{}", opts.port))?;
+        listener.set_nonblocking(true)?;
+        let mut ctrl_conns: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        let mut addrs: Vec<Option<String>> = (0..ranks).map(|_| None).collect();
+        addrs[0] = Some(format!("{}:{}", opts.host, listener.local_addr()?.port()));
+        for _ in 0..2 * (ranks - 1) {
+            let (mut s, kind, r) = accept_handshake(&listener, deadline, opts.handshake_timeout)?;
+            if r == 0 || r >= ranks {
+                bail!("fleet handshake from invalid rank {r}");
+            }
+            match kind {
+                HS_CTRL => {
+                    if ctrl_conns[r].is_some() {
+                        bail!("duplicate control link from rank {r}");
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        if Instant::now() > deadline {
-                            bail!("timed out waiting for {need} more fleet connection(s)");
+                    let body = wire::read_frame(&mut s, wire::MAX_FRAME_BYTES)
+                        .context("read rank registration")?
+                        .ok_or_else(|| anyhow!("rank {r} closed before registering"))?;
+                    match Ctrl::decode(&body) {
+                        Ok(Ctrl::Register { rank: rr, addr }) if rr as usize == r => {
+                            addrs[r] = Some(addr);
                         }
-                        std::thread::sleep(Duration::from_millis(5));
+                        other => bail!("rank {r}: expected registration, got {other:?}"),
                     }
-                    Err(e) => return Err(e.into()),
+                    s.set_read_timeout(None)?;
+                    ctrl_conns[r] = Some(s);
                 }
+                HS_MESH => {
+                    if links[r].is_some() {
+                        bail!("duplicate mesh link from rank {r}");
+                    }
+                    s.set_read_timeout(None)?;
+                    mesh_read[r] = Some(s.try_clone()?);
+                    links[r] = Some(Arc::new(Mutex::new(s)));
+                }
+                k => bail!("bad fleet handshake kind {k}"),
             }
         }
-        // Ledger service must be live before remote ranks construct
-        // workers (their initial-token increments are RPCs).
-        for conn in ledger_slots.into_iter().flatten() {
-            let (l, b) = (atomic.clone(), barrier.clone());
-            ledger_threads.push(
+        // --- publish the peer map; spokes then dial each other ----------
+        let addrs: Vec<String> = addrs
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .context("fleet bootstrap finished with unregistered ranks")?;
+        let map = Ctrl::PeerMap { addrs }.to_body();
+        for (r, conn) in ctrl_conns.iter_mut().enumerate() {
+            if let Some(s) = conn {
+                wire::write_frame(s, &map).with_context(|| format!("send peer map to rank {r}"))?;
+            }
+        }
+        // --- credit root + per-spoke control servants -------------------
+        // Servants must be live before any spoke can replenish or deposit
+        // (both possible as soon as that spoke is past the barrier).
+        let credit_root = CreditRoot::new();
+        credit_root.grant(ranks as u64 * INITIAL_RANK_ATOMS);
+        let barrier = Arc::new(StartBarrier::new(ranks));
+        for (r, conn) in ctrl_conns.into_iter().enumerate() {
+            let Some(conn) = conn else { continue };
+            let (rt, b, res) = (credit_root.clone(), barrier.clone(), results.clone());
+            control_servers.push(
                 std::thread::Builder::new()
-                    .name("glb-fleet-ledger".into())
-                    .spawn(move || ledger_server(conn, l, b))
-                    .expect("spawn ledger server"),
+                    .name(format!("glb-fleet-ctrl-{r}"))
+                    .spawn(move || control_server(conn, r, rt, b, res))
+                    .expect("spawn control server"),
             );
         }
-        let links = Links::Hub(Arc::new(data_write));
-        // Data delivery + forwarding, one thread per remote rank. Spawned
-        // before the start barrier so the first post-barrier steal finds
-        // a live fabric.
-        if let Links::Hub(link_vec) = &links {
-            for (r, read_half) in data_read.into_iter().enumerate() {
-                let Some(read_half) = read_half else { continue };
-                let (lv, lt) = (link_vec.clone(), local_tx.clone());
-                hub_readers.push(
-                    std::thread::Builder::new()
-                        .name(format!("glb-fleet-hub-{r}"))
-                        .spawn(move || hub_reader::<Q::Bag>(read_half, topo, lv, lt))
-                        .expect("spawn hub reader"),
-                );
-            }
-        }
-        (links, FleetLedger::Local(atomic.clone()), Some(barrier), Some(atomic))
+        hub_barrier = Some(barrier);
+        root = Some(credit_root.clone());
+        FleetLedger::Credit(CreditLedger::new(
+            Arc::new(RootHome { root: credit_root }),
+            INITIAL_RANK_ATOMS,
+        ))
     } else {
-        let mut data = connect_retry(&opts.host, opts.port, deadline)?;
-        data.write_all(&handshake_bytes(HS_DATA, rank)).context("send data handshake")?;
-        let mut ledger_stream = connect_retry(&opts.host, opts.port, deadline)?;
-        ledger_stream
-            .write_all(&handshake_bytes(HS_LEDGER, rank))
-            .context("send ledger handshake")?;
-        let read_half = data.try_clone()?;
-        let hub_write = Arc::new(Mutex::new(data));
-        let ledger_stream = Arc::new(Mutex::new(ledger_stream));
-        spoke_streams = Some((hub_write.clone(), ledger_stream.clone()));
-        let lt = local_tx.clone();
-        // Detached on purpose: it exits on the hub's EOF, which arrives
-        // only after every rank has finished (see module docs).
-        std::thread::Builder::new()
-            .name("glb-fleet-spoke".into())
-            .spawn(move || spoke_reader::<Q::Bag>(read_half, lt))
-            .expect("spawn spoke reader");
-        (Links::Spoke(hub_write), FleetLedger::Remote(ledger_stream), None, None)
+        // --- spoke: own mesh listener + control link to rank 0 ----------
+        let listener = TcpListener::bind(("0.0.0.0", 0)).context("bind mesh listener")?;
+        let mesh_port = listener.local_addr()?.port();
+        let mut ctrl = connect_retry(&opts.host, opts.port, deadline)?;
+        ctrl.write_all(&handshake_bytes(HS_CTRL, rank)).context("send control handshake")?;
+        let advertise_ip = match &opts.advertise {
+            Some(a) => a.clone(),
+            None => ctrl.local_addr()?.ip().to_string(),
+        };
+        // Mesh link to rank 0 (its address is already known).
+        let mut to_hub = connect_retry(&opts.host, opts.port, deadline)?;
+        to_hub.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
+        mesh_read[0] = Some(to_hub.try_clone()?);
+        links[0] = Some(Arc::new(Mutex::new(to_hub)));
+        // Register our mesh address, receive everyone's.
+        let reg = Ctrl::Register { rank: rank as u64, addr: format!("{advertise_ip}:{mesh_port}") };
+        wire::write_frame(&mut ctrl, &reg.to_body()).context("send registration")?;
+        ctrl.set_read_timeout(Some(opts.handshake_timeout))?;
+        let body = wire::read_frame(&mut ctrl, wire::MAX_FRAME_BYTES)
+            .context("read peer map")?
+            .ok_or_else(|| anyhow!("bootstrap closed before the peer map"))?;
+        let addrs = match Ctrl::decode(&body) {
+            Ok(Ctrl::PeerMap { addrs }) if addrs.len() == ranks => addrs,
+            other => bail!("expected a {ranks}-rank peer map, got {other:?}"),
+        };
+        // Dial every lower spoke; accept every higher one. Dials complete
+        // through the targets' listen backlogs even before their accept
+        // loops run, so the strict ordering cannot deadlock.
+        for (r, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+            let (host, port) = addr
+                .rsplit_once(':')
+                .ok_or_else(|| anyhow!("malformed mesh address {addr:?} for rank {r}"))?;
+            let port: u16 = port.parse().with_context(|| format!("mesh port in {addr:?}"))?;
+            let mut s = connect_retry(host, port, deadline)?;
+            s.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
+            mesh_read[r] = Some(s.try_clone()?);
+            links[r] = Some(Arc::new(Mutex::new(s)));
+        }
+        listener.set_nonblocking(true)?;
+        for _ in 0..ranks - 1 - rank {
+            let (s, kind, r) = accept_handshake(&listener, deadline, opts.handshake_timeout)?;
+            s.set_read_timeout(None)?;
+            if kind != HS_MESH || r <= rank || r >= ranks {
+                bail!("bad mesh handshake (kind {kind}, rank {r})");
+            }
+            if links[r].is_some() {
+                bail!("duplicate mesh link from rank {r}");
+            }
+            mesh_read[r] = Some(s.try_clone()?);
+            links[r] = Some(Arc::new(Mutex::new(s)));
+        }
+        ctrl.set_read_timeout(None)?;
+        let link = Arc::new(Mutex::new(ctrl));
+        ctrl_link = Some(link.clone());
+        FleetLedger::Credit(CreditLedger::new(Arc::new(CtrlHome { link }), INITIAL_RANK_ATOMS))
     };
 
+    // --- mesh readers: decode peers' frames into our mailboxes ----------
+    for (r, read_half) in mesh_read.into_iter().enumerate() {
+        let Some(read_half) = read_half else { continue };
+        let lt = local_tx.clone();
+        mesh_readers.push(
+            std::thread::Builder::new()
+                .name(format!("glb-mesh-{rank}-{r}"))
+                .spawn(move || mesh_reader::<Q::Bag>(read_half, rank, topo, lt))
+                .expect("spawn mesh reader"),
+        );
+    }
+
     let transport: SocketTransport<Q::Bag> =
-        SocketTransport { rank, topo, p, local: local_tx, links };
+        SocketTransport { rank, topo, p, local: local_tx, links: Arc::new(links) };
+
+    // The detector broadcasts Terminate to every place the moment all
+    // credit is recovered — the distributed stand-in for the
+    // worker-observed zero of the single-process ledgers.
+    if let Some(credit_root) = &root {
+        let t = transport.clone();
+        credit_root.on_quiescent(move || t.terminate_fleet());
+    }
 
     // -- sequential local setup ------------------------------------------
-    // Queues and workers are constructed (registering initial work
-    // tokens, remotely via synchronous RPC) *before* the start barrier;
-    // no rank can observe an incomplete global ledger.
+    // Queues and workers are constructed (acquiring initial work tokens
+    // against this rank's credit pool) *before* the start barrier, so no
+    // rank can be stolen from while half-built.
     let mut queues: Vec<Q> = my_places.iter().map(|&i| factory(i, p)).collect();
     if rank == 0 {
         root_init(&mut queues[0]);
@@ -630,14 +829,29 @@ where
         .map(|(q, &i)| Worker::with_node_bag(i, p, cfg.params, q, ledger.clone(), node_bag.clone()))
         .collect();
 
-    // -- start barrier ---------------------------------------------------
-    match (&hub_barrier, &ledger) {
-        (Some(b), _) => b.arrive_and_wait(),
-        (None, l) => l.barrier(),
+    // -- fleet-wide start barrier ----------------------------------------
+    if ranks > 1 {
+        if rank == 0 {
+            // Arm before any GO can reach a spoke: deposits only start
+            // after GO, so detection can never race the fleet start.
+            root.as_ref().expect("rank 0 hosts the credit root").arm();
+            hub_barrier.as_ref().expect("rank 0 owns the barrier").arrive_and_wait();
+        } else {
+            let link = ctrl_link.as_ref().expect("spokes hold a control link");
+            let mut s = link.lock().unwrap();
+            wire::write_frame(&mut *s, &Ctrl::Ready { rank: rank as u64 }.to_body())
+                .context("send fleet ready")?;
+            let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
+                .context("await fleet go")?
+                .ok_or_else(|| anyhow!("bootstrap closed before go"))?;
+            if !matches!(Ctrl::decode(&body), Ok(Ctrl::Go)) {
+                bail!("expected the fleet go signal, got another control frame");
+            }
+        }
     }
 
     // Kick empty places into the steal protocol (now safe: every rank's
-    // initial tokens are on the global ledger).
+    // workers are constructed and credited).
     let mut fx = Vec::new();
     for w in workers.iter_mut() {
         let me = w.id();
@@ -664,27 +878,50 @@ where
         handles.into_iter().map(|h| h.join().expect("place thread panicked")).collect();
     let elapsed_ns = t0.elapsed().as_nanos() as u64;
 
-    // -- teardown ----------------------------------------------------------
-    if let Some((data, ledger_stream)) = spoke_streams {
-        // Half-close both links: the hub's threads see EOF and know this
-        // rank is done; the hub's eventual close unblocks our reader.
-        let _ = data.lock().unwrap().shutdown(Shutdown::Write);
-        let _ = ledger_stream.lock().unwrap().shutdown(Shutdown::Write);
-    }
-    for h in hub_readers {
-        let _ = h.join();
-    }
-    for h in ledger_threads {
-        let _ = h.join();
-    }
-    if let Some(atomic) = hub_atomic {
-        debug_assert_eq!(atomic.value(), 0, "global tokens must balance at termination");
+    let stats: Vec<_> = per_place.iter().map(|(_, s)| *s).collect();
+    let local_results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
+    let mut result = reducer.reduce_all(local_results);
+
+    // -- result gathering (spoke side; on the still-open control link) ----
+    if P::GATHER && ranks > 1 && rank != 0 {
+        let link = ctrl_link.as_ref().expect("spokes hold a control link");
+        let mut s = link.lock().unwrap();
+        wire::write_frame(&mut *s, &Ctrl::Result { bytes: plan.encode(&result) }.to_body())
+            .context("send fleet result")?;
     }
 
-    let stats: Vec<_> = per_place.iter().map(|(_, s)| *s).collect();
-    let results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
+    // -- teardown ----------------------------------------------------------
+    // Half-close everything we write to; readers drain peers to EOF.
+    if let Some(link) = &ctrl_link {
+        let _ = link.lock().unwrap().shutdown(Shutdown::Write);
+    }
+    for link in transport.links.iter().flatten() {
+        let _ = link.lock().unwrap().shutdown(Shutdown::Write);
+    }
+    for h in mesh_readers {
+        let _ = h.join();
+    }
+    for h in control_servers {
+        let _ = h.join();
+    }
+
+    if let Some(credit_root) = &root {
+        debug_assert!(credit_root.quiescent(), "all termination credit must be recovered");
+        debug_assert_eq!(credit_root.outstanding(), 0, "credit books must balance");
+        if P::GATHER {
+            let mut slots = results.lock().unwrap();
+            let mut all = vec![result];
+            for (r, slot) in slots.iter_mut().enumerate().skip(1) {
+                let bytes = slot.take().ok_or_else(|| anyhow!("rank {r} sent no result"))?;
+                all.push(plan.decode(&bytes).with_context(|| format!("result of rank {r}"))?);
+            }
+            result = reducer.reduce_all(all);
+        }
+    }
+    debug_assert_eq!(ledger.value(), 0, "local tokens must balance at termination");
+
     let log = RunLog::with_topology(stats, cfg.params.workers_per_node);
-    Ok(RunOutput { result: reducer.reduce_all(results), log, elapsed_ns })
+    Ok(RunOutput { result, log, elapsed_ns })
 }
 
 #[cfg(test)]
@@ -733,6 +970,22 @@ mod tests {
             t0.loot_bags_sent + t1.loot_bags_sent,
             t0.loot_bags_received + t1.loot_bags_received,
         );
+        assert_eq!(misrouted_frames(), 0, "a mesh never relays");
+    }
+
+    #[test]
+    fn three_rank_mesh_exchanges_directly() {
+        // With three ranks every spoke pair owns a direct link; the
+        // misrouted counter proves no frame ever needed rank 0's help.
+        let port = free_port();
+        let params = GlbParams::default().with_n(32).with_l(2);
+        let t1 = std::thread::spawn(move || run_rank(1, 3, port, params, 3, 6));
+        let t2 = std::thread::spawn(move || run_rank(2, 3, port, params, 3, 6));
+        let r0 = run_rank(0, 3, port, params, 3, 6);
+        let r1 = t1.join().unwrap();
+        let r2 = t2.join().unwrap();
+        assert_eq!(r0.result + r1.result + r2.result, sequential_count(&up(6)));
+        assert_eq!(misrouted_frames(), 0, "a mesh never relays");
     }
 
     #[test]
@@ -757,8 +1010,8 @@ mod tests {
     #[test]
     fn empty_fleet_terminates_cleanly() {
         // No root work anywhere: every worker kicks, all steals are
-        // refused across the wire, the last release observes global
-        // quiescence and Terminate reaches both processes.
+        // refused across the wire, the last credit deposit reaches the
+        // root, and the detector's Terminate reaches both processes.
         let port = free_port();
         let params = GlbParams::default().with_l(2);
         let t1 = std::thread::spawn(move || {
@@ -772,6 +1025,72 @@ mod tests {
             run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(4)), |_| {}, &SumReducer).unwrap();
         let r1 = t1.join().unwrap();
         assert_eq!(r0.result + r1.result, 0);
+    }
+
+    #[test]
+    fn bind_address_splits_from_advertised_host() {
+        // The rank-0 bind/advertise fix: bind the wildcard while
+        // advertising (and dialing) loopback — before the split this
+        // required --host to be locally bindable.
+        let port = free_port();
+        let params = GlbParams::default().with_n(64).with_l(2);
+        let t1 = std::thread::spawn(move || {
+            let cfg = GlbConfig::new(2, params);
+            let opts = SocketRunOpts { rank: 1, ranks: 2, port, ..Default::default() };
+            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(5)), |q| q.init_root(), &SumReducer)
+                .unwrap()
+        });
+        let cfg = GlbConfig::new(2, params);
+        let opts = SocketRunOpts {
+            rank: 0,
+            ranks: 2,
+            port,
+            host: "127.0.0.1".into(),
+            bind: Some("0.0.0.0".into()),
+            ..Default::default()
+        };
+        let r0 =
+            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(5)), |q| q.init_root(), &SumReducer)
+                .unwrap();
+        let r1 = t1.join().unwrap();
+        assert_eq!(r0.result + r1.result, sequential_count(&up(5)));
+    }
+
+    #[test]
+    fn reduced_run_folds_the_fleet_at_rank0() {
+        let port = free_port();
+        let params = GlbParams::default().with_n(64).with_l(2);
+        let spawn_rank = move |rank: usize| {
+            std::thread::spawn(move || {
+                let cfg = GlbConfig::new(3, params);
+                let opts = SocketRunOpts { rank, ranks: 3, port, ..Default::default() };
+                run_sockets_reduced(
+                    &cfg,
+                    &opts,
+                    |_, _| UtsQueue::new(up(6)),
+                    |q| q.init_root(),
+                    &SumReducer,
+                )
+                .unwrap()
+            })
+        };
+        let t1 = spawn_rank(1);
+        let t2 = spawn_rank(2);
+        let cfg = GlbConfig::new(3, params);
+        let opts = SocketRunOpts { rank: 0, ranks: 3, port, ..Default::default() };
+        let r0 = run_sockets_reduced(
+            &cfg,
+            &opts,
+            |_, _| UtsQueue::new(up(6)),
+            |q| q.init_root(),
+            &SumReducer,
+        )
+        .unwrap();
+        let r1 = t1.join().unwrap();
+        let r2 = t2.join().unwrap();
+        let expect = sequential_count(&up(6));
+        assert_eq!(r0.result, expect, "rank 0 holds the fleet-wide reduction");
+        assert!(r1.result <= expect && r2.result <= expect, "spokes keep local shares");
     }
 
     #[test]

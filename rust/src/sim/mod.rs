@@ -264,16 +264,19 @@ impl<Q: TaskQueue> Sim<Q> {
         for e in fx.drain(..) {
             match e {
                 Effect::Send { to, msg } => {
-                    let bytes = msg.wire_bytes(self.cost.item_bytes, |b: &Q::Bag| {
-                        use crate::glb::task_bag::TaskBag;
-                        b.size()
-                    });
                     let (na, nb) = (self.arch.node_of(from), self.arch.node_of(to));
                     let deliver_at = if na == nb {
                         // Intra-node: shared-memory latency, no NIC charge.
                         t + self.arch.intra_node_ns
                     } else {
                         self.cross_messages += 1;
+                        // Cross-node messages serialize what the socket
+                        // transport actually frames: the codec envelope
+                        // plus the mesh data frame's destination prefix.
+                        let bytes = msg.wire_bytes(self.cost.item_bytes, |b: &Q::Bag| {
+                            use crate::glb::task_bag::TaskBag;
+                            b.size()
+                        }) + crate::glb::wire::DATA_ROUTE_BYTES;
                         // Occupy the source NIC: per-message overhead +
                         // serialization, shared by the node's places.
                         let occupy = self.arch.nic_msg_overhead_ns

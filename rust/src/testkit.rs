@@ -122,16 +122,24 @@ pub mod fleet {
     const ENV_RANK: &str = "GLB_FLEET_RANK";
     const ENV_RANKS: &str = "GLB_FLEET_RANKS";
     const ENV_PORT: &str = "GLB_FLEET_PORT";
+    const ENV_HOST: &str = "GLB_FLEET_HOST";
+    const ENV_BIND: &str = "GLB_FLEET_BIND";
 
     /// Marker prefix of a child's result line on stdout.
     pub const LOG_PREFIX: &str = "GLB-FLEET";
 
     /// This process's role in a fleet, if it was spawned as a child.
-    #[derive(Debug, Clone, Copy)]
+    #[derive(Debug, Clone)]
     pub struct ChildRole {
         pub rank: usize,
         pub ranks: usize,
         pub port: u16,
+        /// Rank 0's advertised host (what the fleet dials).
+        pub host: String,
+        /// Rank 0's bind address, when split from `host` — the harness
+        /// always splits (wildcard bind, loopback advertise) so every
+        /// fleet test exercises the bind/advertise separation.
+        pub bind: Option<String>,
     }
 
     /// `Some` iff the process was spawned by [`run`] (fleet environment
@@ -140,7 +148,9 @@ pub mod fleet {
         let rank = std::env::var(ENV_RANK).ok()?.parse().ok()?;
         let ranks = std::env::var(ENV_RANKS).ok()?.parse().ok()?;
         let port = std::env::var(ENV_PORT).ok()?.parse().ok()?;
-        Some(ChildRole { rank, ranks, port })
+        let host = std::env::var(ENV_HOST).unwrap_or_else(|_| "127.0.0.1".into());
+        let bind = std::env::var(ENV_BIND).ok();
+        Some(ChildRole { rank, ranks, port, host, bind })
     }
 
     /// Pick a currently-free localhost port for the fleet rendezvous.
@@ -225,6 +235,8 @@ pub mod fleet {
                     .env(ENV_RANK, rank.to_string())
                     .env(ENV_RANKS, ranks.to_string())
                     .env(ENV_PORT, port.to_string())
+                    .env(ENV_HOST, "127.0.0.1")
+                    .env(ENV_BIND, "0.0.0.0")
                     .stdin(Stdio::null())
                     .stdout(Stdio::piped())
                     .stderr(Stdio::piped())

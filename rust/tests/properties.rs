@@ -116,7 +116,8 @@ fn random_bc_bag(g: &mut Gen) -> BcBag {
     BcBag::from_intervals(intervals)
 }
 
-/// A random message over `bag` covering every variant / flag combination.
+/// A random message over `bag` covering every variant / flag combination
+/// (loot with a bag may carry termination credit; refusals never do).
 fn random_msg<B>(g: &mut Gen, bag: B) -> Msg<B> {
     match g.usize(0..5) {
         0 => Msg::Steal {
@@ -129,13 +130,21 @@ fn random_msg<B>(g: &mut Gen, bag: B) -> Msg<B> {
             bag: None,
             lifeline: g.bool(0.5),
             nonce: Some(g.u64(0..u64::MAX)),
+            credit: 0,
         },
-        2 => Msg::Loot { victim: g.usize(0..1 << 20), bag: Some(bag), lifeline: true, nonce: None },
+        2 => Msg::Loot {
+            victim: g.usize(0..1 << 20),
+            bag: Some(bag),
+            lifeline: true,
+            nonce: None,
+            credit: g.u64(0..1 << 44),
+        },
         3 => Msg::Loot {
             victim: g.usize(0..1 << 20),
             bag: Some(bag),
             lifeline: g.bool(0.5),
             nonce: Some(g.u64(0..u64::MAX)),
+            credit: g.u64(0..u64::MAX),
         },
         _ => Msg::Terminate,
     }
@@ -207,6 +216,10 @@ fn prop_wire_bytes_pin_sim_accounting_to_codec() {
         let bag = random_uts_bag(g);
         let msg = random_msg(g, bag);
         let encoded = wire::encode_frame(&msg).len();
+        // The mesh data frame adds exactly the destination prefix the
+        // simulator charges on cross-node sends.
+        let framed = wire::frame(wire::encode_data_frame_body(3, &msg)).len();
+        assert_eq!(framed, encoded + wire::DATA_ROUTE_BYTES);
         match &msg {
             Msg::Loot { bag: Some(b), .. } => {
                 assert_eq!(
@@ -460,6 +473,173 @@ fn prop_hierarchical_threads_agree_with_flat() {
         let t = out.log.total();
         assert_eq!(t.node_donations, t.node_takes, "p={p} wpn={wpn}");
         assert_eq!(t.node_loot_sent, t.node_loot_received, "p={p} wpn={wpn}");
+    });
+}
+
+// ---------------------------------------------------------------------
+// credit-based distributed termination
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_credit_conserved_under_reorder() {
+    // The socket fleet's termination detector rests on one invariant:
+    // every credit atom ever minted is either recovered at the root, in
+    // some rank's pool, attached to an in-flight loot message, or inside
+    // an undelivered deposit — and the root fires exactly when the first
+    // bucket holds everything. This drives N rank ledgers through random
+    // acquire/release/loot-send/loot-receive schedules with deposits
+    // delivered arbitrarily late and out of order, checking conservation
+    // after every step and quiescence exactly once at the end. Tiny
+    // initial grants force the synchronous replenish path too.
+    use glb::glb::termination::{CreditHome, CreditLedger, CreditRoot, Ledger};
+    use std::sync::{Arc, Mutex};
+
+    /// Models the control link: deposits queue with unbounded delay (the
+    /// case delivers them in random order); replenish stays synchronous,
+    /// as in the real transport.
+    struct DelayedHome {
+        root: Arc<CreditRoot>,
+        pending: Arc<Mutex<Vec<u64>>>,
+    }
+
+    impl CreditHome for DelayedHome {
+        fn deposit(&self, atoms: u64) {
+            self.pending.lock().unwrap().push(atoms);
+        }
+        fn replenish(&self, want: u64) -> u64 {
+            self.root.mint(want)
+        }
+    }
+
+    check_cases("credit-conservation", 150, |g: &mut Gen| {
+        let ranks = g.usize(2..8);
+        let root = CreditRoot::new();
+        let pending: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+        let ledgers: Vec<_> = (0..ranks)
+            .map(|_| {
+                // 1..4 atoms: exports exhaust pools fast, exercising the
+                // replenish (mint) path in most cases.
+                let grant = g.u64(1..5);
+                root.grant(grant);
+                let home = DelayedHome { root: root.clone(), pending: pending.clone() };
+                CreditLedger::new(Arc::new(home), grant)
+            })
+            .collect();
+        root.arm();
+        // Every rank "kicks" once, as the runtimes do at the barrier.
+        for l in &ledgers {
+            l.incr();
+        }
+        let mut inflight: Vec<u64> = Vec::new();
+
+        let conserved = |inflight: &[u64]| {
+            let (total, recovered) = root.totals();
+            let pools: u64 = ledgers.iter().map(|l| l.pool()).sum();
+            let queued: u64 = pending.lock().unwrap().iter().sum();
+            let flying: u64 = inflight.iter().sum();
+            assert_eq!(
+                total,
+                recovered + pools + queued + flying,
+                "atoms created {total} != recovered {recovered} + pools {pools} \
+                 + queued {queued} + in-flight {flying}"
+            );
+        };
+
+        for _ in 0..g.usize(10..200) {
+            let r = g.usize(0..ranks);
+            match g.usize(0..5) {
+                // Acquire another token (split work / park a shard).
+                0 => {
+                    if ledgers[r].pool() >= 1 && ledgers[r].tokens() >= 1 {
+                        ledgers[r].incr();
+                    }
+                }
+                // Release a token; hitting zero deposits the whole pool.
+                1 => {
+                    if ledgers[r].tokens() >= 1 {
+                        assert!(!ledgers[r].decr(), "distributed ledgers never observe zero");
+                    }
+                }
+                // Send loot: message token + exported credit in flight.
+                2 => {
+                    if ledgers[r].tokens() >= 1 {
+                        ledgers[r].incr();
+                        let credit = ledgers[r].export_credit();
+                        assert!(credit >= 1, "loot must carry credit");
+                        inflight.push(credit);
+                    }
+                }
+                // Receive loot at a random rank: import, then either
+                // destroy the token (active thief) or adopt it (idle).
+                3 => {
+                    if !inflight.is_empty() {
+                        let at = g.usize(0..inflight.len());
+                        let credit = inflight.swap_remove(at);
+                        let to = g.usize(0..ranks);
+                        ledgers[to].import_credit(credit);
+                        if g.bool(0.5) {
+                            ledgers[to].decr();
+                        }
+                    }
+                }
+                // Deliver one queued deposit to the root — arbitrarily
+                // late, in arbitrary order.
+                _ => {
+                    let delivered = {
+                        let mut q = pending.lock().unwrap();
+                        if q.is_empty() {
+                            None
+                        } else {
+                            let at = g.usize(0..q.len());
+                            Some(q.swap_remove(at))
+                        }
+                    };
+                    if let Some(atoms) = delivered {
+                        root.deposit(atoms);
+                    }
+                }
+            }
+            conserved(&inflight);
+            let tokens: i64 = ledgers.iter().map(|l| l.tokens()).sum();
+            if root.quiescent() {
+                // Detection is never early: the fleet must be genuinely
+                // done the instant the root fires.
+                assert_eq!(tokens, 0, "fired while tokens were held");
+                assert!(inflight.is_empty(), "fired while loot was in flight");
+                assert!(pending.lock().unwrap().is_empty(), "fired before all deposits");
+                return;
+            }
+            if tokens > 0 {
+                assert!(!root.quiescent(), "live fleet must not be quiescent");
+            }
+        }
+
+        // Drain: land all loot, idle every rank, deliver every deposit.
+        while let Some(credit) = inflight.pop() {
+            let to = g.usize(0..ranks);
+            ledgers[to].import_credit(credit);
+            ledgers[to].decr();
+        }
+        for l in &ledgers {
+            while l.tokens() > 0 {
+                l.decr();
+            }
+        }
+        loop {
+            let delivered = {
+                let mut q = pending.lock().unwrap();
+                q.pop()
+            };
+            match delivered {
+                Some(atoms) => root.deposit(atoms),
+                None => break,
+            }
+        }
+        conserved(&inflight);
+        assert!(root.quiescent(), "a fully drained fleet must be detected");
+        let (total, recovered) = root.totals();
+        assert_eq!(total, recovered, "every atom recovered at quiescence");
+        assert!(ledgers.iter().all(|l| l.pool() == 0), "idle ranks hold no credit");
     });
 }
 

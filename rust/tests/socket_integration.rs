@@ -2,11 +2,17 @@
 //!
 //! These tests exercise the real thing: N OS processes (children of this
 //! test binary, via `testkit::fleet`) running the GLB lifeline protocol
-//! over localhost TCP, with the global termination ledger served by rank
-//! 0. The summed fleet result must be bit-identical to the
-//! single-process thread runtime at the same worker count — UTS counts a
-//! deterministic tree, so any protocol bug (lost loot, double-merge,
-//! premature terminate) shows up as a count mismatch.
+//! over localhost TCP — direct spoke-to-spoke mesh links, credit-based
+//! distributed termination, and rank 0 reduced to bootstrap/discovery.
+//! The summed fleet result must be bit-identical to the single-process
+//! thread runtime at the same worker count — UTS counts a deterministic
+//! tree, so any protocol bug (lost loot, lost credit, double-merge,
+//! premature terminate) shows up as a count mismatch or a hang (caught
+//! by the fleet watchdog).
+//!
+//! The harness always splits bind from advertise (rank 0 binds `0.0.0.0`
+//! while the fleet dials `127.0.0.1`), so every fleet test doubles as a
+//! regression test for the rank-0 bind/advertise fix.
 //!
 //! Children re-enter the *same test function* with `--exact`; the
 //! `fleet::child_role()` check at the top of each test routes them to
@@ -18,7 +24,7 @@ use std::time::Duration;
 use glb::apps::uts::{sequential_count, UtsParams, UtsQueue};
 use glb::glb::task_queue::SumReducer;
 use glb::glb::{GlbConfig, GlbParams};
-use glb::place::{run_sockets, run_threads, SocketRunOpts};
+use glb::place::{misrouted_frames, run_sockets, run_threads, SocketRunOpts};
 use glb::testkit::fleet;
 
 const DEPTH: u32 = 7;
@@ -40,6 +46,8 @@ fn run_child(role: fleet::ChildRole, params: GlbParams, p: usize) {
         rank: role.rank,
         ranks: role.ranks,
         port: role.port,
+        host: role.host.clone(),
+        bind: role.bind.clone(),
         ..Default::default()
     };
     let out =
@@ -53,8 +61,12 @@ fn run_child(role: fleet::ChildRole, params: GlbParams, p: usize) {
             ("places", out.log.per_place.len().to_string()),
             ("loot_sent", t.loot_bags_sent.to_string()),
             ("loot_recv", t.loot_bags_received.to_string()),
+            ("steals_recv", (t.random_steals_received + t.lifeline_steals_received).to_string()),
             ("node_donations", t.node_donations.to_string()),
             ("node_takes", t.node_takes.to_string()),
+            // Frames this rank received for places it does not host —
+            // star-style relay traffic, which the mesh must never carry.
+            ("relayed", misrouted_frames().to_string()),
         ],
     );
 }
@@ -91,6 +103,45 @@ fn four_process_uts_fleet_matches_thread_runtime() {
 
 #[test]
 #[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn mesh_fleet_bit_identical_and_rank0_relays_nothing() {
+    // The tentpole acceptance test: after the start barrier no cross-rank
+    // steal/loot/refusal frame transits rank 0 — every rank (rank 0
+    // included) sees only frames addressed to its own places — while the
+    // 4-process mesh stays bit-identical to the thread runtime at equal
+    // worker count.
+    if let Some(role) = fleet::child_role() {
+        run_child(role, params(), 4);
+        return;
+    }
+    let port = fleet::free_port();
+    let logs =
+        fleet::run("mesh_fleet_bit_identical_and_rank0_relays_nothing", 4, port, FLEET_DEADLINE);
+    assert_eq!(logs.len(), 4);
+    for l in &logs {
+        assert_eq!(
+            l.u64("relayed"),
+            0,
+            "rank {} received frames for places it does not host (star relay!)",
+            l.rank
+        );
+    }
+    // Steal traffic reached the spokes directly: with one place per rank,
+    // any steal a spoke answers arrived on a direct mesh link.
+    let spoke_steals: u64 = logs.iter().skip(1).map(|l| l.u64("steals_recv")).sum();
+    assert!(spoke_steals > 0, "spokes must be stolen from over the mesh");
+
+    let fleet_total: u64 = logs.iter().map(|l| l.u64("result")).sum();
+    let cfg = GlbConfig::new(4, params());
+    let reference = run_threads(&cfg, |_, _| UtsQueue::new(up()), |q| q.init_root(), &SumReducer);
+    assert_eq!(fleet_total, reference.result, "mesh fleet bit-identical to thread runtime");
+    assert_eq!(fleet_total, sequential_count(&up()));
+    let sent: u64 = logs.iter().map(|l| l.u64("loot_sent")).sum();
+    let recv: u64 = logs.iter().map(|l| l.u64("loot_recv")).sum();
+    assert_eq!(sent, recv, "loot (and its credit) conserved over the mesh");
+}
+
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
 fn hierarchical_fleet_shares_in_process_and_steals_across() {
     // 2 processes × 2 workers: each process is one GLB node whose
     // representative owns the sockets; the second worker of each node is
@@ -113,6 +164,7 @@ fn hierarchical_fleet_shares_in_process_and_steals_across() {
         // Node-bag shards never cross a process, so each rank's
         // donate/take books balance on their own.
         assert_eq!(l.u64("node_donations"), l.u64("node_takes"), "rank {}", l.rank);
+        assert_eq!(l.u64("relayed"), 0, "rank {}: no relay frames", l.rank);
     }
     let fleet_total: u64 = logs.iter().map(|l| l.u64("result")).sum();
     let cfg = GlbConfig::new(4, hp);
