@@ -211,6 +211,17 @@ COMMANDS
   fib        Fibonacci (appendix demo)     --fib-n --places
   nqueens    N-Queens                      --board --places
   fig        regenerate a paper figure     --id 2..10 [--csv] [--places a,b,c]
+  launch     spawn + watchdog a whole tcp fleet (one process per rank):
+               glb launch --np 4 uts --depth 10 --report fleet.json
+               glb launch --hosts fleet.txt --port 7117 uts --depth 13
+             launcher options: --np N | --hosts FILE (host [slots=K], # cmnt)
+               --ssh 'ssh -o BatchMode=yes' --bin /path/to/glb (remote)
+               --port P --timeout SECS --report OUT.json
+             everything else passes through to the app; --rank/--peers/
+             --host/--bind/--advertise are derived per rank
+  bench      run the pinned perf configs via the launcher and write
+             BENCH_glb.json   [--repeats 3 --warmup 1 --np 2]
+             [--baseline bench/baseline.json --band 0.30] (warn-only gate)
   calibrate  print this machine's cost models
   smoke      check the PJRT runtime wiring
 
@@ -236,6 +247,9 @@ COMMON OPTIONS
   --random-only          ablation: random-victim stealing, no lifelines
   --log                  print the per-worker accounting table (§2.4),
                          plus the per-node rollup when K > 1
+  --report PATH          write the run's machine-readable report JSON
+                         (thread/sim runs; a launched fleet's aggregated
+                         report comes from `glb launch --report`)
   --csv                  machine-readable figure output
 ";
 

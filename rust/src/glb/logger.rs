@@ -7,6 +7,7 @@
 //!    steals), and
 //! 4. how much workload (task items) it received/sent.
 
+use crate::util::json::Value;
 use crate::util::timefmt::{fmt_count, fmt_ns};
 
 /// Counters and timers for one worker. Counts are updated by the protocol
@@ -113,6 +114,37 @@ impl WorkerStats {
         )
     }
 
+    /// The machine-readable form of this row, consumed by the fleet
+    /// report aggregation ([`crate::launch`]). Every field is an exact
+    /// [`Value::Int`] so counters survive the JSON round-trip
+    /// bit-identically.
+    pub fn to_json(&self) -> Value {
+        let n = |v: u64| Value::Int(v as i64);
+        Value::obj(vec![
+            ("items_processed", n(self.items_processed)),
+            ("units", n(self.units)),
+            ("chunks", n(self.chunks)),
+            ("starvations", n(self.starvations)),
+            ("process_ns", n(self.process_ns)),
+            ("distribute_ns", n(self.distribute_ns)),
+            ("wait_ns", n(self.wait_ns)),
+            ("random_steals_sent", n(self.random_steals_sent)),
+            ("lifeline_steals_sent", n(self.lifeline_steals_sent)),
+            ("random_steals_received", n(self.random_steals_received)),
+            ("lifeline_steals_received", n(self.lifeline_steals_received)),
+            ("random_steals_perpetrated", n(self.random_steals_perpetrated)),
+            ("lifeline_steals_perpetrated", n(self.lifeline_steals_perpetrated)),
+            ("loot_items_sent", n(self.loot_items_sent)),
+            ("loot_items_received", n(self.loot_items_received)),
+            ("loot_bags_sent", n(self.loot_bags_sent)),
+            ("loot_bags_received", n(self.loot_bags_received)),
+            ("node_donations", n(self.node_donations)),
+            ("node_takes", n(self.node_takes)),
+            ("node_loot_sent", n(self.node_loot_sent)),
+            ("node_loot_received", n(self.node_loot_received)),
+        ])
+    }
+
     /// Header matching [`WorkerStats::row`].
     pub fn header() -> String {
         format!(
@@ -179,6 +211,16 @@ impl RunLog {
     /// Per-place busy times in seconds (workload-distribution figures).
     pub fn busy_secs(&self) -> Vec<f64> {
         self.per_place.iter().map(|s| s.busy_ns() as f64 / 1e9).collect()
+    }
+
+    /// The machine-readable form of the whole log: per-place stats plus
+    /// the merged totals (so consumers need not re-sum).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("workers_per_node", Value::Int(self.workers_per_node.max(1) as i64)),
+            ("totals", self.total().to_json()),
+            ("per_place", Value::Arr(self.per_place.iter().map(WorkerStats::to_json).collect())),
+        ])
     }
 
     pub fn render(&self) -> String {
@@ -267,6 +309,25 @@ mod tests {
         let log = RunLog::new(vec![WorkerStats::default()]);
         assert!(!log.render().contains("per-node rollup"));
         assert_eq!(log.per_node().len(), 1);
+    }
+
+    #[test]
+    fn json_emit_roundtrips_counters_exactly() {
+        let log = RunLog::with_topology(
+            vec![
+                WorkerStats { items_processed: 5, loot_bags_sent: 2, ..Default::default() },
+                WorkerStats { items_processed: 6, node_takes: 3, ..Default::default() },
+            ],
+            2,
+        );
+        let v = Value::parse(&log.to_json().render()).unwrap();
+        assert_eq!(v.get("workers_per_node").and_then(Value::as_u64), Some(2));
+        let totals = v.get("totals").expect("totals");
+        assert_eq!(totals.get("items_processed").and_then(Value::as_u64), Some(11));
+        assert_eq!(totals.get("node_takes").and_then(Value::as_u64), Some(3));
+        let per_place = v.get("per_place").and_then(Value::as_arr).expect("per_place");
+        assert_eq!(per_place.len(), 2);
+        assert_eq!(per_place[1].get("items_processed").and_then(Value::as_u64), Some(6));
     }
 
     #[test]

@@ -1,0 +1,449 @@
+//! `glb launch` — the multi-host fleet launcher, and the engine under it.
+//!
+//! The paper's results come from launching one process per place across
+//! whole machines; PR 3/4 gave this repo a process-level mesh runtime
+//! but left every rank to be started by hand with matching
+//! `--rank/--peers/--port` flags. This module closes that gap:
+//!
+//! * [`spec`] parses a fleet specification (`--np N` for localhost,
+//!   `--hosts FILE` + an ssh command template for multi-host) and
+//!   derives every rank's consistent flag set (rank/peers/port and the
+//!   bind/advertise split);
+//! * the engine here ([`run_fleet`]) spawns the ranks, streams their
+//!   output with `[rank k]` prefixes, watchdogs the fleet, and fails
+//!   fast — one rank dying kills the survivors and surfaces that rank's
+//!   output, instead of waiting out the deadline;
+//! * [`report`] aggregates the per-rank `RunLog` JSON lines (emitted on
+//!   a marker when [`report::RANK_REPORT_ENV`] is set) into one
+//!   machine-readable fleet report, and gives `glb bench` its
+//!   `BENCH_glb.json` schema — the CI perf trajectory.
+//!
+//! The same engine drives three consumers — `glb launch`, `glb bench`,
+//! and the [`crate::testkit::fleet`] test harness — so tests, CLI users,
+//! and CI all exercise one spawn/watchdog/collect code path.
+
+pub mod report;
+pub mod spec;
+
+use std::io::Read;
+use std::process::{Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// One rank's command, ready to spawn (stdin/stdout/stderr are
+/// configured by the engine).
+pub struct RankCmd {
+    pub rank: usize,
+    pub cmd: Command,
+}
+
+/// One rank's captured output after a fully successful fleet run.
+#[derive(Debug)]
+pub struct RankRun {
+    pub rank: usize,
+    pub stdout: Vec<String>,
+    pub stderr: Vec<String>,
+}
+
+/// Engine knobs.
+pub struct EngineOpts {
+    /// Kill the fleet and fail if it has not finished by then.
+    pub deadline: Duration,
+    /// Stream child output live with a `[rank k]` prefix (the CLI path);
+    /// marker lines (rank reports, testkit result lines) are captured
+    /// but not echoed.
+    pub echo: bool,
+}
+
+/// Result/report marker lines are machine-to-machine traffic; the echo
+/// stream skips them so a `--report` run stays readable.
+fn is_marker_line(line: &str) -> bool {
+    line.starts_with(report::RANK_REPORT_MARKER)
+        || line.starts_with(crate::testkit::fleet::LOG_PREFIX)
+}
+
+/// Drain one child stream line-by-line into `buf`, echoing as we go when
+/// asked. Runs on its own thread; exits when the child closes the pipe.
+fn stream_reader(stream: impl Read, buf: Arc<Mutex<Vec<String>>>, echo: Option<(usize, bool)>) {
+    let reader = std::io::BufReader::new(stream);
+    for line in std::io::BufRead::lines(reader) {
+        let line = match line {
+            Ok(l) => l,
+            // Invalid UTF-8: `lines` has already consumed the bad line's
+            // bytes — keep draining so a child emitting binary garbage
+            // never blocks on a full pipe waiting for us.
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => continue,
+            Err(_) => return,
+        };
+        if let Some((rank, to_stderr)) = echo {
+            if !is_marker_line(&line) {
+                if to_stderr {
+                    eprintln!("[rank {rank}] {line}");
+                } else {
+                    println!("[rank {rank}] {line}");
+                }
+            }
+        }
+        buf.lock().unwrap().push(line);
+    }
+}
+
+struct Proc {
+    rank: usize,
+    child: std::process::Child,
+    stdout: Arc<Mutex<Vec<String>>>,
+    stderr: Arc<Mutex<Vec<String>>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Kill and reap every process not already reaped, then join all reader
+/// threads (the kill closes the pipes, so the readers finish).
+fn tear_down(procs: &mut [Proc], reaped: &[bool]) {
+    for (i, p) in procs.iter_mut().enumerate() {
+        if !reaped[i] {
+            let _ = p.child.kill();
+        }
+    }
+    for (i, p) in procs.iter_mut().enumerate() {
+        if !reaped[i] {
+            let _ = p.child.wait();
+        }
+    }
+    for p in procs.iter_mut() {
+        for h in p.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn captured(buf: &Arc<Mutex<Vec<String>>>) -> String {
+    buf.lock().unwrap().join("\n")
+}
+
+/// The last `n` captured lines of a stream, for error reports.
+fn tail(buf: &Arc<Mutex<Vec<String>>>, n: usize) -> String {
+    let lines = buf.lock().unwrap();
+    let start = lines.len().saturating_sub(n);
+    lines[start..].join("\n")
+}
+
+/// Spawn every rank, stream/capture their output, and wait for the whole
+/// fleet. Fail-fast semantics: the first rank to exit nonzero kills the
+/// survivors immediately and the error carries that rank's output; a
+/// fleet that outlives `deadline` is killed and reported as a timeout.
+/// Returns the per-rank captured output (sorted by rank) only when every
+/// rank exited zero.
+pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> {
+    if cmds.is_empty() {
+        bail!("a fleet needs at least one rank");
+    }
+    let mut procs: Vec<Proc> = Vec::with_capacity(cmds.len());
+    for RankCmd { rank, mut cmd } in cmds {
+        cmd.stdin(Stdio::null()).stdout(Stdio::piped()).stderr(Stdio::piped());
+        let mut child = match cmd.spawn() {
+            Ok(c) => c,
+            Err(e) => {
+                let reaped = vec![false; procs.len()];
+                tear_down(&mut procs, &reaped);
+                return Err(anyhow!(e)).with_context(|| format!("spawn fleet rank {rank}"));
+            }
+        };
+        let stdout = Arc::new(Mutex::new(Vec::new()));
+        let stderr = Arc::new(Mutex::new(Vec::new()));
+        let mut readers = Vec::with_capacity(2);
+        if let Some(s) = child.stdout.take() {
+            let buf = stdout.clone();
+            let echo = opts.echo.then_some((rank, false));
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("glb-launch-out-{rank}"))
+                    .spawn(move || stream_reader(s, buf, echo))
+                    .expect("spawn stdout reader"),
+            );
+        }
+        if let Some(s) = child.stderr.take() {
+            let buf = stderr.clone();
+            let echo = opts.echo.then_some((rank, true));
+            readers.push(
+                std::thread::Builder::new()
+                    .name(format!("glb-launch-err-{rank}"))
+                    .spawn(move || stream_reader(s, buf, echo))
+                    .expect("spawn stderr reader"),
+            );
+        }
+        procs.push(Proc { rank, child, stdout, stderr, readers });
+    }
+
+    let give_up = Instant::now() + opts.deadline;
+    let n = procs.len();
+    let mut reaped = vec![false; n];
+    loop {
+        let mut all_done = true;
+        for i in 0..n {
+            if reaped[i] {
+                continue;
+            }
+            let polled = procs[i].child.try_wait();
+            match polled {
+                Ok(Some(status)) => {
+                    reaped[i] = true;
+                    if !status.success() {
+                        // Fail fast: don't let the survivors burn the
+                        // rest of the deadline on a lost run.
+                        let survivors = reaped.iter().filter(|r| !**r).count();
+                        tear_down(&mut procs, &reaped);
+                        bail!(
+                            "fleet rank {rank} exited with {status} \
+                             (killed {survivors} surviving rank(s))\n\
+                             --- stdout (rank {rank})\n{out}\n\
+                             --- stderr (rank {rank})\n{err}",
+                            rank = procs[i].rank,
+                            out = captured(&procs[i].stdout),
+                            err = captured(&procs[i].stderr),
+                        );
+                    }
+                }
+                Ok(None) => all_done = false,
+                Err(e) => {
+                    tear_down(&mut procs, &reaped);
+                    return Err(anyhow!(e)).context("poll fleet child");
+                }
+            }
+        }
+        if all_done {
+            break;
+        }
+        if Instant::now() > give_up {
+            tear_down(&mut procs, &reaped);
+            // Unlike the fail-fast path there is no single culprit, so
+            // attach every rank's output tail — a hang diagnosed from CI
+            // logs has nothing else to go on.
+            let mut detail = String::new();
+            for p in &procs {
+                detail.push_str(&format!(
+                    "\n--- rank {} tail\nstdout:\n{}\nstderr:\n{}",
+                    p.rank,
+                    tail(&p.stdout, 10),
+                    tail(&p.stderr, 10),
+                ));
+            }
+            bail!("fleet timed out after {:?}{detail}", opts.deadline);
+        }
+        std::thread::sleep(Duration::from_millis(15));
+    }
+
+    let mut runs: Vec<RankRun> = procs
+        .into_iter()
+        .map(|mut p| {
+            for h in p.readers.drain(..) {
+                let _ = h.join();
+            }
+            RankRun {
+                rank: p.rank,
+                stdout: std::mem::take(&mut *p.stdout.lock().unwrap()),
+                stderr: std::mem::take(&mut *p.stderr.lock().unwrap()),
+            }
+        })
+        .collect();
+    runs.sort_by_key(|r| r.rank);
+    Ok(runs)
+}
+
+/// Every rank's report line, parsed — ranks that emitted none are an
+/// error (the app must be a tcp-fleet-capable command).
+fn collect_rank_reports(runs: &[RankRun]) -> Result<Vec<Value>> {
+    runs.iter()
+        .map(|r| {
+            let line = report::find_rank_report(&r.stdout).ok_or_else(|| {
+                anyhow!(
+                    "rank {} exited cleanly but emitted no rank report \
+                     (the launched app must support --transport tcp: uts|bc)",
+                    r.rank
+                )
+            })?;
+            report::parse_rank_report(line).with_context(|| format!("rank {} report", r.rank))
+        })
+        .collect()
+}
+
+/// `glb launch [--np N | --hosts FILE] [--port P] [--report OUT] <app> ...`
+pub fn cmd_launch(rest: &[String]) -> Result<()> {
+    let spec = spec::FleetSpec::parse(rest)?;
+    let plan = spec.plan()?;
+    println!(
+        "launching {} rank(s) of `glb {}` (rendezvous port {})",
+        plan.ranks,
+        spec.app_argv.join(" "),
+        plan.port
+    );
+    for (rank, line) in plan.cmdlines.iter().enumerate() {
+        println!("  rank {rank}: {line}");
+    }
+    let t0 = Instant::now();
+    let runs = run_fleet(plan.cmds, &EngineOpts { deadline: spec.deadline, echo: true })?;
+    let wall_time_s = t0.elapsed().as_secs_f64();
+    let reports = collect_rank_reports(&runs)?;
+    let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall_time_s)?;
+    if let Some(path) = &spec.report {
+        std::fs::write(path, fleet.render_pretty())
+            .with_context(|| format!("write fleet report {}", path.display()))?;
+        println!("fleet report -> {}", path.display());
+    }
+    println!(
+        "fleet done in {wall_time_s:.3}s: result={} wire {} B out / {} B in",
+        fleet.get("result").map(Value::render).unwrap_or_else(|| "?".into()),
+        fleet.get("wire_tx_bytes").and_then(Value::as_u64).unwrap_or(0),
+        fleet.get("wire_rx_bytes").and_then(Value::as_u64).unwrap_or(0),
+    );
+    Ok(())
+}
+
+/// The pinned perf-trajectory configurations. Keep these stable across
+/// PRs: `bench/baseline.json` and the CI artifact diff only mean
+/// something if successive runs measure the same work.
+const BENCH_CONFIGS: &[(&str, &[&str])] = &[
+    ("uts-d8", &["uts", "--depth", "8", "--transport", "tcp"]),
+    ("bc-s7", &["bc", "--scale", "7", "--transport", "tcp"]),
+];
+
+/// `glb bench` — run the pinned configs through the launcher (warmed,
+/// repeated), write `BENCH_glb.json`, and optionally diff against a
+/// committed baseline: warn-only on wall-time drift, hard error on a
+/// result mismatch (exact for integer results; float results tolerate
+/// steal-schedule f64 summation noise — see
+/// [`report::compare_with_baseline`]).
+pub fn cmd_bench(rest: &[String]) -> Result<()> {
+    let args = crate::cli::Args::parse(rest, &[])?;
+    args.ensure_known(&["report", "baseline", "repeats", "warmup", "np", "band", "timeout"])?;
+    let report_path = args.get("report").unwrap_or("BENCH_glb.json");
+    let repeats: usize = args.parse_opt("repeats", 3usize)?;
+    let warmup: usize = args.parse_opt("warmup", 1usize)?;
+    let np: usize = args.parse_opt("np", 2usize)?;
+    let band: f64 = args.parse_opt("band", 0.30f64)?;
+    let timeout_s: u64 = args.parse_opt("timeout", 600u64)?;
+    if repeats == 0 {
+        bail!("--repeats must be >= 1");
+    }
+
+    let mut entries = Vec::new();
+    for &(name, argv) in BENCH_CONFIGS {
+        println!(
+            "bench {name}: {warmup} warmup + {repeats} timed run(s) of `glb {}` over {np} rank(s)",
+            argv.join(" ")
+        );
+        let mut raw: Vec<String> = vec!["--np".into(), np.to_string()];
+        raw.push("--timeout".into());
+        raw.push(timeout_s.to_string());
+        raw.extend(argv.iter().map(|a| a.to_string()));
+        let mut times: Vec<f64> = Vec::with_capacity(repeats);
+        let mut last_fleet: Option<Value> = None;
+        for i in 0..warmup + repeats {
+            // A fresh plan per run: each fleet picks a fresh rendezvous
+            // port, so back-to-back runs never trip over TIME_WAIT.
+            let spec = spec::FleetSpec::parse(&raw)?;
+            let plan = spec.plan()?;
+            let t0 = Instant::now();
+            let runs = run_fleet(plan.cmds, &EngineOpts { deadline: spec.deadline, echo: false })
+                .with_context(|| format!("bench {name} run {i}"))?;
+            let wall = t0.elapsed().as_secs_f64();
+            let reports = collect_rank_reports(&runs)?;
+            let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall)?;
+            if i < warmup {
+                println!("  warmup {}: {wall:.3}s", i + 1);
+            } else {
+                println!("  run {}: {wall:.3}s", i - warmup + 1);
+                times.push(wall);
+            }
+            last_fleet = Some(fleet);
+        }
+        let fleet = last_fleet.expect("at least one timed run");
+        entries.push(report::bench_entry(name, np, warmup, repeats, &times, &fleet));
+    }
+    let bench = report::bench_report(entries);
+    std::fs::write(report_path, bench.render_pretty())
+        .with_context(|| format!("write bench report {report_path}"))?;
+    println!("bench report -> {report_path}");
+
+    if let Some(baseline) = args.get("baseline") {
+        let warnings = report::compare_with_baseline(&bench, baseline, band)?;
+        if warnings == 0 {
+            println!("baseline {baseline}: all wall times within ±{:.0}%", band * 100.0);
+        } else {
+            println!(
+                "baseline {baseline}: {warnings} deviation(s) beyond ±{:.0}% (warn-only gate)",
+                band * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sh(rank: usize, script: &str) -> RankCmd {
+        let mut cmd = Command::new("sh");
+        cmd.args(["-c", script]);
+        RankCmd { rank, cmd }
+    }
+
+    #[test]
+    fn engine_collects_output_per_rank() {
+        let runs = run_fleet(
+            vec![sh(0, "echo out-zero; echo err-zero >&2"), sh(1, "echo out-one")],
+            &EngineOpts { deadline: Duration::from_secs(30), echo: false },
+        )
+        .expect("both ranks exit zero");
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].stdout, vec!["out-zero".to_string()]);
+        assert_eq!(runs[0].stderr, vec!["err-zero".to_string()]);
+        assert_eq!(runs[1].rank, 1);
+        assert_eq!(runs[1].stdout, vec!["out-one".to_string()]);
+    }
+
+    #[test]
+    fn engine_fails_fast_on_a_dying_rank() {
+        // Rank 1 exits nonzero immediately; rank 0 would sleep 30s. The
+        // engine must kill rank 0 and return long before either the
+        // sleep or the deadline runs out.
+        let t0 = Instant::now();
+        let err = run_fleet(
+            vec![sh(0, "sleep 30"), sh(1, "echo doomed >&2; exit 7")],
+            &EngineOpts { deadline: Duration::from_secs(60), echo: false },
+        )
+        .expect_err("a nonzero rank must fail the fleet");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("doomed"), "failure must carry the rank's stderr: {msg}");
+        assert!(msg.contains("killed 1 surviving rank"), "{msg}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "fail-fast took {:?} — the engine waited for the survivors",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn engine_kills_a_wedged_fleet_at_the_deadline() {
+        let t0 = Instant::now();
+        let err = run_fleet(
+            vec![sh(0, "sleep 30")],
+            &EngineOpts { deadline: Duration::from_millis(300), echo: false },
+        )
+        .expect_err("a wedged fleet must time out");
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(20), "kill took {:?}", t0.elapsed());
+    }
+
+    #[test]
+    fn empty_fleet_is_rejected() {
+        let err = run_fleet(vec![], &EngineOpts { deadline: Duration::from_secs(1), echo: false })
+            .expect_err("no ranks");
+        assert!(format!("{err:#}").contains("at least one rank"));
+    }
+}

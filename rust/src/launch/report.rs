@@ -1,0 +1,476 @@
+//! Machine-readable run reports: per-rank JSON lines, the aggregated
+//! fleet report, and the `glb bench` perf-trajectory schema.
+//!
+//! Every rank of a launched fleet prints its [`crate::glb::RunLog`] (plus
+//! result, wall time, and wire-byte totals) as one JSON line behind the
+//! [`RANK_REPORT_MARKER`] when [`RANK_REPORT_ENV`] is set — the stdout
+//! analogue of the paper's per-place accounting tables (§2.4), but in a
+//! form CI can diff. The launcher folds those lines into a single fleet
+//! report (`--report out.json`), and `glb bench` wraps repeated warmed
+//! runs of pinned configs into `BENCH_glb.json`, which CI uploads and
+//! diffs against `bench/baseline.json`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::glb::RunLog;
+use crate::util::json::Value;
+
+/// Marker prefix of a rank's JSON report line on stdout.
+pub const RANK_REPORT_MARKER: &str = "GLB-RANK-REPORT ";
+/// Environment variable the launcher sets so ranks emit report lines.
+pub const RANK_REPORT_ENV: &str = "GLB_RANK_REPORT";
+
+pub const RANK_SCHEMA: &str = "glb-rank-report/v1";
+pub const FLEET_SCHEMA: &str = "glb-fleet-report/v1";
+pub const BENCH_SCHEMA: &str = "glb-bench/v1";
+
+/// Whether this process was asked (by a launcher parent) to emit its
+/// rank report line.
+pub fn rank_report_requested() -> bool {
+    std::env::var(RANK_REPORT_ENV).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Build one rank's report. `rank_of` is `(rank, ranks)`; `result` is
+/// the app's reduced value as JSON (exact [`Value::Int`] for counting
+/// apps — the fleet/thread bit-identity check in CI depends on it).
+pub fn build_rank_report(
+    app: &str,
+    transport: &str,
+    rank_of: (usize, usize),
+    result: Value,
+    elapsed_ns: u64,
+    log: &RunLog,
+    wire: (u64, u64),
+) -> Value {
+    Value::obj(vec![
+        ("schema", Value::Str(RANK_SCHEMA.into())),
+        ("app", Value::Str(app.into())),
+        ("transport", Value::Str(transport.into())),
+        ("rank", Value::Int(rank_of.0 as i64)),
+        ("ranks", Value::Int(rank_of.1 as i64)),
+        ("places", Value::Int(log.per_place.len() as i64)),
+        ("result", result),
+        ("elapsed_ns", Value::Int(elapsed_ns as i64)),
+        ("wall_time_s", Value::Float(elapsed_ns as f64 / 1e9)),
+        ("wire_tx_bytes", Value::Int(wire.0 as i64)),
+        ("wire_rx_bytes", Value::Int(wire.1 as i64)),
+        ("log", log.to_json()),
+    ])
+}
+
+/// The stdout line for a rank report.
+pub fn rank_report_line(report: &Value) -> String {
+    format!("{RANK_REPORT_MARKER}{}", report.render())
+}
+
+/// The last rank-report line in a rank's captured stdout, if any.
+pub fn find_rank_report(stdout: &[String]) -> Option<&String> {
+    stdout.iter().rev().find(|l| l.starts_with(RANK_REPORT_MARKER))
+}
+
+/// Parse (and schema-check) one rank-report line.
+pub fn parse_rank_report(line: &str) -> Result<Value> {
+    let body = line
+        .strip_prefix(RANK_REPORT_MARKER)
+        .ok_or_else(|| anyhow!("not a rank report line: {line:?}"))?;
+    let v = Value::parse(body).map_err(|e| anyhow!("rank report JSON: {e}"))?;
+    match v.get("schema").and_then(Value::as_str) {
+        Some(RANK_SCHEMA) => Ok(v),
+        other => bail!("rank report schema {other:?} (expected {RANK_SCHEMA:?})"),
+    }
+}
+
+/// Element-wise sum of two flat integer objects (the `RunLog` totals).
+/// Keys missing on either side count as zero; key order follows `a`
+/// with `b`-only keys appended.
+fn sum_int_objects(a: &Value, b: &Value) -> Value {
+    let empty: &[(String, Value)] = &[];
+    let (pa, pb) = match (a, b) {
+        (Value::Obj(pa), Value::Obj(pb)) => (pa.as_slice(), pb.as_slice()),
+        (Value::Obj(pa), _) => (pa.as_slice(), empty),
+        (_, Value::Obj(pb)) => (empty, pb.as_slice()),
+        _ => (empty, empty),
+    };
+    let mut out: Vec<(String, Value)> = Vec::with_capacity(pa.len().max(pb.len()));
+    for (k, va) in pa {
+        let sum = va.as_i64().unwrap_or(0)
+            + pb.iter().find(|(kb, _)| kb == k).and_then(|(_, vb)| vb.as_i64()).unwrap_or(0);
+        out.push((k.clone(), Value::Int(sum)));
+    }
+    for (k, vb) in pb {
+        if !pa.iter().any(|(ka, _)| ka == k) {
+            out.push((k.clone(), Value::Int(vb.as_i64().unwrap_or(0))));
+        }
+    }
+    Value::Obj(out)
+}
+
+/// Fold per-rank reports into the single fleet report the launcher
+/// writes: rank 0's reduced result (with `run_sockets_reduced` that is
+/// the fleet-wide value), summed counters and wire bytes, and the full
+/// per-rank reports for drill-down.
+pub fn aggregate_fleet(
+    app: &str,
+    app_argv: &[String],
+    mut rank_reports: Vec<Value>,
+    wall_time_s: f64,
+) -> Result<Value> {
+    if rank_reports.is_empty() {
+        bail!("no rank reports to aggregate");
+    }
+    for r in &rank_reports {
+        if r.get("rank").and_then(Value::as_u64).is_none() {
+            bail!("rank report lacks a numeric \"rank\" field");
+        }
+    }
+    rank_reports.sort_by_key(|r| r.get("rank").and_then(Value::as_u64).unwrap_or(u64::MAX));
+    let n = rank_reports.len();
+    for (i, r) in rank_reports.iter().enumerate() {
+        let rank = r.get("rank").and_then(Value::as_u64).expect("checked above");
+        if rank != i as u64 {
+            bail!("fleet reports are not ranks 0..{n}: missing or duplicate rank {i}");
+        }
+    }
+    let mut places = 0i64;
+    let (mut tx, mut rx) = (0i64, 0i64);
+    let mut totals = Value::Obj(Vec::new());
+    for r in &rank_reports {
+        places += r.get("places").and_then(Value::as_i64).unwrap_or(0);
+        tx += r.get("wire_tx_bytes").and_then(Value::as_i64).unwrap_or(0);
+        rx += r.get("wire_rx_bytes").and_then(Value::as_i64).unwrap_or(0);
+        if let Some(t) = r.get("log").and_then(|l| l.get("totals")) {
+            totals = sum_int_objects(&totals, t);
+        }
+    }
+    let result = rank_reports[0].get("result").cloned().unwrap_or(Value::Null);
+    Ok(Value::obj(vec![
+        ("schema", Value::Str(FLEET_SCHEMA.into())),
+        ("app", Value::Str(app.into())),
+        ("argv", Value::Arr(app_argv.iter().map(|a| Value::Str(a.clone())).collect())),
+        ("ranks", Value::Int(n as i64)),
+        ("places", Value::Int(places)),
+        ("wall_time_s", Value::Float(wall_time_s)),
+        ("result", result),
+        ("wire_tx_bytes", Value::Int(tx)),
+        ("wire_rx_bytes", Value::Int(rx)),
+        ("totals", totals),
+        ("per_rank", Value::Arr(rank_reports)),
+    ]))
+}
+
+/// Read and schema-check a fleet report written by `--report`.
+pub fn load_fleet_report(path: &Path) -> Result<Value> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read fleet report {}", path.display()))?;
+    let v = Value::parse(&text).map_err(|e| anyhow!("fleet report {}: {e}", path.display()))?;
+    match v.get("schema").and_then(Value::as_str) {
+        Some(FLEET_SCHEMA) => Ok(v),
+        other => bail!("fleet report schema {other:?} (expected {FLEET_SCHEMA:?})"),
+    }
+}
+
+/// One `glb bench` entry: the timed runs of one pinned config, plus the
+/// result/wire summary of its final fleet.
+pub fn bench_entry(
+    name: &str,
+    np: usize,
+    warmups: usize,
+    repeats: usize,
+    wall_times_s: &[f64],
+    fleet: &Value,
+) -> Value {
+    let best = wall_times_s.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mean = if wall_times_s.is_empty() {
+        0.0
+    } else {
+        wall_times_s.iter().sum::<f64>() / wall_times_s.len() as f64
+    };
+    Value::obj(vec![
+        ("name", Value::Str(name.into())),
+        ("app", fleet.get("app").cloned().unwrap_or(Value::Null)),
+        ("argv", fleet.get("argv").cloned().unwrap_or(Value::Null)),
+        ("ranks", Value::Int(np as i64)),
+        ("warmups", Value::Int(warmups as i64)),
+        ("repeats", Value::Int(repeats as i64)),
+        ("wall_times_s", Value::Arr(wall_times_s.iter().map(|t| Value::Float(*t)).collect())),
+        ("best_s", Value::Float(best)),
+        ("mean_s", Value::Float(mean)),
+        ("result", fleet.get("result").cloned().unwrap_or(Value::Null)),
+        ("wire_tx_bytes", fleet.get("wire_tx_bytes").cloned().unwrap_or(Value::Null)),
+        ("wire_rx_bytes", fleet.get("wire_rx_bytes").cloned().unwrap_or(Value::Null)),
+    ])
+}
+
+/// The `BENCH_glb.json` document.
+pub fn bench_report(entries: Vec<Value>) -> Value {
+    Value::obj(vec![
+        ("schema", Value::Str(BENCH_SCHEMA.into())),
+        ("bench", Value::Arr(entries)),
+    ])
+}
+
+/// How far two float results may drift before they count as different.
+/// Integer results (UTS node counts) are bit-deterministic and compared
+/// exactly; float results (BC betweenness sums) depend on f64 summation
+/// grouping, which follows the nondeterministic steal schedule, so they
+/// only have to agree to within this relative tolerance.
+const RESULT_REL_TOL: f64 = 1e-6;
+
+/// `None` if the two result values agree (exact for ints/strings/bools,
+/// within [`RESULT_REL_TOL`] for floats, recursively for arrays and
+/// objects); otherwise a human-readable reason. A `Null` on either side
+/// means "not comparable" and always agrees.
+fn result_mismatch(cur: &Value, base: &Value) -> Option<String> {
+    match (cur, base) {
+        (Value::Null, _) | (_, Value::Null) => None,
+        (Value::Int(a), Value::Int(b)) => {
+            (a != b).then(|| format!("{a} != {b} (exact integer result)"))
+        }
+        (Value::Arr(a), Value::Arr(b)) => {
+            if a.len() != b.len() {
+                return Some(format!("array lengths differ ({} vs {})", a.len(), b.len()));
+            }
+            a.iter().zip(b).find_map(|(x, y)| result_mismatch(x, y))
+        }
+        (Value::Obj(a), Value::Obj(b)) => {
+            if a.len() != b.len() {
+                return Some(format!("object sizes differ ({} vs {})", a.len(), b.len()));
+            }
+            a.iter().find_map(|(k, x)| match base.get(k) {
+                None => Some(format!("baseline lacks key {k:?}")),
+                Some(y) => result_mismatch(x, y),
+            })
+        }
+        _ => match (cur.as_f64(), base.as_f64()) {
+            // Mixed/float numerics: steal-schedule summation noise is
+            // expected; real regressions are far outside the tolerance.
+            (Some(a), Some(b)) => {
+                let scale = a.abs().max(b.abs()).max(1.0);
+                ((a - b).abs() > RESULT_REL_TOL * scale)
+                    .then(|| format!("{a} vs {b} (beyond rel tol {RESULT_REL_TOL:e})"))
+            }
+            _ => (cur != base).then(|| format!("{} != {}", cur.render(), base.render())),
+        },
+    }
+}
+
+/// Diff a fresh bench report against a committed baseline. Wall-time
+/// drift beyond `band` (relative, vs `best_s`) prints `BENCH-WARN` lines
+/// and is counted but non-fatal — machine speed varies; the trajectory
+/// is the point. A *result* disagreement (see [`result_mismatch`]: exact
+/// for integer results, small relative tolerance for float ones) is a
+/// hard error — that is a correctness regression, not noise. Baseline
+/// entries with `"result": null` skip the check (used when a baseline
+/// predates a refresh).
+pub fn compare_with_baseline(current: &Value, baseline_path: &str, band: f64) -> Result<usize> {
+    let text = std::fs::read_to_string(baseline_path)
+        .with_context(|| format!("read bench baseline {baseline_path}"))?;
+    let base = Value::parse(&text).map_err(|e| anyhow!("baseline {baseline_path}: {e}"))?;
+    if base.get("schema").and_then(Value::as_str) != Some(BENCH_SCHEMA) {
+        bail!("baseline {baseline_path} is not a {BENCH_SCHEMA:?} document");
+    }
+    let empty: Vec<Value> = Vec::new();
+    let cur_entries = current.get("bench").and_then(Value::as_arr).unwrap_or(&empty);
+    let base_entries = base.get("bench").and_then(Value::as_arr).unwrap_or(&empty);
+    let mut warnings = 0usize;
+    for cur in cur_entries {
+        let name = cur.get("name").and_then(Value::as_str).unwrap_or("?");
+        let Some(b) = base_entries
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some(name))
+        else {
+            println!("BENCH-WARN {name}: no baseline entry (new bench? refresh the baseline)");
+            warnings += 1;
+            continue;
+        };
+        let base_result = b.get("result").cloned().unwrap_or(Value::Null);
+        let cur_result = cur.get("result").cloned().unwrap_or(Value::Null);
+        if let Some(why) = result_mismatch(&cur_result, &base_result) {
+            bail!(
+                "bench {name}: result changed vs baseline ({why}) — beyond summation \
+                 noise, this is a correctness regression"
+            );
+        }
+        let (cur_best, base_best) = (
+            cur.get("best_s").and_then(Value::as_f64).unwrap_or(0.0),
+            b.get("best_s").and_then(Value::as_f64).unwrap_or(0.0),
+        );
+        if base_best > 0.0 && cur_best > 0.0 {
+            let rel = (cur_best - base_best) / base_best;
+            if rel.abs() > band {
+                println!(
+                    "BENCH-WARN {name}: best wall time {cur_best:.3}s vs baseline \
+                     {base_best:.3}s ({rel:+.0}% beyond the ±{band:.0}% band)",
+                    rel = rel * 100.0,
+                    band = band * 100.0,
+                );
+                warnings += 1;
+            }
+        }
+    }
+    for b in base_entries {
+        let name = b.get("name").and_then(Value::as_str).unwrap_or("?");
+        if !cur_entries
+            .iter()
+            .any(|e| e.get("name").and_then(Value::as_str) == Some(name))
+        {
+            println!("BENCH-WARN {name}: in the baseline but not in this run");
+            warnings += 1;
+        }
+    }
+    Ok(warnings)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::glb::WorkerStats;
+
+    fn mk_rank(rank: usize, ranks: usize, result: u64, items: u64) -> Value {
+        let log = RunLog::new(vec![WorkerStats {
+            items_processed: items,
+            loot_bags_sent: rank as u64,
+            ..Default::default()
+        }]);
+        build_rank_report(
+            "uts",
+            "tcp",
+            (rank, ranks),
+            Value::Int(result as i64),
+            1_000_000,
+            &log,
+            (100 * rank as u64, 50),
+        )
+    }
+
+    #[test]
+    fn rank_report_lines_roundtrip() {
+        let report = mk_rank(2, 4, 123, 7);
+        let line = rank_report_line(&report);
+        assert!(line.starts_with(RANK_REPORT_MARKER));
+        let back = parse_rank_report(&line).unwrap();
+        assert_eq!(back, report);
+        let lines = vec!["noise".to_string(), line.clone(), "more noise".to_string()];
+        assert_eq!(find_rank_report(&lines), Some(&line));
+        assert!(find_rank_report(&["noise".to_string()]).is_none());
+        assert!(parse_rank_report("GLB-RANK-REPORT {not json").is_err());
+        assert!(parse_rank_report("GLB-RANK-REPORT {\"schema\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn fleet_aggregation_sums_and_keeps_rank0_result() {
+        // Deliberately out of order: aggregation sorts by rank.
+        let reports = vec![mk_rank(1, 2, 40, 11), mk_rank(0, 2, 100, 5)];
+        let fleet = aggregate_fleet("uts", &["uts".to_string()], reports, 2.5).unwrap();
+        assert_eq!(fleet.get("schema").and_then(Value::as_str), Some(FLEET_SCHEMA));
+        assert_eq!(fleet.get("ranks").and_then(Value::as_u64), Some(2));
+        assert_eq!(fleet.get("places").and_then(Value::as_u64), Some(2));
+        assert_eq!(
+            fleet.get("result").and_then(Value::as_u64),
+            Some(100),
+            "rank 0 holds the fleet-wide reduction"
+        );
+        assert_eq!(fleet.get("wire_tx_bytes").and_then(Value::as_u64), Some(100));
+        assert_eq!(fleet.get("wire_rx_bytes").and_then(Value::as_u64), Some(100));
+        let totals = fleet.get("totals").expect("totals");
+        assert_eq!(totals.get("items_processed").and_then(Value::as_u64), Some(16));
+        assert_eq!(totals.get("loot_bags_sent").and_then(Value::as_u64), Some(1));
+        let per_rank = fleet.get("per_rank").and_then(Value::as_arr).unwrap();
+        assert_eq!(per_rank[0].get("rank").and_then(Value::as_u64), Some(0));
+    }
+
+    #[test]
+    fn fleet_aggregation_rejects_rank_gaps() {
+        let err = aggregate_fleet("uts", &[], vec![mk_rank(0, 3, 1, 1), mk_rank(2, 3, 1, 1)], 1.0)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("missing or duplicate rank 1"), "{err:#}");
+        assert!(aggregate_fleet("uts", &[], vec![], 1.0).is_err());
+    }
+
+    #[test]
+    fn fleet_report_file_roundtrips() {
+        let fleet = aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 9, 9)], 0.5)
+            .unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("glb-report-test-{}.json", std::process::id()));
+        std::fs::write(&path, fleet.render_pretty()).unwrap();
+        let back = load_fleet_report(&path).unwrap();
+        assert_eq!(back, fleet, "pretty render must parse back identically");
+        std::fs::remove_file(&path).ok();
+        assert!(load_fleet_report(Path::new("/nonexistent/fleet.json")).is_err());
+    }
+
+    #[test]
+    fn bench_entries_summarize_times() {
+        let fleet = aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 41314, 3)], 1.0)
+            .unwrap();
+        let e = bench_entry("uts-d8", 2, 1, 3, &[1.5, 1.0, 2.0], &fleet);
+        assert_eq!(e.get("best_s").and_then(Value::as_f64), Some(1.0));
+        assert_eq!(e.get("mean_s").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(e.get("result").and_then(Value::as_u64), Some(41314));
+        let doc = bench_report(vec![e]);
+        assert_eq!(doc.get("schema").and_then(Value::as_str), Some(BENCH_SCHEMA));
+        assert_eq!(Value::parse(&doc.render_pretty()).unwrap(), doc);
+    }
+
+    #[test]
+    fn baseline_compare_warns_on_drift_and_fails_on_result_change() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("glb-baseline-test-{}.json", std::process::id()));
+        let entry = |name: &str, best: f64, result: Value| {
+            Value::obj(vec![
+                ("name", Value::Str(name.into())),
+                ("best_s", Value::Float(best)),
+                ("result", result),
+            ])
+        };
+        let baseline = bench_report(vec![
+            entry("stable", 1.0, Value::Int(42)),
+            entry("slow", 1.0, Value::Null),
+            entry("gone", 1.0, Value::Null),
+        ]);
+        std::fs::write(&path, baseline.render_pretty()).unwrap();
+        let current = bench_report(vec![
+            entry("stable", 1.1, Value::Int(42)),
+            entry("slow", 2.0, Value::Int(7)),
+        ]);
+        // stable: within band; slow: +100% drift (warn); gone: missing (warn).
+        let warnings = compare_with_baseline(&current, path.to_str().unwrap(), 0.30).unwrap();
+        assert_eq!(warnings, 2);
+        // A changed result against a non-null baseline is fatal.
+        let bad = bench_report(vec![entry("stable", 1.0, Value::Int(41))]);
+        let err = compare_with_baseline(&bad, path.to_str().unwrap(), 0.30).unwrap_err();
+        assert!(format!("{err:#}").contains("correctness regression"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn result_comparison_is_exact_for_ints_and_tolerant_for_floats() {
+        assert!(result_mismatch(&Value::Int(41314), &Value::Int(41314)).is_none());
+        assert!(result_mismatch(&Value::Int(41314), &Value::Int(41315)).is_some());
+        // Last-ulp f64 summation noise (steal-schedule grouping) agrees...
+        let a = Value::obj(vec![("len", Value::Int(128)), ("sum", Value::Float(1234.5000000001))]);
+        let b = Value::obj(vec![("len", Value::Int(128)), ("sum", Value::Float(1234.5))]);
+        assert!(result_mismatch(&a, &b).is_none());
+        // ...a real change does not, and neither does a shape change.
+        let c = Value::obj(vec![("len", Value::Int(128)), ("sum", Value::Float(1240.0))]);
+        assert!(result_mismatch(&c, &b).is_some());
+        assert!(result_mismatch(&a, &Value::Int(3)).is_some());
+        // Null on either side means "not comparable": always agrees.
+        assert!(result_mismatch(&a, &Value::Null).is_none());
+        assert!(result_mismatch(&Value::Null, &b).is_none());
+    }
+
+    #[test]
+    fn sum_int_objects_unions_keys() {
+        let a = Value::obj(vec![("x", Value::Int(2)), ("y", Value::Int(3))]);
+        let b = Value::obj(vec![("y", Value::Int(10)), ("z", Value::Int(1))]);
+        let s = sum_int_objects(&a, &b);
+        assert_eq!(s.get("x").and_then(Value::as_i64), Some(2));
+        assert_eq!(s.get("y").and_then(Value::as_i64), Some(13));
+        assert_eq!(s.get("z").and_then(Value::as_i64), Some(1));
+        assert_eq!(sum_int_objects(&Value::Obj(vec![]), &a), a);
+    }
+}

@@ -1,0 +1,498 @@
+//! Fleet specification: which ranks run where, with which flags.
+//!
+//! `glb launch` owns a small set of options (`--np/--hosts/--ssh/--bin/
+//! --port/--report/--timeout`) that it consumes wherever they appear on
+//! the command line; every other token passes through verbatim to the
+//! launched app. From the spec it derives each rank's full flag set —
+//! `--rank/--peers/--port`, plus the rank-0 bind/advertise split and
+//! per-spoke `--advertise` addresses for multi-host fleets — so the
+//! flags that PR 3 left to be typed by hand per rank are now computed in
+//! exactly one place.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{report, RankCmd};
+
+/// Options the launcher consumes (everything else passes through).
+const LAUNCHER_OPTS: &[&str] = &["np", "hosts", "ssh", "bin", "port", "report", "timeout"];
+
+/// Flags the launcher derives per rank; passing them through is an
+/// error, not a silent override.
+const DERIVED_OPTS: &[&str] = &["rank", "peers", "host", "bind", "advertise"];
+
+/// Apps that speak the tcp fleet protocol (and emit rank reports).
+const FLEET_APPS: &[&str] = &["uts", "bc"];
+
+/// Where the ranks run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    /// `--np N`: N ranks on this machine, spawned directly.
+    Local { np: usize },
+    /// `--hosts FILE`: one entry per rank (hosts-file `slots=K` lines
+    /// already expanded), reached through an ssh command template.
+    Hosts { ranks: Vec<String> },
+}
+
+/// A parsed `glb launch` invocation.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub placement: Placement,
+    /// Rank 0's rendezvous port; `0` = pick a free ephemeral port at
+    /// [`FleetSpec::plan`] time (local fleets only).
+    pub port: u16,
+    /// The app command for every rank: app name first, then the
+    /// passthrough flags (with `--transport tcp` guaranteed present).
+    pub app_argv: Vec<String>,
+    /// Where to write the aggregated fleet report.
+    pub report: Option<PathBuf>,
+    /// Fleet watchdog deadline.
+    pub deadline: Duration,
+    /// Binary to run (default: this executable locally, `glb` on PATH
+    /// over ssh).
+    pub bin: Option<String>,
+    /// ssh command template for `--hosts` fleets (split on whitespace;
+    /// host and remote command are appended).
+    pub ssh: String,
+}
+
+/// The spawnable form of a spec: one command per rank.
+pub struct FleetPlan {
+    pub ranks: usize,
+    pub port: u16,
+    pub cmds: Vec<RankCmd>,
+    /// Human-readable command lines, indexed by rank (logged by the CLI).
+    pub cmdlines: Vec<String>,
+}
+
+impl FleetSpec {
+    /// Parse the raw tokens after `glb launch`.
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        let mut np: Option<usize> = None;
+        let mut hosts_file: Option<String> = None;
+        let mut ssh: Option<String> = None;
+        let mut bin: Option<String> = None;
+        let mut port: Option<u16> = None;
+        let mut report: Option<PathBuf> = None;
+        let mut timeout_s: u64 = 600;
+        let mut passthrough: Vec<String> = Vec::new();
+
+        let mut it = raw.iter();
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                passthrough.push(tok.clone());
+                continue;
+            };
+            let (name, inline) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            if DERIVED_OPTS.contains(&name) {
+                bail!(
+                    "--{name} is derived per rank by `glb launch` \
+                     (it computes rank/peers/port and the bind/advertise split); drop it"
+                );
+            }
+            if !LAUNCHER_OPTS.contains(&name) {
+                passthrough.push(tok.clone());
+                continue;
+            }
+            let value = match inline {
+                Some(v) => v,
+                None => it.next().with_context(|| format!("--{name} needs a value"))?.clone(),
+            };
+            match name {
+                "np" => np = Some(value.parse().map_err(|e| anyhow!("--np {value}: {e}"))?),
+                "hosts" => hosts_file = Some(value),
+                "ssh" => ssh = Some(value),
+                "bin" => bin = Some(value),
+                "port" => port = Some(value.parse().map_err(|e| anyhow!("--port {value}: {e}"))?),
+                "report" => report = Some(PathBuf::from(value)),
+                "timeout" => {
+                    timeout_s = value.parse().map_err(|e| anyhow!("--timeout {value}: {e}"))?
+                }
+                _ => unreachable!("LAUNCHER_OPTS covers the match"),
+            }
+        }
+
+        let placement = match (np, hosts_file) {
+            (Some(_), Some(_)) => bail!("--np and --hosts are mutually exclusive"),
+            (None, None) => bail!("`glb launch` needs --np N (localhost) or --hosts FILE"),
+            (Some(0), None) => bail!("--np must be >= 1"),
+            (Some(n), None) => Placement::Local { np: n },
+            (None, Some(f)) => {
+                let text = std::fs::read_to_string(&f)
+                    .with_context(|| format!("read hosts file {f}"))?;
+                Placement::Hosts { ranks: parse_hosts_text(&text)? }
+            }
+        };
+
+        // The first positional is the app; it must come before its own
+        // options so we never mistake an option value for the app name.
+        let app_pos = passthrough.iter().position(|t| !t.starts_with("--"));
+        let app = match app_pos {
+            Some(0) => passthrough.remove(0),
+            Some(_) => {
+                bail!("put the app name (one of {}) before its options", FLEET_APPS.join("|"))
+            }
+            None => bail!("`glb launch` needs an app to run (one of {})", FLEET_APPS.join("|")),
+        };
+        if !FLEET_APPS.contains(&app.as_str()) {
+            let apps = FLEET_APPS.join("|");
+            bail!("`glb launch` drives tcp fleets; app must be one of {apps}, got {app:?}");
+        }
+
+        // A launched fleet is by definition tcp; fill the flag in when
+        // the user leaves it implicit, reject contradictions.
+        match option_value(&passthrough, "transport") {
+            None => {
+                passthrough.push("--transport".into());
+                passthrough.push("tcp".into());
+            }
+            Some("tcp") => {}
+            Some(other) => {
+                bail!("`glb launch` runs --transport tcp fleets, not --transport {other}")
+            }
+        }
+
+        let mut app_argv = vec![app];
+        app_argv.extend(passthrough);
+
+        let port = match (&placement, port) {
+            (_, Some(p)) => {
+                if matches!(placement, Placement::Hosts { .. }) && p == 0 {
+                    bail!("multi-host fleets need a fixed --port (spokes must dial rank 0)");
+                }
+                p
+            }
+            (Placement::Local { .. }, None) => 0, // ephemeral, picked at plan time
+            (Placement::Hosts { .. }, None) => 7117,
+        };
+
+        Ok(FleetSpec {
+            placement,
+            port,
+            app_argv,
+            report,
+            deadline: Duration::from_secs(timeout_s),
+            bin,
+            ssh: ssh.unwrap_or_else(|| "ssh -o BatchMode=yes".into()),
+        })
+    }
+
+    /// The launched app's name.
+    pub fn app(&self) -> &str {
+        &self.app_argv[0]
+    }
+
+    /// Total ranks the spec describes.
+    pub fn ranks(&self) -> usize {
+        match &self.placement {
+            Placement::Local { np } => *np,
+            Placement::Hosts { ranks } => ranks.len(),
+        }
+    }
+
+    /// Derive rank `rank`'s full app argv (flags included).
+    fn rank_argv(&self, rank: usize, ranks: usize, port: u16) -> Vec<String> {
+        let mut v = self.app_argv.clone();
+        let mut push = |flag: &str, val: String| {
+            v.push(flag.into());
+            v.push(val);
+        };
+        push("--rank", rank.to_string());
+        push("--peers", ranks.to_string());
+        push("--port", port.to_string());
+        match &self.placement {
+            Placement::Local { .. } => {
+                push("--host", "127.0.0.1".into());
+                if rank == 0 {
+                    push("--bind", "0.0.0.0".into());
+                }
+            }
+            Placement::Hosts { ranks: hosts } => {
+                // Every rank dials rank 0's host; rank 0 binds the
+                // wildcard (its advertised address is often not locally
+                // bindable), spokes advertise their own hosts-file
+                // address so multi-homed boxes mesh correctly.
+                push("--host", host_addr(&hosts[0]).into());
+                if rank == 0 {
+                    push("--bind", "0.0.0.0".into());
+                } else {
+                    push("--advertise", host_addr(&hosts[rank]).into());
+                }
+            }
+        }
+        v
+    }
+
+    /// Resolve the spec into spawnable per-rank commands.
+    pub fn plan(&self) -> Result<FleetPlan> {
+        let ranks = self.ranks();
+        let port = if self.port == 0 { free_port()? } else { self.port };
+        let mut cmds = Vec::with_capacity(ranks);
+        let mut cmdlines = Vec::with_capacity(ranks);
+        for rank in 0..ranks {
+            let argv = self.rank_argv(rank, ranks, port);
+            match &self.placement {
+                Placement::Local { .. } => {
+                    let bin = match &self.bin {
+                        Some(b) => PathBuf::from(b),
+                        None => std::env::current_exe().context("resolve this glb binary")?,
+                    };
+                    let mut cmd = Command::new(&bin);
+                    cmd.args(&argv).env(report::RANK_REPORT_ENV, "1");
+                    cmdlines.push(format!("{} {}", bin.display(), argv.join(" ")));
+                    cmds.push(RankCmd { rank, cmd });
+                }
+                Placement::Hosts { ranks: hosts } => {
+                    let bin = self.bin.as_deref().unwrap_or("glb");
+                    let remote = format!(
+                        "{}=1 {} {}",
+                        report::RANK_REPORT_ENV,
+                        shell_quote(bin),
+                        argv.iter().map(|a| shell_quote(a)).collect::<Vec<_>>().join(" "),
+                    );
+                    let mut ssh_words = self.ssh.split_whitespace();
+                    let ssh0 = ssh_words
+                        .next()
+                        .ok_or_else(|| anyhow!("--ssh template must name a command"))?;
+                    let mut cmd = Command::new(ssh0);
+                    cmd.args(ssh_words).arg(&hosts[rank]).arg(&remote);
+                    cmdlines.push(format!("{} {} {remote}", self.ssh, hosts[rank]));
+                    cmds.push(RankCmd { rank, cmd });
+                }
+            }
+        }
+        Ok(FleetPlan { ranks, port, cmds, cmdlines })
+    }
+}
+
+/// The value of `--name v` / `--name=v` in a token stream, if present.
+fn option_value<'a>(tokens: &'a [String], name: &str) -> Option<&'a str> {
+    let flag = format!("--{name}");
+    let inline = format!("--{name}=");
+    for (i, t) in tokens.iter().enumerate() {
+        if *t == flag {
+            return tokens.get(i + 1).map(|s| s.as_str());
+        }
+        if let Some(v) = t.strip_prefix(&inline) {
+            return Some(v);
+        }
+    }
+    None
+}
+
+/// Parse a hosts file: one host per line (`host` or `user@host`), an
+/// optional `slots=N` to run N ranks there, `#` comments. Returns one
+/// entry per rank.
+pub fn parse_hosts_text(text: &str) -> Result<Vec<String>> {
+    let mut ranks = Vec::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let line = raw_line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let host = parts.next().expect("non-empty line has a first token").to_string();
+        if host.starts_with('-') {
+            bail!("hosts file line {line_no}: {host:?} is not a hostname");
+        }
+        let mut slots = 1usize;
+        for extra in parts {
+            match extra.split_once('=') {
+                Some(("slots", v)) => {
+                    slots = v
+                        .parse()
+                        .map_err(|e| anyhow!("hosts file line {line_no}: slots={v:?}: {e}"))?
+                }
+                _ => bail!(
+                    "hosts file line {line_no}: unexpected token {extra:?} \
+                     (only `slots=N` is understood)"
+                ),
+            }
+        }
+        if slots == 0 {
+            bail!("hosts file line {line_no}: slots must be >= 1");
+        }
+        for _ in 0..slots {
+            ranks.push(host.clone());
+        }
+    }
+    if ranks.is_empty() {
+        bail!("hosts file lists no hosts");
+    }
+    Ok(ranks)
+}
+
+/// The dialable address of a hosts-file entry (`user@addr` -> `addr`).
+fn host_addr(entry: &str) -> &str {
+    entry.rsplit_once('@').map_or(entry, |(_, addr)| addr)
+}
+
+/// Quote a string for the remote shell behind ssh.
+fn shell_quote(s: &str) -> String {
+    let plain = !s.is_empty()
+        && s.bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b"@%+=:,./-_".contains(&b));
+    if plain {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', "'\\''"))
+    }
+}
+
+/// A currently-free localhost port for a local fleet's rendezvous
+/// (bound briefly, then released for rank 0 to claim). Shared with the
+/// test harness via [`crate::testkit::fleet::free_port`].
+pub(crate) fn free_port() -> Result<u16> {
+    let l = TcpListener::bind(("127.0.0.1", 0)).context("probe for a free port")?;
+    Ok(l.local_addr().context("free-port local addr")?.port())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn local_spec_derives_every_ranks_flags() {
+        let spec =
+            FleetSpec::parse(&s(&["--np", "3", "uts", "--depth", "6", "--report", "out.json"]))
+                .unwrap();
+        assert_eq!(spec.ranks(), 3);
+        assert_eq!(spec.app(), "uts");
+        assert_eq!(spec.report.as_deref(), Some(std::path::Path::new("out.json")));
+        // --transport tcp is filled in when left implicit.
+        assert_eq!(option_value(&spec.app_argv, "transport"), Some("tcp"));
+        let r0 = spec.rank_argv(0, 3, 7001);
+        assert_eq!(option_value(&r0, "rank"), Some("0"));
+        assert_eq!(option_value(&r0, "peers"), Some("3"));
+        assert_eq!(option_value(&r0, "port"), Some("7001"));
+        assert_eq!(option_value(&r0, "bind"), Some("0.0.0.0"), "rank 0 splits bind/advertise");
+        let r2 = spec.rank_argv(2, 3, 7001);
+        assert_eq!(option_value(&r2, "rank"), Some("2"));
+        assert_eq!(option_value(&r2, "host"), Some("127.0.0.1"));
+        assert_eq!(option_value(&r2, "bind"), None, "spokes bind their own listeners");
+    }
+
+    #[test]
+    fn explicit_tcp_transport_is_accepted_verbatim() {
+        let spec =
+            FleetSpec::parse(&s(&["--np", "4", "uts", "--depth", "6", "--transport", "tcp"]))
+                .unwrap();
+        let tcp_count = spec.app_argv.iter().filter(|t| t.as_str() == "--transport").count();
+        assert_eq!(tcp_count, 1, "no duplicate --transport: {:?}", spec.app_argv);
+    }
+
+    #[test]
+    fn derived_flags_are_rejected_in_passthrough() {
+        for flag in ["--rank", "--peers", "--host", "--bind", "--advertise"] {
+            let err = FleetSpec::parse(&s(&["--np", "2", "uts", flag, "1"])).unwrap_err();
+            assert!(format!("{err:#}").contains("derived"), "{flag}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn spec_validation_errors_are_clear() {
+        let cases: &[(&[&str], &str)] = &[
+            (&["uts"], "--np"),
+            (&["--np", "2"], "needs an app"),
+            (&["--np", "0", "uts"], "--np must be"),
+            (&["--np", "2", "fig"], "must be one of"),
+            (&["--np", "2", "--depth", "6", "uts"], "before its options"),
+            (&["--np", "2", "uts", "--transport", "sim"], "not --transport sim"),
+            (&["--np", "2", "--hosts", "h.txt", "uts"], "mutually exclusive"),
+            (&["--np"], "needs a value"),
+        ];
+        for (argv, needle) in cases {
+            let err = FleetSpec::parse(&s(argv)).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "{argv:?}: expected {needle:?} in {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn hosts_text_expands_slots_and_strips_comments() {
+        let ranks = parse_hosts_text(
+            "# fleet\nalpha\nbeta slots=2   # two ranks here\nuser@gamma\n\n",
+        )
+        .unwrap();
+        assert_eq!(ranks, vec!["alpha", "beta", "beta", "user@gamma"]);
+        assert_eq!(host_addr("user@gamma"), "gamma");
+        assert_eq!(host_addr("alpha"), "alpha");
+    }
+
+    #[test]
+    fn malformed_hosts_files_are_rejected_with_line_numbers() {
+        let cases: &[(&str, &str)] = &[
+            ("", "no hosts"),
+            ("# only comments\n", "no hosts"),
+            ("alpha slots=banana", "line 1"),
+            ("alpha\nbeta slots=0", "line 2"),
+            ("alpha cores=4", "unexpected token"),
+            ("--np", "not a hostname"),
+        ];
+        for (text, needle) in cases {
+            let err = parse_hosts_text(text).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(needle),
+                "{text:?}: expected {needle:?} in {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_host_ranks_dial_rank0_and_advertise_themselves() {
+        let spec = FleetSpec {
+            placement: Placement::Hosts { ranks: vec!["user@alpha".into(), "beta".into()] },
+            port: 7117,
+            app_argv: s(&["uts", "--transport", "tcp"]),
+            report: None,
+            deadline: Duration::from_secs(10),
+            bin: None,
+            ssh: "ssh -o BatchMode=yes".into(),
+        };
+        let r0 = spec.rank_argv(0, 2, 7117);
+        assert_eq!(option_value(&r0, "host"), Some("alpha"), "user@ stripped for dialing");
+        assert_eq!(option_value(&r0, "bind"), Some("0.0.0.0"));
+        let r1 = spec.rank_argv(1, 2, 7117);
+        assert_eq!(option_value(&r1, "host"), Some("alpha"), "spokes dial rank 0");
+        assert_eq!(option_value(&r1, "advertise"), Some("beta"));
+        let plan = spec.plan().unwrap();
+        assert_eq!(plan.ranks, 2);
+        assert!(plan.cmdlines[1].starts_with("ssh -o BatchMode=yes beta "), "{}", plan.cmdlines[1]);
+        assert!(plan.cmdlines[1].contains("GLB_RANK_REPORT=1"), "{}", plan.cmdlines[1]);
+    }
+
+    #[test]
+    fn shell_quoting_protects_the_remote_line() {
+        assert_eq!(shell_quote("plain-0.7/ok"), "plain-0.7/ok");
+        assert_eq!(shell_quote("has space"), "'has space'");
+        assert_eq!(shell_quote("don't"), "'don'\\''t'");
+        assert_eq!(shell_quote(""), "''");
+    }
+
+    #[test]
+    fn local_port_defaults_to_ephemeral_and_hosts_to_fixed() {
+        let local = FleetSpec::parse(&s(&["--np", "2", "uts"])).unwrap();
+        assert_eq!(local.port, 0, "resolved to a free port at plan time");
+        let plan = local.plan().unwrap();
+        assert_ne!(plan.port, 0);
+        assert_eq!(plan.cmds.len(), 2);
+        // Multi-host: port 0 cannot work (spokes must dial a known port).
+        let err = FleetSpec::parse(&s(&["--hosts", "/nonexistent-hosts-file", "uts"]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("read hosts file"), "{err:#}");
+    }
+}

@@ -25,6 +25,7 @@ pub mod baselines;
 pub mod cli;
 pub mod glb;
 pub mod harness;
+pub mod launch;
 pub mod place;
 pub mod runtime;
 pub mod sim;

@@ -2,7 +2,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
 use glb::apps::fib::{fib, FibQueue};
@@ -12,9 +12,11 @@ use glb::cli::{glb_params_from, tcp_opts_from, transport_from, Args, TransportKi
 use glb::glb::task_queue::{SumReducer, VecSumReducer};
 use glb::glb::GlbConfig;
 use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
-use glb::place::{run_sockets_reduced, run_threads, SocketRunOpts};
+use glb::launch::report::{build_rank_report, rank_report_line, rank_report_requested};
+use glb::place::{run_sockets_reduced, run_threads, wire_bytes, SocketRunOpts};
 use glb::runtime::{default_artifact_dir, DeviceService};
 use glb::sim::{run_sim, ArchProfile, BGQ};
+use glb::util::json::Value;
 use glb::util::timefmt::{fmt_count, fmt_ns, fmt_rate};
 
 fn main() {
@@ -38,7 +40,7 @@ fn main() {
 const COMMON: &[&str] = &[
     "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
     "random-only", "rounds", "log", "csv", "autotune", "transport", "rank", "peers", "port",
-    "host", "bind", "advertise",
+    "host", "bind", "advertise", "report",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -48,6 +50,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "fib" => cmd_fib(rest),
         "nqueens" => cmd_nqueens(rest),
         "fig" => cmd_fig(rest),
+        "launch" => glb::launch::cmd_launch(rest),
+        "bench" => glb::launch::cmd_bench(rest),
         "calibrate" => cmd_calibrate(),
         "smoke" => {
             println!("platform={}", glb::smoke()?);
@@ -85,6 +89,65 @@ fn finish<R>(out: &glb::glb::RunOutput<R>, unit: &str, log: bool) {
     }
 }
 
+/// `--report PATH` on a single-process run: write the same fleet-report
+/// schema the launcher produces, with this run as its only rank — CI
+/// diffs a thread run's report against a launched fleet's bit-for-bit
+/// on the result field.
+fn write_report_if_asked<R>(
+    app: &str,
+    transport: &str,
+    args: &Args,
+    result_json: Value,
+    out: &glb::glb::RunOutput<R>,
+) -> Result<()> {
+    let Some(path) = args.get("report") else { return Ok(()) };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let rank =
+        build_rank_report(app, transport, (0, 1), result_json, out.elapsed_ns, &out.log, (0, 0));
+    let fleet = glb::launch::report::aggregate_fleet(
+        app,
+        &argv,
+        vec![rank],
+        out.elapsed_ns as f64 / 1e9,
+    )?;
+    std::fs::write(path, fleet.render_pretty())
+        .with_context(|| format!("write run report {path}"))?;
+    println!("run report -> {path}");
+    Ok(())
+}
+
+/// Print this tcp rank's report line when a launcher parent asked for it
+/// (`GLB_RANK_REPORT=1`); the launcher aggregates the fleet.
+fn emit_rank_report<R>(
+    app: &str,
+    rank: usize,
+    ranks: usize,
+    result_json: Value,
+    out: &glb::glb::RunOutput<R>,
+) {
+    if rank_report_requested() {
+        let r = build_rank_report(
+            app,
+            "tcp",
+            (rank, ranks),
+            result_json,
+            out.elapsed_ns,
+            &out.log,
+            wire_bytes(),
+        );
+        println!("{}", rank_report_line(&r));
+    }
+}
+
+/// BC's reduced result, summarized for reports (the full betweenness
+/// vector is too large to log per rank).
+fn bc_result_json(bc: &[f64]) -> Value {
+    Value::obj(vec![
+        ("len", Value::Int(bc.len() as i64)),
+        ("sum", Value::Float(bc.iter().sum::<f64>())),
+    ])
+}
+
 fn cmd_uts(rest: &[String]) -> Result<()> {
     let mut known = COMMON.to_vec();
     known.extend(["depth", "b0", "seed-tree"]);
@@ -101,6 +164,9 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
         // --peers N fleet and reports its local share of the count.
         if args.flag("autotune") {
             bail!("--autotune is not supported with --transport tcp yet");
+        }
+        if args.get("report").is_some() {
+            bail!("use `glb launch --report` to aggregate a fleet report (not per rank)");
         }
         let t = tcp_opts_from(&args)?;
         let params = glb_params_from(&args)?;
@@ -131,6 +197,7 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
             );
         }
         finish(&out, "nodes/s", args.flag("log"));
+        emit_rank_report("uts", t.rank, t.peers, Value::Int(out.result as i64), &out);
         return Ok(());
     }
     let p = args.parse_opt("places", 4usize)?;
@@ -153,10 +220,12 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
         println!("uts-g(sim/{}) places={p} depth={} nodes={}", arch.name, up.max_depth, fmt_count(out.result));
         println!("virtual messages={} events={}", rep.messages, rep.events);
         finish(&out, "nodes/s", args.flag("log"));
+        write_report_if_asked("uts", "sim", &args, Value::Int(out.result as i64), &out)?;
     } else {
         let out = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
         println!("uts-g(threads) places={p} depth={} nodes={}", up.max_depth, fmt_count(out.result));
         finish(&out, "nodes/s", args.flag("log"));
+        write_report_if_asked("uts", "thread", &args, Value::Int(out.result as i64), &out)?;
     }
     Ok(())
 }
@@ -175,6 +244,9 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
         // result collection (run_sockets_reduced + VecSumReducer).
         if engine != "sparse" {
             bail!("--transport tcp supports --engine sparse (dense is PJRT, single-process)");
+        }
+        if args.get("report").is_some() {
+            bail!("use `glb launch --report` to aggregate a fleet report (not per rank)");
         }
         let t = tcp_opts_from(&args)?;
         let params = glb_params_from(&args)?;
@@ -209,6 +281,7 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
             }
         }
         finish(&out, "edges/s", args.flag("log"));
+        emit_rank_report("bc", t.rank, t.peers, bc_result_json(&out.result), &out);
         return Ok(());
     }
     let p = args.parse_opt("places", 4usize)?;
@@ -265,6 +338,8 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
         verify_bc(&g, &out.result)?;
     }
     finish(&out, "edges/s", args.flag("log"));
+    let transport = if args.flag("sim") { "sim" } else { "thread" };
+    write_report_if_asked("bc", transport, &args, bc_result_json(&out.result), &out)?;
     Ok(())
 }
 
@@ -315,6 +390,7 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
     if out.result != fib(n) {
         bail!("fib mismatch!");
     }
+    write_report_if_asked("fib", "thread", &args, Value::Int(out.result as i64), &out)?;
     Ok(())
 }
 
@@ -332,6 +408,7 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
     let out = run_threads(&cfg, move |_, _| NQueensQueue::new(b), |q| q.init_root(), &SumReducer);
     println!("nqueens({b}) = {} solutions", out.result);
     finish(&out, "boards/s", args.flag("log"));
+    write_report_if_asked("nqueens", "thread", &args, Value::Int(out.result as i64), &out)?;
     Ok(())
 }
 

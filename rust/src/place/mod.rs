@@ -29,4 +29,4 @@ pub mod socket;
 
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
-pub use socket::{misrouted_frames, run_sockets, run_sockets_reduced, SocketRunOpts};
+pub use socket::{misrouted_frames, run_sockets, run_sockets_reduced, wire_bytes, SocketRunOpts};

@@ -140,6 +140,20 @@ pub fn misrouted_frames() -> u64 {
     MISROUTED_FRAMES.load(Ordering::Relaxed)
 }
 
+/// Mesh data-plane bytes this process has put on / taken off the wire
+/// (frame bodies plus their 4-byte length prefix; control-link traffic
+/// is bootstrap-only and excluded). Monotonic per process — one GLB run
+/// per process, so the totals are per-run in practice; the fleet
+/// launcher rolls them into its report.
+static WIRE_TX_BYTES: AtomicU64 = AtomicU64::new(0);
+static WIRE_RX_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// `(sent, received)` mesh data bytes for this process (see
+/// [`WIRE_TX_BYTES`]).
+pub fn wire_bytes() -> (u64, u64) {
+    (WIRE_TX_BYTES.load(Ordering::Relaxed), WIRE_RX_BYTES.load(Ordering::Relaxed))
+}
+
 /// A shared, mutex-serialized write half of a TCP link.
 type Link = Arc<Mutex<TcpStream>>;
 /// Mailbox sender per *global* place id (`None` for remote places).
@@ -301,7 +315,9 @@ impl<B: WireCodec> SocketTransport<B> {
         let body = wire::encode_data_frame_body(to, &msg);
         if let Some(link) = &self.links[dest_rank] {
             let mut s = link.lock().unwrap();
-            let _ = wire::write_frame(&mut *s, &body);
+            if wire::write_frame(&mut *s, &body).is_ok() {
+                WIRE_TX_BYTES.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
+            }
         }
     }
 
@@ -393,6 +409,7 @@ where
             Ok(Some(b)) => b,
             Ok(None) | Err(_) => return,
         };
+        WIRE_RX_BYTES.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
         let (to, msg) = match wire::decode_data_frame_body::<B>(&body) {
             Ok(x) => x,
             Err(_) => return, // malformed peer; drop the link

@@ -115,9 +115,10 @@ pub mod fleet {
     //! protocol hang fails the test instead of wedging CI.
 
     use std::collections::HashMap;
-    use std::net::TcpListener;
-    use std::process::{Command, Stdio};
-    use std::time::{Duration, Instant};
+    use std::process::Command;
+    use std::time::Duration;
+
+    use crate::launch::{run_fleet, EngineOpts, RankCmd};
 
     const ENV_RANK: &str = "GLB_FLEET_RANK";
     const ENV_RANKS: &str = "GLB_FLEET_RANKS";
@@ -155,13 +156,11 @@ pub mod fleet {
 
     /// Pick a currently-free localhost port for the fleet rendezvous.
     /// (Bound briefly, then released for rank 0 to claim — the window is
-    /// tiny and ephemeral ports make collisions vanishingly rare.)
+    /// tiny and ephemeral ports make collisions vanishingly rare.) The
+    /// probe itself lives with the launcher, which needs it for the same
+    /// job ([`crate::launch::spec`]).
     pub fn free_port() -> u16 {
-        TcpListener::bind(("127.0.0.1", 0))
-            .expect("bind ephemeral port")
-            .local_addr()
-            .expect("local addr")
-            .port()
+        crate::launch::spec::free_port().expect("bind ephemeral port")
     }
 
     /// Print a child's result line for the orchestrator to collect.
@@ -212,76 +211,54 @@ pub mod fleet {
     }
 
     /// Spawn `ranks` children of the current test binary re-entering
-    /// `exact_test`, wait for all of them (killing the fleet after
-    /// `deadline`), and return their result logs sorted by rank. Panics
-    /// if any child fails or emits no result line.
+    /// `exact_test`, wait for all of them, and return their result logs
+    /// sorted by rank. Panics if any child fails or emits no result
+    /// line.
+    ///
+    /// The spawn/stream/watchdog loop is the launcher engine
+    /// ([`crate::launch::run_fleet`]) — the same code path `glb launch`
+    /// and `glb bench` drive — so its fail-fast semantics hold here too:
+    /// the first rank to exit nonzero kills the survivors and fails the
+    /// test immediately instead of waiting out `deadline`.
     pub fn run(exact_test: &str, ranks: usize, port: u16, deadline: Duration) -> Vec<ProcLog> {
         assert!(ranks >= 1);
         let exe = std::env::current_exe().expect("current_exe");
-        let mut children: Vec<(usize, std::process::Child)> = (0..ranks)
+        let cmds: Vec<RankCmd> = (0..ranks)
             .map(|rank| {
                 // `--include-ignored`: fleet tests are `#[ignore]`d so the
                 // plain `cargo test` pass doesn't race several process
                 // fleets at once; the child must still run them.
-                let child = Command::new(&exe)
-                    .args([
-                        exact_test,
-                        "--exact",
-                        "--include-ignored",
-                        "--test-threads",
-                        "1",
-                        "--nocapture",
-                    ])
-                    .env(ENV_RANK, rank.to_string())
-                    .env(ENV_RANKS, ranks.to_string())
-                    .env(ENV_PORT, port.to_string())
-                    .env(ENV_HOST, "127.0.0.1")
-                    .env(ENV_BIND, "0.0.0.0")
-                    .stdin(Stdio::null())
-                    .stdout(Stdio::piped())
-                    .stderr(Stdio::piped())
-                    .spawn()
-                    .unwrap_or_else(|e| panic!("spawn fleet rank {rank}: {e}"));
-                (rank, child)
+                let mut cmd = Command::new(&exe);
+                cmd.args([
+                    exact_test,
+                    "--exact",
+                    "--include-ignored",
+                    "--test-threads",
+                    "1",
+                    "--nocapture",
+                ])
+                .env(ENV_RANK, rank.to_string())
+                .env(ENV_RANKS, ranks.to_string())
+                .env(ENV_PORT, port.to_string())
+                .env(ENV_HOST, "127.0.0.1")
+                .env(ENV_BIND, "0.0.0.0");
+                RankCmd { rank, cmd }
             })
             .collect();
-
-        // Watchdog: a wedged fleet must fail loudly, not hang CI. The
-        // children's output is far below the pipe buffer, so polling
-        // exit status without draining pipes cannot deadlock.
-        let give_up = Instant::now() + deadline;
-        loop {
-            let all_done = children
-                .iter_mut()
-                .all(|(_, c)| c.try_wait().expect("poll fleet child").is_some());
-            if all_done {
-                break;
-            }
-            if Instant::now() > give_up {
-                for (_, c) in children.iter_mut() {
-                    let _ = c.kill();
-                }
-                panic!("fleet {exact_test:?} timed out after {deadline:?}");
-            }
-            std::thread::sleep(Duration::from_millis(20));
-        }
+        let runs = run_fleet(cmds, &EngineOpts { deadline, echo: false })
+            .unwrap_or_else(|e| panic!("fleet {exact_test:?} failed: {e:#}"));
 
         let mut logs: Vec<ProcLog> = Vec::with_capacity(ranks);
-        for (rank, child) in children {
-            let out = child.wait_with_output().expect("collect fleet child output");
-            let stdout = String::from_utf8_lossy(&out.stdout);
-            if !out.status.success() {
+        for r in &runs {
+            let line = r.stdout.iter().find(|l| l.starts_with(LOG_PREFIX)).unwrap_or_else(|| {
                 panic!(
-                    "fleet rank {rank} failed ({}):\n--- stdout\n{stdout}--- stderr\n{}",
-                    out.status,
-                    String::from_utf8_lossy(&out.stderr),
-                );
-            }
-            let line = stdout.lines().find(|l| l.starts_with(LOG_PREFIX)).unwrap_or_else(|| {
-                panic!("fleet rank {rank} emitted no {LOG_PREFIX} line:\n{stdout}")
+                    "fleet rank {} emitted no {LOG_PREFIX} line:\n{}",
+                    r.rank,
+                    r.stdout.join("\n")
+                )
             });
             let log = parse_line(line);
-            assert_eq!(log.rank, rank, "child reported the wrong rank");
+            assert_eq!(log.rank, r.rank, "child reported the wrong rank");
             logs.push(log);
         }
         logs.sort_by_key(|l| l.rank);

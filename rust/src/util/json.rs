@@ -1,0 +1,490 @@
+//! A minimal JSON value type with a renderer and a strict parser.
+//!
+//! The offline registry has no `serde`, and the fleet reports
+//! ([`crate::launch`]) need machine-readable output that external tools
+//! (CI scripts, plotters) can parse — so this module hand-rolls the
+//! subset of JSON the reports use: objects with ordered keys, arrays,
+//! strings, booleans, null, and numbers split into [`Value::Int`]
+//! (exact, for counters like UTS node counts that must round-trip
+//! bit-identically) and [`Value::Float`] (wall times).
+//!
+//! Rendering is compact (no whitespace) except for [`Value::render_pretty`];
+//! parsing is strict: trailing garbage, unterminated literals, and
+//! non-JSON escapes are errors carrying a byte offset.
+
+use std::fmt::Write as _;
+
+/// A parsed or to-be-rendered JSON document.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integral number (rendered without a decimal point). Counters must
+    /// use this variant: `Float` cannot represent `u64` counts exactly.
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Object with insertion-ordered keys (reports render
+    /// deterministically; duplicates are a parse error).
+    Obj(Vec<(String, Value)>),
+}
+
+impl Value {
+    /// Object constructor from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Member lookup on an object (`None` for non-objects/missing keys).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(n) if *n >= 0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: ints widen to f64 (exact below 2^53).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(n) => Some(*n as f64),
+            Value::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Compact rendering (single line, no spaces) — one report per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    /// Two-space-indented rendering for files meant to be read by humans
+    /// (committed baselines, `--report` output).
+    pub fn render_pretty(&self) -> String {
+        let mut out = String::new();
+        self.render_pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Int(n) => {
+                let _ = write!(out, "{n}");
+            }
+            Value::Float(x) => render_float(*x, out),
+            Value::Str(s) => render_string(s, out),
+            Value::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn render_pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Value::Arr(xs) if !xs.is_empty() => {
+                out.push_str("[\n");
+                for (i, x) in xs.iter().enumerate() {
+                    indent(out, depth + 1);
+                    x.render_pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < xs.len() { ",\n" } else { "\n" });
+                }
+                indent(out, depth);
+                out.push(']');
+            }
+            Value::Obj(pairs) if !pairs.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    indent(out, depth + 1);
+                    render_string(k, out);
+                    out.push_str(": ");
+                    v.render_pretty_into(out, depth + 1);
+                    out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+                }
+                indent(out, depth);
+                out.push('}');
+            }
+            other => other.render_into(out),
+        }
+    }
+
+    /// Strict parse of a complete JSON document (trailing garbage is an
+    /// error). Errors name the byte offset.
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing bytes after JSON value at offset {pos}"));
+        }
+        Ok(v)
+    }
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn render_float(x: f64, out: &mut String) {
+    if x.is_finite() {
+        // `{}` prints the shortest representation that round-trips; force
+        // a decimal point so the parser reads the value back as Float.
+        let s = format!("{x}");
+        out.push_str(&s);
+        if !s.contains(['.', 'e', 'E']) {
+            out.push_str(".0");
+        }
+    } else {
+        // JSON has no NaN/Infinity.
+        out.push_str("null");
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected {lit:?} at offset {pos}", pos = *pos))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(&b'n') => expect(b, pos, "null").map(|_| Value::Null),
+        Some(&b't') => expect(b, pos, "true").map(|_| Value::Bool(true)),
+        Some(&b'f') => expect(b, pos, "false").map(|_| Value::Bool(false)),
+        Some(&b'"') => parse_string(b, pos).map(Value::Str),
+        Some(&b'[') => {
+            *pos += 1;
+            let mut xs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Value::Arr(xs));
+            }
+            loop {
+                xs.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Ok(Value::Arr(xs));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(&b'{') => {
+            *pos += 1;
+            let mut pairs: Vec<(String, Value)> = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Value::Obj(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                if pairs.iter().any(|(k, _)| *k == key) {
+                    return Err(format!("duplicate object key {key:?}"));
+                }
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at offset {pos}", pos = *pos));
+                }
+                *pos += 1;
+                let v = parse_value(b, pos)?;
+                pairs.push((key, v));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Ok(Value::Obj(pairs));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_number(b, pos),
+        Some(c) => Err(format!("unexpected byte {c:?} at offset {pos}", pos = *pos)),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected '\"' at offset {pos}", pos = *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(&b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(&b'\\') => {
+                *pos += 1;
+                let esc = *b.get(*pos).ok_or("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b.get(*pos..*pos + 4).ok_or("truncated \\u escape")?;
+                        let hex = std::str::from_utf8(hex).map_err(|_| "non-ascii \\u escape")?;
+                        let n = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                        *pos += 4;
+                        // Reports never emit surrogate pairs; reject them
+                        // rather than decode astral plane pairs.
+                        out.push(
+                            char::from_u32(n)
+                                .ok_or_else(|| format!("\\u{hex} is not a scalar value"))?,
+                        );
+                    }
+                    other => return Err(format!("bad escape \\{}", other as char)),
+                }
+            }
+            Some(_) => {
+                // Consume one UTF-8 character (input is a &str, so the
+                // byte stream is valid UTF-8 by construction).
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|e| e.to_string())?;
+                let c = s.chars().next().unwrap();
+                if (c as u32) < 0x20 {
+                    return Err(format!("raw control byte in string at offset {pos}", pos = *pos));
+                }
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Value, String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut float = false;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+    if float {
+        text.parse::<f64>().map(Value::Float).map_err(|e| format!("number {text:?}: {e}"))
+    } else {
+        // Integers beyond i64 fall back to f64 rather than failing — the
+        // reports never emit them, but a foreign file might.
+        match text.parse::<i64>() {
+            Ok(n) => Ok(Value::Int(n)),
+            Err(_) => {
+                text.parse::<f64>().map(Value::Float).map_err(|e| format!("number {text:?}: {e}"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip() {
+        for text in ["null", "true", "false", "0", "-17", "9007199254740993", "\"hi\""] {
+            let v = Value::parse(text).unwrap();
+            assert_eq!(v.render(), text, "compact render is canonical");
+            assert_eq!(Value::parse(&v.render()).unwrap(), v);
+        }
+        // Large integers stay exact (f64 would corrupt this).
+        assert_eq!(Value::parse("9007199254740993").unwrap().as_i64(), Some(9007199254740993));
+    }
+
+    #[test]
+    fn floats_keep_a_decimal_point() {
+        let v = Value::Float(2.0);
+        assert_eq!(v.render(), "2.0");
+        assert_eq!(Value::parse("2.0").unwrap(), Value::Float(2.0));
+        assert_eq!(Value::parse("1e3").unwrap(), Value::Float(1000.0));
+        assert_eq!(Value::Float(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn nested_structure_roundtrips() {
+        let v = Value::obj(vec![
+            ("name", Value::Str("uts-d6".into())),
+            ("ok", Value::Bool(true)),
+            ("times", Value::Arr(vec![Value::Float(0.5), Value::Float(1.25)])),
+            ("nested", Value::obj(vec![("n", Value::Int(42)), ("none", Value::Null)])),
+        ]);
+        let text = v.render();
+        let back = Value::parse(&text).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("nested").and_then(|n| n.get("n")).and_then(Value::as_u64), Some(42));
+        // Pretty output parses to the same value.
+        assert_eq!(Value::parse(&v.render_pretty()).unwrap(), v);
+    }
+
+    #[test]
+    fn strings_escape_and_unescape() {
+        let v = Value::Str("a\"b\\c\nd\te\u{1}".into());
+        let text = v.render();
+        assert_eq!(Value::parse(&text).unwrap(), v);
+        assert!(text.contains("\\u0001"), "{text}");
+        assert_eq!(Value::parse("\"\\u0041\"").unwrap(), Value::Str("A".into()));
+    }
+
+    #[test]
+    fn malformed_documents_are_rejected() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "tru", "\"unterminated", "1 2"] {
+            assert!(Value::parse(bad).is_err(), "{bad:?} should fail");
+        }
+        for bad in ["{\"a\":1,\"a\":2}", "{\"a\" 1}", "[1 2]", "\"\\q\""] {
+            assert!(Value::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn accessors_are_type_checked() {
+        let v = Value::parse("{\"s\":\"x\",\"n\":-3,\"f\":1.5,\"a\":[1]}").unwrap();
+        assert_eq!(v.get("s").and_then(Value::as_str), Some("x"));
+        assert_eq!(v.get("n").and_then(Value::as_i64), Some(-3));
+        assert_eq!(v.get("n").and_then(Value::as_u64), None, "negative is not u64");
+        assert_eq!(v.get("f").and_then(Value::as_f64), Some(1.5));
+        assert_eq!(v.get("a").and_then(Value::as_arr).map(<[Value]>::len), Some(1));
+        assert_eq!(v.get("missing"), None);
+        assert_eq!(Value::Null.get("s"), None);
+    }
+
+    #[test]
+    fn property_random_values_roundtrip() {
+        // Seeded structural fuzz: any value the generator builds must
+        // survive render → parse unchanged.
+        crate::testkit::check_cases("json-roundtrip", 60, |g| {
+            fn gen_value(g: &mut crate::testkit::Gen, depth: usize) -> Value {
+                // Scalars only at the depth limit.
+                let pick = if depth == 0 { g.usize(0..5) } else { g.usize(0..7) };
+                match pick {
+                    0 => Value::Null,
+                    1 => Value::Bool(g.bool(0.5)),
+                    2 => Value::Int(g.u64(0..u64::MAX / 4) as i64 - (1i64 << 40)),
+                    3 => Value::Float((g.f64() - 0.5) * 1e6),
+                    4 => {
+                        let len = g.usize(0..8);
+                        let alphabet = ['a', '"', '\\', 'é', '\n'];
+                        Value::Str((0..len).map(|_| *g.choose(&alphabet)).collect())
+                    }
+                    5 => {
+                        let len = g.usize(0..4);
+                        Value::Arr(g.vec(len, |g| gen_value(g, depth - 1)))
+                    }
+                    _ => {
+                        let n = g.usize(0..4);
+                        Value::Obj(
+                            (0..n).map(|i| (format!("k{i}"), gen_value(g, depth - 1))).collect(),
+                        )
+                    }
+                }
+            }
+            let v = gen_value(g, 3);
+            assert_eq!(Value::parse(&v.render()).unwrap(), v);
+            assert_eq!(Value::parse(&v.render_pretty()).unwrap(), v);
+        });
+    }
+}

@@ -4,6 +4,7 @@
 //! `criterion`, so the RNG, statistics helpers and time formatting live
 //! here.
 
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod timefmt;
