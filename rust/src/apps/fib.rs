@@ -103,6 +103,33 @@ mod tests {
         }
     }
 
+    /// The fib bag crosses process boundaries on the tcp transport; its
+    /// wire form must round-trip exactly and reject truncation cleanly
+    /// (a crash-recovered retention ledger replays these bytes verbatim).
+    #[test]
+    fn fib_bag_round_trips_on_the_wire() {
+        use crate::glb::wire::{Reader, WireCodec};
+        let mut q = FibQueue::new();
+        q.init(17);
+        q.process(9);
+        let bag = q.split().expect("a processed fib queue has tasks to split");
+        let want = bag.items().to_vec();
+        assert!(!want.is_empty());
+        let mut buf = Vec::new();
+        bag.encode(&mut buf);
+        let got = ArrayListTaskBag::<u64>::decode(&mut Reader::new(&buf)).unwrap();
+        assert_eq!(got.items(), &want[..], "encode→decode must be identity");
+        // Every truncation of a valid encoding is a clean decode error,
+        // never a panic or a silently short bag.
+        for cut in 0..buf.len() {
+            assert!(
+                ArrayListTaskBag::<u64>::decode(&mut Reader::new(&buf[..cut])).is_err(),
+                "truncation at {cut}/{} must fail to decode",
+                buf.len()
+            );
+        }
+    }
+
     #[test]
     fn glb_fib_matches_sim() {
         let cfg = GlbConfig::new(16, GlbParams::default().with_n(16).with_l(2));

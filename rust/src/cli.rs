@@ -130,6 +130,9 @@ pub struct TcpOpts {
     /// This rank's advertised mesh IP (spokes on multi-homed hosts).
     /// `None` advertises the interface this host reaches rank 0 from.
     pub advertise: Option<String>,
+    /// How many spoke crashes the fleet absorbs before giving up
+    /// (0 = any rank death is fatal, the pre-fault-tolerance behaviour).
+    pub tolerate_failures: usize,
 }
 
 /// Resolve `--transport tcp|thread|sim`; the legacy `--sim` / `--threads`
@@ -175,6 +178,7 @@ pub fn tcp_opts_from(args: &Args) -> Result<TcpOpts> {
         host: explicit_host.unwrap_or("127.0.0.1").to_string(),
         bind,
         advertise: args.get("advertise").map(String::from),
+        tolerate_failures: args.parse_opt("tolerate-failures", 0usize)?,
     })
 }
 
@@ -208,7 +212,7 @@ USAGE: glb <command> [options]
 COMMANDS
   uts        Unbalanced Tree Search        --places --depth --b0 --seed-tree
   bc         Betweenness Centrality        --places --scale --engine sparse|dense
-  fib        Fibonacci (appendix demo)     --fib-n --places
+  fib        Fibonacci (appendix demo)     --fib-n --places [--transport tcp]
   nqueens    N-Queens                      --board --places
   fig        regenerate a paper figure     --id 2..10 [--csv] [--places a,b,c]
   launch     spawn + watchdog a whole tcp fleet (one process per rank):
@@ -228,7 +232,7 @@ COMMANDS
 COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)
   --transport KIND       tcp|thread|sim — tcp runs this process as one GLB
-                         node of a multi-process mesh fleet (uts and bc);
+                         node of a multi-process mesh fleet (uts, bc, fib);
                          launch one process per node:
                            glb uts --transport tcp --peers 4 --rank 0 ...
                            glb uts --transport tcp --peers 4 --rank 1 ...
@@ -239,6 +243,12 @@ COMMON OPTIONS
                          bindable (default 0.0.0.0 whenever --host is set)
   --advertise IP         this rank's mesh IP for peers to dial (multi-homed
                          spokes; default: the interface that reaches rank 0)
+  --tolerate-failures K  survive up to K spoke crashes (tcp, one worker per
+                         node): survivors re-knit the lifeline graph, re-run
+                         retained un-acked loot, and rank 0 reclaims the dead
+                         rank's credit — results stay exact. Rank 0 itself is
+                         never expendable. `glb launch` forwards this to every
+                         rank and keeps the fleet alive through K deaths.
   --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
   --n --w --l --z        GLB tuning parameters (paper §2.4)
   --workers-per-node K   hierarchical topology: K workers share a node bag
@@ -335,6 +345,13 @@ mod tests {
         assert_eq!((t.rank, t.peers, t.port), (2, 4, 7117));
         assert_eq!(t.host, "127.0.0.1");
         assert_eq!(t.bind, None, "default host binds itself");
+        assert_eq!(t.tolerate_failures, 0, "fail-fast unless asked otherwise");
+        let ft = Args::parse(
+            &s(&["--rank", "2", "--peers", "4", "--tolerate-failures", "1"]),
+            &[],
+        )
+        .unwrap();
+        assert_eq!(tcp_opts_from(&ft).unwrap().tolerate_failures, 1);
         let full =
             Args::parse(&s(&["--rank", "0", "--peers", "2", "--port", "9000", "--host", "h"]), &[])
                 .unwrap();

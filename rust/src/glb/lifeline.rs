@@ -95,22 +95,55 @@ impl LifelineGraph {
             .filter(|&q| LifelineGraph::new(q, p, l, z).outgoing.contains(&place))
             .collect()
     }
+
+    /// Re-knit the cube over a *sparse* member set (crash recovery:
+    /// `members` are the sorted surviving place ids, `place` included).
+    /// Members are densely renumbered, the cube is built over the dense
+    /// space, and the edges mapped back — so the survivors again form a
+    /// connected low-diameter lifeline graph with no edge at a dead
+    /// place, the same guarantee [`LifelineGraph::new`] gives a
+    /// freshly-bootstrapped fleet of `members.len()` places.
+    pub fn over_members(place: usize, members: &[usize], l: usize, z: usize) -> Self {
+        let dense = members
+            .iter()
+            .position(|&m| m == place)
+            .expect("re-knitting place must be a surviving member");
+        let g = LifelineGraph::new(dense, members.len(), l, z);
+        Self { place, p: members.len(), outgoing: g.outgoing.iter().map(|&b| members[b]).collect() }
+    }
 }
 
 /// Uniform random victim selection excluding self (paper §2.4 item 2,
 /// first round: "chooses at most w random victims").
 #[derive(Debug, Clone)]
 pub struct VictimSelector {
+    /// This place's index in the victim domain (identity for the dense
+    /// bootstrap domain; its position in `members` for a sparse one).
     place: usize,
     p: usize,
     rng: SplitMix64,
+    /// Sparse victim domain (crash recovery); `None` = dense `0..p`.
+    members: Option<Vec<usize>>,
 }
 
 impl VictimSelector {
     pub fn new(place: usize, p: usize, seed: u64) -> Self {
         // Per-place independent stream.
         let rng = SplitMix64::new(crate::util::rng::mix64(seed ^ (place as u64).wrapping_mul(0x9E37_79B9)));
-        Self { place, p, rng }
+        Self { place, p, rng, members: None }
+    }
+
+    /// A selector over a *sparse* member set (crash recovery: `members`
+    /// are the surviving place ids, `place` included). Picks stay uniform
+    /// over the other survivors; the stream is seeded per real place id,
+    /// so survivors keep independent streams across re-knits.
+    pub fn over_members(place: usize, members: &[usize], seed: u64) -> Self {
+        let dense = members
+            .iter()
+            .position(|&m| m == place)
+            .expect("victim-selecting place must be a surviving member");
+        let rng = SplitMix64::new(crate::util::rng::mix64(seed ^ (place as u64).wrapping_mul(0x9E37_79B9)));
+        Self { place: dense, p: members.len(), rng, members: Some(members.to_vec()) }
     }
 
     /// Pick a victim uniformly among the other `p - 1` places; `None` when
@@ -121,7 +154,11 @@ impl VictimSelector {
             return None;
         }
         let v = self.rng.next_below(self.p as u64 - 1) as usize;
-        Some(if v >= self.place { v + 1 } else { v })
+        let idx = if v >= self.place { v + 1 } else { v };
+        Some(match &self.members {
+            Some(m) => m[idx],
+            None => idx,
+        })
     }
 }
 
@@ -208,6 +245,62 @@ mod tests {
                 assert!(inc.contains(&place), "{place} -> {b} must be in incoming({b})");
             }
         }
+    }
+
+    #[test]
+    fn over_members_reknits_a_connected_graph_avoiding_the_dead() {
+        // 4-place fleet loses place 2: the survivors' re-knit graph must
+        // be connected, self-free, and never point at the dead place.
+        let members = [0usize, 1, 3];
+        let graphs: Vec<_> =
+            members.iter().map(|&m| LifelineGraph::over_members(m, &members, 2, 2)).collect();
+        for (g, &m) in graphs.iter().zip(&members) {
+            assert!(!g.outgoing.is_empty(), "survivor {m} must keep a lifeline");
+            assert!(!g.outgoing.contains(&m), "no self-lifelines");
+            assert!(!g.outgoing.contains(&2), "no lifeline at the dead place");
+            assert!(g.outgoing.iter().all(|b| members.contains(b)));
+        }
+        // Reachability over the mapped-back edges.
+        let mut seen = HashSet::from([0usize]);
+        let mut q = VecDeque::from([0usize]);
+        while let Some(v) = q.pop_front() {
+            let g = graphs[members.iter().position(|&m| m == v).unwrap()].clone();
+            for n in g.outgoing {
+                if seen.insert(n) {
+                    q.push_back(n);
+                }
+            }
+        }
+        assert_eq!(seen.len(), members.len(), "survivors stay connected");
+    }
+
+    #[test]
+    fn over_members_full_set_matches_dense_graph() {
+        let members: Vec<usize> = (0..8).collect();
+        for place in 0..8 {
+            let dense = LifelineGraph::new(place, 8, 2, 3);
+            let sparse = LifelineGraph::over_members(place, &members, 2, 3);
+            assert_eq!(dense.outgoing, sparse.outgoing, "place {place}");
+        }
+    }
+
+    #[test]
+    fn sparse_victim_selector_covers_survivors_only() {
+        let members = [0usize, 1, 3, 4, 7];
+        let mut sel = VictimSelector::over_members(3, &members, 99);
+        let mut seen = HashSet::new();
+        for _ in 0..2000 {
+            let v = sel.pick().unwrap();
+            assert_ne!(v, 3, "never self");
+            assert!(members.contains(&v), "victim {v} must be a survivor");
+            seen.insert(v);
+        }
+        assert_eq!(seen.len(), members.len() - 1, "all other survivors picked");
+    }
+
+    #[test]
+    fn sparse_victim_selector_lone_survivor_picks_none() {
+        assert!(VictimSelector::over_members(5, &[5], 1).pick().is_none());
     }
 
     #[test]

@@ -378,6 +378,16 @@ impl CreditRoot {
         want
     }
 
+    /// Reclaim the atoms that died with a crashed rank — its pool plus
+    /// the credit of loot delivered to it but never re-exported, as
+    /// solved from the survivors' [`crate::glb::wire::Ctrl::Reconcile`]
+    /// books (`granted − deposited + Σsent − Σreceived`). Accounting-wise
+    /// this is a deposit made on the dead rank's behalf: it may complete
+    /// the recovery and fire the quiescence hook.
+    pub fn reclaim(&self, atoms: u64) {
+        self.deposit(atoms);
+    }
+
     /// `(total, recovered)` — for assertions and the conservation tests.
     pub fn totals(&self) -> (u64, u64) {
         let s = self.state.lock().unwrap();
@@ -529,6 +539,28 @@ mod tests {
         let got = root.mint(5);
         root.deposit(got);
         assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn reclaim_recovers_a_dead_ranks_atoms() {
+        // Rank death: the rank received its grant, deposited part of its
+        // pool, exported some credit to a survivor, then crashed holding
+        // the rest. The root reclaims exactly the dead balance and the
+        // survivor's deposit completes detection.
+        let root = CreditRoot::new();
+        root.grant(100); // dead rank's grant
+        let survivor = rank(&root, 50);
+        root.arm();
+        root.deposit(30); // dead rank deposited 30 while alive
+        survivor.import_credit(20); // loot (20 atoms) from the dead rank landed
+        // dead = granted(100) − deposited(30) − sent_to_survivor(20) = 50.
+        root.reclaim(50);
+        assert!(!root.quiescent(), "survivor still holds atoms");
+        assert!(!survivor.decr(), "survivor idles, deposits 50 + 20");
+        assert!(root.quiescent(), "books balance after the reclaim");
+        let (total, recovered) = root.totals();
+        assert_eq!(total, recovered);
+        assert_eq!(total, 150);
     }
 
     #[test]

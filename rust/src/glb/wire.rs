@@ -330,6 +330,10 @@ const CTRL_DEPOSIT: u8 = 4;
 const CTRL_REPLENISH: u8 = 5;
 const CTRL_GRANT: u8 = 6;
 const CTRL_RESULT: u8 = 7;
+const CTRL_JOIN: u8 = 8;
+const CTRL_LEAVE: u8 = 9;
+const CTRL_ACK: u8 = 10;
+const CTRL_RECONCILE: u8 = 11;
 
 /// Fleet control-plane messages, exchanged as length-prefixed frames on
 /// each rank's control link to rank 0. Rank 0 is bootstrap + credit root
@@ -341,8 +345,11 @@ const CTRL_RESULT: u8 = 7;
 pub enum Ctrl {
     /// rank → root: my rank and the `ip:port` my mesh listener accepts on.
     Register { rank: u64, addr: String },
-    /// root → rank: every rank's mesh address, indexed by rank.
-    PeerMap { addrs: Vec<String> },
+    /// root → rank: every rank's mesh address, indexed by rank. `epoch`
+    /// counts membership changes: `0` is the bootstrap view, and every
+    /// crash-recovery reconfiguration re-publishes the map with the
+    /// epoch bumped (dead ranks keep their slot as an empty string).
+    PeerMap { epoch: u64, addrs: Vec<String> },
     /// rank → root: mesh wired, workers constructed, initial tokens held.
     Ready { rank: u64 },
     /// root → rank: the whole fleet is ready; start the steal protocol.
@@ -356,6 +363,27 @@ pub enum Ctrl {
     /// rank → root: the rank's encoded local result, for the fleet-wide
     /// reduction at rank 0.
     Result { bytes: Vec<u8> },
+    /// rank → root: a (re)joining rank announces its mesh address under
+    /// the membership epoch it last saw. Carried by the dynamic
+    /// membership provider; the socket runtime does not accept joins
+    /// mid-run yet.
+    Join { epoch: u64, rank: u64, addr: String },
+    /// root → survivors: `rank` crashed; the view advances to `epoch`.
+    /// Survivors re-knit their lifelines over the shrunken member set
+    /// and reconcile their in-flight loot ledgers for the dead rank.
+    Leave { epoch: u64, rank: u64 },
+    /// rank → root (then root → victims): an idle-point checkpoint.
+    /// `result` is the rank's encoded partial result (empty when the
+    /// root forwards), and `acked` lists cumulative per-victim counts of
+    /// loot bags this rank has merged — the victims prune their
+    /// in-flight retention ledgers up to those counts.
+    Ack { rank: u64, result: Vec<u8>, acked: Vec<(u64, u64)> },
+    /// survivor → root after a [`Ctrl::Leave`]: `sent`/`received` are
+    /// the total credit atoms this rank attached to loot for the dead
+    /// rank (net of re-imported unacknowledged entries) and received
+    /// from it. The root solves for the atoms that died with the rank
+    /// and reclaims them, keeping `recovered == total` reachable.
+    Reconcile { rank: u64, sent: u64, received: u64 },
 }
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -378,8 +406,9 @@ impl Ctrl {
                 put_u64(out, *rank);
                 put_str(out, addr);
             }
-            Ctrl::PeerMap { addrs } => {
+            Ctrl::PeerMap { epoch, addrs } => {
                 put_u8(out, CTRL_PEER_MAP);
+                put_u64(out, *epoch);
                 put_u32(out, addrs.len() as u32);
                 for a in addrs {
                     put_str(out, a);
@@ -407,6 +436,34 @@ impl Ctrl {
                 put_u32(out, bytes.len() as u32);
                 out.extend_from_slice(bytes);
             }
+            Ctrl::Join { epoch, rank, addr } => {
+                put_u8(out, CTRL_JOIN);
+                put_u64(out, *epoch);
+                put_u64(out, *rank);
+                put_str(out, addr);
+            }
+            Ctrl::Leave { epoch, rank } => {
+                put_u8(out, CTRL_LEAVE);
+                put_u64(out, *epoch);
+                put_u64(out, *rank);
+            }
+            Ctrl::Ack { rank, result, acked } => {
+                put_u8(out, CTRL_ACK);
+                put_u64(out, *rank);
+                put_u32(out, result.len() as u32);
+                out.extend_from_slice(result);
+                put_u32(out, acked.len() as u32);
+                for (victim, merged) in acked {
+                    put_u64(out, *victim);
+                    put_u64(out, *merged);
+                }
+            }
+            Ctrl::Reconcile { rank, sent, received } => {
+                put_u8(out, CTRL_RECONCILE);
+                put_u64(out, *rank);
+                put_u64(out, *sent);
+                put_u64(out, *received);
+            }
         }
     }
 
@@ -424,12 +481,13 @@ impl Ctrl {
         let msg = match r.u8()? {
             CTRL_REGISTER => Ctrl::Register { rank: r.u64()?, addr: get_str(&mut r)? },
             CTRL_PEER_MAP => {
+                let epoch = r.u64()?;
                 let count = r.u32()? as usize;
                 let mut addrs = Vec::new();
                 for _ in 0..count {
                     addrs.push(get_str(&mut r)?);
                 }
-                Ctrl::PeerMap { addrs }
+                Ctrl::PeerMap { epoch, addrs }
             }
             CTRL_READY => Ctrl::Ready { rank: r.u64()? },
             CTRL_GO => Ctrl::Go,
@@ -439,6 +497,24 @@ impl Ctrl {
             CTRL_RESULT => {
                 let len = r.u32()? as usize;
                 Ctrl::Result { bytes: r.bytes(len)?.to_vec() }
+            }
+            CTRL_JOIN => {
+                Ctrl::Join { epoch: r.u64()?, rank: r.u64()?, addr: get_str(&mut r)? }
+            }
+            CTRL_LEAVE => Ctrl::Leave { epoch: r.u64()?, rank: r.u64()? },
+            CTRL_ACK => {
+                let rank = r.u64()?;
+                let len = r.u32()? as usize;
+                let result = r.bytes(len)?.to_vec();
+                let count = r.u32()? as usize;
+                let mut acked = Vec::new();
+                for _ in 0..count {
+                    acked.push((r.u64()?, r.u64()?));
+                }
+                Ctrl::Ack { rank, result, acked }
+            }
+            CTRL_RECONCILE => {
+                Ctrl::Reconcile { rank: r.u64()?, sent: r.u64()?, received: r.u64()? }
             }
             t => return Err(WireError::BadTag(t)),
         };
@@ -675,8 +751,10 @@ mod tests {
         let msgs = [
             Ctrl::Register { rank: 3, addr: "10.0.0.7:4471".into() },
             Ctrl::PeerMap {
+                epoch: 0,
                 addrs: vec!["127.0.0.1:7117".into(), "127.0.0.1:9000".into(), String::new()],
             },
+            Ctrl::PeerMap { epoch: 3, addrs: vec!["127.0.0.1:7117".into(), String::new()] },
             Ctrl::Ready { rank: 2 },
             Ctrl::Go,
             Ctrl::Deposit { atoms: u64::MAX },
@@ -684,6 +762,11 @@ mod tests {
             Ctrl::Grant { atoms: 1 << 20 },
             Ctrl::Result { bytes: vec![1, 2, 3, 0xFF] },
             Ctrl::Result { bytes: Vec::new() },
+            Ctrl::Join { epoch: 2, rank: 5, addr: "10.1.2.3:999".into() },
+            Ctrl::Leave { epoch: 7, rank: 2 },
+            Ctrl::Ack { rank: 1, result: vec![0xAB, 0xCD], acked: vec![(0, 3), (2, 17)] },
+            Ctrl::Ack { rank: 3, result: Vec::new(), acked: Vec::new() },
+            Ctrl::Reconcile { rank: 2, sent: u64::MAX, received: 41314 },
         ];
         for msg in msgs {
             let body = msg.to_body();
@@ -695,12 +778,16 @@ mod tests {
     fn ctrl_frames_truncation_safe() {
         let msgs = [
             Ctrl::Register { rank: 1, addr: "192.168.0.1:81".into() },
-            Ctrl::PeerMap { addrs: vec!["a:1".into(), "b:2".into()] },
+            Ctrl::PeerMap { epoch: 1, addrs: vec!["a:1".into(), "b:2".into()] },
             Ctrl::Ready { rank: 9 },
             Ctrl::Deposit { atoms: 77 },
             Ctrl::Replenish { want: 5 },
             Ctrl::Grant { atoms: 5 },
             Ctrl::Result { bytes: vec![9; 32] },
+            Ctrl::Join { epoch: 4, rank: 6, addr: "c:3".into() },
+            Ctrl::Leave { epoch: 5, rank: 1 },
+            Ctrl::Ack { rank: 2, result: vec![7; 9], acked: vec![(1, 2), (3, 4)] },
+            Ctrl::Reconcile { rank: 1, sent: 10, received: 20 },
         ];
         for msg in msgs {
             let body = msg.to_body();

@@ -253,6 +253,42 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         }
     }
 
+    /// Re-knit this worker's view of the fleet after a membership change
+    /// (crash recovery): `members` are the sorted surviving *node* ids,
+    /// this worker's node included. Outgoing lifelines are rebuilt over
+    /// the survivors ([`LifelineGraph::over_members`]), random victims
+    /// are drawn from survivors only, and recorded lifeline thieves at
+    /// dead nodes are forgotten (their loot would go nowhere).
+    ///
+    /// Only call between protocol episodes — `Working` or `Idle`, never
+    /// with a steal outstanding: `WaitLifeline` indexes into the old
+    /// `outgoing` and the in-flight response still references the old
+    /// victim. The socket runtime defers re-knits accordingly. An idle
+    /// caller must follow up with [`Worker::kick_if_empty`]-style
+    /// lifeline re-registration by its own means (the runtime re-pumps).
+    pub fn rewire(&mut self, members: &[usize]) {
+        debug_assert!(
+            matches!(self.phase, Phase::Working | Phase::Idle | Phase::Done),
+            "rewire mid-steal (phase {:?})",
+            self.phase
+        );
+        debug_assert!(self.outstanding.is_none(), "rewire with a steal in flight");
+        debug_assert!(members.contains(&self.node), "rewiring node must survive");
+        let z = self.params.resolve_z(members.len());
+        self.outgoing = if self.is_rep && members.len() > 1 {
+            LifelineGraph::over_members(self.node, members, self.params.l, z)
+                .outgoing
+                .iter()
+                .map(|&buddy| self.topo.representative(buddy))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.victims = VictimSelector::over_members(self.node, members, self.params.seed);
+        let topo = self.topo;
+        self.recorded_thieves.retain(|&t| members.contains(&topo.node_of(t)));
+    }
+
     /// One processing chunk (paper §2.4 item 1: "repeatedly calls
     /// process(n) ... between each process(n) call, Worker probes the
     /// network"). The runtime is responsible for draining the mailbox
@@ -949,6 +985,114 @@ mod tests {
             &mut fx,
         );
         assert_eq!(w.phase(), Phase::Working);
+    }
+
+    #[test]
+    fn rewire_drops_dead_lifelines_victims_and_thieves() {
+        let ledger = SimLedger::new();
+        ledger.incr(); // external work exists
+        let mut w = Worker::new(0, 4, params(), CountQueue::with(0), ledger.clone());
+        let mut fx = Vec::new();
+        // A lifeline thief at the (about to die) place 2 gets recorded.
+        w.on_msg(Msg::Steal { thief: 2, lifeline: true, nonce: 7 }, &mut fx);
+        assert_eq!(w.lifelines(), &[1, 2], "bootstrap binary 2-cube from place 0");
+        // Place 2 dies; survivors are {0, 1, 3}.
+        w.rewire(&[0, 1, 3]);
+        assert_eq!(w.lifelines(), &[1, 3], "re-knit cube spans survivors only");
+        // Random victims only ever land on survivors.
+        let mut sel_hits = std::collections::HashSet::new();
+        for _ in 0..200 {
+            // Starve-with-work cycle: hand the worker loot, drain it, and
+            // watch where the random steal goes.
+            fx.clear();
+            ledger.incr();
+            w.on_msg(
+                Msg::Loot {
+                    victim: 1,
+                    bag: Some(ArrayListTaskBag::from_vec(vec![1])),
+                    lifeline: false,
+                    nonce: None,
+                    credit: 0,
+                },
+                &mut fx,
+            );
+            fx.clear();
+            w.step(&mut fx);
+            let victim = match w.phase() {
+                Phase::WaitRandom { victim, .. } => victim,
+                ph => panic!("expected WaitRandom, got {ph:?}"),
+            };
+            assert_ne!(victim, 2, "dead place picked as random victim");
+            sel_hits.insert(victim);
+            // Refuse so the worker returns to a known state; then revive
+            // it via the nonce-matched refusal path with a non-empty bag.
+            let nonce = match &fx[0] {
+                Effect::Send { msg: Msg::Steal { nonce, .. }, .. } => *nonce,
+                e => panic!("{e:?}"),
+            };
+            fx.clear();
+            ledger.incr();
+            w.on_msg(
+                Msg::Loot {
+                    victim,
+                    bag: Some(ArrayListTaskBag::from_vec(vec![9])),
+                    lifeline: false,
+                    nonce: Some(nonce),
+                    credit: 0,
+                },
+                &mut fx,
+            );
+            assert_eq!(w.phase(), Phase::Working);
+            fx.clear();
+            w.step(&mut fx); // drain the single item; ends in WaitRandom again
+            // Leave the worker back in Working for the next round.
+            let (victim, nonce) = match (w.phase(), &fx[0]) {
+                (
+                    Phase::WaitRandom { victim, .. },
+                    Effect::Send { msg: Msg::Steal { nonce, .. }, .. },
+                ) => (victim, *nonce),
+                (ph, e) => panic!("{ph:?} {e:?}"),
+            };
+            assert_ne!(victim, 2);
+            sel_hits.insert(victim);
+            fx.clear();
+            ledger.incr();
+            w.on_msg(
+                Msg::Loot {
+                    victim,
+                    bag: Some(ArrayListTaskBag::from_vec(vec![3])),
+                    lifeline: false,
+                    nonce: Some(nonce),
+                    credit: 0,
+                },
+                &mut fx,
+            );
+        }
+        assert_eq!(
+            sel_hits,
+            std::collections::HashSet::from([1, 3]),
+            "victims drawn from both survivors and only survivors"
+        );
+        // The recorded thief at the dead place was forgotten: surplus is
+        // never pushed to place 2.
+        fx.clear();
+        ledger.incr();
+        w.on_msg(
+            Msg::Loot {
+                victim: 1,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1, 2, 3, 4, 5, 6])),
+                lifeline: false,
+                nonce: None,
+                credit: 0,
+            },
+            &mut fx,
+        );
+        fx.clear();
+        w.step(&mut fx);
+        assert!(
+            !fx.iter().any(|e| matches!(e, Effect::Send { to: 2, .. })),
+            "dead recorded thief must not be fed: {fx:?}"
+        );
     }
 
     #[test]

@@ -47,6 +47,9 @@ pub struct RankRun {
     pub rank: usize,
     pub stdout: Vec<String>,
     pub stderr: Vec<String>,
+    /// The rank exited nonzero but its death was within the fleet's
+    /// `--tolerate-failures` budget (so the run as a whole succeeded).
+    pub died: bool,
 }
 
 /// Engine knobs.
@@ -57,6 +60,12 @@ pub struct EngineOpts {
     /// marker lines (rank reports, testkit result lines) are captured
     /// but not echoed.
     pub echo: bool,
+    /// How many spoke deaths (nonzero exits of ranks other than 0) the
+    /// launcher absorbs without killing the fleet — the process-level
+    /// counterpart of the runtime's `--tolerate-failures`, which lets
+    /// the surviving ranks re-knit and finish. `0` keeps the historical
+    /// fail-fast semantics for every nonzero exit.
+    pub tolerate_failures: usize,
 }
 
 /// Result/report marker lines are machine-to-machine traffic; the echo
@@ -181,6 +190,8 @@ pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> 
     let give_up = Instant::now() + opts.deadline;
     let n = procs.len();
     let mut reaped = vec![false; n];
+    let mut died = vec![false; n];
+    let mut deaths = 0usize;
     loop {
         let mut all_done = true;
         for i in 0..n {
@@ -192,6 +203,22 @@ pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> 
                 Ok(Some(status)) => {
                     reaped[i] = true;
                     if !status.success() {
+                        // A spoke death within the tolerance budget is
+                        // absorbed: the surviving ranks re-knit and the
+                        // fleet runs on. Rank 0 (bootstrap + credit
+                        // root) dying is always fatal.
+                        if procs[i].rank != 0 && deaths < opts.tolerate_failures {
+                            deaths += 1;
+                            died[i] = true;
+                            if opts.echo {
+                                eprintln!(
+                                    "[launcher] rank {} exited with {status}; \
+                                     within --tolerate-failures, fleet continues",
+                                    procs[i].rank
+                                );
+                            }
+                            continue;
+                        }
                         // Fail fast: don't let the survivors burn the
                         // rest of the deadline on a lost run.
                         let survivors = reaped.iter().filter(|r| !**r).count();
@@ -238,7 +265,8 @@ pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> 
 
     let mut runs: Vec<RankRun> = procs
         .into_iter()
-        .map(|mut p| {
+        .zip(died)
+        .map(|(mut p, died)| {
             for h in p.readers.drain(..) {
                 let _ = h.join();
             }
@@ -246,6 +274,7 @@ pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> 
                 rank: p.rank,
                 stdout: std::mem::take(&mut *p.stdout.lock().unwrap()),
                 stderr: std::mem::take(&mut *p.stderr.lock().unwrap()),
+                died,
             }
         })
         .collect();
@@ -253,15 +282,18 @@ pub fn run_fleet(cmds: Vec<RankCmd>, opts: &EngineOpts) -> Result<Vec<RankRun>> 
     Ok(runs)
 }
 
-/// Every rank's report line, parsed — ranks that emitted none are an
-/// error (the app must be a tcp-fleet-capable command).
+/// Every surviving rank's report line, parsed — survivors that emitted
+/// none are an error (the app must be a tcp-fleet-capable command);
+/// tolerated-dead ranks are skipped (their deaths are in the report's
+/// `dead_ranks`, their work in the survivors' recovered totals).
 fn collect_rank_reports(runs: &[RankRun]) -> Result<Vec<Value>> {
     runs.iter()
+        .filter(|r| !r.died)
         .map(|r| {
             let line = report::find_rank_report(&r.stdout).ok_or_else(|| {
                 anyhow!(
                     "rank {} exited cleanly but emitted no rank report \
-                     (the launched app must support --transport tcp: uts|bc)",
+                     (the launched app must support --transport tcp: uts|bc|fib)",
                     r.rank
                 )
             })?;
@@ -284,10 +316,21 @@ pub fn cmd_launch(rest: &[String]) -> Result<()> {
         println!("  rank {rank}: {line}");
     }
     let t0 = Instant::now();
-    let runs = run_fleet(plan.cmds, &EngineOpts { deadline: spec.deadline, echo: true })?;
+    let runs = run_fleet(
+        plan.cmds,
+        &EngineOpts {
+            deadline: spec.deadline,
+            echo: true,
+            tolerate_failures: spec.tolerate_failures,
+        },
+    )?;
     let wall_time_s = t0.elapsed().as_secs_f64();
+    let dead: Vec<usize> = runs.iter().filter(|r| r.died).map(|r| r.rank).collect();
+    if !dead.is_empty() {
+        println!("fleet absorbed {} rank death(s): {dead:?}", dead.len());
+    }
     let reports = collect_rank_reports(&runs)?;
-    let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall_time_s)?;
+    let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall_time_s, &dead)?;
     if let Some(path) = &spec.report {
         std::fs::write(path, fleet.render_pretty())
             .with_context(|| format!("write fleet report {}", path.display()))?;
@@ -347,11 +390,14 @@ pub fn cmd_bench(rest: &[String]) -> Result<()> {
             let spec = spec::FleetSpec::parse(&raw)?;
             let plan = spec.plan()?;
             let t0 = Instant::now();
-            let runs = run_fleet(plan.cmds, &EngineOpts { deadline: spec.deadline, echo: false })
-                .with_context(|| format!("bench {name} run {i}"))?;
+            let runs = run_fleet(
+                plan.cmds,
+                &EngineOpts { deadline: spec.deadline, echo: false, tolerate_failures: 0 },
+            )
+            .with_context(|| format!("bench {name} run {i}"))?;
             let wall = t0.elapsed().as_secs_f64();
             let reports = collect_rank_reports(&runs)?;
-            let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall)?;
+            let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall, &[])?;
             if i < warmup {
                 println!("  warmup {}: {wall:.3}s", i + 1);
             } else {
@@ -396,7 +442,7 @@ mod tests {
     fn engine_collects_output_per_rank() {
         let runs = run_fleet(
             vec![sh(0, "echo out-zero; echo err-zero >&2"), sh(1, "echo out-one")],
-            &EngineOpts { deadline: Duration::from_secs(30), echo: false },
+            &EngineOpts { deadline: Duration::from_secs(30), echo: false, tolerate_failures: 0 },
         )
         .expect("both ranks exit zero");
         assert_eq!(runs.len(), 2);
@@ -414,7 +460,7 @@ mod tests {
         let t0 = Instant::now();
         let err = run_fleet(
             vec![sh(0, "sleep 30"), sh(1, "echo doomed >&2; exit 7")],
-            &EngineOpts { deadline: Duration::from_secs(60), echo: false },
+            &EngineOpts { deadline: Duration::from_secs(60), echo: false, tolerate_failures: 0 },
         )
         .expect_err("a nonzero rank must fail the fleet");
         let msg = format!("{err:#}");
@@ -433,7 +479,7 @@ mod tests {
         let t0 = Instant::now();
         let err = run_fleet(
             vec![sh(0, "sleep 30")],
-            &EngineOpts { deadline: Duration::from_millis(300), echo: false },
+            &EngineOpts { deadline: Duration::from_millis(300), echo: false, tolerate_failures: 0 },
         )
         .expect_err("a wedged fleet must time out");
         assert!(format!("{err:#}").contains("timed out"), "{err:#}");
@@ -442,8 +488,43 @@ mod tests {
 
     #[test]
     fn empty_fleet_is_rejected() {
-        let err = run_fleet(vec![], &EngineOpts { deadline: Duration::from_secs(1), echo: false })
-            .expect_err("no ranks");
+        let err = run_fleet(
+            vec![],
+            &EngineOpts { deadline: Duration::from_secs(1), echo: false, tolerate_failures: 0 },
+        )
+        .expect_err("no ranks");
         assert!(format!("{err:#}").contains("at least one rank"));
+    }
+
+    #[test]
+    fn engine_tolerates_spoke_deaths_within_the_budget() {
+        // Rank 1 dies; with a budget of 1 the fleet completes, the dead
+        // rank is flagged, and rank 0's output is intact.
+        let runs = run_fleet(
+            vec![sh(0, "sleep 0.2; echo done"), sh(1, "exit 9")],
+            &EngineOpts { deadline: Duration::from_secs(30), echo: false, tolerate_failures: 1 },
+        )
+        .expect("one death is within the budget");
+        assert!(runs[1].died, "the dead rank is flagged");
+        assert!(!runs[0].died);
+        assert_eq!(runs[0].stdout, vec!["done".to_string()]);
+
+        // A second death exceeds the budget: fail fast as before.
+        let t0 = Instant::now();
+        let err = run_fleet(
+            vec![sh(0, "sleep 30"), sh(1, "exit 9"), sh(2, "exit 9")],
+            &EngineOpts { deadline: Duration::from_secs(60), echo: false, tolerate_failures: 1 },
+        )
+        .expect_err("the second death exceeds the budget");
+        assert!(format!("{err:#}").contains("exited with"), "{err:#}");
+        assert!(t0.elapsed() < Duration::from_secs(20), "fail-fast took {:?}", t0.elapsed());
+
+        // Rank 0 (bootstrap + credit root) dying is never tolerable.
+        let err = run_fleet(
+            vec![sh(0, "exit 3"), sh(1, "sleep 30")],
+            &EngineOpts { deadline: Duration::from_secs(60), echo: false, tolerate_failures: 5 },
+        )
+        .expect_err("rank 0 dying is always fatal");
+        assert!(format!("{err:#}").contains("rank 0"), "{err:#}");
     }
 }

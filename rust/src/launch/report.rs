@@ -110,12 +110,15 @@ fn sum_int_objects(a: &Value, b: &Value) -> Value {
 /// Fold per-rank reports into the single fleet report the launcher
 /// writes: rank 0's reduced result (with `run_sockets_reduced` that is
 /// the fleet-wide value), summed counters and wire bytes, and the full
-/// per-rank reports for drill-down.
+/// per-rank reports for drill-down. `dead_ranks` lists ranks whose
+/// deaths the fleet absorbed (`--tolerate-failures`): they owe no
+/// report, and the output records them under `"dead_ranks"`.
 pub fn aggregate_fleet(
     app: &str,
     app_argv: &[String],
     mut rank_reports: Vec<Value>,
     wall_time_s: f64,
+    dead_ranks: &[usize],
 ) -> Result<Value> {
     if rank_reports.is_empty() {
         bail!("no rank reports to aggregate");
@@ -126,11 +129,16 @@ pub fn aggregate_fleet(
         }
     }
     rank_reports.sort_by_key(|r| r.get("rank").and_then(Value::as_u64).unwrap_or(u64::MAX));
-    let n = rank_reports.len();
-    for (i, r) in rank_reports.iter().enumerate() {
+    let n = rank_reports.len() + dead_ranks.len();
+    if dead_ranks.contains(&0) {
+        bail!("rank 0 cannot be a tolerated death (it aggregates the fleet)");
+    }
+    let mut expected: Vec<usize> = (0..n).filter(|r| !dead_ranks.contains(r)).collect();
+    expected.truncate(rank_reports.len());
+    for (r, &want) in rank_reports.iter().zip(&expected) {
         let rank = r.get("rank").and_then(Value::as_u64).expect("checked above");
-        if rank != i as u64 {
-            bail!("fleet reports are not ranks 0..{n}: missing or duplicate rank {i}");
+        if rank != want as u64 {
+            bail!("fleet reports are not ranks 0..{n}: missing or duplicate rank {want}");
         }
     }
     let mut places = 0i64;
@@ -150,6 +158,7 @@ pub fn aggregate_fleet(
         ("app", Value::Str(app.into())),
         ("argv", Value::Arr(app_argv.iter().map(|a| Value::Str(a.clone())).collect())),
         ("ranks", Value::Int(n as i64)),
+        ("dead_ranks", Value::Arr(dead_ranks.iter().map(|&d| Value::Int(d as i64)).collect())),
         ("places", Value::Int(places)),
         ("wall_time_s", Value::Float(wall_time_s)),
         ("result", result),
@@ -363,7 +372,7 @@ mod tests {
     fn fleet_aggregation_sums_and_keeps_rank0_result() {
         // Deliberately out of order: aggregation sorts by rank.
         let reports = vec![mk_rank(1, 2, 40, 11), mk_rank(0, 2, 100, 5)];
-        let fleet = aggregate_fleet("uts", &["uts".to_string()], reports, 2.5).unwrap();
+        let fleet = aggregate_fleet("uts", &["uts".to_string()], reports, 2.5, &[]).unwrap();
         assert_eq!(fleet.get("schema").and_then(Value::as_str), Some(FLEET_SCHEMA));
         assert_eq!(fleet.get("ranks").and_then(Value::as_u64), Some(2));
         assert_eq!(fleet.get("places").and_then(Value::as_u64), Some(2));
@@ -383,16 +392,34 @@ mod tests {
 
     #[test]
     fn fleet_aggregation_rejects_rank_gaps() {
-        let err = aggregate_fleet("uts", &[], vec![mk_rank(0, 3, 1, 1), mk_rank(2, 3, 1, 1)], 1.0)
-            .unwrap_err();
+        let err =
+            aggregate_fleet("uts", &[], vec![mk_rank(0, 3, 1, 1), mk_rank(2, 3, 1, 1)], 1.0, &[])
+                .unwrap_err();
         assert!(format!("{err:#}").contains("missing or duplicate rank 1"), "{err:#}");
-        assert!(aggregate_fleet("uts", &[], vec![], 1.0).is_err());
+        assert!(aggregate_fleet("uts", &[], vec![], 1.0, &[]).is_err());
+    }
+
+    #[test]
+    fn fleet_aggregation_accounts_for_tolerated_deaths() {
+        // A 3-rank fleet whose rank 1 died: the gap is legal exactly
+        // when the launcher flags it, and the report records it.
+        let reports = vec![mk_rank(0, 3, 100, 5), mk_rank(2, 3, 40, 11)];
+        let fleet = aggregate_fleet("uts", &[], reports.clone(), 1.0, &[1]).unwrap();
+        assert_eq!(fleet.get("ranks").and_then(Value::as_u64), Some(3));
+        let dead = fleet.get("dead_ranks").and_then(Value::as_arr).unwrap();
+        assert_eq!(dead.len(), 1);
+        assert_eq!(dead[0].as_u64(), Some(1));
+        assert_eq!(fleet.get("result").and_then(Value::as_u64), Some(100));
+        // Rank 0 can never be a tolerated death.
+        let err = aggregate_fleet("uts", &[], reports, 1.0, &[0]).unwrap_err();
+        assert!(format!("{err:#}").contains("rank 0"), "{err:#}");
     }
 
     #[test]
     fn fleet_report_file_roundtrips() {
-        let fleet = aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 9, 9)], 0.5)
-            .unwrap();
+        let fleet =
+            aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 9, 9)], 0.5, &[])
+                .unwrap();
         let dir = std::env::temp_dir();
         let path = dir.join(format!("glb-report-test-{}.json", std::process::id()));
         std::fs::write(&path, fleet.render_pretty()).unwrap();
@@ -404,8 +431,9 @@ mod tests {
 
     #[test]
     fn bench_entries_summarize_times() {
-        let fleet = aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 41314, 3)], 1.0)
-            .unwrap();
+        let fleet =
+            aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 41314, 3)], 1.0, &[])
+                .unwrap();
         let e = bench_entry("uts-d8", 2, 1, 3, &[1.5, 1.0, 2.0], &fleet);
         assert_eq!(e.get("best_s").and_then(Value::as_f64), Some(1.0));
         assert_eq!(e.get("mean_s").and_then(Value::as_f64), Some(1.5));

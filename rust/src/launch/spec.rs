@@ -19,14 +19,18 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::{report, RankCmd};
 
 /// Options the launcher consumes (everything else passes through).
-const LAUNCHER_OPTS: &[&str] = &["np", "hosts", "ssh", "bin", "port", "report", "timeout"];
+/// `tolerate-failures` is consumed *and* re-derived per rank: the
+/// launcher needs it for its own fail-fast budget, the runtime needs it
+/// to arm recovery.
+const LAUNCHER_OPTS: &[&str] =
+    &["np", "hosts", "ssh", "bin", "port", "report", "timeout", "tolerate-failures"];
 
 /// Flags the launcher derives per rank; passing them through is an
 /// error, not a silent override.
 const DERIVED_OPTS: &[&str] = &["rank", "peers", "host", "bind", "advertise"];
 
 /// Apps that speak the tcp fleet protocol (and emit rank reports).
-const FLEET_APPS: &[&str] = &["uts", "bc"];
+const FLEET_APPS: &[&str] = &["uts", "bc", "fib"];
 
 /// Where the ranks run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -58,6 +62,10 @@ pub struct FleetSpec {
     /// ssh command template for `--hosts` fleets (split on whitespace;
     /// host and remote command are appended).
     pub ssh: String,
+    /// Spoke deaths to absorb instead of failing the fleet — threaded
+    /// both into the engine's fail-fast budget and into every rank's
+    /// argv so the runtime arms crash recovery.
+    pub tolerate_failures: usize,
 }
 
 /// The spawnable form of a spec: one command per rank.
@@ -79,6 +87,7 @@ impl FleetSpec {
         let mut port: Option<u16> = None;
         let mut report: Option<PathBuf> = None;
         let mut timeout_s: u64 = 600;
+        let mut tolerate_failures: usize = 0;
         let mut passthrough: Vec<String> = Vec::new();
 
         let mut it = raw.iter();
@@ -114,6 +123,11 @@ impl FleetSpec {
                 "report" => report = Some(PathBuf::from(value)),
                 "timeout" => {
                     timeout_s = value.parse().map_err(|e| anyhow!("--timeout {value}: {e}"))?
+                }
+                "tolerate-failures" => {
+                    tolerate_failures = value
+                        .parse()
+                        .map_err(|e| anyhow!("--tolerate-failures {value}: {e}"))?
                 }
                 _ => unreachable!("LAUNCHER_OPTS covers the match"),
             }
@@ -181,6 +195,7 @@ impl FleetSpec {
             deadline: Duration::from_secs(timeout_s),
             bin,
             ssh: ssh.unwrap_or_else(|| "ssh -o BatchMode=yes".into()),
+            tolerate_failures,
         })
     }
 
@@ -207,6 +222,9 @@ impl FleetSpec {
         push("--rank", rank.to_string());
         push("--peers", ranks.to_string());
         push("--port", port.to_string());
+        if self.tolerate_failures > 0 {
+            push("--tolerate-failures", self.tolerate_failures.to_string());
+        }
         match &self.placement {
             Placement::Local { .. } => {
                 push("--host", "127.0.0.1".into());
@@ -385,6 +403,36 @@ mod tests {
     }
 
     #[test]
+    fn tolerate_failures_is_consumed_and_rederived_per_rank() {
+        let spec = FleetSpec::parse(&s(&[
+            "--np",
+            "4",
+            "--tolerate-failures",
+            "1",
+            "uts",
+            "--depth",
+            "8",
+        ]))
+        .unwrap();
+        assert_eq!(spec.tolerate_failures, 1);
+        assert_eq!(
+            option_value(&spec.app_argv, "tolerate-failures"),
+            None,
+            "consumed, not passed through raw: {:?}",
+            spec.app_argv
+        );
+        for rank in 0..4 {
+            let argv = spec.rank_argv(rank, 4, 7001);
+            assert_eq!(option_value(&argv, "tolerate-failures"), Some("1"), "rank {rank}");
+        }
+        // Default stays fail-fast, with no flag on any rank.
+        let spec = FleetSpec::parse(&s(&["--np", "2", "fib", "--n", "20"])).unwrap();
+        assert_eq!(spec.tolerate_failures, 0);
+        assert_eq!(spec.app(), "fib", "fib speaks the tcp fleet protocol");
+        assert_eq!(option_value(&spec.rank_argv(0, 2, 7001), "tolerate-failures"), None);
+    }
+
+    #[test]
     fn explicit_tcp_transport_is_accepted_verbatim() {
         let spec =
             FleetSpec::parse(&s(&["--np", "4", "uts", "--depth", "6", "--transport", "tcp"]))
@@ -462,6 +510,7 @@ mod tests {
             deadline: Duration::from_secs(10),
             bin: None,
             ssh: "ssh -o BatchMode=yes".into(),
+            tolerate_failures: 0,
         };
         let r0 = spec.rank_argv(0, 2, 7117);
         assert_eq!(option_value(&r0, "host"), Some("alpha"), "user@ stripped for dialing");

@@ -40,7 +40,7 @@ fn main() {
 const COMMON: &[&str] = &[
     "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
     "random-only", "rounds", "log", "csv", "autotune", "transport", "rank", "peers", "port",
-    "host", "bind", "advertise", "report",
+    "host", "bind", "advertise", "tolerate-failures", "report",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -74,6 +74,7 @@ fn socket_opts_from(t: &glb::cli::TcpOpts) -> SocketRunOpts {
         port: t.port,
         bind: t.bind.clone(),
         advertise: t.advertise.clone(),
+        tolerate_failures: t.tolerate_failures,
         ..Default::default()
     }
 }
@@ -109,6 +110,7 @@ fn write_report_if_asked<R>(
         &argv,
         vec![rank],
         out.elapsed_ns as f64 / 1e9,
+        &[],
     )?;
     std::fs::write(path, fleet.render_pretty())
         .with_context(|| format!("write run report {path}"))?;
@@ -378,11 +380,39 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
     known.push("fib-n");
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
+    let n = args.parse_opt("fib-n", 24u64)?;
     if transport_from(&args)? == TransportKind::Tcp {
-        bail!("--transport tcp currently supports the uts and bc commands");
+        // Fleet fib: rank 0 seeds the root task, work spreads over the
+        // mesh, and rank 0 gathers the fleet-wide sum. Small enough to be
+        // the second chaos-test workload next to UTS.
+        if args.get("report").is_some() {
+            bail!("use `glb launch --report` to aggregate a fleet report (not per rank)");
+        }
+        let t = tcp_opts_from(&args)?;
+        let params = glb_params_from(&args)?;
+        let p = args.parse_opt("places", t.peers * params.workers_per_node)?;
+        let cfg = GlbConfig::new(p, params);
+        let opts = socket_opts_from(&t);
+        let out = run_sockets_reduced(
+            &cfg,
+            &opts,
+            |_, _| FibQueue::new(),
+            move |q| q.init(n),
+            &SumReducer,
+        )?;
+        if t.rank == 0 {
+            println!("fib-glb({n}) = {} (closed form {})", out.result, fib(n));
+            if out.result != fib(n) {
+                bail!("fib mismatch!");
+            }
+        } else {
+            println!("fib-glb({n}) tcp rank {}/{} local-sum={}", t.rank, t.peers, out.result);
+        }
+        finish(&out, "tasks/s", args.flag("log"));
+        emit_rank_report("fib", t.rank, t.peers, Value::Int(out.result as i64), &out);
+        return Ok(());
     }
     let p = args.parse_opt("places", 4usize)?;
-    let n = args.parse_opt("fib-n", 24u64)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);
     let out = run_threads(&cfg, |_, _| FibQueue::new(), |q| q.init(n), &SumReducer);
     println!("fib-glb({n}) = {} (closed form {})", out.result, fib(n));

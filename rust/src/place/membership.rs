@@ -1,0 +1,207 @@
+//! Fleet membership: who is in the mesh, under which epoch.
+//!
+//! Peer discovery used to be a frozen bootstrap array inside
+//! `place/socket.rs`; crash tolerance needs the view to *change* while
+//! the fleet runs. [`MembershipProvider`] abstracts the difference:
+//!
+//! * [`FixedMembership`] — today's semantics: the bootstrap peer map is
+//!   the membership, forever. [`MembershipProvider::leave`] refuses, so
+//!   a rank death stays what it always was — fatal.
+//! * [`DynamicMembership`] — the `--tolerate-failures` mode: the root
+//!   retires crashed ranks ([`MembershipProvider::leave`]) and publishes
+//!   the new view as an epoch-stamped [`crate::glb::wire::Ctrl::Leave`] /
+//!   [`crate::glb::wire::Ctrl::PeerMap`]; spokes replay the same
+//!   transitions, so every survivor converges on the same
+//!   [`MembershipView`] at the same epoch. Join frames
+//!   ([`crate::glb::wire::Ctrl::Join`]) feed the same provider; the
+//!   socket runtime does not accept mid-run joins yet, but the provider
+//!   and wire format are ready for the persistent-fleet-service work.
+//!
+//! A view keeps every rank's *slot* (dead ranks become `None`), so rank
+//! ids — and with them place ids, lifeline node ids, and the credit
+//! books — stay stable across reconfigurations. Only the *alive* subset
+//! shrinks; `glb/lifeline.rs` re-knits its cube over that subset.
+
+use std::sync::Mutex;
+
+/// One consistent snapshot of fleet membership.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MembershipView {
+    /// Monotonic view counter: 0 = the bootstrap map, +1 per change.
+    pub epoch: u64,
+    /// Mesh address per rank slot; `None` once the rank has left.
+    pub addrs: Vec<Option<String>>,
+}
+
+impl MembershipView {
+    /// The bootstrap view (epoch 0) over a fully-populated address map.
+    pub fn bootstrap(addrs: Vec<String>) -> Self {
+        Self { epoch: 0, addrs: addrs.into_iter().map(Some).collect() }
+    }
+
+    /// Total rank slots, dead ones included.
+    pub fn slots(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Is `rank` a current member?
+    pub fn alive(&self, rank: usize) -> bool {
+        self.addrs.get(rank).is_some_and(|a| a.is_some())
+    }
+
+    /// Sorted ids of the current members.
+    pub fn members(&self) -> Vec<usize> {
+        (0..self.addrs.len()).filter(|&r| self.alive(r)).collect()
+    }
+}
+
+/// How a fleet process learns (and, at the root, decides) who its peers
+/// are. Implementations are shared across the runtime's threads.
+pub trait MembershipProvider: Send + Sync {
+    /// The current view (a consistent snapshot).
+    fn view(&self) -> MembershipView;
+
+    /// Current epoch — cheap enough to poll from worker loops.
+    fn epoch(&self) -> u64;
+
+    /// Retire `rank` from the membership. Returns the new view, or
+    /// `None` if this provider cannot reconfigure (fixed bootstrap
+    /// membership — the caller must treat the death as fatal).
+    fn leave(&self, rank: usize) -> Option<MembershipView>;
+
+    /// (Re)admit `rank` at `addr`. Returns the new view, or `None` if
+    /// this provider cannot reconfigure.
+    fn join(&self, rank: usize, addr: String) -> Option<MembershipView>;
+}
+
+/// The frozen bootstrap membership: exactly the pre-crash-tolerance
+/// semantics of the socket runtime.
+pub struct FixedMembership {
+    view: MembershipView,
+}
+
+impl FixedMembership {
+    pub fn new(addrs: Vec<String>) -> Self {
+        Self { view: MembershipView::bootstrap(addrs) }
+    }
+}
+
+impl MembershipProvider for FixedMembership {
+    fn view(&self) -> MembershipView {
+        self.view.clone()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.view.epoch
+    }
+
+    fn leave(&self, _rank: usize) -> Option<MembershipView> {
+        None
+    }
+
+    fn join(&self, _rank: usize, _addr: String) -> Option<MembershipView> {
+        None
+    }
+}
+
+/// Mutable membership fed by join/leave transitions. The root applies
+/// transitions first and broadcasts them; spokes replay the identical
+/// transitions in the identical order (the control link is FIFO), so
+/// every survivor steps through the same sequence of epochs.
+pub struct DynamicMembership {
+    state: Mutex<MembershipView>,
+}
+
+impl DynamicMembership {
+    pub fn new(addrs: Vec<String>) -> Self {
+        Self { state: Mutex::new(MembershipView::bootstrap(addrs)) }
+    }
+}
+
+impl MembershipProvider for DynamicMembership {
+    fn view(&self) -> MembershipView {
+        self.state.lock().unwrap().clone()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.state.lock().unwrap().epoch
+    }
+
+    fn leave(&self, rank: usize) -> Option<MembershipView> {
+        let mut v = self.state.lock().unwrap();
+        if !v.alive(rank) {
+            return None; // unknown or already-retired rank: no transition
+        }
+        v.addrs[rank] = None;
+        v.epoch += 1;
+        Some(v.clone())
+    }
+
+    fn join(&self, rank: usize, addr: String) -> Option<MembershipView> {
+        let mut v = self.state.lock().unwrap();
+        if rank >= v.addrs.len() || v.alive(rank) {
+            return None; // out-of-range slot, or the slot is occupied
+        }
+        v.addrs[rank] = Some(addr);
+        v.epoch += 1;
+        Some(v.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|r| format!("127.0.0.1:{}", 9000 + r)).collect()
+    }
+
+    #[test]
+    fn fixed_membership_never_reconfigures() {
+        let m = FixedMembership::new(addrs(3));
+        assert_eq!(m.epoch(), 0);
+        assert_eq!(m.view().members(), vec![0, 1, 2]);
+        assert!(m.leave(1).is_none(), "fixed membership treats death as fatal");
+        assert!(m.join(1, "x:1".into()).is_none());
+        assert_eq!(m.epoch(), 0, "refused transitions do not advance the epoch");
+        assert_eq!(m.view().members(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn dynamic_leave_retires_the_slot_and_bumps_the_epoch() {
+        let m = DynamicMembership::new(addrs(4));
+        let v = m.leave(2).expect("dynamic membership reconfigures");
+        assert_eq!(v.epoch, 1);
+        assert_eq!(v.members(), vec![0, 1, 3]);
+        assert!(!v.alive(2));
+        assert_eq!(v.slots(), 4, "dead ranks keep their slot: ids stay stable");
+        assert!(m.leave(2).is_none(), "a rank leaves once");
+        assert_eq!(m.epoch(), 1);
+    }
+
+    #[test]
+    fn dynamic_join_refills_a_retired_slot() {
+        let m = DynamicMembership::new(addrs(3));
+        assert!(m.join(1, "x:1".into()).is_none(), "occupied slot refuses a join");
+        m.leave(1).unwrap();
+        let v = m.join(1, "10.0.0.9:7".into()).expect("retired slot accepts a rejoin");
+        assert_eq!(v.epoch, 2);
+        assert_eq!(v.members(), vec![0, 1, 2]);
+        assert_eq!(v.addrs[1].as_deref(), Some("10.0.0.9:7"));
+        assert!(m.join(3, "x:1".into()).is_none(), "no out-of-range slots");
+    }
+
+    #[test]
+    fn replayed_transitions_converge_to_the_same_view() {
+        // A spoke replaying the root's transitions in order reaches a
+        // bit-identical view at the same epoch.
+        let root = DynamicMembership::new(addrs(5));
+        let spoke = DynamicMembership::new(addrs(5));
+        root.leave(4).unwrap();
+        root.leave(1).unwrap();
+        spoke.leave(4).unwrap();
+        spoke.leave(1).unwrap();
+        assert_eq!(root.view(), spoke.view());
+        assert_eq!(root.epoch(), 2);
+    }
+}

@@ -23,10 +23,12 @@
 //! links, credit-based distributed termination, and a fleet-wide start
 //! barrier that recreates this sequential-setup guarantee distributedly.
 
+pub mod membership;
 pub mod network;
 pub mod runtime;
 pub mod socket;
 
+pub use membership::{DynamicMembership, FixedMembership, MembershipProvider, MembershipView};
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
 pub use socket::{misrouted_frames, run_sockets, run_sockets_reduced, wire_bytes, SocketRunOpts};

@@ -61,9 +61,10 @@
 //! encoded result for the fleet-wide reduction of
 //! [`run_sockets_reduced`]).
 
+use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -79,6 +80,8 @@ use crate::glb::topology::{NodeBag, Topology};
 use crate::glb::wire::{self, Ctrl, WireCodec};
 use crate::glb::worker::{Phase, Worker};
 use crate::glb::{GlbConfig, RunLog, RunOutput};
+use crate::place::membership::{DynamicMembership, MembershipProvider};
+use crate::testkit::chaos;
 
 /// How this process joins the fleet.
 #[derive(Debug, Clone)]
@@ -107,6 +110,12 @@ pub struct SocketRunOpts {
     pub handshake_timeout: Duration,
     /// Per-place worker thread stack size in bytes.
     pub stack_bytes: usize,
+    /// How many rank deaths (rank 0 excluded — the bootstrap/credit root
+    /// dying is always fatal) the fleet absorbs by reconfiguring instead
+    /// of failing. `0` (default) keeps the historical fail-fast
+    /// semantics byte-for-byte; `> 0` requires a gathered run
+    /// ([`run_sockets_reduced`]) with one worker per node.
+    pub tolerate_failures: usize,
 }
 
 impl Default for SocketRunOpts {
@@ -120,6 +129,7 @@ impl Default for SocketRunOpts {
             advertise: None,
             handshake_timeout: Duration::from_secs(30),
             stack_bytes: 2 << 20,
+            tolerate_failures: 0,
         }
     }
 }
@@ -221,6 +231,8 @@ impl CreditHome for CtrlHome {
         let mut s = self.link.lock().unwrap();
         wire::write_frame(&mut *s, &Ctrl::Deposit { atoms }.to_body())
             .expect("fleet control link lost (deposit)");
+        drop(s);
+        chaos::die_point(chaos::DURING_DEPOSIT);
     }
 
     fn replenish(&self, want: u64) -> u64 {
@@ -237,6 +249,36 @@ impl CreditHome for CtrlHome {
     }
 }
 
+/// A tolerant spoke's credit home. The synchronous [`CtrlHome`] cannot
+/// be used once the control link carries asynchronous recovery traffic
+/// ([`Ctrl::Leave`], forwarded [`Ctrl::Ack`]s): a blocking read-for-grant
+/// would swallow them. The spoke's control reader thread owns the read
+/// half instead and routes every [`Ctrl::Grant`] through a channel.
+struct TolerantCtrlHome {
+    link: Link,
+    grants: Mutex<Receiver<u64>>,
+}
+
+impl CreditHome for TolerantCtrlHome {
+    fn deposit(&self, atoms: u64) {
+        let mut s = self.link.lock().unwrap();
+        wire::write_frame(&mut *s, &Ctrl::Deposit { atoms }.to_body())
+            .expect("fleet control link lost (deposit)");
+        drop(s);
+        chaos::die_point(chaos::DURING_DEPOSIT);
+    }
+
+    fn replenish(&self, want: u64) -> u64 {
+        let rx = self.grants.lock().unwrap();
+        {
+            let mut s = self.link.lock().unwrap();
+            wire::write_frame(&mut *s, &Ctrl::Replenish { want }.to_body())
+                .expect("fleet control link lost (replenish)");
+        }
+        rx.recv().expect("fleet control link closed awaiting grant")
+    }
+}
+
 /// Rank 0's credit home: the root lives in-process.
 struct RootHome {
     root: Arc<CreditRoot>,
@@ -249,6 +291,142 @@ impl CreditHome for RootHome {
 
     fn replenish(&self, want: u64) -> u64 {
         self.root.mint(want)
+    }
+}
+
+/// One retained loot send: the serialized stolen bag, kept until the
+/// destination acknowledges having merged it (or dies, at which point
+/// the bag is re-imported locally so its work is never lost).
+struct RetainedLoot {
+    /// 1-based send sequence number toward this peer.
+    seq: u64,
+    /// Credit atoms the message carried ([`Ledger::export_credit`]).
+    credit: u64,
+    /// The bag's [`WireCodec`] encoding (bytes, so the bookkeeping stays
+    /// non-generic; decoded only on re-import, where the bag type is
+    /// known).
+    body: Vec<u8>,
+}
+
+/// This rank's outbound loot book for one peer. Mesh links and mailboxes
+/// are FIFO, so the receiver's cumulative merged-bag count identifies
+/// exactly which retained entries its banked result already covers.
+#[derive(Default)]
+struct PeerLedger {
+    /// Set once the peer is known dead: entries drained, sends guarded.
+    dead: bool,
+    /// Loot bags sent to this peer (the `seq` counter).
+    sent: u64,
+    /// Credit atoms ever attached to loot for this peer.
+    attached: u64,
+    /// Unacknowledged sends, in `seq` order.
+    entries: VecDeque<RetainedLoot>,
+}
+
+impl PeerLedger {
+    /// The peer banked `upto` merged bags: drop the covered entries.
+    fn prune(&mut self, upto: u64) {
+        while self.entries.front().is_some_and(|e| e.seq <= upto) {
+            self.entries.pop_front();
+        }
+    }
+}
+
+/// The one steal request this rank's worker may have in flight, mirrored
+/// outside the worker so a dead victim's never-coming response can be
+/// synthesized as a refusal. Cleared by the mesh reader the moment the
+/// real response is delivered, so a surviving record is always fresh.
+struct PendingSteal {
+    dest_rank: usize,
+    victim: PlaceId,
+    lifeline: bool,
+    nonce: u64,
+}
+
+/// A latch the recovery path waits on: the mesh reader from a dead peer
+/// must drain to EOF (delivering every frame the peer managed to send)
+/// before the retention ledger is reconciled.
+#[derive(Default)]
+struct ReaderDone {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl ReaderDone {
+    fn mark(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut d = self.done.lock().unwrap();
+        while !*d {
+            d = self.cv.wait(d).unwrap();
+        }
+    }
+}
+
+/// Everything a crash-tolerant rank tracks beyond the normal runtime:
+/// the membership view, per-peer retention ledgers, inbound credit and
+/// merge books, and the mirrored outstanding steal. Shared (non-generic)
+/// across the worker thread, mesh readers, and the recovery thread.
+struct RankRecovery {
+    rank: usize,
+    membership: Arc<DynamicMembership>,
+    ledgers: Vec<Mutex<PeerLedger>>,
+    /// Credit atoms delivered *from* each peer, counted at the mesh
+    /// reader (not at merge): a bag still sitting in the mailbox is
+    /// already this rank's responsibility, and the reconcile books must
+    /// say so or the root would reclaim its credit twice.
+    recv_credit: Vec<AtomicU64>,
+    /// Cross-rank loot bags merged per victim rank — the cumulative
+    /// counts banked in every [`Ctrl::Ack`].
+    merged: Vec<AtomicU64>,
+    pending: Mutex<Option<PendingSteal>>,
+    reader_done: Vec<ReaderDone>,
+}
+
+impl RankRecovery {
+    fn new(rank: usize, ranks: usize, membership: Arc<DynamicMembership>) -> Arc<Self> {
+        let rec = Arc::new(Self {
+            rank,
+            membership,
+            ledgers: (0..ranks).map(|_| Mutex::new(PeerLedger::default())).collect(),
+            recv_credit: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+            merged: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+            pending: Mutex::new(None),
+            reader_done: (0..ranks).map(|_| ReaderDone::default()).collect(),
+        });
+        rec.reader_done[rank].mark(); // no link to ourselves
+        rec
+    }
+
+    /// Is `rank` still a member? (Cheap enough for the send path: one
+    /// short mutex hold on the per-peer ledger.)
+    fn peer_dead(&self, rank: usize) -> bool {
+        self.ledgers[rank].lock().unwrap().dead
+    }
+
+    /// The peer acknowledged `upto` merged bags from us.
+    fn prune(&self, peer: usize, upto: u64) {
+        self.ledgers[peer].lock().unwrap().prune(upto);
+    }
+
+    /// Mark `dead` dead and take its unacknowledged entries. Returns the
+    /// entries plus this rank's net reconcile books for the dead peer:
+    /// `(sent, received)` credit, with the re-imported (returned) entries
+    /// already subtracted from `sent`.
+    fn drain(&self, dead: usize) -> (Vec<RetainedLoot>, u64, u64) {
+        self.reader_done[dead].wait();
+        let (entries, sent) = {
+            let mut l = self.ledgers[dead].lock().unwrap();
+            l.dead = true;
+            let entries: Vec<RetainedLoot> = std::mem::take(&mut l.entries).into();
+            let reimported: u64 = entries.iter().map(|e| e.credit).sum();
+            (entries, l.attached - reimported)
+        };
+        let received = self.recv_credit[dead].load(Ordering::SeqCst);
+        (entries, sent, received)
     }
 }
 
@@ -285,6 +463,8 @@ struct SocketTransport<B> {
     p: usize,
     local: Mailboxes<B>,
     links: Arc<Vec<Option<Link>>>,
+    /// Crash-tolerance books; `None` keeps the fail-fast send path.
+    recovery: Option<Arc<RankRecovery>>,
 }
 
 impl<B> Clone for SocketTransport<B> {
@@ -295,6 +475,7 @@ impl<B> Clone for SocketTransport<B> {
             p: self.p,
             local: self.local.clone(),
             links: self.links.clone(),
+            recovery: self.recovery.clone(),
         }
     }
 }
@@ -307,18 +488,151 @@ impl<B: WireCodec> SocketTransport<B> {
     fn send(&self, to: PlaceId, msg: Msg<B>) {
         let dest_rank = self.topo.node_of(to);
         if dest_rank == self.rank {
-            if let Some(tx) = &self.local[to] {
-                let _ = tx.send(msg);
-            }
+            self.deliver_local(to, msg);
             return;
         }
-        let body = wire::encode_data_frame_body(to, &msg);
+        match &self.recovery {
+            Some(rec) => self.send_guarded(&rec.clone(), dest_rank, to, msg),
+            None => {
+                let is_steal = matches!(msg, Msg::Steal { .. });
+                self.send_wire(dest_rank, to, &msg);
+                if is_steal {
+                    chaos::die_point(chaos::MID_STEAL);
+                }
+            }
+        }
+    }
+
+    fn deliver_local(&self, to: PlaceId, msg: Msg<B>) {
+        if let Some(tx) = &self.local[to] {
+            let _ = tx.send(msg);
+        }
+    }
+
+    fn send_wire(&self, dest_rank: usize, to: PlaceId, msg: &Msg<B>) {
+        let body = wire::encode_data_frame_body(to, msg);
         if let Some(link) = &self.links[dest_rank] {
             let mut s = link.lock().unwrap();
             if wire::write_frame(&mut *s, &body).is_ok() {
                 WIRE_TX_BYTES.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
             }
         }
+    }
+
+    /// The crash-tolerant send path. Loot bags to live peers are
+    /// retained (serialized) until acknowledged; traffic to a dead peer
+    /// is answered on its behalf — a steal gets an instant refusal, a
+    /// loot bag is re-imported locally (with its credit), refusals and
+    /// `Terminate` evaporate.
+    fn send_guarded(&self, rec: &Arc<RankRecovery>, dest_rank: usize, to: PlaceId, msg: Msg<B>) {
+        // Tolerant fleets run one worker per node, so this rank's only
+        // place doubles as its node representative.
+        let me = self.topo.representative(self.rank);
+        match msg {
+            Msg::Steal { thief, lifeline, nonce } => {
+                let guard = rec.ledgers[dest_rank].lock().unwrap();
+                if guard.dead {
+                    drop(guard);
+                    self.deliver_local(
+                        me,
+                        Msg::Loot {
+                            victim: to,
+                            bag: None,
+                            lifeline,
+                            nonce: Some(nonce),
+                            credit: 0,
+                        },
+                    );
+                    return;
+                }
+                // Mirror the outstanding request while the ledger lock
+                // orders us against the drain: either the drain sees this
+                // record, or we saw `dead` above — never neither.
+                *rec.pending.lock().unwrap() =
+                    Some(PendingSteal { dest_rank, victim: to, lifeline, nonce });
+                self.send_wire(dest_rank, to, &Msg::Steal { thief, lifeline, nonce });
+                drop(guard);
+                chaos::die_point(chaos::MID_STEAL);
+            }
+            Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit } => {
+                let mut body = Vec::new();
+                bag.encode(&mut body);
+                let mut guard = rec.ledgers[dest_rank].lock().unwrap();
+                if guard.dead {
+                    drop(guard);
+                    self.deliver_local(
+                        me,
+                        Msg::Loot {
+                            victim: me,
+                            bag: Some(bag),
+                            lifeline: false,
+                            nonce: None,
+                            credit,
+                        },
+                    );
+                    return;
+                }
+                guard.sent += 1;
+                guard.attached += credit;
+                let seq = guard.sent;
+                guard.entries.push_back(RetainedLoot { seq, credit, body });
+                self.send_wire(
+                    dest_rank,
+                    to,
+                    &Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit },
+                );
+            }
+            Msg::Loot { bag: None, .. } | Msg::Terminate => {
+                if !rec.peer_dead(dest_rank) {
+                    self.send_wire(dest_rank, to, &msg);
+                }
+            }
+        }
+    }
+
+    /// A peer died: pull back every unacknowledged loot bag this rank
+    /// sent it (re-delivering each to our own mailbox with its credit),
+    /// synthesize the refusal for a steal still outstanding toward it,
+    /// and return the `(sent, received)` credit books for the
+    /// [`Ctrl::Reconcile`] — `sent` net of the re-imported entries.
+    fn recover_dead_peer(&self, rec: &Arc<RankRecovery>, dead: usize) -> (u64, u64) {
+        let me = self.topo.representative(self.rank);
+        let (entries, sent, received) = rec.drain(dead);
+        for e in entries {
+            let mut r = wire::Reader::new(&e.body);
+            let bag = match B::decode(&mut r) {
+                Ok(b) => b,
+                Err(err) => {
+                    eprintln!("glb: retained bag for dead rank {dead} is corrupt: {err}");
+                    std::process::exit(1);
+                }
+            };
+            self.deliver_local(
+                me,
+                Msg::Loot { victim: me, bag: Some(bag), lifeline: false, nonce: None, credit: e.credit },
+            );
+        }
+        let pending = {
+            let mut p = rec.pending.lock().unwrap();
+            if p.as_ref().is_some_and(|ps| ps.dest_rank == dead) {
+                p.take()
+            } else {
+                None
+            }
+        };
+        if let Some(ps) = pending {
+            self.deliver_local(
+                me,
+                Msg::Loot {
+                    victim: ps.victim,
+                    bag: None,
+                    lifeline: ps.lifeline,
+                    nonce: Some(ps.nonce),
+                    credit: 0,
+                },
+            );
+        }
+        (sent, received)
     }
 
     /// The worker-observed quiescence broadcast — only reachable in
@@ -351,44 +665,162 @@ fn pump<B: WireCodec>(me: PlaceId, fx: &mut Vec<Effect<B>>, transport: &SocketTr
     }
 }
 
+/// The crash-tolerance hooks one worker thread carries.
+struct TolerantWorker {
+    rec: Arc<RankRecovery>,
+    ack: AckOut,
+}
+
+/// Where a worker's idle-point acks go.
+enum AckOut {
+    /// A spoke acks on its own control link: a result snapshot plus the
+    /// cumulative per-victim merged-bag counts (the victims prune their
+    /// retention ledgers; the root banks the result for the gather in
+    /// case this rank dies later).
+    Spoke(Link),
+    /// Rank 0 acks straight to each victim spoke's control link — merge
+    /// counts only, since the root's own death is always fatal and its
+    /// partial result is never needed from a bank.
+    Root(Arc<Vec<Option<Link>>>),
+}
+
+/// Count a cross-rank loot bag against its victim's rank *before* the
+/// worker merges it: these cumulative counts are what the next ack
+/// banks, so they must never run ahead of the banked result snapshot —
+/// and they cannot, because the snapshot is taken after the merge.
+fn note_merge<B: WireCodec>(
+    tol: &Option<TolerantWorker>,
+    transport: &SocketTransport<B>,
+    my_rank: usize,
+    msg: &Msg<B>,
+) {
+    let Some(t) = tol else { return };
+    if let Msg::Loot { victim, bag: Some(_), .. } = msg {
+        let vr = transport.topo.node_of(*victim);
+        if vr != my_rank {
+            t.rec.merged[vr].fetch_add(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Bank an idle-point checkpoint. Called at every Working-exit edge,
+/// where the local bag is empty — so the result snapshot covers exactly
+/// the acked merges, and a death any time before the *next* merge loses
+/// nothing: senders re-import everything past these counts.
+fn emit_ack<Q, P>(
+    worker: &Worker<Q, FleetLedger>,
+    tol: &Option<TolerantWorker>,
+    plan: P,
+    my_rank: usize,
+    acked_upto: &mut [u64],
+) where
+    Q: TaskQueue,
+    Q::Bag: WireCodec,
+    P: ResultPlan<Q::Result>,
+{
+    let Some(t) = tol else { return };
+    match &t.ack {
+        AckOut::Spoke(link) => {
+            let mut acked = Vec::new();
+            for (r, m) in t.rec.merged.iter().enumerate() {
+                let m = m.load(Ordering::SeqCst);
+                if m > 0 && r != my_rank {
+                    acked.push((r as u64, m));
+                }
+            }
+            let result = plan.encode(&worker.queue().result());
+            let frame = Ctrl::Ack { rank: my_rank as u64, result, acked }.to_body();
+            wire::write_frame(&mut *link.lock().unwrap(), &frame)
+                .expect("fleet control link lost (ack)");
+        }
+        AckOut::Root(links) => {
+            for (r, m) in t.rec.merged.iter().enumerate() {
+                let m = m.load(Ordering::SeqCst);
+                if m > acked_upto[r] {
+                    acked_upto[r] = m;
+                    if let Some(link) = &links[r] {
+                        let frame =
+                            Ctrl::Ack { rank: 0, result: Vec::new(), acked: vec![(r as u64, m)] }
+                                .to_body();
+                        let _ = wire::write_frame(&mut *link.lock().unwrap(), &frame);
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Per-place worker thread body (mirror of the thread runtime's
 /// `place_main`, driving the same engine over the socket fabric).
-fn socket_place_main<Q>(
+fn socket_place_main<Q, P>(
     mut worker: Worker<Q, FleetLedger>,
     rx: Receiver<Msg<Q::Bag>>,
     transport: SocketTransport<Q::Bag>,
+    tol: Option<TolerantWorker>,
+    plan: P,
 ) -> (Q::Result, crate::glb::WorkerStats)
 where
     Q: TaskQueue,
     Q::Bag: WireCodec,
+    P: ResultPlan<Q::Result>,
 {
     let me = worker.id();
+    let my_rank = transport.rank;
     let mut fx: Vec<Effect<Q::Bag>> = Vec::with_capacity(8);
+    let mut acked_upto: Vec<u64> =
+        tol.as_ref().map(|t| vec![0; t.rec.merged.len()]).unwrap_or_default();
+    let mut seen_epoch = 0u64;
     loop {
+        // Safe-point re-knit: only between protocol episodes (Working /
+        // Idle — never with a steal outstanding, whose response still
+        // references the old victim set). A Wait* phase defers to the
+        // next episode; liveness holds because a dead victim's response
+        // is synthesized by the recovery path.
+        if let Some(t) = &tol {
+            if matches!(worker.phase(), Phase::Working | Phase::Idle)
+                && t.rec.membership.epoch() != seen_epoch
+            {
+                let view = t.rec.membership.view();
+                seen_epoch = view.epoch;
+                worker.rewire(&view.members());
+            }
+        }
         match worker.phase() {
             Phase::Working => {
-                let t = Instant::now();
+                let t0 = Instant::now();
                 while let Ok(m) = rx.try_recv() {
+                    note_merge(&tol, &transport, my_rank, &m);
                     worker.on_msg(m, &mut fx);
                     pump(me, &mut fx, &transport);
                 }
-                worker.stats_mut().distribute_ns += t.elapsed().as_nanos() as u64;
+                worker.stats_mut().distribute_ns += t0.elapsed().as_nanos() as u64;
                 if worker.phase() != Phase::Working {
+                    emit_ack(&worker, &tol, plan, my_rank, &mut acked_upto);
                     continue;
                 }
-                let t = Instant::now();
+                let t0 = Instant::now();
                 worker.step(&mut fx);
-                worker.stats_mut().process_ns += t.elapsed().as_nanos() as u64;
+                worker.stats_mut().process_ns += t0.elapsed().as_nanos() as u64;
+                if worker.phase() != Phase::Working {
+                    // Bank the exit-point snapshot *before* the pending
+                    // steal below leaves this rank: a mid-steal death
+                    // then loses only work that senders still retain.
+                    emit_ack(&worker, &tol, plan, my_rank, &mut acked_upto);
+                }
                 pump(me, &mut fx, &transport);
             }
             Phase::WaitRandom { .. } | Phase::WaitLifeline { .. } | Phase::Idle => {
-                let t = Instant::now();
+                if worker.phase() == Phase::Idle {
+                    chaos::die_point(chaos::WHILE_IDLE);
+                }
+                let t0 = Instant::now();
                 let m = rx.recv().expect("mailbox closed while waiting");
-                worker.stats_mut().wait_ns += t.elapsed().as_nanos() as u64;
-                let t = Instant::now();
+                worker.stats_mut().wait_ns += t0.elapsed().as_nanos() as u64;
+                let t0 = Instant::now();
+                note_merge(&tol, &transport, my_rank, &m);
                 worker.on_msg(m, &mut fx);
                 pump(me, &mut fx, &transport);
-                worker.stats_mut().distribute_ns += t.elapsed().as_nanos() as u64;
+                worker.stats_mut().distribute_ns += t0.elapsed().as_nanos() as u64;
             }
             Phase::Done => break,
         }
@@ -398,10 +830,36 @@ where
 }
 
 /// A mesh link's read side: decode frames from one peer rank straight
-/// into this rank's mailboxes. Exits on the peer's EOF (clean teardown)
-/// or a protocol violation.
-fn mesh_reader<B>(mut stream: TcpStream, my_rank: usize, topo: Topology, local: Mailboxes<B>)
-where
+/// into this rank's mailboxes. Exits on the peer's EOF (clean teardown,
+/// or the peer's death), a connection error, or a protocol violation.
+/// Under crash tolerance it additionally keeps the recovery books: it
+/// clears the mirrored outstanding steal when the real response lands
+/// (so a later synthesized refusal can never be stale) and counts the
+/// credit delivered from this peer; its exit latch gates the drain.
+fn mesh_reader<B>(
+    stream: TcpStream,
+    my_rank: usize,
+    peer: usize,
+    topo: Topology,
+    local: Mailboxes<B>,
+    recovery: Option<Arc<RankRecovery>>,
+) where
+    B: WireCodec + Send + 'static,
+{
+    mesh_reader_loop(stream, my_rank, peer, topo, local, recovery.as_ref());
+    if let Some(rec) = &recovery {
+        rec.reader_done[peer].mark();
+    }
+}
+
+fn mesh_reader_loop<B>(
+    mut stream: TcpStream,
+    my_rank: usize,
+    peer: usize,
+    topo: Topology,
+    local: Mailboxes<B>,
+    recovery: Option<&Arc<RankRecovery>>,
+) where
     B: WireCodec + Send + 'static,
 {
     loop {
@@ -421,48 +879,277 @@ where
             debug_assert!(false, "data frame for place {to} arrived at rank {my_rank}");
             return;
         }
+        if let Some(rec) = recovery {
+            if let Msg::Loot { nonce: Some(n), .. } = &msg {
+                let mut p = rec.pending.lock().unwrap();
+                if p.as_ref().is_some_and(|ps| ps.dest_rank == peer && ps.nonce == *n) {
+                    *p = None;
+                }
+            }
+            if let Msg::Loot { bag: Some(_), credit, .. } = &msg {
+                rec.recv_credit[peer].fetch_add(*credit, Ordering::SeqCst);
+            }
+        }
         if let Some(tx) = &local[to] {
             let _ = tx.send(msg);
         }
     }
 }
 
+/// Rank 0's shared crash-tolerance state (tolerant fleets only).
+struct RootTolerant {
+    recovery: Arc<RankRecovery>,
+    /// Write halves of every spoke's control link (slot 0 is `None`):
+    /// the coordinator broadcasts Leave/PeerMap here, and control
+    /// servants forward acks victim-ward.
+    ctrl_links: Arc<Vec<Option<Link>>>,
+    /// Credit atoms granted to each rank (initial endowment + mints).
+    granted: Vec<AtomicU64>,
+    /// Credit atoms each rank deposited back to the root's pool.
+    deposited: Vec<AtomicU64>,
+    /// Latest acked result snapshot per rank: what the gather falls
+    /// back to when the rank dies after its last idle point.
+    ack_bank: Mutex<Vec<Option<Vec<u8>>>>,
+}
+
+/// Per-control-servant handle on the tolerant state. The channel
+/// senders live *only* in servant threads (plus the pre-spawn original,
+/// dropped immediately), so the coordinator's `death_rx` disconnects —
+/// and its thread exits — exactly when the last servant does.
+#[derive(Clone)]
+struct CtrlTol {
+    shared: Arc<RootTolerant>,
+    death_tx: Sender<usize>,
+    reconcile_tx: Sender<(usize, u64, u64)>,
+}
+
 /// Rank 0's per-spoke control servant: barrier arrivals, credit
 /// deposits/replenishes, and result collection. Exits on the spoke's
-/// clean half-close (after its workers finished) or a violation.
+/// clean half-close (after its workers finished) or a violation — in a
+/// tolerant fleet, a close *before* the spoke's result arrived is
+/// reported to the coordinator as that rank's death.
 fn control_server(
     mut stream: TcpStream,
+    link: Link,
     rank: usize,
     root: Arc<CreditRoot>,
     barrier: Arc<StartBarrier>,
     results: ResultSlots,
+    tol: Option<CtrlTol>,
 ) {
+    let mut saw_result = false;
     loop {
         let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
             Ok(Some(b)) => b,
-            Ok(None) | Err(_) => return,
+            Ok(None) | Err(_) => break,
         };
         let ok = match Ctrl::decode(&body) {
             Ok(Ctrl::Ready { .. }) => {
                 barrier.arrive_and_wait();
-                wire::write_frame(&mut stream, &Ctrl::Go.to_body()).is_ok()
+                wire::write_frame(&mut *link.lock().unwrap(), &Ctrl::Go.to_body()).is_ok()
             }
             Ok(Ctrl::Deposit { atoms }) => {
+                if let Some(t) = &tol {
+                    t.shared.deposited[rank].fetch_add(atoms, Ordering::SeqCst);
+                }
                 root.deposit(atoms);
                 true
             }
             Ok(Ctrl::Replenish { want }) => {
                 let atoms = root.mint(want);
-                wire::write_frame(&mut stream, &Ctrl::Grant { atoms }.to_body()).is_ok()
+                if let Some(t) = &tol {
+                    t.shared.granted[rank].fetch_add(atoms, Ordering::SeqCst);
+                }
+                wire::write_frame(&mut *link.lock().unwrap(), &Ctrl::Grant { atoms }.to_body())
+                    .is_ok()
             }
             Ok(Ctrl::Result { bytes }) => {
                 results.lock().unwrap()[rank] = Some(bytes);
+                saw_result = true;
                 true
             }
+            Ok(Ctrl::Ack { rank: _, result, acked }) if tol.is_some() => {
+                // Bank the spoke's idle-point snapshot, then forward each
+                // (victim, merged-count) to its victim so retention
+                // ledgers shrink. Forwarding is best-effort: a victim
+                // already gone keeps (or loses) its ledger harmlessly.
+                let t = tol.as_ref().unwrap();
+                t.shared.ack_bank.lock().unwrap()[rank] = Some(result);
+                for (victim, merged) in acked {
+                    if victim == 0 {
+                        t.shared.recovery.prune(rank, merged);
+                    } else if let Some(vl) =
+                        t.shared.ctrl_links.get(victim as usize).and_then(|l| l.as_ref())
+                    {
+                        let fwd = Ctrl::Ack {
+                            rank: rank as u64,
+                            result: Vec::new(),
+                            acked: vec![(victim, merged)],
+                        }
+                        .to_body();
+                        let _ = wire::write_frame(&mut *vl.lock().unwrap(), &fwd);
+                    }
+                }
+                true
+            }
+            Ok(Ctrl::Reconcile { rank: r, sent, received }) if tol.is_some() => tol
+                .as_ref()
+                .unwrap()
+                .reconcile_tx
+                .send((r as usize, sent, received))
+                .is_ok(),
             _ => false, // protocol violation; drop the link
         };
         if !ok {
-            return;
+            break;
+        }
+    }
+    if let Some(t) = &tol {
+        if !saw_result {
+            let _ = t.death_tx.send(rank);
+        }
+    }
+}
+
+/// A tolerant spoke's control-link reader, spawned once the barrier has
+/// released: grants for the replenish RPC, ack forwards, and the root's
+/// Leave broadcasts (which trigger local recovery + a Reconcile reply).
+fn spoke_ctrl_reader<B>(
+    mut stream: TcpStream,
+    my_rank: usize,
+    transport: SocketTransport<B>,
+    rec: Arc<RankRecovery>,
+    grant_tx: Sender<u64>,
+    link: Link,
+    shutting_down: Arc<AtomicBool>,
+) where
+    B: WireCodec + Send + 'static,
+{
+    loop {
+        let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
+            Ok(Some(b)) => b,
+            Ok(None) | Err(_) => {
+                if shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+                // The root died (or dropped us): always fatal.
+                eprintln!("glb rank {my_rank}: lost the fleet control link");
+                std::process::exit(1);
+            }
+        };
+        match Ctrl::decode(&body) {
+            Ok(Ctrl::Grant { atoms }) => {
+                // Receiver gone means no ledger is waiting: ignore.
+                let _ = grant_tx.send(atoms);
+            }
+            Ok(Ctrl::Leave { rank: dead, .. }) => {
+                let dead = dead as usize;
+                rec.membership.leave(dead);
+                let (sent, received) = transport.recover_dead_peer(&rec, dead);
+                let reply =
+                    Ctrl::Reconcile { rank: my_rank as u64, sent, received }.to_body();
+                wire::write_frame(&mut *link.lock().unwrap(), &reply)
+                    .expect("fleet control link lost (reconcile)");
+            }
+            Ok(Ctrl::Ack { rank: thief, acked, .. }) => {
+                for (victim, merged) in acked {
+                    if victim as usize == my_rank && (thief as usize) < rec.ledgers.len() {
+                        rec.prune(thief as usize, merged);
+                    }
+                }
+            }
+            Ok(Ctrl::PeerMap { .. }) => {
+                // Post-recovery epoch republication: informational (the
+                // Leave already carried the transition); accepted so a
+                // future join path can reuse the frame.
+            }
+            other => {
+                eprintln!("glb rank {my_rank}: unexpected control frame {other:?}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+/// Rank 0's recovery coordinator: serializes rank deaths. For each
+/// death — detected by that rank's control servant exiting resultless —
+/// it retires the rank, broadcasts the Leave, runs the root's own
+/// recovery, collects every survivor's Reconcile, audits the dead
+/// rank's credit books, and reclaims the missing atoms so the credit
+/// proof (and with it exact termination) survives the crash.
+fn root_coordinator<B>(
+    transport: SocketTransport<B>,
+    tol: Arc<RootTolerant>,
+    root: Arc<CreditRoot>,
+    death_rx: Receiver<usize>,
+    reconcile_rx: Receiver<(usize, u64, u64)>,
+    tolerate: usize,
+    reconcile_timeout: Duration,
+) where
+    B: WireCodec + Send + 'static,
+{
+    let rec = &tol.recovery;
+    let mut deaths = 0usize;
+    while let Ok(dead) = death_rx.recv() {
+        deaths += 1;
+        if deaths > tolerate {
+            eprintln!(
+                "glb fleet: rank {dead} died; {deaths} death(s) exceeds --tolerate-failures"
+            );
+            std::process::exit(1);
+        }
+        let Some(view) = rec.membership.leave(dead) else { continue };
+        eprintln!(
+            "glb fleet: rank {dead} died; re-knitting {} survivor(s) at epoch {}",
+            view.members().len(),
+            view.epoch,
+        );
+        let leave = Ctrl::Leave { epoch: view.epoch, rank: dead as u64 }.to_body();
+        for r in view.members() {
+            if r == 0 {
+                continue;
+            }
+            if let Some(link) = &tol.ctrl_links[r] {
+                let _ = wire::write_frame(&mut *link.lock().unwrap(), &leave);
+            }
+        }
+        // The root's own books for the dead peer, then every survivor's.
+        let (sent0, recv0) = transport.recover_dead_peer(rec, dead);
+        let mut net = sent0 as i128 - recv0 as i128;
+        let deadline = Instant::now() + reconcile_timeout;
+        for _ in 0..view.members().len().saturating_sub(1) {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match reconcile_rx.recv_timeout(wait) {
+                Ok((_, sent, received)) => net += sent as i128 - received as i128,
+                Err(_) => {
+                    eprintln!("glb fleet: reconcile after rank {dead}'s death timed out");
+                    std::process::exit(1);
+                }
+            }
+        }
+        // Atoms the dead rank held = granted − deposited ± in-flight.
+        let atoms = tol.granted[dead].load(Ordering::SeqCst) as i128
+            - tol.deposited[dead].load(Ordering::SeqCst) as i128
+            + net;
+        if atoms < 0 {
+            eprintln!("glb fleet: credit books negative after rank {dead}'s death");
+            std::process::exit(1);
+        }
+        root.reclaim(atoms as u64);
+        // Republish the epoch-stamped view (informational; the Leave
+        // frames already drove every survivor's transition).
+        let map = Ctrl::PeerMap {
+            epoch: view.epoch,
+            addrs: view.addrs.iter().map(|a| a.clone().unwrap_or_default()).collect(),
+        }
+        .to_body();
+        for r in view.members() {
+            if r == 0 {
+                continue;
+            }
+            if let Some(link) = &tol.ctrl_links[r] {
+                let _ = wire::write_frame(&mut *link.lock().unwrap(), &map);
+            }
         }
     }
 }
@@ -648,6 +1335,17 @@ where
             topo.nodes(),
         );
     }
+    let tolerant = opts.tolerate_failures > 0 && ranks > 1;
+    if tolerant && !P::GATHER {
+        bail!(
+            "--tolerate-failures needs a gathered run (run_sockets_reduced): \
+             recovery banks per-rank result snapshots at rank 0"
+        );
+    }
+    if tolerant && cfg.params.workers_per_node != 1 {
+        bail!("--tolerate-failures requires one worker per node");
+    }
+    chaos::arm(rank);
 
     // -- local mailboxes (one per place this rank hosts) ----------------
     let my_places: Vec<PlaceId> = topo.workers_of(rank).collect();
@@ -671,6 +1369,14 @@ where
     let mut ctrl_link: Option<Link> = None;
     let mut root: Option<Arc<CreditRoot>> = None;
     let mut hub_barrier: Option<Arc<StartBarrier>> = None;
+
+    // Crash-tolerance state (all `None`/unused unless `tolerant`).
+    let mut recovery: Option<Arc<RankRecovery>> = None;
+    let mut root_tol: Option<Arc<RootTolerant>> = None;
+    let mut death_rx: Option<Receiver<usize>> = None;
+    let mut reconcile_rx: Option<Receiver<(usize, u64, u64)>> = None;
+    let mut spoke_ctrl_read: Option<TcpStream> = None;
+    let mut grant_tx: Option<Sender<u64>> = None;
 
     let ledger = if ranks == 1 {
         FleetLedger::Local(AtomicLedger::new())
@@ -721,28 +1427,64 @@ where
             .into_iter()
             .collect::<Option<Vec<_>>>()
             .context("fleet bootstrap finished with unregistered ranks")?;
-        let map = Ctrl::PeerMap { addrs }.to_body();
+        let map = Ctrl::PeerMap { epoch: 0, addrs: addrs.clone() }.to_body();
         for (r, conn) in ctrl_conns.iter_mut().enumerate() {
             if let Some(s) = conn {
                 wire::write_frame(s, &map).with_context(|| format!("send peer map to rank {r}"))?;
             }
         }
+        // Write halves of the spokes' control links, shared between each
+        // servant and (tolerant fleets) the coordinator + rank 0's acks.
+        let mut ctrl_writers: Vec<Option<Link>> = Vec::with_capacity(ranks);
+        for conn in &ctrl_conns {
+            ctrl_writers.push(match conn {
+                Some(s) => Some(Arc::new(Mutex::new(
+                    s.try_clone().context("clone control link write half")?,
+                ))),
+                None => None,
+            });
+        }
+        let ctrl_links: Arc<Vec<Option<Link>>> = Arc::new(ctrl_writers);
         // --- credit root + per-spoke control servants -------------------
         // Servants must be live before any spoke can replenish or deposit
         // (both possible as soon as that spoke is past the barrier).
         let credit_root = CreditRoot::new();
         credit_root.grant(ranks as u64 * INITIAL_RANK_ATOMS);
         let barrier = Arc::new(StartBarrier::new(ranks));
+        let mut ctrl_tol: Option<CtrlTol> = None;
+        if tolerant {
+            let membership = Arc::new(DynamicMembership::new(addrs));
+            let rec = RankRecovery::new(rank, ranks, membership);
+            let shared = Arc::new(RootTolerant {
+                recovery: rec.clone(),
+                ctrl_links: ctrl_links.clone(),
+                granted: (0..ranks).map(|_| AtomicU64::new(INITIAL_RANK_ATOMS)).collect(),
+                deposited: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+                ack_bank: Mutex::new((0..ranks).map(|_| None).collect()),
+            });
+            let (dtx, drx) = channel();
+            let (rtx, rrx) = channel();
+            ctrl_tol = Some(CtrlTol { shared: shared.clone(), death_tx: dtx, reconcile_tx: rtx });
+            recovery = Some(rec);
+            root_tol = Some(shared);
+            death_rx = Some(drx);
+            reconcile_rx = Some(rrx);
+        }
         for (r, conn) in ctrl_conns.into_iter().enumerate() {
             let Some(conn) = conn else { continue };
+            let link = ctrl_links[r].clone().expect("registered rank has a control link");
             let (rt, b, res) = (credit_root.clone(), barrier.clone(), results.clone());
+            let tol = ctrl_tol.clone();
             control_servers.push(
                 std::thread::Builder::new()
                     .name(format!("glb-fleet-ctrl-{r}"))
-                    .spawn(move || control_server(conn, r, rt, b, res))
+                    .spawn(move || control_server(conn, link, r, rt, b, res, tol))
                     .expect("spawn control server"),
             );
         }
+        // Drop the pre-spawn senders: from here the coordinator's
+        // death_rx disconnects exactly when the last servant exits.
+        drop(ctrl_tol);
         hub_barrier = Some(barrier);
         root = Some(credit_root.clone());
         FleetLedger::Credit(CreditLedger::new(
@@ -772,7 +1514,7 @@ where
             .context("read peer map")?
             .ok_or_else(|| anyhow!("bootstrap closed before the peer map"))?;
         let addrs = match Ctrl::decode(&body) {
-            Ok(Ctrl::PeerMap { addrs }) if addrs.len() == ranks => addrs,
+            Ok(Ctrl::PeerMap { epoch: 0, addrs }) if addrs.len() == ranks => addrs,
             other => bail!("expected a {ranks}-rank peer map, got {other:?}"),
         };
         // Dial every lower spoke; accept every higher one. Dials complete
@@ -802,25 +1544,48 @@ where
             links[r] = Some(Arc::new(Mutex::new(s)));
         }
         ctrl.set_read_timeout(None)?;
+        if tolerant {
+            let membership = Arc::new(DynamicMembership::new(addrs));
+            recovery = Some(RankRecovery::new(rank, ranks, membership));
+            spoke_ctrl_read = Some(ctrl.try_clone().context("clone control link read half")?);
+        }
         let link = Arc::new(Mutex::new(ctrl));
         ctrl_link = Some(link.clone());
-        FleetLedger::Credit(CreditLedger::new(Arc::new(CtrlHome { link }), INITIAL_RANK_ATOMS))
+        if tolerant {
+            // A dedicated reader thread owns the link post-barrier, so
+            // grants arrive via a channel instead of a synchronous read.
+            let (gtx, grx) = channel();
+            grant_tx = Some(gtx);
+            FleetLedger::Credit(CreditLedger::new(
+                Arc::new(TolerantCtrlHome { link, grants: Mutex::new(grx) }),
+                INITIAL_RANK_ATOMS,
+            ))
+        } else {
+            FleetLedger::Credit(CreditLedger::new(Arc::new(CtrlHome { link }), INITIAL_RANK_ATOMS))
+        }
     };
 
     // --- mesh readers: decode peers' frames into our mailboxes ----------
     for (r, read_half) in mesh_read.into_iter().enumerate() {
         let Some(read_half) = read_half else { continue };
         let lt = local_tx.clone();
+        let rec = recovery.clone();
         mesh_readers.push(
             std::thread::Builder::new()
                 .name(format!("glb-mesh-{rank}-{r}"))
-                .spawn(move || mesh_reader::<Q::Bag>(read_half, rank, topo, lt))
+                .spawn(move || mesh_reader::<Q::Bag>(read_half, rank, r, topo, lt, rec))
                 .expect("spawn mesh reader"),
         );
     }
 
-    let transport: SocketTransport<Q::Bag> =
-        SocketTransport { rank, topo, p, local: local_tx, links: Arc::new(links) };
+    let transport: SocketTransport<Q::Bag> = SocketTransport {
+        rank,
+        topo,
+        p,
+        local: local_tx,
+        links: Arc::new(links),
+        recovery: recovery.clone(),
+    };
 
     // The detector broadcasts Terminate to every place the moment all
     // credit is recovered — the distributed stand-in for the
@@ -858,12 +1623,58 @@ where
             let mut s = link.lock().unwrap();
             wire::write_frame(&mut *s, &Ctrl::Ready { rank: rank as u64 }.to_body())
                 .context("send fleet ready")?;
-            let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
-                .context("await fleet go")?
-                .ok_or_else(|| anyhow!("bootstrap closed before go"))?;
-            if !matches!(Ctrl::decode(&body), Ok(Ctrl::Go)) {
-                bail!("expected the fleet go signal, got another control frame");
+            loop {
+                let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
+                    .context("await fleet go")?
+                    .ok_or_else(|| anyhow!("bootstrap closed before go"))?;
+                match Ctrl::decode(&body) {
+                    Ok(Ctrl::Go) => break,
+                    // Rank 0's worker can reach an idle point (and ack)
+                    // before our Go write lands; pre-Go this rank has
+                    // sent no loot, so there is nothing to prune.
+                    Ok(Ctrl::Ack { .. }) if tolerant => continue,
+                    _ => bail!("expected the fleet go signal, got another control frame"),
+                }
             }
+        }
+    }
+
+    // -- crash-tolerance service threads ---------------------------------
+    let shutting_down = Arc::new(AtomicBool::new(false));
+    let mut spoke_reader: Option<std::thread::JoinHandle<()>> = None;
+    let mut coordinator: Option<std::thread::JoinHandle<()>> = None;
+    if tolerant {
+        if rank == 0 {
+            let t = transport.clone();
+            let tolr = root_tol.clone().expect("tolerant root state");
+            let rt = root.clone().expect("rank 0 hosts the credit root");
+            let drx = death_rx.take().expect("tolerant root death channel");
+            let rrx = reconcile_rx.take().expect("tolerant root reconcile channel");
+            let tolerate = opts.tolerate_failures;
+            let timeout = opts.handshake_timeout;
+            coordinator = Some(
+                std::thread::Builder::new()
+                    .name("glb-fleet-recovery".into())
+                    .spawn(move || {
+                        root_coordinator::<Q::Bag>(t, tolr, rt, drx, rrx, tolerate, timeout)
+                    })
+                    .expect("spawn recovery coordinator"),
+            );
+        } else {
+            let stream = spoke_ctrl_read.take().expect("tolerant spokes hold a reader clone");
+            let t = transport.clone();
+            let rec = recovery.clone().expect("tolerant spokes hold recovery state");
+            let gtx = grant_tx.take().expect("tolerant spokes hold the grant sender");
+            let link = ctrl_link.clone().expect("spokes hold a control link");
+            let sd = shutting_down.clone();
+            spoke_reader = Some(
+                std::thread::Builder::new()
+                    .name(format!("glb-fleet-ctrl-rx-{rank}"))
+                    .spawn(move || {
+                        spoke_ctrl_reader::<Q::Bag>(stream, rank, t, rec, gtx, link, sd)
+                    })
+                    .expect("spawn spoke control reader"),
+            );
         }
     }
 
@@ -878,15 +1689,24 @@ where
 
     // -- run ---------------------------------------------------------------
     let t0 = Instant::now();
+    let mut tol_worker: Option<TolerantWorker> = recovery.as_ref().map(|rec| TolerantWorker {
+        rec: rec.clone(),
+        ack: if rank == 0 {
+            AckOut::Root(root_tol.as_ref().expect("tolerant root state").ctrl_links.clone())
+        } else {
+            AckOut::Spoke(ctrl_link.clone().expect("spokes hold a control link"))
+        },
+    });
     let handles: Vec<_> = workers
         .into_iter()
         .zip(rxs)
         .map(|(worker, rx)| {
             let transport = transport.clone();
+            let tol = tol_worker.take(); // tolerant fleets run one worker per rank
             std::thread::Builder::new()
                 .name(format!("glb-sock-{}", worker.id()))
                 .stack_size(opts.stack_bytes)
-                .spawn(move || socket_place_main(worker, rx, transport))
+                .spawn(move || socket_place_main(worker, rx, transport, tol, plan))
                 .expect("spawn place thread")
         })
         .collect();
@@ -909,6 +1729,8 @@ where
 
     // -- teardown ----------------------------------------------------------
     // Half-close everything we write to; readers drain peers to EOF.
+    // From here a control-link EOF is an orderly shutdown, not a death.
+    shutting_down.store(true, Ordering::SeqCst);
     if let Some(link) = &ctrl_link {
         let _ = link.lock().unwrap().shutdown(Shutdown::Write);
     }
@@ -921,16 +1743,49 @@ where
     for h in control_servers {
         let _ = h.join();
     }
+    if let Some(h) = coordinator {
+        // Joins cleanly: the last control servant's exit dropped the last
+        // death sender, so the coordinator's recv loop has ended.
+        let _ = h.join();
+    }
+    if let Some(tolr) = &root_tol {
+        // Hand surviving spokes' control readers their EOF.
+        for link in tolr.ctrl_links.iter().flatten() {
+            let _ = link.lock().unwrap().shutdown(Shutdown::Write);
+        }
+    }
+    if let Some(h) = spoke_reader {
+        let _ = h.join();
+    }
 
     if let Some(credit_root) = &root {
         debug_assert!(credit_root.quiescent(), "all termination credit must be recovered");
         debug_assert_eq!(credit_root.outstanding(), 0, "credit books must balance");
         if P::GATHER {
+            let view = recovery.as_ref().map(|rec| rec.membership.view());
+            let mut banked =
+                root_tol.as_ref().map(|t| std::mem::take(&mut *t.ack_bank.lock().unwrap()));
             let mut slots = results.lock().unwrap();
             let mut all = vec![result];
             for (r, slot) in slots.iter_mut().enumerate().skip(1) {
-                let bytes = slot.take().ok_or_else(|| anyhow!("rank {r} sent no result"))?;
-                all.push(plan.decode(&bytes).with_context(|| format!("result of rank {r}"))?);
+                match slot.take() {
+                    Some(bytes) => all
+                        .push(plan.decode(&bytes).with_context(|| format!("result of rank {r}"))?),
+                    None if view.as_ref().is_some_and(|v| !v.alive(r)) => {
+                        // Dead rank: its last banked idle-point snapshot
+                        // covers exactly its acked merges. Everything it
+                        // merged after that ack stayed in the senders'
+                        // retention ledgers and was re-imported, so even
+                        // a rank that never acked folds in as nothing.
+                        if let Some(bytes) = banked.as_mut().and_then(|b| b[r].take()) {
+                            all.push(
+                                plan.decode(&bytes)
+                                    .with_context(|| format!("banked result of rank {r}"))?,
+                            );
+                        }
+                    }
+                    None => bail!("rank {r} sent no result"),
+                }
             }
             result = reducer.reduce_all(all);
         }
@@ -1022,6 +1877,58 @@ mod tests {
             assert_eq!(t.node_donations, t.node_takes);
             assert_eq!(out.log.per_place.len(), 2);
         }
+    }
+
+    #[test]
+    fn tolerant_fleet_without_deaths_matches_sequential() {
+        // The crash-tolerant machinery (retention ledgers, idle-point
+        // acks, channel-routed grants) engaged but unexercised: the
+        // gathered result must match the fail-fast path exactly.
+        let port = free_port();
+        let params = GlbParams::default().with_n(64).with_l(2);
+        let run = move |rank: usize| {
+            let cfg = GlbConfig::new(3, params);
+            let opts =
+                SocketRunOpts { rank, ranks: 3, port, tolerate_failures: 1, ..Default::default() };
+            run_sockets_reduced(
+                &cfg,
+                &opts,
+                |_, _| UtsQueue::new(up(6)),
+                |q| q.init_root(),
+                &SumReducer,
+            )
+            .expect("tolerant fleet rank failed")
+        };
+        let t1 = std::thread::spawn(move || run(1));
+        let t2 = std::thread::spawn(move || run(2));
+        let r0 = run(0);
+        t1.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(r0.result, sequential_count(&up(6)));
+        assert_eq!(misrouted_frames(), 0, "a mesh never relays");
+    }
+
+    #[test]
+    fn tolerant_mode_requires_a_gathered_flat_run() {
+        // Recovery banks result snapshots at rank 0 and mirrors the
+        // (single) worker's outstanding steal, so both preconditions are
+        // checked up front instead of failing subtly mid-crash.
+        let params = GlbParams::default().with_l(2);
+        let cfg = GlbConfig::new(2, params);
+        let opts =
+            SocketRunOpts { rank: 0, ranks: 2, port: 1, tolerate_failures: 1, ..Default::default() };
+        let err = run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(4)), |_| {}, &SumReducer)
+            .expect_err("ungathered tolerant run must be refused");
+        assert!(err.to_string().contains("tolerate-failures"), "{err}");
+
+        let params = GlbParams::default().with_l(2).with_workers_per_node(2);
+        let cfg = GlbConfig::new(4, params);
+        let opts =
+            SocketRunOpts { rank: 0, ranks: 2, port: 1, tolerate_failures: 1, ..Default::default() };
+        let err =
+            run_sockets_reduced(&cfg, &opts, |_, _| UtsQueue::new(up(4)), |_| {}, &SumReducer)
+                .expect_err("hierarchical tolerant run must be refused");
+        assert!(err.to_string().contains("one worker per node"), "{err}");
     }
 
     #[test]

@@ -245,7 +245,7 @@ pub mod fleet {
                 RankCmd { rank, cmd }
             })
             .collect();
-        let runs = run_fleet(cmds, &EngineOpts { deadline, echo: false })
+        let runs = run_fleet(cmds, &EngineOpts { deadline, echo: false, tolerate_failures: 0 })
             .unwrap_or_else(|e| panic!("fleet {exact_test:?} failed: {e:#}"));
 
         let mut logs: Vec<ProcLog> = Vec::with_capacity(ranks);
@@ -291,6 +291,107 @@ pub mod fleet {
             assert_ne!(p, 0);
             // The port was released and can be bound again immediately.
             std::net::TcpListener::bind(("127.0.0.1", p)).expect("rebind freed port");
+        }
+    }
+}
+
+pub mod chaos {
+    //! Deterministic fault injection for the crash-tolerance tests: kill
+    //! a chosen fleet rank at a chosen protocol phase, hard enough to
+    //! look exactly like a machine loss (SIGKILL — no unwinding, no
+    //! socket shutdown handshakes, no exit handlers).
+    //!
+    //! The runtime plants [`die_point`] calls at the interesting sites
+    //! (mid-steal, while-idle, during-deposit). They are no-ops unless
+    //! the environment arms this process:
+    //!
+    //! * `GLB_CHAOS_DIE` — the die-point name ([`MID_STEAL`],
+    //!   [`WHILE_IDLE`], [`DURING_DEPOSIT`]);
+    //! * `GLB_CHAOS_RANK` — the fleet rank that dies (every rank of a
+    //!   launched fleet inherits the same environment, so the rank check
+    //!   selects the victim);
+    //! * `GLB_CHAOS_AFTER` — die on the Nth hit of the point (default 1,
+    //!   which is also the setting the exactness argument in
+    //!   `place/socket.rs` covers).
+    //!
+    //! [`arm`] latches the plan once per process (first caller wins —
+    //! a real fleet process runs exactly one rank, and the in-process
+    //! multi-rank tests never set the environment).
+
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::OnceLock;
+
+    /// Die right after putting a steal request on the wire.
+    pub const MID_STEAL: &str = "mid-steal";
+    /// Die at the idle wait, after depositing all credit.
+    pub const WHILE_IDLE: &str = "while-idle";
+    /// Die right after writing a credit deposit to the root.
+    pub const DURING_DEPOSIT: &str = "during-deposit";
+
+    pub const ENV_DIE: &str = "GLB_CHAOS_DIE";
+    pub const ENV_RANK: &str = "GLB_CHAOS_RANK";
+    pub const ENV_AFTER: &str = "GLB_CHAOS_AFTER";
+
+    struct Plan {
+        point: String,
+        after: u64,
+    }
+
+    static PLAN: OnceLock<Option<Plan>> = OnceLock::new();
+    static HITS: AtomicU64 = AtomicU64::new(0);
+
+    /// Latch this process's fault plan from the environment. Called by
+    /// the socket runtime with its fleet rank; a no-op unless
+    /// `GLB_CHAOS_RANK` names exactly that rank.
+    pub fn arm(rank: usize) {
+        let _ = PLAN.set(plan_from_env(rank));
+    }
+
+    fn plan_from_env(rank: usize) -> Option<Plan> {
+        let point = std::env::var(ENV_DIE).ok()?;
+        let target: usize = std::env::var(ENV_RANK).ok()?.parse().ok()?;
+        if target != rank {
+            return None;
+        }
+        let after = std::env::var(ENV_AFTER).ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+        Some(Plan { point, after })
+    }
+
+    /// A possible crash site. No-op unless [`arm`] matched this process
+    /// and `point` is the armed one; the `GLB_CHAOS_AFTER`th matching
+    /// hit never returns.
+    pub fn die_point(point: &str) {
+        let Some(plan) = PLAN.get().and_then(|p| p.as_ref()) else { return };
+        if plan.point != point {
+            return;
+        }
+        if HITS.fetch_add(1, Ordering::SeqCst) + 1 >= plan.after {
+            die();
+        }
+    }
+
+    /// SIGKILL ourselves — the one signal that cannot be caught, so the
+    /// death is indistinguishable from a machine loss. `abort` is the
+    /// (also cleanup-free) fallback for environments without `sh`.
+    fn die() -> ! {
+        let pid = std::process::id();
+        let _ = std::process::Command::new("sh")
+            .arg("-c")
+            .arg(format!("kill -9 {pid}"))
+            .status();
+        std::process::abort();
+    }
+
+    #[cfg(test)]
+    mod tests {
+        #[test]
+        fn unarmed_die_points_are_no_ops() {
+            // The test environment never sets GLB_CHAOS_*, so arming and
+            // hitting every point must be survivable.
+            super::arm(0);
+            super::die_point(super::MID_STEAL);
+            super::die_point(super::WHILE_IDLE);
+            super::die_point(super::DURING_DEPOSIT);
         }
     }
 }

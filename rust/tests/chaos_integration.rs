@@ -1,0 +1,161 @@
+//! Chaos tests: SIGKILL a fleet rank at a chosen protocol phase and
+//! check the survivors still produce the *exact* answer (ISSUE 6's
+//! acceptance scenario). The kill is injected by `testkit::chaos` via
+//! environment variables the launched ranks inherit; SIGKILL leaves no
+//! time for goodbyes, so from the fleet's point of view the rank's
+//! machine simply vanished.
+//!
+//! Process-spawning tests are `#[ignore]`d like the socket fleet tests;
+//! CI runs them explicitly with `--ignored --test-threads=1`.
+
+use std::path::PathBuf;
+use std::process::Output;
+
+use glb::apps::fib::fib;
+use glb::apps::uts::{sequential_count, UtsParams};
+use glb::launch::report::load_fleet_report;
+use glb::testkit::{chaos, fleet};
+use glb::util::json::Value;
+
+/// The pinned acceptance workload: UTS depth 8 with the repo's fixed
+/// tree parameters is exactly 41314 nodes — any lost or double-counted
+/// loot after a crash shows up here as a wrong count, not a flake.
+const UTS_DEPTH_8_NODES: u64 = 41314;
+
+fn launch_with_chaos(
+    launcher_args: &[&str],
+    app_args: &[&str],
+    die_point: &str,
+    victim_rank: usize,
+) -> Output {
+    let bin = env!("CARGO_BIN_EXE_glb");
+    let port = fleet::free_port();
+    std::process::Command::new(bin)
+        .arg("launch")
+        .args(["--port", &port.to_string()])
+        .args(launcher_args)
+        .args(app_args)
+        .env(chaos::ENV_DIE, die_point)
+        .env(chaos::ENV_RANK, victim_rank.to_string())
+        .output()
+        .expect("run glb launch")
+}
+
+fn report_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("glb-chaos-{tag}-{}.json", std::process::id()))
+}
+
+fn assert_success(output: &Output) {
+    assert!(
+        output.status.success(),
+        "glb launch failed ({}):\n--- stdout\n{}\n--- stderr\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+}
+
+/// Load a fleet report and return (result, dead_ranks).
+fn result_and_dead(path: &PathBuf) -> (u64, Vec<u64>) {
+    let report = load_fleet_report(path).expect("fleet report parses");
+    let result = report.get("result").and_then(Value::as_u64).expect("numeric result");
+    let dead: Vec<u64> = report
+        .get("dead_ranks")
+        .and_then(Value::as_arr)
+        .expect("dead_ranks array")
+        .iter()
+        .map(|v| v.as_u64().expect("dead rank is numeric"))
+        .collect();
+    (result, dead)
+}
+
+/// ISSUE 6's acceptance scenario: a 4-rank UTS fleet with
+/// `--tolerate-failures 1` survives rank 2 being SIGKILLed right after
+/// it puts a steal request on the wire, and still counts *exactly*
+/// 41314 nodes — the retained-loot replay and credit reclaim must not
+/// lose or duplicate a single subtree.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn tolerant_fleet_survives_a_mid_steal_sigkill_exactly() {
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: 8 };
+    assert_eq!(sequential_count(&up), UTS_DEPTH_8_NODES, "pinned workload moved");
+
+    let report = report_path("mid-steal");
+    let out = launch_with_chaos(
+        &["--np", "4", "--tolerate-failures", "1", "--report", report.to_str().unwrap()],
+        &["uts", "--depth", "8"],
+        chaos::MID_STEAL,
+        2,
+    );
+    assert_success(&out);
+
+    let (result, dead) = result_and_dead(&report);
+    assert_eq!(result, UTS_DEPTH_8_NODES, "crash recovery must keep the count exact");
+    assert_eq!(dead, vec![2], "the report must record the absorbed death");
+    std::fs::remove_file(&report).ok();
+}
+
+/// The same kill without `--tolerate-failures` must fail the whole
+/// fleet quickly and loudly — silent wrong answers are the one
+/// unacceptable outcome.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn untolerated_sigkill_still_fails_the_fleet_fast() {
+    let t0 = std::time::Instant::now();
+    let out = launch_with_chaos(&["--np", "4"], &["uts", "--depth", "8"], chaos::MID_STEAL, 2);
+    let elapsed = t0.elapsed();
+    assert!(
+        !out.status.success(),
+        "a rank death without --tolerate-failures must fail the launch:\n{}",
+        String::from_utf8_lossy(&out.stdout),
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("rank 2"), "failure must name the dead rank: {stderr}");
+    assert!(
+        elapsed < std::time::Duration::from_secs(60),
+        "fail-fast took {elapsed:?} — the launcher waited out the deadline"
+    );
+}
+
+/// Kill a rank at the idle wait (all credit deposited, empty bag). The
+/// dead rank's last banked ack snapshot covers everything it computed,
+/// so the gathered fib sum must still be exact.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn tolerant_fleet_survives_a_while_idle_sigkill_exactly() {
+    const N: u64 = 25;
+    let report = report_path("while-idle");
+    let out = launch_with_chaos(
+        &["--np", "4", "--tolerate-failures", "1", "--report", report.to_str().unwrap()],
+        &["fib", "--fib-n", "25"],
+        chaos::WHILE_IDLE,
+        2,
+    );
+    assert_success(&out);
+
+    let (result, dead) = result_and_dead(&report);
+    assert_eq!(result, fib(N), "crash recovery must keep the fib sum exact");
+    assert_eq!(dead, vec![2]);
+    std::fs::remove_file(&report).ok();
+}
+
+/// Kill a rank right after it writes a credit deposit to rank 0: the
+/// deposit may or may not have landed, and the post-mortem reconcile
+/// has to balance the books either way.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn tolerant_fleet_survives_a_during_deposit_sigkill_exactly() {
+    let report = report_path("during-deposit");
+    let out = launch_with_chaos(
+        &["--np", "4", "--tolerate-failures", "1", "--report", report.to_str().unwrap()],
+        &["uts", "--depth", "8"],
+        chaos::DURING_DEPOSIT,
+        2,
+    );
+    assert_success(&out);
+
+    let (result, dead) = result_and_dead(&report);
+    assert_eq!(result, UTS_DEPTH_8_NODES);
+    assert_eq!(dead, vec![2]);
+    std::fs::remove_file(&report).ok();
+}

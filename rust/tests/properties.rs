@@ -205,6 +205,95 @@ fn prop_wire_truncated_frames_error_not_panic() {
     });
 }
 
+// ---------------------------------------------------------------------
+// control-link codec hostility (crash tolerance rides on these frames:
+// a corrupt Leave/Ack/Reconcile must error, never panic a survivor)
+// ---------------------------------------------------------------------
+
+fn random_str(g: &mut Gen, max: usize) -> String {
+    let len = g.usize(0..max);
+    (0..len).map(|_| (b'!' + (g.u64(0..90) as u8)) as char).collect()
+}
+
+/// A random `Ctrl` of the given variant index — the caller loops 0..12
+/// so every run covers every variant, including the fault-tolerance
+/// frames (`Join`/`Leave`/`Ack`/`Reconcile`).
+fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
+    use wire::Ctrl;
+    match variant {
+        0 => Ctrl::Register { rank: g.u64(0..u64::MAX), addr: random_str(g, 40) },
+        1 => Ctrl::PeerMap {
+            epoch: g.u64(0..u64::MAX),
+            // Dead ranks keep their slot as an empty string.
+            addrs: (0..g.usize(0..6))
+                .map(|_| if g.bool(0.2) { String::new() } else { random_str(g, 24) })
+                .collect(),
+        },
+        2 => Ctrl::Ready { rank: g.u64(0..u64::MAX) },
+        3 => Ctrl::Go,
+        4 => Ctrl::Deposit { atoms: g.u64(0..u64::MAX) },
+        5 => Ctrl::Replenish { want: g.u64(0..u64::MAX) },
+        6 => Ctrl::Grant { atoms: g.u64(0..u64::MAX) },
+        7 => Ctrl::Result { bytes: (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect() },
+        8 => Ctrl::Join {
+            epoch: g.u64(0..u64::MAX),
+            rank: g.u64(0..u64::MAX),
+            addr: random_str(g, 40),
+        },
+        9 => Ctrl::Leave { epoch: g.u64(0..u64::MAX), rank: g.u64(0..u64::MAX) },
+        10 => Ctrl::Ack {
+            rank: g.u64(0..u64::MAX),
+            result: (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect(),
+            acked: (0..g.usize(0..8))
+                .map(|_| (g.u64(0..u64::MAX), g.u64(0..u64::MAX)))
+                .collect(),
+        },
+        _ => Ctrl::Reconcile {
+            rank: g.u64(0..u64::MAX),
+            sent: g.u64(0..u64::MAX),
+            received: g.u64(0..u64::MAX),
+        },
+    }
+}
+
+#[test]
+fn prop_ctrl_roundtrip_every_variant() {
+    check_cases("ctrl-roundtrip", 200, |g: &mut Gen| {
+        for variant in 0..12 {
+            let c = random_ctrl(g, variant);
+            let back = wire::Ctrl::decode(&c.to_body()).expect("decode own encoding");
+            assert_eq!(back, c);
+        }
+    });
+}
+
+#[test]
+fn prop_ctrl_hostile_bytes_error_not_panic() {
+    check_cases("ctrl-hostility", 60, |g: &mut Gen| {
+        for variant in 0..12 {
+            let body = random_ctrl(g, variant).to_body();
+            // Every strict prefix is a clean error (a survivor reading a
+            // dying peer's half-written frame must not panic or misread).
+            for cut in 0..body.len() {
+                assert!(wire::Ctrl::decode(&body[..cut]).is_err(), "variant {variant} cut {cut}");
+            }
+            // Trailing garbage is rejected, not silently ignored.
+            let mut long = body.clone();
+            long.push(g.u64(0..256) as u8);
+            assert!(wire::Ctrl::decode(&long).is_err(), "variant {variant} trailing byte");
+            // A flipped bit may decode to something else or error — never
+            // panic (string fields may go non-utf8, counts may explode).
+            let mut corrupt = body.clone();
+            let at = g.usize(0..corrupt.len());
+            corrupt[at] ^= 1 << g.usize(0..8);
+            let _ = wire::Ctrl::decode(&corrupt);
+        }
+        // Pure noise must also decode totally (Ok or Err, no panic).
+        let noise: Vec<u8> = (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect();
+        let _ = wire::Ctrl::decode(&noise);
+    });
+}
+
 #[test]
 fn prop_wire_bytes_pin_sim_accounting_to_codec() {
     // The simulator charges `Msg::wire_bytes` per message; the socket
@@ -640,6 +729,248 @@ fn prop_credit_conserved_under_reorder() {
         let (total, recovered) = root.totals();
         assert_eq!(total, recovered, "every atom recovered at quiescence");
         assert!(ledgers.iter().all(|l| l.pool() == 0), "idle ranks hold no credit");
+    });
+}
+
+#[test]
+fn prop_credit_conserved_under_rank_death() {
+    // Crash tolerance's accounting core: when a rank dies, the root
+    // solves `granted − deposited + Σsent − Σreceived` from the
+    // survivors' books and reclaims exactly the atoms that died with the
+    // rank — its pool, deposits written but never landed, and loot it
+    // exported that nobody received. This model drives random schedules
+    // to a random crash point, kills one non-root rank (its queued
+    // deposits and in-flight exports each land or vanish at random, like
+    // a severed TCP link), checks the reconcile formula against the
+    // ground-truth loss, reclaims, and then runs the survivors to
+    // quiescence — `recovered == total` must still be exact.
+    use glb::glb::termination::{CreditHome, CreditLedger, CreditRoot, Ledger};
+    use std::sync::{Arc, Mutex};
+
+    struct BookedHome {
+        rank: usize,
+        root: Arc<CreditRoot>,
+        pending: Arc<Mutex<Vec<(usize, u64)>>>,
+        granted: Arc<Mutex<Vec<u64>>>,
+    }
+
+    impl CreditHome for BookedHome {
+        fn deposit(&self, atoms: u64) {
+            self.pending.lock().unwrap().push((self.rank, atoms));
+        }
+        fn replenish(&self, want: u64) -> u64 {
+            let got = self.root.mint(want);
+            self.granted.lock().unwrap()[self.rank] += got;
+            got
+        }
+    }
+
+    check_cases("credit-rank-death", 150, |g: &mut Gen| {
+        let ranks = g.usize(3..8);
+        let root = CreditRoot::new();
+        let pending: Arc<Mutex<Vec<(usize, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let granted = Arc::new(Mutex::new(vec![0u64; ranks]));
+        let ledgers: Vec<_> = (0..ranks)
+            .map(|r| {
+                let grant = g.u64(1..5);
+                root.grant(grant);
+                granted.lock().unwrap()[r] = grant;
+                let home = BookedHome {
+                    rank: r,
+                    root: root.clone(),
+                    pending: pending.clone(),
+                    granted: granted.clone(),
+                };
+                CreditLedger::new(Arc::new(home), grant)
+            })
+            .collect();
+        root.arm();
+        for l in &ledgers {
+            l.incr();
+        }
+
+        let mut alive = vec![true; ranks];
+        // Root-received deposits per rank (the root's `deposited` books).
+        let mut deposited = vec![0u64; ranks];
+        // delivered[s][d]: atoms of s's loot that d merged (i.e. acked —
+        // in-flight retained entries are re-imported at death instead).
+        let mut delivered = vec![vec![0u64; ranks]; ranks];
+        let mut inflight: Vec<(usize, usize, u64)> = Vec::new();
+
+        let conserved = |alive: &[bool], inflight: &[(usize, usize, u64)]| {
+            let (total, recovered) = root.totals();
+            let pools: u64 =
+                ledgers.iter().zip(alive).filter(|(_, a)| **a).map(|(l, _)| l.pool()).sum();
+            let queued: u64 = pending.lock().unwrap().iter().map(|&(_, a)| a).sum();
+            let flying: u64 = inflight.iter().map(|&(_, _, c)| c).sum();
+            assert_eq!(total, recovered + pools + queued + flying);
+        };
+
+        let steps = g.usize(20..120);
+        let death_at = g.usize(0..steps / 2);
+        let mut death_done = false;
+        for step in 0..steps {
+            if step == death_at && !death_done {
+                death_done = true;
+                let d = g.usize(1..ranks);
+                alive[d] = false;
+                let mut lost = 0u64;
+                // The dead rank's written deposits: each either landed
+                // before the root's reader saw EOF, or died in a buffer.
+                let drained: Vec<(usize, u64)> = {
+                    let mut q = pending.lock().unwrap();
+                    let (dead, keep) = q.drain(..).partition(|&(r, _)| r == d);
+                    *q = keep;
+                    dead
+                };
+                for (_, atoms) in drained {
+                    if g.bool(0.5) {
+                        root.deposit(atoms);
+                        deposited[d] += atoms;
+                    } else {
+                        lost += atoms;
+                    }
+                }
+                // In-flight loot: exports *to* the dead rank are retained
+                // by their senders and re-imported (the message token is
+                // consumed as the self-merge completes); exports *from*
+                // it race the link teardown.
+                let mut keep = Vec::new();
+                for (from, to, credit) in inflight.drain(..) {
+                    if to == d {
+                        ledgers[from].import_credit(credit);
+                        ledgers[from].decr();
+                    } else if from == d {
+                        if g.bool(0.5) {
+                            ledgers[to].import_credit(credit);
+                            delivered[d][to] += credit;
+                        } else {
+                            lost += credit;
+                        }
+                    } else {
+                        keep.push((from, to, credit));
+                    }
+                }
+                inflight = keep;
+                // The survivors' books must solve to exactly the atoms
+                // that actually vanished.
+                let sent_to_dead: u64 = (0..ranks).map(|s| delivered[s][d]).sum();
+                let recv_from_dead: u64 = (0..ranks).map(|s| delivered[d][s]).sum();
+                let solved = granted.lock().unwrap()[d] as i128 - deposited[d] as i128
+                    + sent_to_dead as i128
+                    - recv_from_dead as i128;
+                let truth = (ledgers[d].pool() + lost) as i128;
+                assert_eq!(solved, truth, "reconcile books disagree with the actual loss");
+                assert!(solved >= 0);
+                root.reclaim(solved as u64);
+                conserved(&alive, &inflight);
+                continue;
+            }
+            let r = loop {
+                let r = g.usize(0..ranks);
+                if alive[r] {
+                    break r;
+                }
+            };
+            match g.usize(0..5) {
+                0 => {
+                    if ledgers[r].pool() >= 1 && ledgers[r].tokens() >= 1 {
+                        ledgers[r].incr();
+                    }
+                }
+                1 => {
+                    if ledgers[r].tokens() >= 1 {
+                        ledgers[r].decr();
+                    }
+                }
+                2 => {
+                    if ledgers[r].tokens() >= 1 {
+                        let to = loop {
+                            let t = g.usize(0..ranks);
+                            if t != r && alive[t] {
+                                break t;
+                            }
+                        };
+                        ledgers[r].incr();
+                        let credit = ledgers[r].export_credit();
+                        assert!(credit >= 1, "loot must carry credit");
+                        inflight.push((r, to, credit));
+                    }
+                }
+                3 => {
+                    if !inflight.is_empty() {
+                        let at = g.usize(0..inflight.len());
+                        let (from, to, credit) = inflight.swap_remove(at);
+                        ledgers[to].import_credit(credit);
+                        delivered[from][to] += credit;
+                        if g.bool(0.5) {
+                            ledgers[to].decr();
+                        }
+                    }
+                }
+                _ => {
+                    let landed = {
+                        let mut q = pending.lock().unwrap();
+                        if q.is_empty() {
+                            None
+                        } else {
+                            let at = g.usize(0..q.len());
+                            Some(q.swap_remove(at))
+                        }
+                    };
+                    if let Some((rank, atoms)) = landed {
+                        root.deposit(atoms);
+                        deposited[rank] += atoms;
+                    }
+                }
+            }
+            conserved(&alive, &inflight);
+            let tokens: i64 = ledgers
+                .iter()
+                .zip(&alive)
+                .filter(|(_, a)| **a)
+                .map(|(l, _)| l.tokens())
+                .sum();
+            if root.quiescent() {
+                assert_eq!(tokens, 0, "fired while survivors held tokens");
+                assert!(inflight.is_empty(), "fired while loot was in flight");
+                assert!(pending.lock().unwrap().is_empty(), "fired before all deposits");
+                return;
+            }
+        }
+
+        // Drain the survivors: land all loot, idle everyone, deliver
+        // every deposit. Recovery must leave quiescence reachable *and
+        // exact* — reclaiming a wrong count would fire early or never.
+        while let Some((from, to, credit)) = inflight.pop() {
+            ledgers[to].import_credit(credit);
+            delivered[from][to] += credit;
+            ledgers[to].decr();
+        }
+        for (l, a) in ledgers.iter().zip(&alive) {
+            if *a {
+                while l.tokens() > 0 {
+                    l.decr();
+                }
+            }
+        }
+        loop {
+            let landed = {
+                let mut q = pending.lock().unwrap();
+                q.pop()
+            };
+            match landed {
+                Some((rank, atoms)) => {
+                    root.deposit(atoms);
+                    deposited[rank] += atoms;
+                }
+                None => break,
+            }
+        }
+        conserved(&alive, &inflight);
+        assert!(root.quiescent(), "a drained fleet with one absorbed death must be detected");
+        let (total, recovered) = root.totals();
+        assert_eq!(total, recovered, "every atom recovered, dead rank's by reclaim");
     });
 }
 
