@@ -213,7 +213,7 @@ COMMANDS
   uts        Unbalanced Tree Search        --places --depth --b0 --seed-tree
   bc         Betweenness Centrality        --places --scale --engine sparse|dense
   fib        Fibonacci (appendix demo)     --fib-n --places [--transport tcp]
-  nqueens    N-Queens                      --board --places
+  nqueens    N-Queens                      --board --places [--transport tcp]
   fig        regenerate a paper figure     --id 2..10 [--csv] [--places a,b,c]
   launch     spawn + watchdog a whole tcp fleet (one process per rank):
                glb launch --np 4 uts --depth 10 --report fleet.json
@@ -232,8 +232,8 @@ COMMANDS
 COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)
   --transport KIND       tcp|thread|sim — tcp runs this process as one GLB
-                         node of a multi-process mesh fleet (uts, bc, fib);
-                         launch one process per node:
+                         node of a multi-process mesh fleet (uts, bc, fib,
+                         nqueens); launch one process per node:
                            glb uts --transport tcp --peers 4 --rank 0 ...
                            glb uts --transport tcp --peers 4 --rank 1 ...
   --rank R --peers N     fleet membership (tcp; rank 0 is bootstrap only —

@@ -50,6 +50,15 @@
 //!
 //! Conservation under arbitrary message delay/reordering is checked by
 //! `prop_credit_conserved_under_reorder` in `rust/tests/properties.rs`.
+//!
+//! On the socket fleet every credit movement (`Deposit`/`Replenish`/
+//! `Grant` control frames, atoms riding loot messages) is queued on the
+//! rank's I/O reactor and coalesced into batched `writev` sends with
+//! whatever mesh traffic is pending ([`crate::place::reactor`]) — credit
+//! traffic costs no extra syscalls or wakeups of its own. None of the
+//! proofs above care: conservation is about *which* atoms exist, not
+//! when frames flush, and the asynchronous deposit contract was already
+//! "eventually arrives, in order per link".
 
 use std::cell::Cell;
 use std::rc::Rc;

@@ -146,9 +146,26 @@ pub fn put_u64(out: &mut Vec<u8>, v: u64) {
 /// A value with a self-delimiting byte encoding. Task bags implement this
 /// to travel between processes; `encode` followed by `decode` must be the
 /// identity (property-checked in `rust/tests/properties.rs`).
+///
+/// `encode` is the *into-buffer* path: it appends to whatever `Vec` the
+/// caller hands it, so the socket runtime's pooled frame buffers
+/// ([`BufferPool`]) serialize whole frames without a per-message
+/// allocation. [`WireCodec::decode_slice`] is the matching
+/// slice-borrowing decode: it reads straight out of a staged receive
+/// buffer ([`FrameAssembler`]) with no intermediate copy.
 pub trait WireCodec: Sized {
     fn encode(&self, out: &mut Vec<u8>);
     fn decode(r: &mut Reader<'_>) -> Result<Self, WireError>;
+
+    /// Decode a value from the front of a borrowed slice, returning it
+    /// with the number of bytes consumed. Trailing bytes are the
+    /// caller's business (frames carry several values back to back).
+    fn decode_slice(buf: &[u8]) -> Result<(Self, usize), WireError> {
+        let mut r = Reader::new(buf);
+        let v = Self::decode(&mut r)?;
+        let used = buf.len() - r.remaining();
+        Ok((v, used))
+    }
 }
 
 impl WireCodec for u32 {
@@ -533,6 +550,193 @@ pub fn frame(body: Vec<u8>) -> Vec<u8> {
     out
 }
 
+/// Reserve a length prefix at the current end of `out` and return its
+/// offset. Write the frame body, then patch the prefix with
+/// [`end_frame`]. This is the zero-copy path: the body is encoded
+/// directly into the (pooled) output buffer, never into a scratch `Vec`.
+pub fn begin_frame(out: &mut Vec<u8>) -> usize {
+    let at = out.len();
+    put_u32(out, 0);
+    at
+}
+
+/// Patch the length prefix reserved by [`begin_frame`] at `at` to cover
+/// everything appended since. Returns the body length.
+pub fn end_frame(out: &mut Vec<u8>, at: usize) -> usize {
+    let body_len = out.len() - at - FRAME_LEN_BYTES;
+    out[at..at + FRAME_LEN_BYTES].copy_from_slice(&(body_len as u32).to_le_bytes());
+    body_len
+}
+
+/// Encode a complete mesh data frame (length prefix + route + message
+/// body) into `out`, appending. Returns the frame's *body* length (what
+/// the length prefix says), so callers can enforce [`MAX_FRAME_BYTES`]
+/// sender-side like [`write_frame`] does.
+pub fn encode_data_frame_into<B: WireCodec>(to: PlaceId, msg: &Msg<B>, out: &mut Vec<u8>) -> usize {
+    let at = begin_frame(out);
+    put_u64(out, to as u64);
+    encode_msg_body(msg, out);
+    end_frame(out, at)
+}
+
+/// Encode a complete control frame (length prefix + [`Ctrl`] body) into
+/// `out`, appending. Returns the frame's body length.
+pub fn encode_ctrl_frame_into(c: &Ctrl, out: &mut Vec<u8>) -> usize {
+    let at = begin_frame(out);
+    c.encode(out);
+    end_frame(out, at)
+}
+
+// ---------------------------------------------------------------------
+// pooled frame buffers + staged nonblocking frame assembly
+// ---------------------------------------------------------------------
+
+/// How much capacity a recycled buffer may keep. Bags are usually tiny
+/// (steal/credit frames are [`ENVELOPE_BYTES`] + 8), but a giant loot
+/// frame would otherwise pin its high-water allocation in the pool
+/// forever.
+const POOL_KEEP_CAPACITY: usize = 64 * 1024;
+/// Buffers retained per pool; beyond this, returned buffers are freed.
+const POOL_KEEP_COUNT: usize = 256;
+
+/// A free list of frame buffers shared by a rank's senders and its I/O
+/// reactor. Steady-state loot/credit traffic encodes into a recycled
+/// `Vec` ([`BufferPool::get`]) and returns it once the reactor has
+/// flushed the frame ([`BufferPool::put_arc`]) — no allocation per
+/// message once the pool is warm. Retention ledgers in tolerant mode
+/// hold a clone of the same `Arc`, so a retained frame simply stays
+/// alive until its idle-point `Ack` prunes it, at which point the buffer
+/// drops back into the pool.
+#[derive(Default)]
+pub struct BufferPool {
+    free: std::sync::Mutex<Vec<Vec<u8>>>,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cleared buffer, recycled when one is pooled.
+    pub fn get(&self) -> Vec<u8> {
+        let mut buf = self.free.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return a buffer to the pool (bounded: oversized or surplus
+    /// buffers are simply dropped).
+    pub fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > POOL_KEEP_CAPACITY {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < POOL_KEEP_COUNT {
+            free.push(buf);
+        }
+    }
+
+    /// Recycle a frame the reactor has finished sending. The queue holds
+    /// frames behind `Arc`s because tolerant-mode retention may keep a
+    /// clone; the buffer only returns to the pool once the last holder
+    /// lets go.
+    pub fn put_arc(&self, frame: std::sync::Arc<Vec<u8>>) {
+        if let Ok(buf) = std::sync::Arc::try_unwrap(frame) {
+            self.put(buf);
+        }
+    }
+
+    /// Buffers currently pooled (test observability).
+    pub fn pooled(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// When the consumed prefix of the staging buffer grows past this, the
+/// unconsumed tail is slid back to the front (amortized O(1) per byte).
+const ASSEMBLER_COMPACT_AT: usize = 32 * 1024;
+
+/// Per-peer staged read buffer for a nonblocking socket: raw bytes land
+/// in [`FrameAssembler::read_space`] / [`FrameAssembler::commit`] (or
+/// [`FrameAssembler::feed`]), and [`FrameAssembler::next_frame`] yields
+/// complete length-prefixed frame bodies *borrowed in place* — a frame
+/// is only ever copied out of the kernel once, no matter how the bytes
+/// were split across reads.
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    /// Start of unconsumed bytes.
+    pos: usize,
+    /// End of valid bytes (`pos..filled` is unconsumed).
+    filled: usize,
+    /// Frame-length cap, as in [`read_frame`].
+    max: usize,
+}
+
+impl FrameAssembler {
+    pub fn new(max: usize) -> Self {
+        Self { buf: Vec::new(), pos: 0, filled: 0, max }
+    }
+
+    /// Unconsumed bytes currently staged (partial or undrained frames).
+    pub fn buffered(&self) -> usize {
+        self.filled - self.pos
+    }
+
+    /// A writable slice of at least `min` bytes at the end of the staged
+    /// data, for a nonblocking `read` to fill. Follow with
+    /// [`FrameAssembler::commit`] for however many bytes landed.
+    pub fn read_space(&mut self, min: usize) -> &mut [u8] {
+        if self.pos == self.filled {
+            // Everything consumed: restart at the front for free.
+            self.pos = 0;
+            self.filled = 0;
+        } else if self.pos >= ASSEMBLER_COMPACT_AT {
+            self.buf.copy_within(self.pos..self.filled, 0);
+            self.filled -= self.pos;
+            self.pos = 0;
+        }
+        if self.buf.len() < self.filled + min {
+            self.buf.resize(self.filled + min, 0);
+        }
+        &mut self.buf[self.filled..]
+    }
+
+    /// Mark `n` bytes of the last [`FrameAssembler::read_space`] slice
+    /// as filled by the kernel.
+    pub fn commit(&mut self, n: usize) {
+        self.filled += n;
+        debug_assert!(self.filled <= self.buf.len());
+    }
+
+    /// Copy-in path for tests and non-socket sources.
+    pub fn feed(&mut self, chunk: &[u8]) {
+        let space = self.read_space(chunk.len());
+        space[..chunk.len()].copy_from_slice(chunk);
+        self.commit(chunk.len());
+    }
+
+    /// The next complete frame body, borrowed from the staging buffer,
+    /// or `Ok(None)` if more bytes are needed. A length prefix over the
+    /// cap is an error (corrupt peer), as in [`read_frame`].
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, WireError> {
+        let avail = self.filled - self.pos;
+        if avail < FRAME_LEN_BYTES {
+            return Ok(None);
+        }
+        let len4: [u8; 4] = self.buf[self.pos..self.pos + FRAME_LEN_BYTES].try_into().unwrap();
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > self.max {
+            return Err(WireError::Invalid("frame exceeds length cap"));
+        }
+        if avail < FRAME_LEN_BYTES + len {
+            return Ok(None);
+        }
+        let start = self.pos + FRAME_LEN_BYTES;
+        self.pos = start + len;
+        Ok(Some(&self.buf[start..start + len]))
+    }
+}
+
 /// Encode a message as a complete length-prefixed frame.
 pub fn encode_frame<B: WireCodec>(msg: &Msg<B>) -> Vec<u8> {
     let mut body = Vec::with_capacity(MSG_FIXED_BYTES);
@@ -852,5 +1056,146 @@ mod tests {
         pipe.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut cursor = &pipe[..];
         assert!(read_frame(&mut cursor, MAX_FRAME_BYTES).is_err());
+    }
+
+    #[test]
+    fn into_buffer_data_frames_match_the_allocating_path() {
+        let msgs = [
+            Msg::<Bag>::Steal { thief: 7, lifeline: false, nonce: 41 },
+            Msg::<Bag>::Loot {
+                victim: 9,
+                bag: Some(ArrayListTaskBag::from_vec(vec![1u64, 2, 3])),
+                lifeline: false,
+                nonce: None,
+                credit: 17,
+            },
+            Msg::<Bag>::Terminate,
+        ];
+        for msg in msgs {
+            let old = frame(encode_data_frame_body(5, &msg));
+            let mut new = Vec::new();
+            let body_len = encode_data_frame_into(5, &msg, &mut new);
+            assert_eq!(new, old, "{}", msg.kind());
+            assert_eq!(body_len + FRAME_LEN_BYTES, old.len());
+        }
+    }
+
+    #[test]
+    fn into_buffer_frames_append_without_clobbering() {
+        // Batched sends stack several frames in one buffer; each must
+        // patch only its own length prefix.
+        let mut buf = Vec::new();
+        encode_ctrl_frame_into(&Ctrl::Deposit { atoms: 3 }, &mut buf);
+        let first = buf.clone();
+        encode_ctrl_frame_into(&Ctrl::Grant { atoms: 9 }, &mut buf);
+        assert_eq!(&buf[..first.len()], &first[..]);
+        assert_eq!(buf[first.len()..], frame(Ctrl::Grant { atoms: 9 }.to_body()));
+    }
+
+    #[test]
+    fn decode_slice_reports_consumed_bytes() {
+        let mut out = Vec::new();
+        42u64.encode(&mut out);
+        7u32.encode(&mut out);
+        let (a, used_a) = u64::decode_slice(&out).expect("u64");
+        assert_eq!((a, used_a), (42, 8));
+        let (b, used_b) = u32::decode_slice(&out[used_a..]).expect("u32");
+        assert_eq!((b, used_b), (7, 4));
+        assert_eq!(used_a + used_b, out.len());
+    }
+
+    #[test]
+    fn buffer_pool_recycles_and_bounds() {
+        let pool = BufferPool::new();
+        let mut buf = pool.get();
+        assert!(buf.is_empty());
+        buf.extend_from_slice(&[1, 2, 3]);
+        pool.put(buf);
+        assert_eq!(pool.pooled(), 1);
+        // The recycled buffer comes back cleared.
+        assert!(pool.get().is_empty());
+        assert_eq!(pool.pooled(), 0);
+        // Oversized buffers are not retained.
+        pool.put(Vec::with_capacity(POOL_KEEP_CAPACITY + 1));
+        assert_eq!(pool.pooled(), 0);
+        // put_arc only recycles the last holder.
+        let shared = std::sync::Arc::new(vec![9u8; 4]);
+        let retained = std::sync::Arc::clone(&shared);
+        pool.put_arc(shared);
+        assert_eq!(pool.pooled(), 0, "retained clone keeps the buffer out");
+        pool.put_arc(retained);
+        assert_eq!(pool.pooled(), 1);
+    }
+
+    #[test]
+    fn assembler_reassembles_frames_across_arbitrary_splits() {
+        let bodies: Vec<Vec<u8>> = vec![
+            Ctrl::Deposit { atoms: 1 }.to_body(),
+            Ctrl::Register { rank: 2, addr: "10.0.0.9:1234".into() }.to_body(),
+            Vec::new(), // zero-length body is a legal frame
+            Ctrl::Ack { rank: 1, result: vec![1; 60], acked: vec![(0, 2)] }.to_body(),
+        ];
+        let mut stream = Vec::new();
+        for b in &bodies {
+            stream.extend_from_slice(&frame(b.clone()));
+        }
+        // Split the byte stream at every position, including one byte at
+        // a time, and require the identical frame sequence back.
+        for split in 0..=stream.len() {
+            let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
+            let mut got: Vec<Vec<u8>> = Vec::new();
+            for chunk in [&stream[..split], &stream[split..]] {
+                for byte in chunk.chunks(1 + split % 3) {
+                    asm.feed(byte);
+                    while let Some(f) = asm.next_frame().expect("well-formed") {
+                        got.push(f.to_vec());
+                    }
+                }
+            }
+            assert_eq!(got, bodies, "split at {split}");
+            assert_eq!(asm.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn assembler_read_space_commit_path_matches_feed() {
+        let body = Ctrl::Replenish { want: 1 << 20 }.to_body();
+        let bytes = frame(body.clone());
+        let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
+        let mut sent = 0;
+        while sent < bytes.len() {
+            let n = (bytes.len() - sent).min(3);
+            let space = asm.read_space(n);
+            space[..n].copy_from_slice(&bytes[sent..sent + n]);
+            asm.commit(n);
+            sent += n;
+        }
+        assert_eq!(asm.next_frame().unwrap(), Some(&body[..]));
+        assert_eq!(asm.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_length_prefix() {
+        let mut asm = FrameAssembler::new(64);
+        asm.feed(&(65u32).to_le_bytes());
+        assert!(asm.next_frame().is_err());
+    }
+
+    #[test]
+    fn assembler_compacts_instead_of_growing_forever() {
+        let body = vec![7u8; 100];
+        let bytes = frame(body.clone());
+        let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
+        // Push far more traffic than the compaction threshold; the
+        // staging buffer must stay bounded near one frame + threshold.
+        for _ in 0..2000 {
+            asm.feed(&bytes);
+            assert_eq!(asm.next_frame().unwrap(), Some(&body[..]));
+        }
+        assert!(
+            asm.buf.len() < ASSEMBLER_COMPACT_AT + 2 * bytes.len(),
+            "staging buffer grew to {}",
+            asm.buf.len()
+        );
     }
 }

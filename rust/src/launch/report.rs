@@ -15,6 +15,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::glb::RunLog;
+use crate::place::NetStats;
 use crate::util::json::Value;
 
 /// Marker prefix of a rank's JSON report line on stdout.
@@ -35,6 +36,8 @@ pub fn rank_report_requested() -> bool {
 /// Build one rank's report. `rank_of` is `(rank, ranks)`; `result` is
 /// the app's reduced value as JSON (exact [`Value::Int`] for counting
 /// apps — the fleet/thread bit-identity check in CI depends on it).
+/// `net` is the rank's reactor counter snapshot
+/// ([`crate::place::net_stats`]; all-zero for thread/sim transports).
 pub fn build_rank_report(
     app: &str,
     transport: &str,
@@ -43,6 +46,7 @@ pub fn build_rank_report(
     elapsed_ns: u64,
     log: &RunLog,
     wire: (u64, u64),
+    net: NetStats,
 ) -> Value {
     Value::obj(vec![
         ("schema", Value::Str(RANK_SCHEMA.into())),
@@ -56,6 +60,12 @@ pub fn build_rank_report(
         ("wall_time_s", Value::Float(elapsed_ns as f64 / 1e9)),
         ("wire_tx_bytes", Value::Int(wire.0 as i64)),
         ("wire_rx_bytes", Value::Int(wire.1 as i64)),
+        ("frames_sent", Value::Int(net.frames_tx as i64)),
+        ("frames_recv", Value::Int(net.frames_rx as i64)),
+        ("batches", Value::Int(net.batches as i64)),
+        ("steal_latency_us", Value::Float(net.steal_latency_us)),
+        ("steal_samples", Value::Int(net.steal_samples as i64)),
+        ("io_threads", Value::Int(net.io_threads as i64)),
         ("log", log.to_json()),
     ])
 }
@@ -143,15 +153,29 @@ pub fn aggregate_fleet(
     }
     let mut places = 0i64;
     let (mut tx, mut rx) = (0i64, 0i64);
+    let (mut frames_tx, mut frames_rx, mut batches) = (0i64, 0i64, 0i64);
+    let (mut lat_weighted_us, mut lat_samples) = (0.0f64, 0i64);
+    let mut io_threads = 0i64;
     let mut totals = Value::Obj(Vec::new());
     for r in &rank_reports {
         places += r.get("places").and_then(Value::as_i64).unwrap_or(0);
         tx += r.get("wire_tx_bytes").and_then(Value::as_i64).unwrap_or(0);
         rx += r.get("wire_rx_bytes").and_then(Value::as_i64).unwrap_or(0);
+        frames_tx += r.get("frames_sent").and_then(Value::as_i64).unwrap_or(0);
+        frames_rx += r.get("frames_recv").and_then(Value::as_i64).unwrap_or(0);
+        batches += r.get("batches").and_then(Value::as_i64).unwrap_or(0);
+        let samples = r.get("steal_samples").and_then(Value::as_i64).unwrap_or(0);
+        lat_samples += samples;
+        lat_weighted_us += samples as f64
+            * r.get("steal_latency_us").and_then(Value::as_f64).unwrap_or(0.0);
+        io_threads += r.get("io_threads").and_then(Value::as_i64).unwrap_or(0);
         if let Some(t) = r.get("log").and_then(|l| l.get("totals")) {
             totals = sum_int_objects(&totals, t);
         }
     }
+    // Sample-weighted fleet-wide mean steal round-trip.
+    let steal_latency_us =
+        if lat_samples > 0 { lat_weighted_us / lat_samples as f64 } else { 0.0 };
     let result = rank_reports[0].get("result").cloned().unwrap_or(Value::Null);
     Ok(Value::obj(vec![
         ("schema", Value::Str(FLEET_SCHEMA.into())),
@@ -164,6 +188,12 @@ pub fn aggregate_fleet(
         ("result", result),
         ("wire_tx_bytes", Value::Int(tx)),
         ("wire_rx_bytes", Value::Int(rx)),
+        ("frames_sent", Value::Int(frames_tx)),
+        ("frames_recv", Value::Int(frames_rx)),
+        ("batches", Value::Int(batches)),
+        ("steal_latency_us", Value::Float(steal_latency_us)),
+        ("steal_samples", Value::Int(lat_samples)),
+        ("io_threads", Value::Int(io_threads)),
         ("totals", totals),
         ("per_rank", Value::Arr(rank_reports)),
     ]))
@@ -196,6 +226,12 @@ pub fn bench_entry(
     } else {
         wall_times_s.iter().sum::<f64>() / wall_times_s.len() as f64
     };
+    // Frame throughput of the final fleet at the best wall time; null
+    // when the transport reported no frames (thread runs) or no timings.
+    let frames_per_sec = match fleet.get("frames_sent").and_then(Value::as_i64) {
+        Some(f) if f > 0 && best.is_finite() && best > 0.0 => Value::Float(f as f64 / best),
+        _ => Value::Null,
+    };
     Value::obj(vec![
         ("name", Value::Str(name.into())),
         ("app", fleet.get("app").cloned().unwrap_or(Value::Null)),
@@ -209,6 +245,9 @@ pub fn bench_entry(
         ("result", fleet.get("result").cloned().unwrap_or(Value::Null)),
         ("wire_tx_bytes", fleet.get("wire_tx_bytes").cloned().unwrap_or(Value::Null)),
         ("wire_rx_bytes", fleet.get("wire_rx_bytes").cloned().unwrap_or(Value::Null)),
+        ("frames_sent", fleet.get("frames_sent").cloned().unwrap_or(Value::Null)),
+        ("frames_per_sec", frames_per_sec),
+        ("steal_latency_us", fleet.get("steal_latency_us").cloned().unwrap_or(Value::Null)),
     ])
 }
 
@@ -318,6 +357,27 @@ pub fn compare_with_baseline(current: &Value, baseline_path: &str, band: f64) ->
                 warnings += 1;
             }
         }
+        // Frame throughput is warn-only like wall time (it is wall time,
+        // restated per frame); entries predating the field (null/absent
+        // on either side) skip the check.
+        let (cur_fps, base_fps) = (
+            cur.get("frames_per_sec").and_then(Value::as_f64),
+            b.get("frames_per_sec").and_then(Value::as_f64),
+        );
+        if let (Some(cf), Some(bf)) = (cur_fps, base_fps) {
+            if bf > 0.0 && cf > 0.0 {
+                let rel = (cf - bf) / bf;
+                if rel.abs() > band {
+                    println!(
+                        "BENCH-WARN {name}: frames/sec {cf:.0} vs baseline {bf:.0} \
+                         ({rel:+.0}% beyond the ±{band:.0}% band)",
+                        rel = rel * 100.0,
+                        band = band * 100.0,
+                    );
+                    warnings += 1;
+                }
+            }
+        }
     }
     for b in base_entries {
         let name = b.get("name").and_then(Value::as_str).unwrap_or("?");
@@ -351,6 +411,14 @@ mod tests {
             1_000_000,
             &log,
             (100 * rank as u64, 50),
+            NetStats {
+                frames_tx: 10 + rank as u64,
+                frames_rx: 10,
+                batches: 4,
+                steal_latency_us: 100.0 * (rank + 1) as f64,
+                steal_samples: rank as u64,
+                io_threads: 1,
+            },
         )
     }
 
@@ -383,6 +451,13 @@ mod tests {
         );
         assert_eq!(fleet.get("wire_tx_bytes").and_then(Value::as_u64), Some(100));
         assert_eq!(fleet.get("wire_rx_bytes").and_then(Value::as_u64), Some(100));
+        assert_eq!(fleet.get("frames_sent").and_then(Value::as_u64), Some(21));
+        assert_eq!(fleet.get("frames_recv").and_then(Value::as_u64), Some(20));
+        assert_eq!(fleet.get("batches").and_then(Value::as_u64), Some(8));
+        assert_eq!(fleet.get("io_threads").and_then(Value::as_u64), Some(2));
+        // Rank 0 has no steal samples, so the fleet mean is rank 1's.
+        assert_eq!(fleet.get("steal_samples").and_then(Value::as_u64), Some(1));
+        assert_eq!(fleet.get("steal_latency_us").and_then(Value::as_f64), Some(200.0));
         let totals = fleet.get("totals").expect("totals");
         assert_eq!(totals.get("items_processed").and_then(Value::as_u64), Some(16));
         assert_eq!(totals.get("loot_bags_sent").and_then(Value::as_u64), Some(1));
@@ -438,6 +513,9 @@ mod tests {
         assert_eq!(e.get("best_s").and_then(Value::as_f64), Some(1.0));
         assert_eq!(e.get("mean_s").and_then(Value::as_f64), Some(1.5));
         assert_eq!(e.get("result").and_then(Value::as_u64), Some(41314));
+        // 10 fleet frames over the 1.0s best run.
+        assert_eq!(e.get("frames_per_sec").and_then(Value::as_f64), Some(10.0));
+        assert_eq!(e.get("steal_latency_us").and_then(Value::as_f64), Some(0.0));
         let doc = bench_report(vec![e]);
         assert_eq!(doc.get("schema").and_then(Value::as_str), Some(BENCH_SCHEMA));
         assert_eq!(Value::parse(&doc.render_pretty()).unwrap(), doc);
@@ -471,6 +549,29 @@ mod tests {
         let bad = bench_report(vec![entry("stable", 1.0, Value::Int(41))]);
         let err = compare_with_baseline(&bad, path.to_str().unwrap(), 0.30).unwrap_err();
         assert!(format!("{err:#}").contains("correctness regression"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn baseline_compare_diffs_frames_per_sec_warn_only() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("glb-baseline-fps-test-{}.json", std::process::id()));
+        let entry = |fps: Value| {
+            Value::obj(vec![
+                ("name", Value::Str("uts-d8".into())),
+                ("best_s", Value::Float(1.0)),
+                ("result", Value::Null),
+                ("frames_per_sec", fps),
+            ])
+        };
+        std::fs::write(&path, bench_report(vec![entry(Value::Float(1000.0))]).render_pretty())
+            .unwrap();
+        // Halved throughput: a warning, never a failure.
+        let current = bench_report(vec![entry(Value::Float(500.0))]);
+        assert_eq!(compare_with_baseline(&current, path.to_str().unwrap(), 0.30).unwrap(), 1);
+        // Null on either side (a baseline predating the field) skips it.
+        let current = bench_report(vec![entry(Value::Null)]);
+        assert_eq!(compare_with_baseline(&current, path.to_str().unwrap(), 0.30).unwrap(), 0);
         std::fs::remove_file(&path).ok();
     }
 

@@ -6,14 +6,14 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use glb::apps::bc::{sequential_bc, BcQueue, Graph, RmatParams};
 use glb::apps::fib::{fib, FibQueue};
-use glb::apps::nqueens::NQueensQueue;
+use glb::apps::nqueens::{NQueensQueue, KNOWN};
 use glb::apps::uts::{UtsParams, UtsQueue};
 use glb::cli::{glb_params_from, tcp_opts_from, transport_from, Args, TransportKind, USAGE};
 use glb::glb::task_queue::{SumReducer, VecSumReducer};
 use glb::glb::GlbConfig;
 use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
 use glb::launch::report::{build_rank_report, rank_report_line, rank_report_requested};
-use glb::place::{run_sockets_reduced, run_threads, wire_bytes, SocketRunOpts};
+use glb::place::{net_stats, run_sockets_reduced, run_threads, wire_bytes, NetStats, SocketRunOpts};
 use glb::runtime::{default_artifact_dir, DeviceService};
 use glb::sim::{run_sim, ArchProfile, BGQ};
 use glb::util::json::Value;
@@ -103,8 +103,16 @@ fn write_report_if_asked<R>(
 ) -> Result<()> {
     let Some(path) = args.get("report") else { return Ok(()) };
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let rank =
-        build_rank_report(app, transport, (0, 1), result_json, out.elapsed_ns, &out.log, (0, 0));
+    let rank = build_rank_report(
+        app,
+        transport,
+        (0, 1),
+        result_json,
+        out.elapsed_ns,
+        &out.log,
+        (0, 0),
+        NetStats::default(),
+    );
     let fleet = glb::launch::report::aggregate_fleet(
         app,
         &argv,
@@ -136,6 +144,7 @@ fn emit_rank_report<R>(
             out.elapsed_ns,
             &out.log,
             wire_bytes(),
+            net_stats(),
         );
         println!("{}", rank_report_line(&r));
     }
@@ -429,11 +438,39 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
     known.push("board");
     let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
     args.ensure_known(&known)?;
+    let b = args.parse_opt("board", 10u8)?;
     if transport_from(&args)? == TransportKind::Tcp {
-        bail!("--transport tcp currently supports the uts and bc commands");
+        // Fleet N-Queens: rank 0 seeds the empty board, partial
+        // placements travel as 13-byte wire entries, rank 0 gathers the
+        // fleet-wide solution count.
+        if args.get("report").is_some() {
+            bail!("use `glb launch --report` to aggregate a fleet report (not per rank)");
+        }
+        let t = tcp_opts_from(&args)?;
+        let params = glb_params_from(&args)?;
+        let p = args.parse_opt("places", t.peers * params.workers_per_node)?;
+        let cfg = GlbConfig::new(p, params);
+        let opts = socket_opts_from(&t);
+        let out = run_sockets_reduced(
+            &cfg,
+            &opts,
+            move |_, _| NQueensQueue::new(b),
+            |q| q.init_root(),
+            &SumReducer,
+        )?;
+        if t.rank == 0 {
+            println!("nqueens({b}) = {} solutions", out.result);
+            if (b as usize) < KNOWN.len() && out.result != KNOWN[b as usize] {
+                bail!("nqueens mismatch: expected {}", KNOWN[b as usize]);
+            }
+        } else {
+            println!("nqueens({b}) tcp rank {}/{} local-count={}", t.rank, t.peers, out.result);
+        }
+        finish(&out, "boards/s", args.flag("log"));
+        emit_rank_report("nqueens", t.rank, t.peers, Value::Int(out.result as i64), &out);
+        return Ok(());
     }
     let p = args.parse_opt("places", 4usize)?;
-    let b = args.parse_opt("board", 10u8)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);
     let out = run_threads(&cfg, move |_, _| NQueensQueue::new(b), |q| q.init_root(), &SumReducer);
     println!("nqueens({b}) = {} solutions", out.result);

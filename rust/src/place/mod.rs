@@ -25,10 +25,14 @@
 
 pub mod membership;
 pub mod network;
+pub mod reactor;
 pub mod runtime;
 pub mod socket;
 
 pub use membership::{DynamicMembership, FixedMembership, MembershipProvider, MembershipView};
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
-pub use socket::{misrouted_frames, run_sockets, run_sockets_reduced, wire_bytes, SocketRunOpts};
+pub use socket::{
+    io_threads_live, io_threads_spawned, misrouted_frames, net_stats, run_sockets,
+    run_sockets_reduced, wire_bytes, NetStats, SocketRunOpts,
+};

@@ -1,0 +1,632 @@
+//! Hand-rolled, dependency-free readiness-reactor primitives for the
+//! socket runtime's per-rank I/O event loop.
+//!
+//! No `mio`/`tokio`/`libc` — like `util/json.rs`, everything here is
+//! built from `std` plus direct `extern "C"` bindings to the handful of
+//! syscalls `std` itself already links (`epoll_*` on Linux, `poll` as
+//! the portable Unix fallback, `writev` everywhere). The pieces:
+//!
+//! * [`Poller`] — level-triggered readiness multiplexer over raw fds.
+//!   On Linux this is one `epoll` instance; elsewhere it degrades to
+//!   `poll(2)` over a registration table. Either way the reactor thread
+//!   blocks in exactly one syscall for *all* of a rank's mesh + control
+//!   sockets, instead of parking one OS thread per link.
+//! * [`Waker`] — a nonblocking socketpair that lets worker threads kick
+//!   a [`Poller::wait`] out of its sleep after enqueuing frames.
+//! * [`OutQueue`] — a per-peer write queue of encoded frames
+//!   (`Arc<Vec<u8>>`, so tolerant-mode retention can hold the same
+//!   buffer). [`OutQueue::flush`] coalesces queued frames into
+//!   `writev` batches — small steal/credit frames that accumulate
+//!   while a socket is busy leave in one syscall — and recycles fully
+//!   sent buffers into the shared
+//!   [`BufferPool`](crate::glb::wire::BufferPool).
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+
+use crate::glb::wire::BufferPool;
+
+// ---------------------------------------------------------------------
+// syscall surface
+// ---------------------------------------------------------------------
+
+/// `struct iovec`, as `writev` expects it.
+#[repr(C)]
+struct IoVec {
+    base: *const u8,
+    len: usize,
+}
+
+extern "C" {
+    fn writev(fd: i32, iov: *const IoVec, iovcnt: i32) -> isize;
+}
+
+/// Frames coalesced into a single `writev` call. (Linux `IOV_MAX` is
+/// 1024; 64 already amortizes the syscall while keeping the stack cheap.)
+const MAX_IOVS: usize = 64;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::io;
+    use super::RawFd;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0x80000;
+
+    /// Kernel `struct epoll_event`: packed on x86-64 (the one ABI where
+    /// the kernel definition differs from natural alignment).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Backend {
+        epfd: RawFd,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { epfd })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events: mask, data: token };
+            let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, mask, token)
+        }
+
+        pub fn modify(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, mask, token)
+        }
+
+        pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&self, out: &mut Vec<super::Event>, timeout_ms: i32) -> io::Result<()> {
+            let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+            let n = loop {
+                let rc =
+                    unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms) };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            };
+            for ev in &buf[..n] {
+                // Copy out of the (possibly packed) struct before use.
+                let events = ev.events;
+                let token = ev.data;
+                out.push(super::Event {
+                    token,
+                    readable: events & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                    writable: events & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Backend {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    use super::io;
+    use super::Mutex;
+    use super::RawFd;
+
+    // Reuse the epoll mask vocabulary so the frontend is identical; the
+    // values are translated to poll(2) bits per wait.
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    /// `poll(2)` fallback: registrations live in a table, and every wait
+    /// rebuilds the pollfd array. O(n) per wake, but n here is a rank's
+    /// peer count, and only non-Linux hosts pay it.
+    pub struct Backend {
+        regs: Mutex<Vec<(RawFd, u32, u64)>>,
+    }
+
+    impl Backend {
+        pub fn new() -> io::Result<Self> {
+            Ok(Self { regs: Mutex::new(Vec::new()) })
+        }
+
+        pub fn add(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            if regs.iter().any(|(f, _, _)| *f == fd) {
+                return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
+            }
+            regs.push((fd, mask, token));
+            Ok(())
+        }
+
+        pub fn modify(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            match regs.iter_mut().find(|(f, _, _)| *f == fd) {
+                Some(slot) => {
+                    *slot = (fd, mask, token);
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+            let mut regs = self.regs.lock().unwrap();
+            let before = regs.len();
+            regs.retain(|(f, _, _)| *f != fd);
+            if regs.len() == before {
+                return Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"));
+            }
+            Ok(())
+        }
+
+        pub fn wait(&self, out: &mut Vec<super::Event>, timeout_ms: i32) -> io::Result<()> {
+            let snapshot: Vec<(RawFd, u32, u64)> = self.regs.lock().unwrap().clone();
+            let mut fds: Vec<PollFd> = snapshot
+                .iter()
+                .map(|(fd, mask, _)| {
+                    let mut events = 0i16;
+                    if mask & (EPOLLIN | EPOLLRDHUP) != 0 {
+                        events |= POLLIN;
+                    }
+                    if mask & EPOLLOUT != 0 {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd: *fd, events, revents: 0 }
+                })
+                .collect();
+            loop {
+                let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+                if rc >= 0 {
+                    break;
+                }
+                let e = io::Error::last_os_error();
+                if e.kind() != io::ErrorKind::Interrupted {
+                    return Err(e);
+                }
+            }
+            for (pfd, (_, _, token)) in fds.iter().zip(&snapshot) {
+                if pfd.revents == 0 {
+                    continue;
+                }
+                out.push(super::Event {
+                    token: *token,
+                    readable: pfd.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0,
+                    writable: pfd.revents & (POLLOUT | POLLHUP | POLLERR | POLLNVAL) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// poller
+// ---------------------------------------------------------------------
+
+/// One readiness notification out of [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The token the fd was registered under (the reactor's connection
+    /// index).
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Level-triggered readiness multiplexer (`epoll` on Linux, `poll`
+/// elsewhere). All methods take `&self`: registration changes may race
+/// with a concurrent [`Poller::wait`] by design — that is what epoll is
+/// for, and the `poll` fallback snapshots its table per wait.
+pub struct Poller {
+    backend: sys::Backend,
+}
+
+fn interest_mask(readable: bool, writable: bool) -> u32 {
+    let mut mask = 0;
+    if readable {
+        mask |= sys::EPOLLIN | sys::EPOLLRDHUP;
+    }
+    if writable {
+        mask |= sys::EPOLLOUT;
+    }
+    mask
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Self> {
+        Ok(Self { backend: sys::Backend::new()? })
+    }
+
+    pub fn add(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.backend.add(fd, interest_mask(readable, writable), token)
+    }
+
+    pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> io::Result<()> {
+        self.backend.modify(fd, interest_mask(readable, writable), token)
+    }
+
+    pub fn remove(&self, fd: RawFd) -> io::Result<()> {
+        self.backend.remove(fd)
+    }
+
+    /// Block until at least one registered fd is ready (or `timeout_ms`
+    /// passes; `-1` = forever), appending notifications to `out`.
+    /// Spurious empty returns are allowed — callers must treat `out`
+    /// being empty after a wait as "nothing to do", not an error.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+        out.clear();
+        self.backend.wait(out, timeout_ms)
+    }
+}
+
+// ---------------------------------------------------------------------
+// waker
+// ---------------------------------------------------------------------
+
+/// Cross-thread wakeup for a [`Poller`]: worker threads [`Waker::wake`]
+/// after enqueuing frames, the reactor registers [`Waker::rx_fd`] for
+/// readability and [`Waker::drain`]s it on wake. Wakes coalesce — the
+/// socketpair buffer holds at most a few pending bytes, and a full
+/// buffer ([`io::ErrorKind::WouldBlock`]) means a wake is already
+/// pending, which is exactly the semantics wanted.
+pub struct Waker {
+    tx: UnixStream,
+    rx: UnixStream,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Self> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Self { tx, rx })
+    }
+
+    /// The fd the reactor registers for readability.
+    pub fn rx_fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    pub fn wake(&self) {
+        // A send error means either a wake is already pending
+        // (WouldBlock) or the reactor is gone — both ignorable.
+        let _ = (&self.tx).write(&[1]);
+    }
+
+    /// Swallow all pending wake bytes (reactor side).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-peer write queue with writev batching
+// ---------------------------------------------------------------------
+
+/// What one [`OutQueue::flush`] accomplished.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlushOutcome {
+    /// Frames written out completely (and recycled into the pool).
+    pub frames_done: u64,
+    /// Bytes put on the wire.
+    pub bytes: u64,
+    /// `writev` calls that moved data (each is one coalesced batch).
+    pub batches: u64,
+    /// The socket refused more data; the caller should arm `EPOLLOUT`.
+    pub blocked: bool,
+    /// The queue is closed *and* empty: safe to half-close the socket.
+    pub drained: bool,
+}
+
+struct OutInner {
+    frames: VecDeque<Arc<Vec<u8>>>,
+    /// Bytes of the head frame already written (partial-write cursor).
+    head_off: usize,
+    closing: bool,
+}
+
+/// A per-peer queue of encoded wire frames awaiting the reactor.
+/// Senders [`OutQueue::push`] whole frames (each an `Arc` so
+/// tolerant-mode retention can alias the buffer); the reactor thread
+/// [`OutQueue::flush`]es them in `writev` batches whenever the socket
+/// is writable. After [`OutQueue::close`], pushes are refused and the
+/// queue drains to its end — frame boundaries are never torn.
+pub struct OutQueue {
+    inner: Mutex<OutInner>,
+}
+
+impl Default for OutQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OutQueue {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(OutInner { frames: VecDeque::new(), head_off: 0, closing: false }) }
+    }
+
+    /// Enqueue a frame. Returns `false` (frame dropped) once the queue
+    /// is closing — teardown refuses new traffic the same way a dead
+    /// link used to.
+    pub fn push(&self, frame: Arc<Vec<u8>>) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closing {
+            return false;
+        }
+        inner.frames.push_back(frame);
+        true
+    }
+
+    /// Refuse further pushes; the reactor drains what is queued, then
+    /// reports `drained` so the socket can be half-closed.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closing = true;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().frames.is_empty()
+    }
+
+    /// Write as much queued data as the socket accepts, coalescing up
+    /// to [`MAX_IOVS`] frames per `writev`. Nonblocking: stops (with
+    /// `blocked`) the moment the socket would block. Fully written
+    /// frames are recycled into `pool`.
+    pub fn flush(&self, fd: RawFd, pool: &BufferPool) -> io::Result<FlushOutcome> {
+        let mut out = FlushOutcome::default();
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.frames.is_empty() {
+                out.drained = inner.closing;
+                return Ok(out);
+            }
+            let mut iovs: Vec<IoVec> = Vec::with_capacity(inner.frames.len().min(MAX_IOVS));
+            for (i, f) in inner.frames.iter().take(MAX_IOVS).enumerate() {
+                let off = if i == 0 { inner.head_off } else { 0 };
+                iovs.push(IoVec { base: f[off..].as_ptr(), len: f.len() - off });
+            }
+            let written = loop {
+                let rc = unsafe { writev(fd, iovs.as_ptr(), iovs.len() as i32) };
+                if rc >= 0 {
+                    break rc as usize;
+                }
+                let e = io::Error::last_os_error();
+                match e.kind() {
+                    io::ErrorKind::Interrupted => continue,
+                    io::ErrorKind::WouldBlock => {
+                        out.blocked = true;
+                        return Ok(out);
+                    }
+                    _ => return Err(e),
+                }
+            };
+            if written == 0 {
+                out.blocked = true;
+                return Ok(out);
+            }
+            out.batches += 1;
+            out.bytes += written as u64;
+            let mut left = written;
+            while left > 0 {
+                let head_remaining = inner.frames[0].len() - inner.head_off;
+                if left >= head_remaining {
+                    left -= head_remaining;
+                    inner.head_off = 0;
+                    let done = inner.frames.pop_front().unwrap();
+                    pool.put_arc(done);
+                    out.frames_done += 1;
+                } else {
+                    inner.head_off += left;
+                    left = 0;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn pair() -> (UnixStream, UnixStream) {
+        UnixStream::pair().expect("socketpair")
+    }
+
+    #[test]
+    fn poller_reports_writable_then_readable() {
+        let poller = Poller::new().unwrap();
+        let (a, b) = pair();
+        a.set_nonblocking(true).unwrap();
+        poller.add(a.as_raw_fd(), 7, true, true).unwrap();
+
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.writable), "{evs:?}");
+        assert!(!evs.iter().any(|e| e.token == 7 && e.readable), "{evs:?}");
+
+        // Drop write interest: an idle socket is silent.
+        poller.modify(a.as_raw_fd(), 7, true, false).unwrap();
+        poller.wait(&mut evs, 50).unwrap();
+        assert!(evs.is_empty(), "{evs:?}");
+
+        (&b).write_all(b"x").unwrap();
+        poller.wait(&mut evs, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 7 && e.readable), "{evs:?}");
+
+        poller.remove(a.as_raw_fd()).unwrap();
+        poller.wait(&mut evs, 50).unwrap();
+        assert!(evs.is_empty(), "{evs:?}");
+    }
+
+    #[test]
+    fn poller_sees_peer_hangup_as_readable() {
+        let poller = Poller::new().unwrap();
+        let (a, b) = pair();
+        poller.add(a.as_raw_fd(), 1, true, false).unwrap();
+        drop(b);
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, 1000).unwrap();
+        assert!(evs.iter().any(|e| e.readable), "EOF must surface as readable: {evs:?}");
+    }
+
+    #[test]
+    fn waker_wakes_a_sleeping_poller_and_coalesces() {
+        let poller = Arc::new(Poller::new().unwrap());
+        let waker = Arc::new(Waker::new().unwrap());
+        poller.add(waker.rx_fd(), 0, true, false).unwrap();
+
+        let w = Arc::clone(&waker);
+        let kicker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            w.wake();
+            w.wake(); // double wake must coalesce
+        });
+        let mut evs = Vec::new();
+        poller.wait(&mut evs, 5000).unwrap();
+        assert!(evs.iter().any(|e| e.token == 0 && e.readable), "{evs:?}");
+        kicker.join().unwrap();
+
+        waker.drain();
+        poller.wait(&mut evs, 50).unwrap();
+        assert!(evs.is_empty(), "drained waker must go quiet: {evs:?}");
+    }
+
+    #[test]
+    fn out_queue_batches_frames_into_one_writev() {
+        let (tx, rx) = pair();
+        tx.set_nonblocking(true).unwrap();
+        let q = OutQueue::new();
+        let pool = BufferPool::new();
+        let frames: Vec<Vec<u8>> = vec![vec![1, 2, 3], vec![4], vec![5, 6, 7, 8, 9]];
+        for f in &frames {
+            assert!(q.push(Arc::new(f.clone())));
+        }
+        let out = q.flush(tx.as_raw_fd(), &pool).unwrap();
+        assert_eq!(out.frames_done, 3);
+        assert_eq!(out.batches, 1, "3 small frames must leave in one writev");
+        assert_eq!(out.bytes, 9);
+        assert!(!out.blocked);
+        assert_eq!(pool.pooled(), 3, "flushed frames return to the pool");
+
+        let mut got = vec![0u8; 9];
+        (&rx).read_exact(&mut got).unwrap();
+        assert_eq!(got, frames.concat(), "byte order and boundaries preserved");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn out_queue_survives_partial_writes_and_drains_after_close() {
+        let (tx, rx) = pair();
+        tx.set_nonblocking(true).unwrap();
+        rx.set_nonblocking(true).unwrap();
+        let q = OutQueue::new();
+        let pool = BufferPool::new();
+        // Far more than a socketpair buffer: forces blocked flushes and
+        // partial-frame write cursors.
+        let frame = Arc::new((0..=255u8).cycle().take(1 << 20).collect::<Vec<u8>>());
+        let total: usize = 4 * frame.len();
+        for _ in 0..4 {
+            assert!(q.push(Arc::clone(&frame)));
+        }
+        q.close();
+        assert!(!q.push(Arc::new(vec![1])), "closed queue refuses frames");
+
+        let first = q.flush(tx.as_raw_fd(), &pool).unwrap();
+        assert!(first.blocked, "4 MiB cannot fit a socketpair buffer");
+
+        let mut received = Vec::with_capacity(total);
+        let mut buf = vec![0u8; 64 * 1024];
+        let mut drained = false;
+        while received.len() < total {
+            if !drained {
+                drained = q.flush(tx.as_raw_fd(), &pool).unwrap().drained;
+            }
+            match (&rx).read(&mut buf) {
+                Ok(n) => received.extend_from_slice(&buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => continue,
+                Err(e) => panic!("read: {e}"),
+            }
+        }
+        assert!(q.flush(tx.as_raw_fd(), &pool).unwrap().drained);
+        for chunk in received.chunks(frame.len()) {
+            assert_eq!(chunk, &frame[..], "frame boundaries survive partial writes");
+        }
+    }
+
+    #[test]
+    fn empty_open_queue_is_not_drained() {
+        let (tx, _rx) = pair();
+        tx.set_nonblocking(true).unwrap();
+        let q = OutQueue::new();
+        let pool = BufferPool::new();
+        let out = q.flush(tx.as_raw_fd(), &pool).unwrap();
+        assert!(!out.drained, "only a *closed* empty queue may half-close the socket");
+        q.close();
+        assert!(q.flush(tx.as_raw_fd(), &pool).unwrap().drained);
+    }
+}

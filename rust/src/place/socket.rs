@@ -54,16 +54,34 @@
 //! guarantee: no rank enters the steal protocol until every rank has
 //! constructed its workers and holds its initial tokens and credit.
 //!
+//! ## One I/O thread per rank: the readiness reactor
+//!
+//! All post-bootstrap sockets of a rank — every mesh link plus its
+//! control link(s) — are owned by a single `glb-io-{rank}` event-loop
+//! thread built on [`crate::place::reactor`]: a hand-rolled epoll
+//! (Linux; `poll(2)` elsewhere) readiness loop with per-peer staged
+//! read buffers ([`FrameAssembler`]) that decode frames in place, and
+//! per-peer write queues ([`OutQueue`]) that coalesce small frames into
+//! `writev` batches. Workers never touch a socket: sends encode into
+//! pooled buffers ([`BufferPool`]) and enqueue; the reactor flushes
+//! when the socket is writable and recycles the buffer once it is on
+//! the wire (or, in tolerant mode, once the retention ledger lets go of
+//! it too). The per-rank OS thread count is therefore O(workers), not
+//! O(peers) — the property that lets fleets grow past 64 ranks without
+//! the ~2N reader threads per rank of the previous design.
+//!
 //! Teardown mirrors the protocol's own guarantee that no message is in
-//! flight after `Terminate`: every rank half-closes the write side of
-//! all its links; mesh readers drain to EOF; rank 0's control servers
-//! exit on their spoke's EOF (after optionally collecting the rank's
-//! encoded result for the fleet-wide reduction of
-//! [`run_sockets_reduced`]).
+//! flight after `Terminate`: each rank closes its write queues (the
+//! reactor drains them to the socket, then half-closes), drains every
+//! peer to EOF, and exits; rank 0 treats a spoke's control-link EOF as
+//! that rank's orderly goodbye (after optionally collecting its encoded
+//! result for the fleet-wide reduction of [`run_sockets_reduced`]) —
+//! or, in tolerant fleets, as a death if no result arrived first.
 
-use std::collections::VecDeque;
-use std::io::{Read, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -77,10 +95,11 @@ use crate::glb::termination::{
     AtomicLedger, CreditHome, CreditLedger, CreditRoot, Ledger, INITIAL_RANK_ATOMS,
 };
 use crate::glb::topology::{NodeBag, Topology};
-use crate::glb::wire::{self, Ctrl, WireCodec};
+use crate::glb::wire::{self, BufferPool, Ctrl, FrameAssembler, WireCodec};
 use crate::glb::worker::{Phase, Worker};
 use crate::glb::{GlbConfig, RunLog, RunOutput};
 use crate::place::membership::{DynamicMembership, MembershipProvider};
+use crate::place::reactor::{Event, OutQueue, Poller, Waker};
 use crate::testkit::chaos;
 
 /// How this process joins the fleet.
@@ -150,26 +169,158 @@ pub fn misrouted_frames() -> u64 {
     MISROUTED_FRAMES.load(Ordering::Relaxed)
 }
 
-/// Mesh data-plane bytes this process has put on / taken off the wire
-/// (frame bodies plus their 4-byte length prefix; control-link traffic
-/// is bootstrap-only and excluded). Monotonic per process — one GLB run
-/// per process, so the totals are per-run in practice; the fleet
-/// launcher rolls them into its report.
+/// Bytes this process has put on / taken off the wire through the
+/// reactor (frame bodies plus their 4-byte length prefix, mesh and
+/// control links alike; the blocking bootstrap handshake is excluded —
+/// symmetrically on both ends, so fleet-wide TX still equals RX).
+/// Monotonic per process — one GLB run per process, so the totals are
+/// per-run in practice; the fleet launcher rolls them into its report.
 static WIRE_TX_BYTES: AtomicU64 = AtomicU64::new(0);
 static WIRE_RX_BYTES: AtomicU64 = AtomicU64::new(0);
 
-/// `(sent, received)` mesh data bytes for this process (see
+/// `(sent, received)` post-bootstrap wire bytes for this process (see
 /// [`WIRE_TX_BYTES`]).
 pub fn wire_bytes() -> (u64, u64) {
     (WIRE_TX_BYTES.load(Ordering::Relaxed), WIRE_RX_BYTES.load(Ordering::Relaxed))
 }
 
-/// A shared, mutex-serialized write half of a TCP link.
-type Link = Arc<Mutex<TcpStream>>;
+/// Frames flushed to / dispatched from the reactor (mesh + control),
+/// `writev` batches issued, and steal round-trip latency samples
+/// (Steal enqueued → matching Loot/refusal dispatched). Monotonic per
+/// process, like [`WIRE_TX_BYTES`].
+static FRAMES_TX: AtomicU64 = AtomicU64::new(0);
+static FRAMES_RX: AtomicU64 = AtomicU64::new(0);
+static BATCHES: AtomicU64 = AtomicU64::new(0);
+static STEAL_LAT_NS_SUM: AtomicU64 = AtomicU64::new(0);
+static STEAL_LAT_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// Reactor threads this process has spawned / still has running. A
+/// healthy N-rank fleet spawns exactly one per rank (zero for
+/// single-rank runs) and joins it before the run returns — the
+/// O(workers)-not-O(peers) thread-count property the launcher report
+/// asserts.
+static IO_THREADS: AtomicU64 = AtomicU64::new(0);
+static IO_THREADS_LIVE: AtomicU64 = AtomicU64::new(0);
+
+/// Reactor-level transport counters for this process's socket runs.
+/// All zeros for thread/sim transports (nothing hits a wire).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct NetStats {
+    /// Frames flushed onto sockets (mesh data + post-bootstrap control).
+    pub frames_tx: u64,
+    /// Frames decoded off sockets.
+    pub frames_rx: u64,
+    /// `writev` calls that moved at least one byte — `frames_tx /
+    /// batches` is the mean coalescing factor.
+    pub batches: u64,
+    /// Mean steal round-trip in microseconds (Steal enqueued → Loot or
+    /// refusal dispatched), 0.0 when no samples.
+    pub steal_latency_us: f64,
+    /// Completed steal round-trips behind `steal_latency_us`.
+    pub steal_samples: u64,
+    /// Reactor threads this process ever spawned (1 per multi-rank
+    /// socket run — the O(workers)-not-O(peers) property).
+    pub io_threads: u64,
+}
+
+/// Snapshot of this process's reactor counters (see [`NetStats`]).
+pub fn net_stats() -> NetStats {
+    let samples = STEAL_LAT_COUNT.load(Ordering::Relaxed);
+    let sum_ns = STEAL_LAT_NS_SUM.load(Ordering::Relaxed);
+    NetStats {
+        frames_tx: FRAMES_TX.load(Ordering::Relaxed),
+        frames_rx: FRAMES_RX.load(Ordering::Relaxed),
+        batches: BATCHES.load(Ordering::Relaxed),
+        steal_latency_us: if samples == 0 {
+            0.0
+        } else {
+            sum_ns as f64 / samples as f64 / 1_000.0
+        },
+        steal_samples: samples,
+        io_threads: IO_THREADS.load(Ordering::Relaxed),
+    }
+}
+
+/// Reactor threads ever spawned by this process.
+pub fn io_threads_spawned() -> u64 {
+    IO_THREADS.load(Ordering::Relaxed)
+}
+
+/// Reactor threads currently running (0 once every socket run returned).
+pub fn io_threads_live() -> u64 {
+    IO_THREADS_LIVE.load(Ordering::Relaxed)
+}
+
 /// Mailbox sender per *global* place id (`None` for remote places).
 type Mailboxes<B> = Arc<Vec<Option<Sender<Msg<B>>>>>;
 /// Per-rank slots for gathered result payloads (rank 0 only).
 type ResultSlots = Arc<Mutex<Vec<Option<Vec<u8>>>>>;
+
+/// One rank's handle on its reactor: per-peer write queues, the waker
+/// that nudges the event loop after an enqueue, and the frame-buffer
+/// pool every send encodes into. Shared by workers, service threads,
+/// and the reactor itself; the sockets live inside the reactor only.
+struct NetCore {
+    /// Mesh write queue per peer rank (`None` for self / unconnected).
+    mesh: Vec<Option<Arc<OutQueue>>>,
+    /// Spoke → rank 0 control queue (`None` on rank 0).
+    ctrl: Option<Arc<OutQueue>>,
+    /// Rank 0 → spoke control queues (`None` slots on spokes; slot 0
+    /// always `None`).
+    ctrl_peers: Vec<Option<Arc<OutQueue>>>,
+    /// Wakes the reactor out of `epoll_wait` after a queue push.
+    waker: Waker,
+    /// Recycled frame buffers: encode paths `get()`, the reactor
+    /// `put_arc()`s once a frame is flushed and unretained.
+    pool: Arc<BufferPool>,
+    /// Set by teardown; tells the reactor to drain queues, half-close,
+    /// read every peer to EOF, and exit.
+    shutdown: AtomicBool,
+    /// Outstanding steal round-trips: `(victim place, nonce)` → enqueue
+    /// time, resolved when the matching Loot/refusal is dispatched.
+    steal_marks: Mutex<HashMap<(u64, u64), Instant>>,
+}
+
+impl NetCore {
+    fn new(ranks: usize, pool: Arc<BufferPool>) -> Self {
+        Self {
+            mesh: (0..ranks).map(|_| None).collect(),
+            ctrl: None,
+            ctrl_peers: (0..ranks).map(|_| None).collect(),
+            waker: Waker::new().expect("socketpair for reactor waker"),
+            pool,
+            shutdown: AtomicBool::new(false),
+            steal_marks: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Enqueue a control frame to rank 0 (spokes). `false` when the
+    /// queue is gone or already closed — the fleet is tearing down.
+    fn send_ctrl(&self, c: &Ctrl) -> bool {
+        let Some(q) = &self.ctrl else { return false };
+        let mut buf = self.pool.get();
+        wire::encode_ctrl_frame_into(c, &mut buf);
+        let ok = q.push(Arc::new(buf));
+        if ok {
+            self.waker.wake();
+        }
+        ok
+    }
+
+    /// Enqueue a control frame to spoke `rank` (rank 0 only).
+    fn send_ctrl_to(&self, rank: usize, c: &Ctrl) -> bool {
+        let Some(q) = self.ctrl_peers.get(rank).and_then(|q| q.as_ref()) else {
+            return false;
+        };
+        let mut buf = self.pool.get();
+        wire::encode_ctrl_frame_into(c, &mut buf);
+        let ok = q.push(Arc::new(buf));
+        if ok {
+            self.waker.wake();
+        }
+        ok
+    }
+}
 
 /// The work-token ledger, as seen from one fleet process.
 #[derive(Clone)]
@@ -218,62 +369,31 @@ impl Ledger for FleetLedger {
 }
 
 /// A spoke's credit home: async deposits and the rare synchronous
-/// replenish, both on the control link. Panics on I/O failure — a dead
-/// control link loses termination credit, which is unrecoverable (the
-/// fleet could never quiesce), and all credit traffic stops before
-/// teardown.
-struct CtrlHome {
-    link: Link,
-}
-
-impl CreditHome for CtrlHome {
-    fn deposit(&self, atoms: u64) {
-        let mut s = self.link.lock().unwrap();
-        wire::write_frame(&mut *s, &Ctrl::Deposit { atoms }.to_body())
-            .expect("fleet control link lost (deposit)");
-        drop(s);
-        chaos::die_point(chaos::DURING_DEPOSIT);
-    }
-
-    fn replenish(&self, want: u64) -> u64 {
-        let mut s = self.link.lock().unwrap();
-        wire::write_frame(&mut *s, &Ctrl::Replenish { want }.to_body())
-            .expect("fleet control link lost (replenish)");
-        let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
-            .expect("fleet control link lost (grant)")
-            .expect("fleet control link closed awaiting grant");
-        match Ctrl::decode(&body) {
-            Ok(Ctrl::Grant { atoms }) => atoms,
-            other => panic!("expected credit grant, got {other:?}"),
-        }
-    }
-}
-
-/// A tolerant spoke's credit home. The synchronous [`CtrlHome`] cannot
-/// be used once the control link carries asynchronous recovery traffic
-/// ([`Ctrl::Leave`], forwarded [`Ctrl::Ack`]s): a blocking read-for-grant
-/// would swallow them. The spoke's control reader thread owns the read
-/// half instead and routes every [`Ctrl::Grant`] through a channel.
-struct TolerantCtrlHome {
-    link: Link,
+/// replenish, both enqueued on the control queue (the reactor owns the
+/// socket; grants come back through a channel the reactor feeds).
+/// Panics when the control path is gone mid-run — a dead control link
+/// loses termination credit, which is unrecoverable (the fleet could
+/// never quiesce), and all credit traffic stops before teardown.
+struct QueueHome {
+    net: Arc<NetCore>,
     grants: Mutex<Receiver<u64>>,
 }
 
-impl CreditHome for TolerantCtrlHome {
+impl CreditHome for QueueHome {
     fn deposit(&self, atoms: u64) {
-        let mut s = self.link.lock().unwrap();
-        wire::write_frame(&mut *s, &Ctrl::Deposit { atoms }.to_body())
-            .expect("fleet control link lost (deposit)");
-        drop(s);
+        if !self.net.send_ctrl(&Ctrl::Deposit { atoms }) {
+            panic!("fleet control link lost (deposit)");
+        }
         chaos::die_point(chaos::DURING_DEPOSIT);
     }
 
     fn replenish(&self, want: u64) -> u64 {
+        // Hold the grant receiver across the request so concurrent
+        // replenishes (one worker per node today, but cheap to keep
+        // correct) pair each Grant with its Replenish.
         let rx = self.grants.lock().unwrap();
-        {
-            let mut s = self.link.lock().unwrap();
-            wire::write_frame(&mut *s, &Ctrl::Replenish { want }.to_body())
-                .expect("fleet control link lost (replenish)");
+        if !self.net.send_ctrl(&Ctrl::Replenish { want }) {
+            panic!("fleet control link lost (replenish)");
         }
         rx.recv().expect("fleet control link closed awaiting grant")
     }
@@ -302,10 +422,12 @@ struct RetainedLoot {
     seq: u64,
     /// Credit atoms the message carried ([`Ledger::export_credit`]).
     credit: u64,
-    /// The bag's [`WireCodec`] encoding (bytes, so the bookkeeping stays
-    /// non-generic; decoded only on re-import, where the bag type is
-    /// known).
-    body: Vec<u8>,
+    /// The *wire frame* of the send (length prefix + route + message),
+    /// sharing the pooled buffer the reactor flushes — retention costs
+    /// a refcount, not a second serialization. Bytes keep the
+    /// bookkeeping non-generic; decoded only on re-import, where the
+    /// bag type is known.
+    frame: Arc<Vec<u8>>,
 }
 
 /// This rank's outbound loot book for one peer. Mesh links and mailboxes
@@ -324,10 +446,12 @@ struct PeerLedger {
 }
 
 impl PeerLedger {
-    /// The peer banked `upto` merged bags: drop the covered entries.
-    fn prune(&mut self, upto: u64) {
+    /// The peer banked `upto` merged bags: drop the covered entries,
+    /// recycling each frame buffer once the reactor has let go of it.
+    fn prune(&mut self, upto: u64, pool: &BufferPool) {
         while self.entries.front().is_some_and(|e| e.seq <= upto) {
-            self.entries.pop_front();
+            let e = self.entries.pop_front().unwrap();
+            pool.put_arc(e.frame);
         }
     }
 }
@@ -343,9 +467,9 @@ struct PendingSteal {
     nonce: u64,
 }
 
-/// A latch the recovery path waits on: the mesh reader from a dead peer
-/// must drain to EOF (delivering every frame the peer managed to send)
-/// before the retention ledger is reconciled.
+/// A latch the recovery path waits on: the reactor must drain a dead
+/// peer's mesh link to EOF (delivering every frame the peer managed to
+/// send) before the retention ledger is reconciled.
 #[derive(Default)]
 struct ReaderDone {
     done: Mutex<bool>,
@@ -384,10 +508,17 @@ struct RankRecovery {
     merged: Vec<AtomicU64>,
     pending: Mutex<Option<PendingSteal>>,
     reader_done: Vec<ReaderDone>,
+    /// Recycles acknowledged retention frames (shared with the reactor).
+    pool: Arc<BufferPool>,
 }
 
 impl RankRecovery {
-    fn new(rank: usize, ranks: usize, membership: Arc<DynamicMembership>) -> Arc<Self> {
+    fn new(
+        rank: usize,
+        ranks: usize,
+        membership: Arc<DynamicMembership>,
+        pool: Arc<BufferPool>,
+    ) -> Arc<Self> {
         let rec = Arc::new(Self {
             rank,
             membership,
@@ -396,6 +527,7 @@ impl RankRecovery {
             merged: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
             pending: Mutex::new(None),
             reader_done: (0..ranks).map(|_| ReaderDone::default()).collect(),
+            pool,
         });
         rec.reader_done[rank].mark(); // no link to ourselves
         rec
@@ -409,7 +541,7 @@ impl RankRecovery {
 
     /// The peer acknowledged `upto` merged bags from us.
     fn prune(&self, peer: usize, upto: u64) {
-        self.ledgers[peer].lock().unwrap().prune(upto);
+        self.ledgers[peer].lock().unwrap().prune(upto, &self.pool);
     }
 
     /// Mark `dead` dead and take its unacknowledged entries. Returns the
@@ -430,39 +562,73 @@ impl RankRecovery {
     }
 }
 
-/// All ranks construct their workers (holding their initial tokens and
-/// credit) before any rank steals.
-struct StartBarrier {
-    arrived: Mutex<usize>,
+/// The fleet start barrier, reactor-shaped: all ranks construct their
+/// workers (holding their initial tokens and credit) before any rank
+/// steals. Spokes enqueue [`Ctrl::Ready`] and wait for [`Ctrl::Go`];
+/// rank 0's reactor counts the Readys, and rank 0's main thread sends
+/// Go to every spoke once all have arrived *and* its own workers exist.
+#[derive(Default)]
+struct FleetGate {
+    st: Mutex<GateSt>,
     cv: Condvar,
-    total: usize,
 }
 
-impl StartBarrier {
-    fn new(total: usize) -> Self {
-        Self { arrived: Mutex::new(0), cv: Condvar::new(), total }
+#[derive(Default)]
+struct GateSt {
+    ready: usize,
+    go: bool,
+    failed: bool,
+}
+
+impl FleetGate {
+    /// Rank 0's reactor saw one spoke's `Ready`.
+    fn ready_arrived(&self) {
+        self.st.lock().unwrap().ready += 1;
+        self.cv.notify_all();
     }
 
-    fn arrive_and_wait(&self) {
-        let mut n = self.arrived.lock().unwrap();
-        *n += 1;
-        if *n >= self.total {
-            self.cv.notify_all();
+    /// Rank 0 blocks until `n` spokes are ready (forever if a spoke
+    /// died pre-barrier — the launcher's fail-fast handles that, as it
+    /// always has).
+    fn wait_ready(&self, n: usize) {
+        let mut st = self.st.lock().unwrap();
+        while st.ready < n {
+            st = self.cv.wait(st).unwrap();
         }
-        while *n < self.total {
-            n = self.cv.wait(n).unwrap();
+    }
+
+    /// A spoke's reactor saw `Go`.
+    fn go(&self) {
+        self.st.lock().unwrap().go = true;
+        self.cv.notify_all();
+    }
+
+    /// The spoke's control link died before `Go`.
+    fn fail(&self) {
+        self.st.lock().unwrap().failed = true;
+        self.cv.notify_all();
+    }
+
+    /// A spoke blocks for `Go`; `false` means the control link died
+    /// first.
+    fn wait_go(&self) -> bool {
+        let mut st = self.st.lock().unwrap();
+        while !st.go && !st.failed {
+            st = self.cv.wait(st).unwrap();
         }
+        st.go
     }
 }
 
 /// The per-process message fabric: local mailboxes for this rank's
-/// places, one direct mesh link per remote rank.
+/// places, one direct mesh write queue per remote rank (the reactor
+/// flushes them).
 struct SocketTransport<B> {
     rank: usize,
     topo: Topology,
     p: usize,
     local: Mailboxes<B>,
-    links: Arc<Vec<Option<Link>>>,
+    net: Arc<NetCore>,
     /// Crash-tolerance books; `None` keeps the fail-fast send path.
     recovery: Option<Arc<RankRecovery>>,
 }
@@ -474,7 +640,7 @@ impl<B> Clone for SocketTransport<B> {
             topo: self.topo,
             p: self.p,
             local: self.local.clone(),
-            links: self.links.clone(),
+            net: self.net.clone(),
             recovery: self.recovery.clone(),
         }
     }
@@ -509,13 +675,29 @@ impl<B: WireCodec> SocketTransport<B> {
         }
     }
 
+    /// Encode `msg` into a pooled buffer and enqueue it toward
+    /// `dest_rank`. Best-effort like the old blocking write: frames to
+    /// a closed queue or over the length cap are silently dropped (the
+    /// run is already lost / the frame was never writable).
     fn send_wire(&self, dest_rank: usize, to: PlaceId, msg: &Msg<B>) {
-        let body = wire::encode_data_frame_body(to, msg);
-        if let Some(link) = &self.links[dest_rank] {
-            let mut s = link.lock().unwrap();
-            if wire::write_frame(&mut *s, &body).is_ok() {
-                WIRE_TX_BYTES.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
-            }
+        let Some(q) = self.net.mesh.get(dest_rank).and_then(|q| q.as_ref()) else {
+            return;
+        };
+        let mut buf = self.net.pool.get();
+        let body_len = wire::encode_data_frame_into(to, msg, &mut buf);
+        if body_len > wire::MAX_FRAME_BYTES {
+            self.net.pool.put(buf);
+            return;
+        }
+        if let Msg::Steal { nonce, .. } = msg {
+            self.net
+                .steal_marks
+                .lock()
+                .unwrap()
+                .insert((to as u64, *nonce), Instant::now());
+        }
+        if q.push(Arc::new(buf)) {
+            self.net.waker.wake();
         }
     }
 
@@ -555,8 +737,6 @@ impl<B: WireCodec> SocketTransport<B> {
                 chaos::die_point(chaos::MID_STEAL);
             }
             Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit } => {
-                let mut body = Vec::new();
-                bag.encode(&mut body);
                 let mut guard = rec.ledgers[dest_rank].lock().unwrap();
                 if guard.dead {
                     drop(guard);
@@ -572,15 +752,27 @@ impl<B: WireCodec> SocketTransport<B> {
                     );
                     return;
                 }
+                // One encode serves both the wire and the retention
+                // ledger: the entry keeps an `Arc` on the very frame
+                // the reactor flushes. Entry is pushed under the ledger
+                // lock so a concurrent drain either takes it or we saw
+                // `dead` above — never neither.
+                let msg = Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit };
+                let mut buf = self.net.pool.get();
+                let body_len = wire::encode_data_frame_into(to, &msg, &mut buf);
+                let frame = Arc::new(buf);
                 guard.sent += 1;
                 guard.attached += credit;
                 let seq = guard.sent;
-                guard.entries.push_back(RetainedLoot { seq, credit, body });
-                self.send_wire(
-                    dest_rank,
-                    to,
-                    &Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit },
-                );
+                guard.entries.push_back(RetainedLoot { seq, credit, frame: frame.clone() });
+                if body_len <= wire::MAX_FRAME_BYTES {
+                    if let Some(q) = self.net.mesh.get(dest_rank).and_then(|q| q.as_ref()) {
+                        if q.push(frame) {
+                            self.net.waker.wake();
+                        }
+                    }
+                }
+                drop(guard);
             }
             Msg::Loot { bag: None, .. } | Msg::Terminate => {
                 if !rec.peer_dead(dest_rank) {
@@ -599,9 +791,15 @@ impl<B: WireCodec> SocketTransport<B> {
         let me = self.topo.representative(self.rank);
         let (entries, sent, received) = rec.drain(dead);
         for e in entries {
-            let mut r = wire::Reader::new(&e.body);
-            let bag = match B::decode(&mut r) {
-                Ok(b) => b,
+            // The entry is the full wire frame: skip the length prefix,
+            // decode route + message, and lift the bag back out.
+            let decoded = wire::decode_data_frame_body::<B>(&e.frame[wire::FRAME_LEN_BYTES..]);
+            let bag = match decoded {
+                Ok((_, Msg::Loot { bag: Some(b), .. })) => b,
+                Ok(_) => {
+                    eprintln!("glb: retained frame for dead rank {dead} is not a loot bag");
+                    std::process::exit(1);
+                }
                 Err(err) => {
                     eprintln!("glb: retained bag for dead rank {dead} is corrupt: {err}");
                     std::process::exit(1);
@@ -609,8 +807,15 @@ impl<B: WireCodec> SocketTransport<B> {
             };
             self.deliver_local(
                 me,
-                Msg::Loot { victim: me, bag: Some(bag), lifeline: false, nonce: None, credit: e.credit },
+                Msg::Loot {
+                    victim: me,
+                    bag: Some(bag),
+                    lifeline: false,
+                    nonce: None,
+                    credit: e.credit,
+                },
             );
+            rec.pool.put_arc(e.frame);
         }
         let pending = {
             let mut p = rec.pending.lock().unwrap();
@@ -673,15 +878,15 @@ struct TolerantWorker {
 
 /// Where a worker's idle-point acks go.
 enum AckOut {
-    /// A spoke acks on its own control link: a result snapshot plus the
+    /// A spoke acks on its own control queue: a result snapshot plus the
     /// cumulative per-victim merged-bag counts (the victims prune their
     /// retention ledgers; the root banks the result for the gather in
     /// case this rank dies later).
-    Spoke(Link),
-    /// Rank 0 acks straight to each victim spoke's control link — merge
+    Spoke(Arc<NetCore>),
+    /// Rank 0 acks straight to each victim spoke's control queue — merge
     /// counts only, since the root's own death is always fatal and its
     /// partial result is never needed from a bank.
-    Root(Arc<Vec<Option<Link>>>),
+    Root(Arc<NetCore>),
 }
 
 /// Count a cross-rank loot bag against its victim's rank *before* the
@@ -720,7 +925,7 @@ fn emit_ack<Q, P>(
 {
     let Some(t) = tol else { return };
     match &t.ack {
-        AckOut::Spoke(link) => {
+        AckOut::Spoke(net) => {
             let mut acked = Vec::new();
             for (r, m) in t.rec.merged.iter().enumerate() {
                 let m = m.load(Ordering::SeqCst);
@@ -729,21 +934,20 @@ fn emit_ack<Q, P>(
                 }
             }
             let result = plan.encode(&worker.queue().result());
-            let frame = Ctrl::Ack { rank: my_rank as u64, result, acked }.to_body();
-            wire::write_frame(&mut *link.lock().unwrap(), &frame)
-                .expect("fleet control link lost (ack)");
+            // Best-effort: a refused push means teardown already closed
+            // the queue (the root no longer needs acks) — and a root
+            // death surfaces through the reactor, not here.
+            net.send_ctrl(&Ctrl::Ack { rank: my_rank as u64, result, acked });
         }
-        AckOut::Root(links) => {
+        AckOut::Root(net) => {
             for (r, m) in t.rec.merged.iter().enumerate() {
                 let m = m.load(Ordering::SeqCst);
                 if m > acked_upto[r] {
                     acked_upto[r] = m;
-                    if let Some(link) = &links[r] {
-                        let frame =
-                            Ctrl::Ack { rank: 0, result: Vec::new(), acked: vec![(r as u64, m)] }
-                                .to_body();
-                        let _ = wire::write_frame(&mut *link.lock().unwrap(), &frame);
-                    }
+                    net.send_ctrl_to(
+                        r,
+                        &Ctrl::Ack { rank: 0, result: Vec::new(), acked: vec![(r as u64, m)] },
+                    );
                 }
             }
         }
@@ -829,57 +1033,309 @@ where
     (queue.result(), stats)
 }
 
-/// A mesh link's read side: decode frames from one peer rank straight
-/// into this rank's mailboxes. Exits on the peer's EOF (clean teardown,
-/// or the peer's death), a connection error, or a protocol violation.
-/// Under crash tolerance it additionally keeps the recovery books: it
-/// clears the mirrored outstanding steal when the real response lands
-/// (so a later synthesized refusal can never be stale) and counts the
-/// credit delivered from this peer; its exit latch gates the drain.
-fn mesh_reader<B>(
+/// Which fleet socket a reactor connection is.
+#[derive(Clone, Copy)]
+enum ConnKind {
+    /// Mesh data link to `peer`.
+    Mesh { peer: usize },
+    /// Rank 0's control link to spoke `peer`.
+    CtrlRoot { peer: usize },
+    /// A spoke's control link to rank 0.
+    CtrlSpoke,
+}
+
+/// One socket inside the reactor: the stream, its staged read buffer,
+/// and its write queue.
+struct ReactorConn {
     stream: TcpStream,
-    my_rank: usize,
-    peer: usize,
-    topo: Topology,
-    local: Mailboxes<B>,
-    recovery: Option<Arc<RankRecovery>>,
-) where
-    B: WireCodec + Send + 'static,
-{
-    mesh_reader_loop(stream, my_rank, peer, topo, local, recovery.as_ref());
-    if let Some(rec) = &recovery {
-        rec.reader_done[peer].mark();
+    kind: ConnKind,
+    asm: FrameAssembler,
+    out: Arc<OutQueue>,
+    /// `EPOLLOUT` currently armed (the last flush hit `WouldBlock`).
+    out_armed: bool,
+    /// Peer EOF / error / protocol violation: reads are over.
+    read_done: bool,
+    /// Write side shut down (queue drained after close, or send error).
+    wr_closed: bool,
+    /// The fd left the poller (both directions finished).
+    deregistered: bool,
+    /// `CtrlRoot` only: the spoke's result arrived, so a later EOF is a
+    /// clean goodbye rather than a death.
+    saw_result: bool,
+}
+
+impl ReactorConn {
+    fn new(stream: TcpStream, kind: ConnKind, out: Arc<OutQueue>) -> Self {
+        Self {
+            stream,
+            kind,
+            asm: FrameAssembler::new(wire::MAX_FRAME_BYTES),
+            out,
+            out_armed: false,
+            read_done: false,
+            wr_closed: false,
+            deregistered: false,
+            saw_result: false,
+        }
     }
 }
 
-fn mesh_reader_loop<B>(
-    mut stream: TcpStream,
+/// Rank 0's crash-tolerance handles inside the reactor. The channel
+/// senders live only here, so the coordinator's `death_rx` disconnects
+/// — and its thread exits — exactly when the reactor does.
+struct RootReactorTol {
+    shared: Arc<RootTolerant>,
+    death_tx: Sender<usize>,
+    reconcile_tx: Sender<(usize, u64, u64)>,
+}
+
+/// The reactor's rank-specific control-plane duties.
+enum ReactorRole {
+    /// Rank 0: inline credit root, result slots, barrier bookkeeping.
+    Root {
+        root: Arc<CreditRoot>,
+        results: ResultSlots,
+        gate: Arc<FleetGate>,
+        tol: Option<RootReactorTol>,
+    },
+    /// A spoke: route grants and `Go` to the main thread, deaths to the
+    /// recovery thread.
+    Spoke {
+        gate: Arc<FleetGate>,
+        /// `Option` so a dead control link can drop the sender — a
+        /// worker blocked in `replenish` then panics instead of hanging.
+        grant_tx: Option<Sender<u64>>,
+        tolerant: bool,
+        /// Tolerant spokes only: feeds the `glb-recovery-{rank}` thread.
+        leave_tx: Option<Sender<usize>>,
+    },
+}
+
+/// A frame lifted off a connection, owned (so the staged buffer borrow
+/// ends before any dispatch side effect).
+enum Parsed<B> {
+    Data(PlaceId, Msg<B>),
+    Ctrl(Ctrl),
+    /// Undecodable: protocol violation, drop the link's read side.
+    Bad,
+}
+
+/// Poller token for the waker's read end (connections use their index).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Decrements [`IO_THREADS_LIVE`] when the reactor exits, panic-safe.
+struct IoLiveGuard;
+
+impl Drop for IoLiveGuard {
+    fn drop(&mut self) {
+        IO_THREADS_LIVE.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The per-rank I/O event loop (`glb-io-{rank}`): owns every
+/// post-bootstrap socket, decodes inbound frames from staged per-peer
+/// buffers straight into mailboxes / control handling, and flushes the
+/// per-peer write queues in `writev` batches. Never blocks on anything
+/// but the poller: blocking recovery work is handed to dedicated
+/// threads over channels.
+struct Reactor<B> {
+    poller: Poller,
+    conns: Vec<ReactorConn>,
+    core: Arc<NetCore>,
     my_rank: usize,
-    peer: usize,
     topo: Topology,
     local: Mailboxes<B>,
-    recovery: Option<&Arc<RankRecovery>>,
-) where
+    recovery: Option<Arc<RankRecovery>>,
+    role: ReactorRole,
+}
+
+impl<B> Reactor<B>
+where
     B: WireCodec + Send + 'static,
 {
-    loop {
-        let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
-            Ok(Some(b)) => b,
-            Ok(None) | Err(_) => return,
-        };
-        WIRE_RX_BYTES.fetch_add(body.len() as u64 + 4, Ordering::Relaxed);
-        let (to, msg) = match wire::decode_data_frame_body::<B>(&body) {
-            Ok(x) => x,
-            Err(_) => return, // malformed peer; drop the link
-        };
-        if to >= topo.places() || topo.node_of(to) != my_rank {
+    fn run(mut self) {
+        self.poller
+            .add(self.core.waker.rx_fd(), WAKE_TOKEN, true, false)
+            .expect("register reactor waker");
+        for i in 0..self.conns.len() {
+            let c = &mut self.conns[i];
+            c.stream.set_nonblocking(true).expect("nonblocking fleet socket");
+            self.poller
+                .add(c.stream.as_raw_fd(), i as u64, true, false)
+                .expect("register fleet socket");
+        }
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            // Teardown: close write queues so they drain and half-close.
+            // A root→spoke control queue waits for that spoke's own EOF
+            // first — its grants and result collection must outlive our
+            // decision to shut down, and an earlier close could sever a
+            // spoke that has not yet entered teardown itself (tolerant
+            // spokes treat an unexpected control EOF as fatal).
+            let shutdown = self.core.shutdown.load(Ordering::SeqCst);
+            if shutdown {
+                for c in &self.conns {
+                    match c.kind {
+                        ConnKind::CtrlRoot { .. } if !c.read_done => {}
+                        _ => c.out.close(),
+                    }
+                }
+            }
+            for i in 0..self.conns.len() {
+                self.flush_one(i);
+            }
+            if shutdown && self.conns.iter().all(|c| c.read_done && c.wr_closed) {
+                break;
+            }
+            self.poller.wait(&mut events, -1).expect("reactor poll");
+            for ev in events.iter().copied() {
+                if ev.token == WAKE_TOKEN {
+                    self.core.waker.drain();
+                } else if ev.readable && !self.conns[ev.token as usize].read_done {
+                    self.read_ready(ev.token as usize);
+                }
+            }
+        }
+    }
+
+    /// Flush one connection's write queue; arm/disarm `EPOLLOUT` around
+    /// socket backpressure, half-close once a closed queue drains, and
+    /// fold the flush outcome into the process-wide wire counters.
+    fn flush_one(&mut self, i: usize) {
+        if self.conns[i].wr_closed {
+            return;
+        }
+        let fd = self.conns[i].stream.as_raw_fd();
+        match self.conns[i].out.flush(fd, &self.core.pool) {
+            Ok(out) => {
+                WIRE_TX_BYTES.fetch_add(out.bytes, Ordering::Relaxed);
+                FRAMES_TX.fetch_add(out.frames_done, Ordering::Relaxed);
+                BATCHES.fetch_add(out.batches, Ordering::Relaxed);
+                let mut touched = false;
+                if out.blocked != self.conns[i].out_armed {
+                    self.conns[i].out_armed = out.blocked;
+                    touched = true;
+                }
+                if out.drained {
+                    let _ = self.conns[i].stream.shutdown(Shutdown::Write);
+                    self.conns[i].wr_closed = true;
+                    self.conns[i].out_armed = false;
+                    touched = true;
+                }
+                if touched {
+                    self.update_interest(i);
+                }
+            }
+            Err(_) => {
+                // Peer gone mid-run: abandon what's queued (the old
+                // blocking writer ignored these errors too — recovery,
+                // if any, rides the retention ledgers).
+                self.conns[i].out.close();
+                self.conns[i].wr_closed = true;
+                self.conns[i].out_armed = false;
+                self.update_interest(i);
+            }
+        }
+    }
+
+    /// Drain a readable socket into its staged buffer and dispatch every
+    /// complete frame.
+    fn read_ready(&mut self, i: usize) {
+        loop {
+            let res = {
+                let c = &mut self.conns[i];
+                let space = c.asm.read_space(16 * 1024);
+                c.stream.read(space)
+            };
+            match res {
+                Ok(0) => {
+                    self.close_read(i);
+                    return;
+                }
+                Ok(n) => {
+                    self.conns[i].asm.commit(n);
+                    if !self.drain_frames(i) {
+                        self.close_read(i);
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close_read(i);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Dispatch every complete frame staged on connection `i`; `false`
+    /// on a protocol violation (undecodable or misrouted frame), which
+    /// drops the link's read side like the old per-link readers did.
+    fn drain_frames(&mut self, i: usize) -> bool {
+        let kind = self.conns[i].kind;
+        loop {
+            let parsed: Parsed<B> = {
+                let c = &mut self.conns[i];
+                match c.asm.next_frame() {
+                    Ok(None) => return true,
+                    Err(_) => return false, // oversized length prefix
+                    Ok(Some(body)) => {
+                        WIRE_RX_BYTES.fetch_add(
+                            (body.len() + wire::FRAME_LEN_BYTES) as u64,
+                            Ordering::Relaxed,
+                        );
+                        FRAMES_RX.fetch_add(1, Ordering::Relaxed);
+                        match kind {
+                            ConnKind::Mesh { .. } => {
+                                match wire::decode_data_frame_body::<B>(body) {
+                                    Ok((to, msg)) => Parsed::Data(to, msg),
+                                    Err(_) => Parsed::Bad,
+                                }
+                            }
+                            _ => match Ctrl::decode(body) {
+                                Ok(c) => Parsed::Ctrl(c),
+                                Err(_) => Parsed::Bad,
+                            },
+                        }
+                    }
+                }
+            };
+            let ok = match (parsed, kind) {
+                (Parsed::Bad, _) => false,
+                (Parsed::Data(to, msg), ConnKind::Mesh { peer }) => self.on_mesh_msg(peer, to, msg),
+                (Parsed::Ctrl(c), ConnKind::CtrlRoot { peer }) => self.on_root_ctrl(i, peer, c),
+                (Parsed::Ctrl(c), ConnKind::CtrlSpoke) => self.on_spoke_ctrl(c),
+                _ => false,
+            };
+            if !ok {
+                return false;
+            }
+        }
+    }
+
+    /// A mesh data frame: deliver to the destination mailbox. Under
+    /// crash tolerance also keep the recovery books — clear the mirrored
+    /// outstanding steal when the real response lands (so a later
+    /// synthesized refusal can never be stale) and count the credit
+    /// delivered from this peer.
+    fn on_mesh_msg(&mut self, peer: usize, to: PlaceId, msg: Msg<B>) -> bool {
+        if to >= self.topo.places() || self.topo.node_of(to) != self.my_rank {
             // A frame for a place this rank does not host would need
             // star-style forwarding — which the mesh must never produce.
             MISROUTED_FRAMES.fetch_add(1, Ordering::Relaxed);
-            debug_assert!(false, "data frame for place {to} arrived at rank {my_rank}");
-            return;
+            debug_assert!(false, "data frame for place {to} arrived at rank {}", self.my_rank);
+            return false;
         }
-        if let Some(rec) = recovery {
+        if let Msg::Loot { victim, nonce: Some(n), .. } = &msg {
+            // Loot or refusal, the steal round-trip is complete.
+            let mark = self.core.steal_marks.lock().unwrap().remove(&(*victim as u64, *n));
+            if let Some(t0) = mark {
+                STEAL_LAT_NS_SUM.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                STEAL_LAT_COUNT.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if let Some(rec) = &self.recovery {
             if let Msg::Loot { nonce: Some(n), .. } = &msg {
                 let mut p = rec.pending.lock().unwrap();
                 if p.as_ref().is_some_and(|ps| ps.dest_rank == peer && ps.nonce == *n) {
@@ -890,8 +1346,175 @@ fn mesh_reader_loop<B>(
                 rec.recv_credit[peer].fetch_add(*credit, Ordering::SeqCst);
             }
         }
-        if let Some(tx) = &local[to] {
+        if let Some(tx) = &self.local[to] {
             let _ = tx.send(msg);
+        }
+        true
+    }
+
+    /// Rank 0's control-plane duties, inline (every handler is
+    /// non-blocking): barrier arrivals, credit deposits/replenishes,
+    /// result collection, ack banking/forwarding, reconcile routing.
+    fn on_root_ctrl(&mut self, i: usize, peer: usize, c: Ctrl) -> bool {
+        let ReactorRole::Root { root, results, gate, tol } = &mut self.role else {
+            return false;
+        };
+        match c {
+            Ctrl::Ready { .. } => {
+                gate.ready_arrived();
+                true
+            }
+            Ctrl::Deposit { atoms } => {
+                if let Some(t) = tol {
+                    t.shared.deposited[peer].fetch_add(atoms, Ordering::SeqCst);
+                }
+                // May observe fleet quiescence, whose callback enqueues
+                // the Terminate broadcast — an enqueue+wake, safe here.
+                root.deposit(atoms);
+                true
+            }
+            Ctrl::Replenish { want } => {
+                let atoms = root.mint(want);
+                if let Some(t) = tol {
+                    t.shared.granted[peer].fetch_add(atoms, Ordering::SeqCst);
+                }
+                self.core.send_ctrl_to(peer, &Ctrl::Grant { atoms })
+            }
+            Ctrl::Result { bytes } => {
+                results.lock().unwrap()[peer] = Some(bytes);
+                self.conns[i].saw_result = true;
+                true
+            }
+            Ctrl::Ack { rank: _, result, acked } if tol.is_some() => {
+                // Bank the spoke's idle-point snapshot, then forward each
+                // (victim, merged-count) to its victim so retention
+                // ledgers shrink. Forwarding is best-effort: a victim
+                // already gone keeps (or loses) its ledger harmlessly.
+                let t = tol.as_ref().unwrap();
+                t.shared.ack_bank.lock().unwrap()[peer] = Some(result);
+                for (victim, merged) in acked {
+                    if victim == 0 {
+                        t.shared.recovery.prune(peer, merged);
+                    } else {
+                        let fwd = Ctrl::Ack {
+                            rank: peer as u64,
+                            result: Vec::new(),
+                            acked: vec![(victim, merged)],
+                        };
+                        self.core.send_ctrl_to(victim as usize, &fwd);
+                    }
+                }
+                true
+            }
+            Ctrl::Reconcile { rank: r, sent, received } if tol.is_some() => {
+                tol.as_ref().unwrap().reconcile_tx.send((r as usize, sent, received)).is_ok()
+            }
+            _ => false, // protocol violation; drop the link
+        }
+    }
+
+    /// A spoke's control-plane duties: `Go` and grants to the main /
+    /// worker threads, `Leave` to the recovery thread, ack prunes
+    /// inline.
+    fn on_spoke_ctrl(&mut self, c: Ctrl) -> bool {
+        let ReactorRole::Spoke { gate, grant_tx, leave_tx, .. } = &mut self.role else {
+            return false;
+        };
+        match c {
+            Ctrl::Go => {
+                gate.go();
+                true
+            }
+            Ctrl::Grant { atoms } => {
+                // Receiver gone means no ledger is waiting: ignore.
+                if let Some(tx) = grant_tx {
+                    let _ = tx.send(atoms);
+                }
+                true
+            }
+            Ctrl::Leave { rank: dead, .. } => {
+                if let Some(tx) = leave_tx {
+                    let _ = tx.send(dead as usize);
+                }
+                true
+            }
+            Ctrl::Ack { rank: thief, acked, .. } => {
+                if let Some(rec) = &self.recovery {
+                    for (victim, merged) in acked {
+                        if victim as usize == self.my_rank && (thief as usize) < rec.ledgers.len()
+                        {
+                            rec.prune(thief as usize, merged);
+                        }
+                    }
+                }
+                true
+            }
+            Ctrl::PeerMap { .. } => {
+                // Post-recovery epoch republication: informational (the
+                // Leave already carried the transition); accepted so a
+                // future join path can reuse the frame.
+                true
+            }
+            other => {
+                eprintln!("glb rank {}: unexpected control frame {other:?}", self.my_rank);
+                std::process::exit(1);
+            }
+        }
+    }
+
+    /// A connection's read side is over (EOF, error, or violation):
+    /// latch/report what the rank's role demands.
+    fn close_read(&mut self, i: usize) {
+        if self.conns[i].read_done {
+            return;
+        }
+        self.conns[i].read_done = true;
+        match self.conns[i].kind {
+            ConnKind::Mesh { peer } => {
+                if let Some(rec) = &self.recovery {
+                    rec.reader_done[peer].mark();
+                }
+            }
+            ConnKind::CtrlRoot { peer } => {
+                if let ReactorRole::Root { tol: Some(t), .. } = &self.role {
+                    if !self.conns[i].saw_result {
+                        let _ = t.death_tx.send(peer);
+                    }
+                }
+            }
+            ConnKind::CtrlSpoke => {
+                if self.core.shutdown.load(Ordering::SeqCst) {
+                    // Orderly teardown: the root answered our EOF.
+                } else if let ReactorRole::Spoke { tolerant: true, .. } = &self.role {
+                    // The root died (or dropped us): always fatal.
+                    eprintln!("glb rank {}: lost the fleet control link", self.my_rank);
+                    std::process::exit(1);
+                } else if let ReactorRole::Spoke { gate, grant_tx, .. } = &mut self.role {
+                    // Pre-Go this fails the fleet gate ("bootstrap
+                    // closed before go"); post-Go it is the historical
+                    // hang-until-launcher-failfast, except a worker
+                    // blocked awaiting a grant now panics (the sender
+                    // dies here) instead of hanging.
+                    gate.fail();
+                    grant_tx.take();
+                }
+            }
+        }
+        self.update_interest(i);
+    }
+
+    /// Re-register connection `i`'s poller interest from its state, and
+    /// drop it from the poller entirely once both directions finished.
+    fn update_interest(&mut self, i: usize) {
+        let c = &mut self.conns[i];
+        let fd = c.stream.as_raw_fd();
+        if c.read_done && c.wr_closed {
+            if !c.deregistered {
+                c.deregistered = true;
+                let _ = self.poller.remove(fd);
+            }
+        } else if !c.deregistered {
+            let _ = self.poller.modify(fd, i as u64, !c.read_done, c.out_armed && !c.wr_closed);
         }
     }
 }
@@ -899,10 +1522,6 @@ fn mesh_reader_loop<B>(
 /// Rank 0's shared crash-tolerance state (tolerant fleets only).
 struct RootTolerant {
     recovery: Arc<RankRecovery>,
-    /// Write halves of every spoke's control link (slot 0 is `None`):
-    /// the coordinator broadcasts Leave/PeerMap here, and control
-    /// servants forward acks victim-ward.
-    ctrl_links: Arc<Vec<Option<Link>>>,
     /// Credit atoms granted to each rank (initial endowment + mints).
     granted: Vec<AtomicU64>,
     /// Credit atoms each rank deposited back to the root's pool.
@@ -912,161 +1531,24 @@ struct RootTolerant {
     ack_bank: Mutex<Vec<Option<Vec<u8>>>>,
 }
 
-/// Per-control-servant handle on the tolerant state. The channel
-/// senders live *only* in servant threads (plus the pre-spawn original,
-/// dropped immediately), so the coordinator's `death_rx` disconnects —
-/// and its thread exits — exactly when the last servant does.
-#[derive(Clone)]
-struct CtrlTol {
-    shared: Arc<RootTolerant>,
-    death_tx: Sender<usize>,
-    reconcile_tx: Sender<(usize, u64, u64)>,
-}
-
-/// Rank 0's per-spoke control servant: barrier arrivals, credit
-/// deposits/replenishes, and result collection. Exits on the spoke's
-/// clean half-close (after its workers finished) or a violation — in a
-/// tolerant fleet, a close *before* the spoke's result arrived is
-/// reported to the coordinator as that rank's death.
-fn control_server(
-    mut stream: TcpStream,
-    link: Link,
-    rank: usize,
-    root: Arc<CreditRoot>,
-    barrier: Arc<StartBarrier>,
-    results: ResultSlots,
-    tol: Option<CtrlTol>,
-) {
-    let mut saw_result = false;
-    loop {
-        let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
-            Ok(Some(b)) => b,
-            Ok(None) | Err(_) => break,
-        };
-        let ok = match Ctrl::decode(&body) {
-            Ok(Ctrl::Ready { .. }) => {
-                barrier.arrive_and_wait();
-                wire::write_frame(&mut *link.lock().unwrap(), &Ctrl::Go.to_body()).is_ok()
-            }
-            Ok(Ctrl::Deposit { atoms }) => {
-                if let Some(t) = &tol {
-                    t.shared.deposited[rank].fetch_add(atoms, Ordering::SeqCst);
-                }
-                root.deposit(atoms);
-                true
-            }
-            Ok(Ctrl::Replenish { want }) => {
-                let atoms = root.mint(want);
-                if let Some(t) = &tol {
-                    t.shared.granted[rank].fetch_add(atoms, Ordering::SeqCst);
-                }
-                wire::write_frame(&mut *link.lock().unwrap(), &Ctrl::Grant { atoms }.to_body())
-                    .is_ok()
-            }
-            Ok(Ctrl::Result { bytes }) => {
-                results.lock().unwrap()[rank] = Some(bytes);
-                saw_result = true;
-                true
-            }
-            Ok(Ctrl::Ack { rank: _, result, acked }) if tol.is_some() => {
-                // Bank the spoke's idle-point snapshot, then forward each
-                // (victim, merged-count) to its victim so retention
-                // ledgers shrink. Forwarding is best-effort: a victim
-                // already gone keeps (or loses) its ledger harmlessly.
-                let t = tol.as_ref().unwrap();
-                t.shared.ack_bank.lock().unwrap()[rank] = Some(result);
-                for (victim, merged) in acked {
-                    if victim == 0 {
-                        t.shared.recovery.prune(rank, merged);
-                    } else if let Some(vl) =
-                        t.shared.ctrl_links.get(victim as usize).and_then(|l| l.as_ref())
-                    {
-                        let fwd = Ctrl::Ack {
-                            rank: rank as u64,
-                            result: Vec::new(),
-                            acked: vec![(victim, merged)],
-                        }
-                        .to_body();
-                        let _ = wire::write_frame(&mut *vl.lock().unwrap(), &fwd);
-                    }
-                }
-                true
-            }
-            Ok(Ctrl::Reconcile { rank: r, sent, received }) if tol.is_some() => tol
-                .as_ref()
-                .unwrap()
-                .reconcile_tx
-                .send((r as usize, sent, received))
-                .is_ok(),
-            _ => false, // protocol violation; drop the link
-        };
-        if !ok {
-            break;
-        }
-    }
-    if let Some(t) = &tol {
-        if !saw_result {
-            let _ = t.death_tx.send(rank);
-        }
-    }
-}
-
-/// A tolerant spoke's control-link reader, spawned once the barrier has
-/// released: grants for the replenish RPC, ack forwards, and the root's
-/// Leave broadcasts (which trigger local recovery + a Reconcile reply).
-fn spoke_ctrl_reader<B>(
-    mut stream: TcpStream,
+/// A tolerant spoke's recovery servant (`glb-recovery-{rank}`): the
+/// reactor hands it each `Leave` (rank death) so the blocking work —
+/// waiting for the dead peer's mesh link to drain to EOF, re-importing
+/// retained loot — never stalls the event loop. Exits when the reactor
+/// does (the sole `leave_tx` lives in the reactor's role).
+fn spoke_recovery<B>(
+    leave_rx: Receiver<usize>,
     my_rank: usize,
     transport: SocketTransport<B>,
     rec: Arc<RankRecovery>,
-    grant_tx: Sender<u64>,
-    link: Link,
-    shutting_down: Arc<AtomicBool>,
 ) where
     B: WireCodec + Send + 'static,
 {
-    loop {
-        let body = match wire::read_frame(&mut stream, wire::MAX_FRAME_BYTES) {
-            Ok(Some(b)) => b,
-            Ok(None) | Err(_) => {
-                if shutting_down.load(Ordering::SeqCst) {
-                    return;
-                }
-                // The root died (or dropped us): always fatal.
-                eprintln!("glb rank {my_rank}: lost the fleet control link");
-                std::process::exit(1);
-            }
-        };
-        match Ctrl::decode(&body) {
-            Ok(Ctrl::Grant { atoms }) => {
-                // Receiver gone means no ledger is waiting: ignore.
-                let _ = grant_tx.send(atoms);
-            }
-            Ok(Ctrl::Leave { rank: dead, .. }) => {
-                let dead = dead as usize;
-                rec.membership.leave(dead);
-                let (sent, received) = transport.recover_dead_peer(&rec, dead);
-                let reply =
-                    Ctrl::Reconcile { rank: my_rank as u64, sent, received }.to_body();
-                wire::write_frame(&mut *link.lock().unwrap(), &reply)
-                    .expect("fleet control link lost (reconcile)");
-            }
-            Ok(Ctrl::Ack { rank: thief, acked, .. }) => {
-                for (victim, merged) in acked {
-                    if victim as usize == my_rank && (thief as usize) < rec.ledgers.len() {
-                        rec.prune(thief as usize, merged);
-                    }
-                }
-            }
-            Ok(Ctrl::PeerMap { .. }) => {
-                // Post-recovery epoch republication: informational (the
-                // Leave already carried the transition); accepted so a
-                // future join path can reuse the frame.
-            }
-            other => {
-                eprintln!("glb rank {my_rank}: unexpected control frame {other:?}");
-                std::process::exit(1);
-            }
+    while let Ok(dead) = leave_rx.recv() {
+        rec.membership.leave(dead);
+        let (sent, received) = transport.recover_dead_peer(&rec, dead);
+        if !transport.net.send_ctrl(&Ctrl::Reconcile { rank: my_rank as u64, sent, received }) {
+            panic!("fleet control link lost (reconcile)");
         }
     }
 }
@@ -1104,14 +1586,12 @@ fn root_coordinator<B>(
             view.members().len(),
             view.epoch,
         );
-        let leave = Ctrl::Leave { epoch: view.epoch, rank: dead as u64 }.to_body();
+        let leave = Ctrl::Leave { epoch: view.epoch, rank: dead as u64 };
         for r in view.members() {
             if r == 0 {
                 continue;
             }
-            if let Some(link) = &tol.ctrl_links[r] {
-                let _ = wire::write_frame(&mut *link.lock().unwrap(), &leave);
-            }
+            transport.net.send_ctrl_to(r, &leave);
         }
         // The root's own books for the dead peer, then every survivor's.
         let (sent0, recv0) = transport.recover_dead_peer(rec, dead);
@@ -1141,15 +1621,12 @@ fn root_coordinator<B>(
         let map = Ctrl::PeerMap {
             epoch: view.epoch,
             addrs: view.addrs.iter().map(|a| a.clone().unwrap_or_default()).collect(),
-        }
-        .to_body();
+        };
         for r in view.members() {
             if r == 0 {
                 continue;
             }
-            if let Some(link) = &tol.ctrl_links[r] {
-                let _ = wire::write_frame(&mut *link.lock().unwrap(), &map);
-            }
+            transport.net.send_ctrl_to(r, &map);
         }
     }
 }
@@ -1360,33 +1837,34 @@ where
 
     // -- fleet wiring ----------------------------------------------------
     let deadline = Instant::now() + opts.handshake_timeout;
-    let mut mesh_readers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    let mut control_servers: Vec<std::thread::JoinHandle<()>> = Vec::new();
     let results: ResultSlots = Arc::new(Mutex::new((0..ranks).map(|_| None).collect()));
+    let pool = Arc::new(BufferPool::default());
+    let mut net = NetCore::new(ranks, pool.clone());
+    let gate = Arc::new(FleetGate::default());
 
-    let mut links: Vec<Option<Link>> = (0..ranks).map(|_| None).collect();
-    let mut mesh_read: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
-    let mut ctrl_link: Option<Link> = None;
+    let mut mesh_streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+    let mut ctrl_streams: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+    let mut ctrl_stream: Option<TcpStream> = None;
     let mut root: Option<Arc<CreditRoot>> = None;
-    let mut hub_barrier: Option<Arc<StartBarrier>> = None;
+    let mut grants_rx: Option<Receiver<u64>> = None;
+    let mut grant_tx: Option<Sender<u64>> = None;
 
     // Crash-tolerance state (all `None`/unused unless `tolerant`).
     let mut recovery: Option<Arc<RankRecovery>> = None;
     let mut root_tol: Option<Arc<RootTolerant>> = None;
+    let mut death_tx: Option<Sender<usize>> = None;
     let mut death_rx: Option<Receiver<usize>> = None;
+    let mut reconcile_tx: Option<Sender<(usize, u64, u64)>> = None;
     let mut reconcile_rx: Option<Receiver<(usize, u64, u64)>> = None;
-    let mut spoke_ctrl_read: Option<TcpStream> = None;
-    let mut grant_tx: Option<Sender<u64>> = None;
 
-    let ledger = if ranks == 1 {
-        FleetLedger::Local(AtomicLedger::new())
+    if ranks == 1 {
+        // Single-rank fleet: nothing to wire, no reactor.
     } else if rank == 0 {
         // --- bootstrap: accept every control + mesh connection ----------
         let bind_addr = opts.bind.clone().unwrap_or_else(|| opts.host.clone());
         let listener = TcpListener::bind((bind_addr.as_str(), opts.port))
             .with_context(|| format!("bind fleet bootstrap on {bind_addr}:{}", opts.port))?;
         listener.set_nonblocking(true)?;
-        let mut ctrl_conns: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
         let mut addrs: Vec<Option<String>> = (0..ranks).map(|_| None).collect();
         addrs[0] = Some(format!("{}:{}", opts.host, listener.local_addr()?.port()));
         for _ in 0..2 * (ranks - 1) {
@@ -1396,7 +1874,7 @@ where
             }
             match kind {
                 HS_CTRL => {
-                    if ctrl_conns[r].is_some() {
+                    if ctrl_streams[r].is_some() {
                         bail!("duplicate control link from rank {r}");
                     }
                     let body = wire::read_frame(&mut s, wire::MAX_FRAME_BYTES)
@@ -1409,88 +1887,58 @@ where
                         other => bail!("rank {r}: expected registration, got {other:?}"),
                     }
                     s.set_read_timeout(None)?;
-                    ctrl_conns[r] = Some(s);
+                    ctrl_streams[r] = Some(s);
                 }
                 HS_MESH => {
-                    if links[r].is_some() {
+                    if mesh_streams[r].is_some() {
                         bail!("duplicate mesh link from rank {r}");
                     }
                     s.set_read_timeout(None)?;
-                    mesh_read[r] = Some(s.try_clone()?);
-                    links[r] = Some(Arc::new(Mutex::new(s)));
+                    mesh_streams[r] = Some(s);
                 }
                 k => bail!("bad fleet handshake kind {k}"),
             }
         }
         // --- publish the peer map; spokes then dial each other ----------
+        // (Still blocking bootstrap I/O: the reactor takes the sockets
+        // over only once the fleet is fully knitted.)
         let addrs: Vec<String> = addrs
             .into_iter()
             .collect::<Option<Vec<_>>>()
             .context("fleet bootstrap finished with unregistered ranks")?;
         let map = Ctrl::PeerMap { epoch: 0, addrs: addrs.clone() }.to_body();
-        for (r, conn) in ctrl_conns.iter_mut().enumerate() {
+        for (r, conn) in ctrl_streams.iter_mut().enumerate() {
             if let Some(s) = conn {
                 wire::write_frame(s, &map).with_context(|| format!("send peer map to rank {r}"))?;
             }
         }
-        // Write halves of the spokes' control links, shared between each
-        // servant and (tolerant fleets) the coordinator + rank 0's acks.
-        let mut ctrl_writers: Vec<Option<Link>> = Vec::with_capacity(ranks);
-        for conn in &ctrl_conns {
-            ctrl_writers.push(match conn {
-                Some(s) => Some(Arc::new(Mutex::new(
-                    s.try_clone().context("clone control link write half")?,
-                ))),
-                None => None,
-            });
-        }
-        let ctrl_links: Arc<Vec<Option<Link>>> = Arc::new(ctrl_writers);
-        // --- credit root + per-spoke control servants -------------------
-        // Servants must be live before any spoke can replenish or deposit
-        // (both possible as soon as that spoke is past the barrier).
+        // --- credit root (its control plane runs inside the reactor) ----
         let credit_root = CreditRoot::new();
         credit_root.grant(ranks as u64 * INITIAL_RANK_ATOMS);
-        let barrier = Arc::new(StartBarrier::new(ranks));
-        let mut ctrl_tol: Option<CtrlTol> = None;
         if tolerant {
             let membership = Arc::new(DynamicMembership::new(addrs));
-            let rec = RankRecovery::new(rank, ranks, membership);
+            let rec = RankRecovery::new(rank, ranks, membership, pool.clone());
             let shared = Arc::new(RootTolerant {
                 recovery: rec.clone(),
-                ctrl_links: ctrl_links.clone(),
                 granted: (0..ranks).map(|_| AtomicU64::new(INITIAL_RANK_ATOMS)).collect(),
                 deposited: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
                 ack_bank: Mutex::new((0..ranks).map(|_| None).collect()),
             });
             let (dtx, drx) = channel();
             let (rtx, rrx) = channel();
-            ctrl_tol = Some(CtrlTol { shared: shared.clone(), death_tx: dtx, reconcile_tx: rtx });
             recovery = Some(rec);
             root_tol = Some(shared);
+            death_tx = Some(dtx);
             death_rx = Some(drx);
+            reconcile_tx = Some(rtx);
             reconcile_rx = Some(rrx);
         }
-        for (r, conn) in ctrl_conns.into_iter().enumerate() {
-            let Some(conn) = conn else { continue };
-            let link = ctrl_links[r].clone().expect("registered rank has a control link");
-            let (rt, b, res) = (credit_root.clone(), barrier.clone(), results.clone());
-            let tol = ctrl_tol.clone();
-            control_servers.push(
-                std::thread::Builder::new()
-                    .name(format!("glb-fleet-ctrl-{r}"))
-                    .spawn(move || control_server(conn, link, r, rt, b, res, tol))
-                    .expect("spawn control server"),
-            );
+        for r in 1..ranks {
+            if ctrl_streams[r].is_some() {
+                net.ctrl_peers[r] = Some(Arc::new(OutQueue::new()));
+            }
         }
-        // Drop the pre-spawn senders: from here the coordinator's
-        // death_rx disconnects exactly when the last servant exits.
-        drop(ctrl_tol);
-        hub_barrier = Some(barrier);
-        root = Some(credit_root.clone());
-        FleetLedger::Credit(CreditLedger::new(
-            Arc::new(RootHome { root: credit_root }),
-            INITIAL_RANK_ATOMS,
-        ))
+        root = Some(credit_root);
     } else {
         // --- spoke: own mesh listener + control link to rank 0 ----------
         let listener = TcpListener::bind(("0.0.0.0", 0)).context("bind mesh listener")?;
@@ -1504,8 +1952,7 @@ where
         // Mesh link to rank 0 (its address is already known).
         let mut to_hub = connect_retry(&opts.host, opts.port, deadline)?;
         to_hub.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
-        mesh_read[0] = Some(to_hub.try_clone()?);
-        links[0] = Some(Arc::new(Mutex::new(to_hub)));
+        mesh_streams[0] = Some(to_hub);
         // Register our mesh address, receive everyone's.
         let reg = Ctrl::Register { rank: rank as u64, addr: format!("{advertise_ip}:{mesh_port}") };
         wire::write_frame(&mut ctrl, &reg.to_body()).context("send registration")?;
@@ -1527,8 +1974,7 @@ where
             let port: u16 = port.parse().with_context(|| format!("mesh port in {addr:?}"))?;
             let mut s = connect_retry(host, port, deadline)?;
             s.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
-            mesh_read[r] = Some(s.try_clone()?);
-            links[r] = Some(Arc::new(Mutex::new(s)));
+            mesh_streams[r] = Some(s);
         }
         listener.set_nonblocking(true)?;
         for _ in 0..ranks - 1 - rank {
@@ -1537,44 +1983,114 @@ where
             if kind != HS_MESH || r <= rank || r >= ranks {
                 bail!("bad mesh handshake (kind {kind}, rank {r})");
             }
-            if links[r].is_some() {
+            if mesh_streams[r].is_some() {
                 bail!("duplicate mesh link from rank {r}");
             }
-            mesh_read[r] = Some(s.try_clone()?);
-            links[r] = Some(Arc::new(Mutex::new(s)));
+            mesh_streams[r] = Some(s);
         }
         ctrl.set_read_timeout(None)?;
         if tolerant {
             let membership = Arc::new(DynamicMembership::new(addrs));
-            recovery = Some(RankRecovery::new(rank, ranks, membership));
-            spoke_ctrl_read = Some(ctrl.try_clone().context("clone control link read half")?);
+            recovery = Some(RankRecovery::new(rank, ranks, membership, pool.clone()));
         }
-        let link = Arc::new(Mutex::new(ctrl));
-        ctrl_link = Some(link.clone());
-        if tolerant {
-            // A dedicated reader thread owns the link post-barrier, so
-            // grants arrive via a channel instead of a synchronous read.
-            let (gtx, grx) = channel();
-            grant_tx = Some(gtx);
-            FleetLedger::Credit(CreditLedger::new(
-                Arc::new(TolerantCtrlHome { link, grants: Mutex::new(grx) }),
-                INITIAL_RANK_ATOMS,
-            ))
-        } else {
-            FleetLedger::Credit(CreditLedger::new(Arc::new(CtrlHome { link }), INITIAL_RANK_ATOMS))
+        // Grants arrive via the reactor and this channel; the replenish
+        // RPC blocks on it inside `QueueHome`.
+        let (gtx, grx) = channel();
+        grant_tx = Some(gtx);
+        grants_rx = Some(grx);
+        net.ctrl = Some(Arc::new(OutQueue::new()));
+        ctrl_stream = Some(ctrl);
+    }
+    for r in 0..ranks {
+        if mesh_streams[r].is_some() {
+            net.mesh[r] = Some(Arc::new(OutQueue::new()));
         }
+    }
+    let net = Arc::new(net);
+
+    let ledger = if ranks == 1 {
+        FleetLedger::Local(AtomicLedger::new())
+    } else if rank == 0 {
+        let credit_root = root.clone().expect("rank 0 hosts the credit root");
+        FleetLedger::Credit(CreditLedger::new(
+            Arc::new(RootHome { root: credit_root }),
+            INITIAL_RANK_ATOMS,
+        ))
+    } else {
+        let grants = grants_rx.take().expect("spokes hold the grant channel");
+        FleetLedger::Credit(CreditLedger::new(
+            Arc::new(QueueHome { net: net.clone(), grants: Mutex::new(grants) }),
+            INITIAL_RANK_ATOMS,
+        ))
     };
 
-    // --- mesh readers: decode peers' frames into our mailboxes ----------
-    for (r, read_half) in mesh_read.into_iter().enumerate() {
-        let Some(read_half) = read_half else { continue };
-        let lt = local_tx.clone();
-        let rec = recovery.clone();
-        mesh_readers.push(
+    // --- the reactor: one I/O thread owning every fleet socket ----------
+    let mut reactor: Option<std::thread::JoinHandle<()>> = None;
+    let mut leave_rx: Option<Receiver<usize>> = None;
+    if ranks > 1 {
+        let mut conns: Vec<ReactorConn> = Vec::new();
+        for (r, s) in mesh_streams.iter_mut().enumerate() {
+            if let Some(s) = s.take() {
+                let q = net.mesh[r].clone().expect("mesh stream has a queue");
+                conns.push(ReactorConn::new(s, ConnKind::Mesh { peer: r }, q));
+            }
+        }
+        let role = if rank == 0 {
+            for (r, s) in ctrl_streams.iter_mut().enumerate() {
+                if let Some(s) = s.take() {
+                    let q = net.ctrl_peers[r].clone().expect("control stream has a queue");
+                    conns.push(ReactorConn::new(s, ConnKind::CtrlRoot { peer: r }, q));
+                }
+            }
+            let tol = root_tol.as_ref().map(|shared| RootReactorTol {
+                shared: shared.clone(),
+                death_tx: death_tx.take().expect("tolerant root death sender"),
+                reconcile_tx: reconcile_tx.take().expect("tolerant root reconcile sender"),
+            });
+            ReactorRole::Root {
+                root: root.clone().expect("rank 0 hosts the credit root"),
+                results: results.clone(),
+                gate: gate.clone(),
+                tol,
+            }
+        } else {
+            let s = ctrl_stream.take().expect("spokes hold a control link");
+            let q = net.ctrl.clone().expect("spokes hold a control queue");
+            conns.push(ReactorConn::new(s, ConnKind::CtrlSpoke, q));
+            let leave = if tolerant {
+                let (ltx, lrx) = channel();
+                leave_rx = Some(lrx);
+                Some(ltx)
+            } else {
+                None
+            };
+            ReactorRole::Spoke {
+                gate: gate.clone(),
+                grant_tx: grant_tx.take(),
+                tolerant,
+                leave_tx: leave,
+            }
+        };
+        let r = Reactor::<Q::Bag> {
+            poller: Poller::new().context("create fleet reactor poller")?,
+            conns,
+            core: net.clone(),
+            my_rank: rank,
+            topo,
+            local: local_tx.clone(),
+            recovery: recovery.clone(),
+            role,
+        };
+        IO_THREADS.fetch_add(1, Ordering::SeqCst);
+        IO_THREADS_LIVE.fetch_add(1, Ordering::SeqCst);
+        reactor = Some(
             std::thread::Builder::new()
-                .name(format!("glb-mesh-{rank}-{r}"))
-                .spawn(move || mesh_reader::<Q::Bag>(read_half, rank, r, topo, lt, rec))
-                .expect("spawn mesh reader"),
+                .name(format!("glb-io-{rank}"))
+                .spawn(move || {
+                    let _live = IoLiveGuard;
+                    r.run();
+                })
+                .expect("spawn fleet reactor"),
         );
     }
 
@@ -1583,7 +2099,7 @@ where
         topo,
         p,
         local: local_tx,
-        links: Arc::new(links),
+        net: net.clone(),
         recovery: recovery.clone(),
     };
 
@@ -1617,31 +2133,25 @@ where
             // Arm before any GO can reach a spoke: deposits only start
             // after GO, so detection can never race the fleet start.
             root.as_ref().expect("rank 0 hosts the credit root").arm();
-            hub_barrier.as_ref().expect("rank 0 owns the barrier").arrive_and_wait();
+            gate.wait_ready(ranks - 1);
+            for r in 1..ranks {
+                net.send_ctrl_to(r, &Ctrl::Go);
+            }
         } else {
-            let link = ctrl_link.as_ref().expect("spokes hold a control link");
-            let mut s = link.lock().unwrap();
-            wire::write_frame(&mut *s, &Ctrl::Ready { rank: rank as u64 }.to_body())
-                .context("send fleet ready")?;
-            loop {
-                let body = wire::read_frame(&mut *s, wire::MAX_FRAME_BYTES)
-                    .context("await fleet go")?
-                    .ok_or_else(|| anyhow!("bootstrap closed before go"))?;
-                match Ctrl::decode(&body) {
-                    Ok(Ctrl::Go) => break,
-                    // Rank 0's worker can reach an idle point (and ack)
-                    // before our Go write lands; pre-Go this rank has
-                    // sent no loot, so there is nothing to prune.
-                    Ok(Ctrl::Ack { .. }) if tolerant => continue,
-                    _ => bail!("expected the fleet go signal, got another control frame"),
-                }
+            if !net.send_ctrl(&Ctrl::Ready { rank: rank as u64 }) {
+                bail!("bootstrap closed before go");
+            }
+            if !gate.wait_go() {
+                bail!("bootstrap closed before go");
             }
         }
     }
 
     // -- crash-tolerance service threads ---------------------------------
-    let shutting_down = Arc::new(AtomicBool::new(false));
-    let mut spoke_reader: Option<std::thread::JoinHandle<()>> = None;
+    // Blocking recovery work (bag re-import, reconcile collection) stays
+    // off the reactor; the reactor feeds these threads over channels and
+    // they exit when it drops the senders.
+    let mut spoke_recovery_thread: Option<std::thread::JoinHandle<()>> = None;
     let mut coordinator: Option<std::thread::JoinHandle<()>> = None;
     if tolerant {
         if rank == 0 {
@@ -1661,19 +2171,14 @@ where
                     .expect("spawn recovery coordinator"),
             );
         } else {
-            let stream = spoke_ctrl_read.take().expect("tolerant spokes hold a reader clone");
+            let lrx = leave_rx.take().expect("tolerant spokes hold the leave channel");
             let t = transport.clone();
             let rec = recovery.clone().expect("tolerant spokes hold recovery state");
-            let gtx = grant_tx.take().expect("tolerant spokes hold the grant sender");
-            let link = ctrl_link.clone().expect("spokes hold a control link");
-            let sd = shutting_down.clone();
-            spoke_reader = Some(
+            spoke_recovery_thread = Some(
                 std::thread::Builder::new()
-                    .name(format!("glb-fleet-ctrl-rx-{rank}"))
-                    .spawn(move || {
-                        spoke_ctrl_reader::<Q::Bag>(stream, rank, t, rec, gtx, link, sd)
-                    })
-                    .expect("spawn spoke control reader"),
+                    .name(format!("glb-recovery-{rank}"))
+                    .spawn(move || spoke_recovery::<Q::Bag>(lrx, rank, t, rec))
+                    .expect("spawn spoke recovery thread"),
             );
         }
     }
@@ -1691,11 +2196,7 @@ where
     let t0 = Instant::now();
     let mut tol_worker: Option<TolerantWorker> = recovery.as_ref().map(|rec| TolerantWorker {
         rec: rec.clone(),
-        ack: if rank == 0 {
-            AckOut::Root(root_tol.as_ref().expect("tolerant root state").ctrl_links.clone())
-        } else {
-            AckOut::Spoke(ctrl_link.clone().expect("spokes hold a control link"))
-        },
+        ack: if rank == 0 { AckOut::Root(net.clone()) } else { AckOut::Spoke(net.clone()) },
     });
     let handles: Vec<_> = workers
         .into_iter()
@@ -1719,42 +2220,31 @@ where
     let local_results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
     let mut result = reducer.reduce_all(local_results);
 
-    // -- result gathering (spoke side; on the still-open control link) ----
+    // -- result gathering (spoke side; rides the control queue) ----------
     if P::GATHER && ranks > 1 && rank != 0 {
-        let link = ctrl_link.as_ref().expect("spokes hold a control link");
-        let mut s = link.lock().unwrap();
-        wire::write_frame(&mut *s, &Ctrl::Result { bytes: plan.encode(&result) }.to_body())
-            .context("send fleet result")?;
+        let sent = net.send_ctrl(&Ctrl::Result { bytes: plan.encode(&result) });
+        if !sent {
+            bail!("fleet control link closed before the result was sent");
+        }
     }
 
     // -- teardown ----------------------------------------------------------
-    // Half-close everything we write to; readers drain peers to EOF.
-    // From here a control-link EOF is an orderly shutdown, not a death.
-    shutting_down.store(true, Ordering::SeqCst);
-    if let Some(link) = &ctrl_link {
-        let _ = link.lock().unwrap().shutdown(Shutdown::Write);
-    }
-    for link in transport.links.iter().flatten() {
-        let _ = link.lock().unwrap().shutdown(Shutdown::Write);
-    }
-    for h in mesh_readers {
-        let _ = h.join();
-    }
-    for h in control_servers {
+    // Flip the shutdown flag and wake the reactor: it drains every write
+    // queue, half-closes, and reads every peer to EOF before exiting, so
+    // joining it means the fleet's last frames (including the Result
+    // above) have landed. From here a control-link EOF is an orderly
+    // shutdown, not a death.
+    net.shutdown.store(true, Ordering::SeqCst);
+    net.waker.wake();
+    if let Some(h) = reactor {
         let _ = h.join();
     }
     if let Some(h) = coordinator {
-        // Joins cleanly: the last control servant's exit dropped the last
-        // death sender, so the coordinator's recv loop has ended.
+        // Joins cleanly: the reactor's exit dropped the death sender, so
+        // the coordinator's recv loop has ended.
         let _ = h.join();
     }
-    if let Some(tolr) = &root_tol {
-        // Hand surviving spokes' control readers their EOF.
-        for link in tolr.ctrl_links.iter().flatten() {
-            let _ = link.lock().unwrap().shutdown(Shutdown::Write);
-        }
-    }
-    if let Some(h) = spoke_reader {
+    if let Some(h) = spoke_recovery_thread {
         let _ = h.join();
     }
 

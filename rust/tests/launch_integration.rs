@@ -118,6 +118,68 @@ fn glb_launch_writes_an_aggregated_fleet_report() {
     std::fs::remove_file(&report).ok();
 }
 
+/// The reactor acceptance fleet: 8 ranks on one host, real mesh fan-out
+/// (7 mesh links per rank), one I/O thread per rank, batched frames
+/// conserved fleet-wide, and a result bit-identical to the thread
+/// runtime. Before the event-loop transport this shape cost each rank
+/// ~14 reader threads; the per-rank `io_threads` field pins the
+/// O(workers)-not-O(peers) property.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn eight_rank_fleet_runs_one_io_thread_per_rank() {
+    const DEPTH: u32 = 7;
+    let bin = env!("CARGO_BIN_EXE_glb");
+    let report = std::env::temp_dir()
+        .join(format!("glb-launch-itest-{}-fleet8.json", std::process::id()));
+    let output = std::process::Command::new(bin)
+        .args(["launch", "--np", "8", "uts", "--depth", "7", "--transport", "tcp", "--report"])
+        .arg(&report)
+        .output()
+        .expect("run glb launch");
+    assert!(
+        output.status.success(),
+        "glb launch failed ({}):\n--- stdout\n{}\n--- stderr\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+
+    let fleet_report = load_fleet_report(&report).expect("fleet report parses");
+    assert_eq!(fleet_report.get("ranks").and_then(Value::as_u64), Some(8));
+    let per_rank = fleet_report.get("per_rank").and_then(Value::as_arr).expect("per_rank");
+    assert_eq!(per_rank.len(), 8);
+    for r in per_rank {
+        assert_eq!(
+            r.get("io_threads").and_then(Value::as_u64),
+            Some(1),
+            "rank {:?}: exactly one reactor thread, regardless of 7 peers",
+            r.get("rank")
+        );
+    }
+
+    // Frame conservation across the mesh: every frame flushed by some
+    // rank's reactor was decoded by another's.
+    let sent = fleet_report.get("frames_sent").and_then(Value::as_u64).unwrap();
+    let recv = fleet_report.get("frames_recv").and_then(Value::as_u64).unwrap();
+    assert!(sent > 0, "an 8-rank fleet must exchange frames");
+    assert_eq!(sent, recv, "frames conserved across the mesh");
+    let batches = fleet_report.get("batches").and_then(Value::as_u64).unwrap();
+    assert!(batches > 0);
+    assert!(batches <= sent, "a batch carries at least one frame");
+
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: DEPTH };
+    let cfg = GlbConfig::new(8, GlbParams::default());
+    let reference = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+    assert_eq!(reference.result, sequential_count(&up));
+    assert_eq!(
+        fleet_report.get("result").and_then(Value::as_u64),
+        Some(reference.result),
+        "8-rank fleet result must match the thread runtime bit-for-bit"
+    );
+
+    std::fs::remove_file(&report).ok();
+}
+
 /// A launch spec error must be reported before anything spawns.
 #[test]
 fn glb_launch_rejects_derived_flags_loudly() {

@@ -294,6 +294,83 @@ fn prop_ctrl_hostile_bytes_error_not_panic() {
     });
 }
 
+// ---------------------------------------------------------------------
+// pooled / into-buffer codec paths (the reactor's zero-copy data plane
+// must be bit-identical to the allocate-per-frame encoders it replaced)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_pooled_encode_matches_allocating_encode_byte_for_byte() {
+    use glb::glb::wire::BufferPool;
+    let pool = BufferPool::new();
+    check_cases("pooled-encode-identity", 200, |g: &mut Gen| {
+        // Data frames, every Msg variant: encode_data_frame_into on a
+        // recycled pool buffer vs the allocating body + frame() pair.
+        let to = g.usize(0..1 << 20);
+        let bag = random_uts_bag(g);
+        let msg = random_msg(g, bag);
+        let old = wire::frame(wire::encode_data_frame_body(to, &msg));
+        let mut buf = pool.get();
+        let body_len = wire::encode_data_frame_into(to, &msg, &mut buf);
+        assert_eq!(buf, old, "pooled data frame must be bit-identical");
+        assert_eq!(body_len + wire::FRAME_LEN_BYTES, old.len());
+        // Recycle and re-encode a different message: a dirty recycled
+        // buffer must not leak prior bytes into the next frame.
+        pool.put(buf);
+        let bag2 = random_uts_bag(g);
+        let msg2 = random_msg(g, bag2);
+        let old2 = wire::frame(wire::encode_data_frame_body(to, &msg2));
+        let mut buf2 = pool.get();
+        wire::encode_data_frame_into(to, &msg2, &mut buf2);
+        assert_eq!(buf2, old2, "recycled buffer must encode identically");
+        pool.put(buf2);
+        // Control frames, every Ctrl variant.
+        for variant in 0..12 {
+            let c = random_ctrl(g, variant);
+            let old = wire::frame(c.to_body());
+            let mut buf = pool.get();
+            let body_len = wire::encode_ctrl_frame_into(&c, &mut buf);
+            assert_eq!(buf, old, "pooled ctrl frame must be bit-identical");
+            assert_eq!(body_len + wire::FRAME_LEN_BYTES, old.len());
+            pool.put(buf);
+        }
+    });
+}
+
+#[test]
+fn prop_frame_assembler_decodes_any_split_points() {
+    use glb::glb::wire::FrameAssembler;
+    check_cases("assembler-split-fuzz", 150, |g: &mut Gen| {
+        // A batched stream: several frames back to back, as the reactor's
+        // writev coalescing would put them on the wire.
+        let count = g.usize(1..8);
+        let mut msgs = Vec::new();
+        let mut stream = Vec::new();
+        for _ in 0..count {
+            let to = g.usize(0..1 << 20);
+            let bag = random_uts_bag(g);
+            let msg = random_msg(g, bag);
+            wire::encode_data_frame_into(to, &msg, &mut stream);
+            msgs.push((to, msg));
+        }
+        // Feed it in arbitrary chunks (1..=17 bytes, including splits
+        // inside length prefixes) and require the exact frame sequence.
+        let mut asm = FrameAssembler::new(wire::MAX_FRAME_BYTES);
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let n = g.usize(1..18).min(stream.len() - off);
+            asm.feed(&stream[off..off + n]);
+            off += n;
+            while let Some(body) = asm.next_frame().expect("well-formed stream") {
+                got.push(wire::decode_data_frame_body::<UtsBag>(body).expect("decode frame"));
+            }
+        }
+        assert_eq!(got, msgs, "split points must not change the decoded sequence");
+        assert_eq!(asm.buffered(), 0, "no bytes may linger after the last frame");
+    });
+}
+
 #[test]
 fn prop_wire_bytes_pin_sim_accounting_to_codec() {
     // The simulator charges `Msg::wire_bytes` per message; the socket
