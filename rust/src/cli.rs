@@ -133,6 +133,11 @@ pub struct TcpOpts {
     /// How many spoke crashes the fleet absorbs before giving up
     /// (0 = any rank death is fatal, the pre-fault-tolerance behaviour).
     pub tolerate_failures: usize,
+    /// Live telemetry sample interval in ms (`--stats-interval`);
+    /// `None` keeps the telemetry plane disarmed.
+    pub stats_interval_ms: Option<u64>,
+    /// Closed-loop adaptive retuning from the live gauges (`--adapt`).
+    pub adapt: bool,
 }
 
 /// Resolve `--transport tcp|thread|sim`; the legacy `--sim` / `--threads`
@@ -179,6 +184,17 @@ pub fn tcp_opts_from(args: &Args) -> Result<TcpOpts> {
         bind,
         advertise: args.get("advertise").map(String::from),
         tolerate_failures: args.parse_opt("tolerate-failures", 0usize)?,
+        stats_interval_ms: match args.get("stats-interval") {
+            None => None,
+            Some(v) => {
+                let ms: u64 = v.parse().map_err(|e| anyhow!("--stats-interval {v}: {e}"))?;
+                if ms == 0 {
+                    bail!("--stats-interval must be >= 1 (milliseconds)");
+                }
+                Some(ms)
+            }
+        },
+        adapt: args.flag("adapt"),
     })
 }
 
@@ -249,6 +265,15 @@ COMMON OPTIONS
                          rank's credit — results stay exact. Rank 0 itself is
                          never expendable. `glb launch` forwards this to every
                          rank and keeps the fleet alive through K deaths.
+  --stats-interval MS    tcp: sample live gauges every MS ms and ship them to
+                         rank 0, which prints one fleet summary line per
+                         interval (launcher shorthand: --stats[=MS], default
+                         1000); the series lands in the fleet report as
+                         \"live_stats\"
+  --adapt                tcp: close the telemetry loop — workers retune loot
+                         granularity and lifeline arity mid-run on persistent
+                         starvation (off by default; not with
+                         --tolerate-failures)
   --arch NAME            sim architecture: power775|bgq|k|ideal (default bgq)
   --n --w --l --z        GLB tuning parameters (paper §2.4)
   --workers-per-node K   hierarchical topology: K workers share a node bag
@@ -390,6 +415,26 @@ mod tests {
         let t = tcp_opts_from(&c).unwrap();
         assert_eq!(t.advertise.as_deref(), Some("10.0.0.7"));
         assert_eq!(t.bind, None);
+    }
+
+    #[test]
+    fn stats_and_adapt_flags() {
+        let off = Args::parse(&s(&["--rank", "0", "--peers", "2"]), &["adapt"]).unwrap();
+        let t = tcp_opts_from(&off).unwrap();
+        assert_eq!(t.stats_interval_ms, None, "telemetry disarmed by default");
+        assert!(!t.adapt);
+        let on = Args::parse(
+            &s(&["--rank", "1", "--peers", "2", "--stats-interval", "250", "--adapt"]),
+            &["adapt"],
+        )
+        .unwrap();
+        let t = tcp_opts_from(&on).unwrap();
+        assert_eq!(t.stats_interval_ms, Some(250));
+        assert!(t.adapt);
+        let zero =
+            Args::parse(&s(&["--rank", "0", "--peers", "2", "--stats-interval", "0"]), &[])
+                .unwrap();
+        assert!(tcp_opts_from(&zero).is_err(), "a zero interval would busy-spin the reactor");
     }
 
     #[test]

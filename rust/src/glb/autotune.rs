@@ -30,6 +30,111 @@
 
 use super::params::GlbParams;
 
+/// Tuning knobs for the closed-loop [`AdaptiveController`] (the mid-run
+/// half of auto-tuning, driven by the live-telemetry gauges; `--adapt`).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveConfig {
+    /// Consecutive hungry observations (starvation counter rising) a
+    /// worker must accumulate before the controller intervenes — the
+    /// dwell filters one-off starvation episodes from persistent
+    /// imbalance.
+    pub dwell: u32,
+    /// Lifeline arity adopted on intervention. Lowering the arity
+    /// *deepens* the derived hypercube, giving every node more
+    /// lifelines — the paper's deep-cube prescription for irregular
+    /// workloads, applied only once the run proves irregular.
+    pub l: usize,
+    /// Granularity divisor applied on intervention (smaller chunks probe
+    /// the mailbox more often, so steal requests stop languishing).
+    pub n_shrink: usize,
+    /// Floor for the shrunken granularity.
+    pub n_floor: usize,
+    /// Interventions allowed per worker (one decisive switch by
+    /// default — repeated shrinking would grind granularity to dust).
+    pub max_retunes: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self { dwell: 3, l: 2, n_shrink: 4, n_floor: 16, max_retunes: 1 }
+    }
+}
+
+/// One observation of a worker's live gauges, in whichever clock domain
+/// the runtime has (wall time under sockets, ticks under the sim — the
+/// controller only compares consecutive samples, never reads a clock).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ControllerSample {
+    /// Cumulative task items processed.
+    pub items: u64,
+    /// Cumulative starvation episodes.
+    pub starvations: u64,
+    /// Current bag depth.
+    pub bag_depth: u64,
+}
+
+/// A recommended mid-run parameter change, to be applied through
+/// [`crate::glb::worker::Worker::try_retune`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Retune {
+    pub l: usize,
+    pub n: usize,
+}
+
+/// Per-worker closed-loop tuner (Boulmier et al.'s
+/// imbalance-anticipation idea, reduced to the signal GLB actually
+/// exposes): watch the starvation counter across consecutive telemetry
+/// observations, and once a worker has starved in `dwell` consecutive
+/// windows — persistent imbalance, not a blip — recommend the deep-cube
+/// / fine-grain parameter point. The caller applies the recommendation
+/// at the next protocol-safe moment and [`AdaptiveController::confirm`]s.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    prev: Option<ControllerSample>,
+    hungry: u32,
+    applied: u32,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        Self { cfg, prev: None, hungry: 0, applied: 0 }
+    }
+
+    /// Feed one observation; `current_n` is the worker's present
+    /// granularity. Returns a recommendation once the hungry streak
+    /// reaches the dwell (and keeps returning it until the caller
+    /// manages to apply it — a worker mid-steal just retries later).
+    pub fn observe(&mut self, sample: ControllerSample, current_n: usize) -> Option<Retune> {
+        if self.applied >= self.cfg.max_retunes {
+            return None;
+        }
+        if let Some(prev) = self.prev {
+            if sample.starvations > prev.starvations {
+                self.hungry += 1;
+            } else {
+                self.hungry = 0;
+            }
+        }
+        self.prev = Some(sample);
+        (self.hungry >= self.cfg.dwell).then(|| Retune {
+            l: self.cfg.l,
+            n: (current_n / self.cfg.n_shrink).max(self.cfg.n_floor).min(current_n),
+        })
+    }
+
+    /// The caller applied the recommendation; stop recommending.
+    pub fn confirm(&mut self) {
+        self.applied += 1;
+        self.hungry = 0;
+    }
+
+    /// Interventions applied so far.
+    pub fn applied(&self) -> u32 {
+        self.applied
+    }
+}
+
 /// Workload description for tuning.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadProfile {
@@ -195,5 +300,50 @@ mod tests {
         let p = WorkloadProfile::new(-5.0, 7.0);
         assert!(p.ns_per_item > 0.0);
         assert_eq!(p.irregularity, 1.0);
+    }
+
+    fn sample(starvations: u64) -> ControllerSample {
+        ControllerSample { starvations, ..Default::default() }
+    }
+
+    #[test]
+    fn controller_waits_out_the_dwell_then_recommends() {
+        let mut c = AdaptiveController::new(AdaptiveConfig::default());
+        assert_eq!(c.observe(sample(0), 511), None, "first sample only establishes a base");
+        assert_eq!(c.observe(sample(1), 511), None);
+        assert_eq!(c.observe(sample(2), 511), None);
+        let r = c.observe(sample(3), 511).expect("three rising windows = persistent imbalance");
+        assert_eq!(r, Retune { l: 2, n: 127 });
+        // Unapplied recommendations repeat until confirmed...
+        assert_eq!(c.observe(sample(4), 511), Some(Retune { l: 2, n: 127 }));
+        c.confirm();
+        assert_eq!(c.applied(), 1);
+        // ...and the one-shot budget silences the controller for good.
+        for s in 5..20 {
+            assert_eq!(c.observe(sample(s), 127), None);
+        }
+    }
+
+    #[test]
+    fn controller_streak_resets_on_a_quiet_window() {
+        let mut c = AdaptiveController::new(AdaptiveConfig::default());
+        c.observe(sample(0), 511);
+        c.observe(sample(1), 511);
+        c.observe(sample(2), 511);
+        assert_eq!(c.observe(sample(2), 511), None, "quiet window breaks the streak");
+        c.observe(sample(3), 511);
+        c.observe(sample(4), 511);
+        assert_eq!(c.observe(sample(5), 511), Some(Retune { l: 2, n: 127 }));
+    }
+
+    #[test]
+    fn controller_respects_the_granularity_floor() {
+        let mut c = AdaptiveController::new(AdaptiveConfig { dwell: 1, ..Default::default() });
+        c.observe(sample(0), 20);
+        let r = c.observe(sample(1), 20).expect("dwell of one fires immediately");
+        assert_eq!(r.n, 16, "floor, not 20/4");
+        let mut c2 = AdaptiveController::new(AdaptiveConfig { dwell: 1, ..Default::default() });
+        c2.observe(sample(0), 8);
+        assert_eq!(c2.observe(sample(1), 8).unwrap().n, 8, "never grow n past its current value");
     }
 }

@@ -23,6 +23,9 @@ pub struct WorkerStats {
     pub chunks: u64,
     /// Times this worker ran dry and entered the steal protocol.
     pub starvations: u64,
+    /// Mid-run adaptive retunes applied ([`crate::glb::worker::Worker::try_retune`]);
+    /// zero unless `--adapt` closed the telemetry loop.
+    pub retunes: u64,
 
     /// ns spent inside `process`.
     pub process_ns: u64,
@@ -77,6 +80,7 @@ impl WorkerStats {
         self.units += o.units;
         self.chunks += o.chunks;
         self.starvations += o.starvations;
+        self.retunes += o.retunes;
         self.process_ns += o.process_ns;
         self.distribute_ns += o.distribute_ns;
         self.wait_ns += o.wait_ns;
@@ -125,6 +129,7 @@ impl WorkerStats {
             ("units", n(self.units)),
             ("chunks", n(self.chunks)),
             ("starvations", n(self.starvations)),
+            ("retunes", n(self.retunes)),
             ("process_ns", n(self.process_ns)),
             ("distribute_ns", n(self.distribute_ns)),
             ("wait_ns", n(self.wait_ns)),

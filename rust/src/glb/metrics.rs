@@ -1,0 +1,256 @@
+//! Live per-rank telemetry: lock-free gauge publication from the worker
+//! hot path, compact [`StatsSnapshot`]s for the control plane, and the
+//! rank-0 bank that folds them into a fleet-wide view.
+//!
+//! RunLog is post-mortem only — serialized once, after the last worker
+//! joins. This module is the live plane the ROADMAP asks for: each
+//! worker *publishes* its counters into a [`MetricsHub`] slot (plain
+//! relaxed atomic stores — no locks, no allocation, nothing shared
+//! between workers), the rank's reactor *samples* the hub on a periodic
+//! timer, wraps the totals in a [`StatsSnapshot`], and ships it to
+//! rank 0 as a `Ctrl::Stats` frame riding the existing batched control
+//! link. Rank 0 banks the latest snapshot per rank ([`StatsBank`]) and
+//! prints one aggregated fleet line per interval.
+//!
+//! Everything on the wire is a cumulative integer counter; rates
+//! (tasks/s, bytes/s, frames/s) are derived downstream from consecutive
+//! samples, so a lost or reordered snapshot skews nothing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::logger::WorkerStats;
+
+/// One rank's gauges at one instant. All counters are cumulative since
+/// the run started (`bag_depth`, `credit_pool` and `out_queue` are
+/// levels, not counters). `last` marks the teardown snapshot taken after
+/// every worker joined — its worker-sourced fields equal the rank's
+/// final `RunLog` totals exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// The reporting rank.
+    pub rank: u64,
+    /// Sample sequence number within this rank (monotonic).
+    pub seq: u64,
+    /// Milliseconds since this rank armed its stats plane.
+    pub elapsed_ms: u64,
+    /// Total tasks currently queued across this rank's bags.
+    pub bag_depth: u64,
+    /// Work items processed (drives the tasks/s expansion rate).
+    pub items: u64,
+    /// Steal requests this rank has sent (random + lifeline).
+    pub steals_out: u64,
+    /// Steal requests this rank has answered with loot.
+    pub steals_in: u64,
+    /// Loot bags shipped to thieves.
+    pub loot_sent: u64,
+    /// Loot bags merged from victims.
+    pub loot_recv: u64,
+    /// Chunks that came up empty (the starvation signal the adaptive
+    /// controller watches).
+    pub starvations: u64,
+    /// Credit atoms currently pooled in this rank's ledger.
+    pub credit_pool: u64,
+    /// Post-bootstrap wire bytes sent / received by this process.
+    pub wire_tx: u64,
+    pub wire_rx: u64,
+    /// Frames flushed to / decoded off this process's sockets.
+    pub frames_tx: u64,
+    pub frames_rx: u64,
+    /// Frames currently parked in this rank's write queues.
+    pub out_queue: u64,
+    /// Teardown snapshot: the rank's workers have all finished.
+    pub last: bool,
+}
+
+impl StatsSnapshot {
+    /// Fold another rank's snapshot into a fleet-wide sum: counters and
+    /// levels add, `elapsed_ms`/`seq` take the max, `last` only holds if
+    /// every folded snapshot was final.
+    pub fn absorb(&mut self, o: &StatsSnapshot) {
+        self.seq = self.seq.max(o.seq);
+        self.elapsed_ms = self.elapsed_ms.max(o.elapsed_ms);
+        self.bag_depth += o.bag_depth;
+        self.items += o.items;
+        self.steals_out += o.steals_out;
+        self.steals_in += o.steals_in;
+        self.loot_sent += o.loot_sent;
+        self.loot_recv += o.loot_recv;
+        self.starvations += o.starvations;
+        self.credit_pool += o.credit_pool;
+        self.wire_tx += o.wire_tx;
+        self.wire_rx += o.wire_rx;
+        self.frames_tx += o.frames_tx;
+        self.frames_rx += o.frames_rx;
+        self.out_queue += o.out_queue;
+        self.last &= o.last;
+    }
+}
+
+/// One worker's published gauge slot. Plain relaxed atomics: each field
+/// is independently meaningful (cumulative counter or level), so no
+/// cross-field consistency is needed and the publish path costs a
+/// handful of uncontended stores.
+#[derive(Default)]
+struct WorkerGauges {
+    bag_depth: AtomicU64,
+    items: AtomicU64,
+    steals_out: AtomicU64,
+    steals_in: AtomicU64,
+    loot_sent: AtomicU64,
+    loot_recv: AtomicU64,
+    starvations: AtomicU64,
+}
+
+/// The rank-local gauge board: one slot per hosted worker, published by
+/// the worker threads and sampled by the reactor's stats timer (and by
+/// the teardown path for the exact final snapshot).
+#[derive(Default)]
+pub struct MetricsHub {
+    slots: Vec<WorkerGauges>,
+}
+
+impl MetricsHub {
+    pub fn new(workers: usize) -> Self {
+        Self { slots: (0..workers).map(|_| WorkerGauges::default()).collect() }
+    }
+
+    /// Publish one worker's current counters (hot path: relaxed stores).
+    pub fn publish(&self, slot: usize, bag_depth: usize, stats: &WorkerStats) {
+        let g = &self.slots[slot];
+        g.bag_depth.store(bag_depth as u64, Ordering::Relaxed);
+        g.items.store(stats.items_processed, Ordering::Relaxed);
+        g.steals_out
+            .store(stats.random_steals_sent + stats.lifeline_steals_sent, Ordering::Relaxed);
+        g.steals_in.store(
+            stats.random_steals_perpetrated + stats.lifeline_steals_perpetrated,
+            Ordering::Relaxed,
+        );
+        g.loot_sent.store(stats.loot_bags_sent, Ordering::Relaxed);
+        g.loot_recv.store(stats.loot_bags_received, Ordering::Relaxed);
+        g.starvations.store(stats.starvations, Ordering::Relaxed);
+    }
+
+    /// Sum every worker slot into a partially filled snapshot (the
+    /// caller adds the rank-level fields: credit pool, wire counters,
+    /// queue depths).
+    pub fn fold(&self) -> StatsSnapshot {
+        let mut s = StatsSnapshot::default();
+        for g in &self.slots {
+            s.bag_depth += g.bag_depth.load(Ordering::Relaxed);
+            s.items += g.items.load(Ordering::Relaxed);
+            s.steals_out += g.steals_out.load(Ordering::Relaxed);
+            s.steals_in += g.steals_in.load(Ordering::Relaxed);
+            s.loot_sent += g.loot_sent.load(Ordering::Relaxed);
+            s.loot_recv += g.loot_recv.load(Ordering::Relaxed);
+            s.starvations += g.starvations.load(Ordering::Relaxed);
+        }
+        s
+    }
+}
+
+/// Rank 0's board of the latest snapshot per rank. The reactor banks
+/// inbound `Ctrl::Stats` frames here; the periodic printer and the
+/// teardown path read it to build the fleet-wide aggregate.
+pub struct StatsBank {
+    slots: Mutex<Vec<Option<StatsSnapshot>>>,
+}
+
+impl StatsBank {
+    pub fn new(ranks: usize) -> Self {
+        Self { slots: Mutex::new((0..ranks).map(|_| None).collect()) }
+    }
+
+    /// Bank `snap` as its rank's latest sample (stale out-of-order
+    /// samples are dropped by sequence number; a `last` snapshot always
+    /// wins).
+    pub fn bank(&self, snap: StatsSnapshot) {
+        let mut slots = self.slots.lock().unwrap();
+        let Some(slot) = slots.get_mut(snap.rank as usize) else { return };
+        match slot {
+            Some(prev) if !snap.last && (prev.last || prev.seq >= snap.seq) => {}
+            _ => *slot = Some(snap),
+        }
+    }
+
+    /// The latest banked snapshot per rank (`None` = nothing heard yet).
+    pub fn latest(&self) -> Vec<Option<StatsSnapshot>> {
+        self.slots.lock().unwrap().clone()
+    }
+
+    /// Fold every banked snapshot into one fleet-wide sum, with the
+    /// count of ranks heard from.
+    pub fn fleet(&self) -> (StatsSnapshot, usize) {
+        let slots = self.slots.lock().unwrap();
+        let mut sum = StatsSnapshot { last: true, ..StatsSnapshot::default() };
+        let mut heard = 0;
+        for snap in slots.iter().flatten() {
+            sum.absorb(snap);
+            heard += 1;
+        }
+        (sum, heard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(items: u64, loot_sent: u64) -> WorkerStats {
+        WorkerStats {
+            items_processed: items,
+            loot_bags_sent: loot_sent,
+            random_steals_sent: 2,
+            lifeline_steals_sent: 3,
+            ..WorkerStats::default()
+        }
+    }
+
+    #[test]
+    fn hub_folds_worker_slots() {
+        let hub = MetricsHub::new(2);
+        hub.publish(0, 4, &stats(10, 1));
+        hub.publish(1, 6, &stats(20, 2));
+        let s = hub.fold();
+        assert_eq!(s.bag_depth, 10);
+        assert_eq!(s.items, 30);
+        assert_eq!(s.loot_sent, 3);
+        assert_eq!(s.steals_out, 10);
+        // Re-publishing a slot overwrites (cumulative counters, not adds).
+        hub.publish(1, 0, &stats(25, 2));
+        assert_eq!(hub.fold().items, 35);
+    }
+
+    #[test]
+    fn bank_keeps_latest_by_seq_and_final_wins() {
+        let bank = StatsBank::new(2);
+        bank.bank(StatsSnapshot { rank: 1, seq: 3, items: 30, ..Default::default() });
+        bank.bank(StatsSnapshot { rank: 1, seq: 2, items: 20, ..Default::default() });
+        assert_eq!(bank.latest()[1].unwrap().items, 30, "stale sample dropped");
+        bank.bank(StatsSnapshot { rank: 1, seq: 1, items: 99, last: true, ..Default::default() });
+        assert_eq!(bank.latest()[1].unwrap().items, 99, "final snapshot always wins");
+        bank.bank(StatsSnapshot { rank: 1, seq: 9, items: 1, ..Default::default() });
+        assert_eq!(bank.latest()[1].unwrap().items, 99, "nothing after final");
+        // Out-of-range ranks are ignored, not a panic.
+        bank.bank(StatsSnapshot { rank: 7, ..Default::default() });
+        let (fleet, heard) = bank.fleet();
+        assert_eq!((fleet.items, heard), (99, 1));
+    }
+
+    #[test]
+    fn fleet_fold_sums_and_tracks_finality() {
+        let bank = StatsBank::new(3);
+        bank.bank(StatsSnapshot { rank: 0, seq: 1, items: 5, last: true, ..Default::default() });
+        bank.bank(StatsSnapshot { rank: 2, seq: 4, items: 7, bag_depth: 3, ..Default::default() });
+        let (fleet, heard) = bank.fleet();
+        assert_eq!(heard, 2);
+        assert_eq!(fleet.items, 12);
+        assert_eq!(fleet.bag_depth, 3);
+        assert_eq!(fleet.seq, 4);
+        assert!(!fleet.last, "one rank still live");
+        bank.bank(StatsSnapshot { rank: 2, seq: 5, items: 9, last: true, ..Default::default() });
+        let (fleet, _) = bank.fleet();
+        assert!(fleet.last, "every banked snapshot final");
+        assert_eq!(fleet.items, 14);
+    }
+}

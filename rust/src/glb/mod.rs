@@ -61,6 +61,7 @@ pub mod autotune;
 pub mod lifeline;
 pub mod logger;
 pub mod message;
+pub mod metrics;
 pub mod params;
 pub mod task_bag;
 pub mod task_queue;
@@ -69,10 +70,13 @@ pub mod topology;
 pub mod wire;
 pub mod worker;
 
-pub use autotune::{autotune, WorkloadProfile};
+pub use autotune::{
+    autotune, AdaptiveConfig, AdaptiveController, ControllerSample, Retune, WorkloadProfile,
+};
 pub use lifeline::{LifelineGraph, VictimSelector};
 pub use logger::{RunLog, WorkerStats};
 pub use message::{Effect, Msg, PlaceId};
+pub use metrics::{MetricsHub, StatsBank, StatsSnapshot};
 pub use params::GlbParams;
 pub use task_bag::{ArrayListTaskBag, TaskBag};
 pub use task_queue::{FnReducer, ProcessOutcome, Reducer, SumReducer, TaskQueue, VecSumReducer};

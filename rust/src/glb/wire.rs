@@ -38,6 +38,7 @@
 use std::io::{self, Read, Write};
 
 use super::message::{Msg, PlaceId};
+use super::metrics::StatsSnapshot;
 use super::task_bag::ArrayListTaskBag;
 
 /// Bytes of the `len` prefix in front of every frame body.
@@ -351,6 +352,7 @@ const CTRL_JOIN: u8 = 8;
 const CTRL_LEAVE: u8 = 9;
 const CTRL_ACK: u8 = 10;
 const CTRL_RECONCILE: u8 = 11;
+const CTRL_STATS: u8 = 12;
 
 /// Fleet control-plane messages, exchanged as length-prefixed frames on
 /// each rank's control link to rank 0. Rank 0 is bootstrap + credit root
@@ -401,6 +403,11 @@ pub enum Ctrl {
     /// from it. The root solves for the atoms that died with the rank
     /// and reclaims them, keeping `recovered == total` reachable.
     Reconcile { rank: u64, sent: u64, received: u64 },
+    /// rank → root: a live telemetry sample (periodic while `--stats`
+    /// is armed, plus one final `last` snapshot at teardown). Purely
+    /// advisory — losing one skews nothing, since every field is a
+    /// cumulative counter or an instantaneous level.
+    Stats(StatsSnapshot),
 }
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -481,6 +488,26 @@ impl Ctrl {
                 put_u64(out, *sent);
                 put_u64(out, *received);
             }
+            Ctrl::Stats(s) => {
+                put_u8(out, CTRL_STATS);
+                put_u64(out, s.rank);
+                put_u64(out, s.seq);
+                put_u64(out, s.elapsed_ms);
+                put_u64(out, s.bag_depth);
+                put_u64(out, s.items);
+                put_u64(out, s.steals_out);
+                put_u64(out, s.steals_in);
+                put_u64(out, s.loot_sent);
+                put_u64(out, s.loot_recv);
+                put_u64(out, s.starvations);
+                put_u64(out, s.credit_pool);
+                put_u64(out, s.wire_tx);
+                put_u64(out, s.wire_rx);
+                put_u64(out, s.frames_tx);
+                put_u64(out, s.frames_rx);
+                put_u64(out, s.out_queue);
+                put_u8(out, s.last as u8);
+            }
         }
     }
 
@@ -533,6 +560,25 @@ impl Ctrl {
             CTRL_RECONCILE => {
                 Ctrl::Reconcile { rank: r.u64()?, sent: r.u64()?, received: r.u64()? }
             }
+            CTRL_STATS => Ctrl::Stats(StatsSnapshot {
+                rank: r.u64()?,
+                seq: r.u64()?,
+                elapsed_ms: r.u64()?,
+                bag_depth: r.u64()?,
+                items: r.u64()?,
+                steals_out: r.u64()?,
+                steals_in: r.u64()?,
+                loot_sent: r.u64()?,
+                loot_recv: r.u64()?,
+                starvations: r.u64()?,
+                credit_pool: r.u64()?,
+                wire_tx: r.u64()?,
+                wire_rx: r.u64()?,
+                frames_tx: r.u64()?,
+                frames_rx: r.u64()?,
+                out_queue: r.u64()?,
+                last: r.bool()?,
+            }),
             t => return Err(WireError::BadTag(t)),
         };
         match r.remaining() {
@@ -818,6 +864,30 @@ mod tests {
 
     type Bag = ArrayListTaskBag<u64>;
 
+    /// Every field distinct and nonzero, so a decode that swaps or drops
+    /// a field cannot still compare equal.
+    fn sample_snapshot() -> StatsSnapshot {
+        StatsSnapshot {
+            rank: 1,
+            seq: 2,
+            elapsed_ms: 3,
+            bag_depth: 4,
+            items: 5,
+            steals_out: 6,
+            steals_in: 7,
+            loot_sent: 8,
+            loot_recv: 9,
+            starvations: 10,
+            credit_pool: 11,
+            wire_tx: u64::MAX,
+            wire_rx: 13,
+            frames_tx: 14,
+            frames_rx: 15,
+            out_queue: 16,
+            last: false,
+        }
+    }
+
     #[test]
     fn fixed_prelude_is_the_documented_size() {
         for msg in [
@@ -971,6 +1041,8 @@ mod tests {
             Ctrl::Ack { rank: 1, result: vec![0xAB, 0xCD], acked: vec![(0, 3), (2, 17)] },
             Ctrl::Ack { rank: 3, result: Vec::new(), acked: Vec::new() },
             Ctrl::Reconcile { rank: 2, sent: u64::MAX, received: 41314 },
+            Ctrl::Stats(sample_snapshot()),
+            Ctrl::Stats(StatsSnapshot { rank: 3, last: true, ..Default::default() }),
         ];
         for msg in msgs {
             let body = msg.to_body();
@@ -992,6 +1064,7 @@ mod tests {
             Ctrl::Leave { epoch: 5, rank: 1 },
             Ctrl::Ack { rank: 2, result: vec![7; 9], acked: vec![(1, 2), (3, 4)] },
             Ctrl::Reconcile { rank: 1, sent: 10, received: 20 },
+            Ctrl::Stats(sample_snapshot()),
         ];
         for msg in msgs {
             let body = msg.to_body();
@@ -1003,6 +1076,12 @@ mod tests {
             assert_eq!(Ctrl::decode(&extended), Err(WireError::Trailing(1)));
         }
         assert_eq!(Ctrl::decode(&[0xEE]), Err(WireError::BadTag(0xEE)));
+        // A Stats frame whose `last` byte is neither 0 nor 1 is hostile,
+        // not a silent truthy cast.
+        let mut lying_bool = Ctrl::Stats(sample_snapshot()).to_body();
+        let at = lying_bool.len() - 1;
+        lying_bool[at] = 2;
+        assert_eq!(Ctrl::decode(&lying_bool), Err(WireError::BadTag(2)));
         // A lying Result length cannot over-allocate: the byte slice is
         // bounds-checked before the copy.
         let mut lying = Ctrl::Result { bytes: vec![1] }.to_body();

@@ -289,6 +289,45 @@ impl<Q: TaskQueue, L: Ledger> Worker<Q, L> {
         self.recorded_thieves.retain(|&t| members.contains(&topo.node_of(t)));
     }
 
+    /// Adaptively retune task granularity `n` and lifeline arity `l`
+    /// mid-run (the closed-loop half of the live-telemetry plane), then
+    /// rebuild the lifeline cube and victim stream under the new arity.
+    /// Lowering `l` raises the derived cube dimension, so a starving
+    /// fleet gets *more* lifelines per node.
+    ///
+    /// Returns `false` without touching anything when the worker is not
+    /// at a safe point — only `Working` with no steal in flight
+    /// qualifies: `WaitRandom`/`WaitLifeline` have a response in flight
+    /// that indexes the old graph, and an `Idle` worker is registered on
+    /// its old lifelines (stale registrations at *other* nodes are
+    /// harmless — an unsolicited push from an old buddy still merges —
+    /// but our own registration set must stay consistent). Callers just
+    /// retry at the next observation.
+    pub fn try_retune(&mut self, l: usize, n: usize) -> bool {
+        if self.phase != Phase::Working || self.outstanding.is_some() {
+            return false;
+        }
+        self.params = self.params.with_l(l).with_n(n);
+        let z = self.params.resolve_z(self.nodes);
+        self.outgoing = if self.is_rep && self.nodes > 1 {
+            LifelineGraph::new(self.node, self.nodes, self.params.l, z)
+                .outgoing
+                .iter()
+                .map(|&buddy| self.topo.representative(buddy))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        self.victims = VictimSelector::new(self.node, self.nodes, self.params.seed);
+        self.stats.retunes += 1;
+        true
+    }
+
+    /// The worker's current tuning parameters (post-retune view).
+    pub fn params(&self) -> &GlbParams {
+        &self.params
+    }
+
     /// One processing chunk (paper §2.4 item 1: "repeatedly calls
     /// process(n) ... between each process(n) call, Worker probes the
     /// network"). The runtime is responsible for draining the mailbox

@@ -72,6 +72,7 @@ pub struct EngineOpts {
 /// stream skips them so a `--report` run stays readable.
 fn is_marker_line(line: &str) -> bool {
     line.starts_with(report::RANK_REPORT_MARKER)
+        || line.starts_with(report::LIVE_STATS_MARKER)
         || line.starts_with(crate::testkit::fleet::LOG_PREFIX)
 }
 
@@ -293,7 +294,7 @@ fn collect_rank_reports(runs: &[RankRun]) -> Result<Vec<Value>> {
             let line = report::find_rank_report(&r.stdout).ok_or_else(|| {
                 anyhow!(
                     "rank {} exited cleanly but emitted no rank report \
-                     (the launched app must support --transport tcp: uts|bc|fib)",
+                     (the launched app must support --transport tcp: uts|bc|fib|nqueens)",
                     r.rank
                 )
             })?;
@@ -330,7 +331,15 @@ pub fn cmd_launch(rest: &[String]) -> Result<()> {
         println!("fleet absorbed {} rank death(s): {dead:?}", dead.len());
     }
     let reports = collect_rank_reports(&runs)?;
-    let fleet = report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall_time_s, &dead)?;
+    let mut fleet =
+        report::aggregate_fleet(spec.app(), &spec.app_argv, reports, wall_time_s, &dead)?;
+    // Rank 0's stdout carries the per-interval fleet telemetry markers
+    // on a `--stats` run; fold them into the report as a time series.
+    // (runs are sorted by rank, and rank 0 is never a tolerated death.)
+    let live = report::extract_live_stats(&runs[0].stdout)?;
+    if !live.is_empty() {
+        report::attach_live_stats(&mut fleet, live);
+    }
     if let Some(path) = &spec.report {
         std::fs::write(path, fleet.render_pretty())
             .with_context(|| format!("write fleet report {}", path.display()))?;

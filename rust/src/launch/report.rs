@@ -20,6 +20,9 @@ use crate::util::json::Value;
 
 /// Marker prefix of a rank's JSON report line on stdout.
 pub const RANK_REPORT_MARKER: &str = "GLB-RANK-REPORT ";
+/// Marker prefix of rank 0's per-interval live-telemetry JSON lines
+/// (emitted by `--stats` runs; see `crate::place::socket`).
+pub const LIVE_STATS_MARKER: &str = "GLB-LIVE-STATS ";
 /// Environment variable the launcher sets so ranks emit report lines.
 pub const RANK_REPORT_ENV: &str = "GLB_RANK_REPORT";
 
@@ -197,6 +200,27 @@ pub fn aggregate_fleet(
         ("totals", totals),
         ("per_rank", Value::Arr(rank_reports)),
     ]))
+}
+
+/// Parse every live-stats marker line in rank 0's captured stdout, in
+/// emission order — the `--stats` time series. An unparsable marker line
+/// is an error (the emitter is ours; garbage means a real bug), but a
+/// stream with no markers is just a run without `--stats`.
+pub fn extract_live_stats(stdout: &[String]) -> Result<Vec<Value>> {
+    stdout
+        .iter()
+        .filter_map(|l| l.strip_prefix(LIVE_STATS_MARKER))
+        .map(|body| Value::parse(body).map_err(|e| anyhow!("live-stats line: {e}")))
+        .collect()
+}
+
+/// Append the `--stats` time series to a fleet report under
+/// `"live_stats"` (glb-fleet-report/v1 keeps the key absent when the
+/// run had no telemetry, so old consumers see an unchanged document).
+pub fn attach_live_stats(fleet: &mut Value, series: Vec<Value>) {
+    if let Value::Obj(pairs) = fleet {
+        pairs.push(("live_stats".into(), Value::Arr(series)));
+    }
 }
 
 /// Read and schema-check a fleet report written by `--report`.
@@ -488,6 +512,37 @@ mod tests {
         // Rank 0 can never be a tolerated death.
         let err = aggregate_fleet("uts", &[], reports, 1.0, &[0]).unwrap_err();
         assert!(format!("{err:#}").contains("rank 0"), "{err:#}");
+    }
+
+    #[test]
+    fn live_stats_lines_extract_and_attach() {
+        let stdout = vec![
+            "launching 2 rank(s)".to_string(),
+            format!("{LIVE_STATS_MARKER}{{\"t_ms\":100,\"tasks\":5,\"last\":false}}"),
+            "glb stats t=0.2s ...".to_string(),
+            format!("{LIVE_STATS_MARKER}{{\"t_ms\":200,\"tasks\":11,\"last\":true}}"),
+        ];
+        let series = extract_live_stats(&stdout).unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("t_ms").and_then(Value::as_u64), Some(100));
+        assert_eq!(series[1].get("last"), Some(&Value::Bool(true)));
+        // Emission order is preserved (the series is a time axis).
+        assert_eq!(series[1].get("tasks").and_then(Value::as_u64), Some(11));
+
+        let mut fleet =
+            aggregate_fleet("uts", &["uts".to_string()], vec![mk_rank(0, 1, 9, 9)], 0.5, &[])
+                .unwrap();
+        assert!(fleet.get("live_stats").is_none(), "absent until attached");
+        attach_live_stats(&mut fleet, series);
+        let attached = fleet.get("live_stats").and_then(Value::as_arr).unwrap();
+        assert_eq!(attached.len(), 2);
+        // The document still parses back identically after attachment.
+        assert_eq!(Value::parse(&fleet.render_pretty()).unwrap(), fleet);
+
+        // No markers: an empty series, not an error.
+        assert_eq!(extract_live_stats(&["plain".to_string()]).unwrap().len(), 0);
+        // A corrupt marker line is a bug in the emitter, not noise.
+        assert!(extract_live_stats(&[format!("{LIVE_STATS_MARKER}{{oops")]).is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@ const LAUNCHER_OPTS: &[&str] =
 const DERIVED_OPTS: &[&str] = &["rank", "peers", "host", "bind", "advertise"];
 
 /// Apps that speak the tcp fleet protocol (and emit rank reports).
-const FLEET_APPS: &[&str] = &["uts", "bc", "fib"];
+const FLEET_APPS: &[&str] = &["uts", "bc", "fib", "nqueens"];
 
 /// Where the ranks run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -66,6 +66,10 @@ pub struct FleetSpec {
     /// both into the engine's fail-fast budget and into every rank's
     /// argv so the runtime arms crash recovery.
     pub tolerate_failures: usize,
+    /// Live-telemetry sampling interval: `--stats[=MS]` (default 1000ms
+    /// when the value is left off). Re-derived per rank as
+    /// `--stats-interval MS` so every rank samples on the same cadence.
+    pub stats_interval_ms: Option<u64>,
 }
 
 /// The spawnable form of a spec: one command per rank.
@@ -88,6 +92,7 @@ impl FleetSpec {
         let mut report: Option<PathBuf> = None;
         let mut timeout_s: u64 = 600;
         let mut tolerate_failures: usize = 0;
+        let mut stats_interval_ms: Option<u64> = None;
         let mut passthrough: Vec<String> = Vec::new();
 
         let mut it = raw.iter();
@@ -105,6 +110,21 @@ impl FleetSpec {
                     "--{name} is derived per rank by `glb launch` \
                      (it computes rank/peers/port and the bind/advertise split); drop it"
                 );
+            }
+            // `--stats[=MS]` is the one launcher option whose value is
+            // optional: a bare `--stats` must not eat the next token
+            // (usually the app name), so it is handled before the
+            // value-taking loop below.
+            if name == "stats" {
+                let ms: u64 = match inline {
+                    Some(v) => v.parse().map_err(|e| anyhow!("--stats={v}: {e}"))?,
+                    None => 1000,
+                };
+                if ms == 0 {
+                    bail!("--stats interval must be >= 1 (milliseconds)");
+                }
+                stats_interval_ms = Some(ms);
+                continue;
             }
             if !LAUNCHER_OPTS.contains(&name) {
                 passthrough.push(tok.clone());
@@ -196,6 +216,7 @@ impl FleetSpec {
             bin,
             ssh: ssh.unwrap_or_else(|| "ssh -o BatchMode=yes".into()),
             tolerate_failures,
+            stats_interval_ms,
         })
     }
 
@@ -224,6 +245,9 @@ impl FleetSpec {
         push("--port", port.to_string());
         if self.tolerate_failures > 0 {
             push("--tolerate-failures", self.tolerate_failures.to_string());
+        }
+        if let Some(ms) = self.stats_interval_ms {
+            push("--stats-interval", ms.to_string());
         }
         match &self.placement {
             Placement::Local { .. } => {
@@ -433,6 +457,35 @@ mod tests {
     }
 
     #[test]
+    fn stats_flag_is_consumed_and_rederived_per_rank() {
+        // Bare --stats defaults to 1000ms and must not eat the app name.
+        let spec = FleetSpec::parse(&s(&["--np", "2", "--stats", "uts", "--depth", "6"])).unwrap();
+        assert_eq!(spec.stats_interval_ms, Some(1000));
+        assert_eq!(spec.app(), "uts");
+        for rank in 0..2 {
+            let argv = spec.rank_argv(rank, 2, 7001);
+            assert_eq!(option_value(&argv, "stats-interval"), Some("1000"), "rank {rank}");
+        }
+        // Inline value overrides the default.
+        let spec = FleetSpec::parse(&s(&["--np", "2", "--stats=250", "uts"])).unwrap();
+        assert_eq!(spec.stats_interval_ms, Some(250));
+        assert_eq!(option_value(&spec.rank_argv(1, 2, 7001), "stats-interval"), Some("250"));
+        // Off by default: no flag on any rank.
+        let spec = FleetSpec::parse(&s(&["--np", "2", "uts"])).unwrap();
+        assert_eq!(spec.stats_interval_ms, None);
+        assert_eq!(option_value(&spec.rank_argv(0, 2, 7001), "stats-interval"), None);
+        // A zero interval is a user error, not a divide-by-zero later.
+        let err = FleetSpec::parse(&s(&["--np", "2", "--stats=0", "uts"])).unwrap_err();
+        assert!(format!("{err:#}").contains(">= 1"), "{err:#}");
+    }
+
+    #[test]
+    fn nqueens_speaks_the_fleet_protocol() {
+        let spec = FleetSpec::parse(&s(&["--np", "2", "nqueens", "--n", "10"])).unwrap();
+        assert_eq!(spec.app(), "nqueens");
+    }
+
+    #[test]
     fn explicit_tcp_transport_is_accepted_verbatim() {
         let spec =
             FleetSpec::parse(&s(&["--np", "4", "uts", "--depth", "6", "--transport", "tcp"]))
@@ -511,6 +564,7 @@ mod tests {
             bin: None,
             ssh: "ssh -o BatchMode=yes".into(),
             tolerate_failures: 0,
+            stats_interval_ms: None,
         };
         let r0 = spec.rank_argv(0, 2, 7117);
         assert_eq!(option_value(&r0, "host"), Some("alpha"), "user@ stripped for dialing");

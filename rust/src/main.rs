@@ -40,7 +40,7 @@ fn main() {
 const COMMON: &[&str] = &[
     "places", "threads", "sim", "arch", "n", "w", "l", "z", "seed", "workers-per-node",
     "random-only", "rounds", "log", "csv", "autotune", "transport", "rank", "peers", "port",
-    "host", "bind", "advertise", "tolerate-failures", "report",
+    "host", "bind", "advertise", "tolerate-failures", "stats-interval", "adapt", "report",
 ];
 
 fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
@@ -75,6 +75,8 @@ fn socket_opts_from(t: &glb::cli::TcpOpts) -> SocketRunOpts {
         bind: t.bind.clone(),
         advertise: t.advertise.clone(),
         tolerate_failures: t.tolerate_failures,
+        stats_interval: t.stats_interval_ms.map(std::time::Duration::from_millis),
+        adapt: t.adapt,
         ..Default::default()
     }
 }
@@ -162,7 +164,8 @@ fn bc_result_json(bc: &[f64]) -> Value {
 fn cmd_uts(rest: &[String]) -> Result<()> {
     let mut known = COMMON.to_vec();
     known.extend(["depth", "b0", "seed-tree"]);
-    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "autotune"])?;
+    let args =
+        Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "autotune", "adapt"])?;
     args.ensure_known(&known)?;
     let up = UtsParams {
         b0: args.parse_opt("b0", 4.0f64)?,
@@ -226,13 +229,32 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
     if transport == TransportKind::Sim {
         let arch = arch_from(&args)?;
         let cost = calibrate_uts_cost();
-        let (out, rep) =
-            run_sim(&cfg, arch, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+        let (out, rep) = if args.flag("adapt") {
+            glb::sim::run_sim_adaptive(
+                &cfg,
+                arch,
+                cost,
+                glb::glb::AdaptiveConfig::default(),
+                20_000, // observe every 20µs of virtual time
+                |_, _| UtsQueue::new(up),
+                |q| q.init_root(),
+                &SumReducer,
+            )
+        } else {
+            run_sim(&cfg, arch, cost, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer)
+        };
         println!("uts-g(sim/{}) places={p} depth={} nodes={}", arch.name, up.max_depth, fmt_count(out.result));
         println!("virtual messages={} events={}", rep.messages, rep.events);
+        if args.flag("adapt") {
+            let retunes: u64 = out.log.per_place.iter().map(|s| s.retunes).sum();
+            println!("adaptive: {retunes} mid-run retune(s)");
+        }
         finish(&out, "nodes/s", args.flag("log"));
         write_report_if_asked("uts", "sim", &args, Value::Int(out.result as i64), &out)?;
     } else {
+        if args.flag("adapt") {
+            bail!("--adapt needs --transport tcp or --sim (the thread runtime has no telemetry plane yet)");
+        }
         let out = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
         println!("uts-g(threads) places={p} depth={} nodes={}", up.max_depth, fmt_count(out.result));
         finish(&out, "nodes/s", args.flag("log"));
@@ -244,7 +266,8 @@ fn cmd_uts(rest: &[String]) -> Result<()> {
 fn cmd_bc(rest: &[String]) -> Result<()> {
     let mut known = COMMON.to_vec();
     known.extend(["scale", "engine", "verify"]);
-    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "verify"])?;
+    let args =
+        Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "verify", "adapt"])?;
     args.ensure_known(&known)?;
     let scale = args.parse_opt("scale", 9u32)?;
     let engine = args.get("engine").unwrap_or("sparse");
@@ -294,6 +317,9 @@ fn cmd_bc(rest: &[String]) -> Result<()> {
         finish(&out, "edges/s", args.flag("log"));
         emit_rank_report("bc", t.rank, t.peers, bc_result_json(&out.result), &out);
         return Ok(());
+    }
+    if args.flag("adapt") {
+        bail!("--adapt needs --transport tcp (use `glb uts --sim --adapt` for the sim ablation)");
     }
     let p = args.parse_opt("places", 4usize)?;
     let params = glb_params_from(&args)?;
@@ -387,7 +413,7 @@ fn top_vertices(bc: &[f64], k: usize) -> Vec<(usize, f64)> {
 fn cmd_fib(rest: &[String]) -> Result<()> {
     let mut known = COMMON.to_vec();
     known.push("fib-n");
-    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "adapt"])?;
     args.ensure_known(&known)?;
     let n = args.parse_opt("fib-n", 24u64)?;
     if transport_from(&args)? == TransportKind::Tcp {
@@ -421,6 +447,9 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
         emit_rank_report("fib", t.rank, t.peers, Value::Int(out.result as i64), &out);
         return Ok(());
     }
+    if args.flag("adapt") {
+        bail!("--adapt needs --transport tcp (use `glb uts --sim --adapt` for the sim ablation)");
+    }
     let p = args.parse_opt("places", 4usize)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);
     let out = run_threads(&cfg, |_, _| FibQueue::new(), |q| q.init(n), &SumReducer);
@@ -436,7 +465,7 @@ fn cmd_fib(rest: &[String]) -> Result<()> {
 fn cmd_nqueens(rest: &[String]) -> Result<()> {
     let mut known = COMMON.to_vec();
     known.push("board");
-    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only"])?;
+    let args = Args::parse(rest, &["threads", "sim", "log", "csv", "random-only", "adapt"])?;
     args.ensure_known(&known)?;
     let b = args.parse_opt("board", 10u8)?;
     if transport_from(&args)? == TransportKind::Tcp {
@@ -469,6 +498,9 @@ fn cmd_nqueens(rest: &[String]) -> Result<()> {
         finish(&out, "boards/s", args.flag("log"));
         emit_rank_report("nqueens", t.rank, t.peers, Value::Int(out.result as i64), &out);
         return Ok(());
+    }
+    if args.flag("adapt") {
+        bail!("--adapt needs --transport tcp (use `glb uts --sim --adapt` for the sim ablation)");
     }
     let p = args.parse_opt("places", 4usize)?;
     let cfg = GlbConfig::new(p, glb_params_from(&args)?);

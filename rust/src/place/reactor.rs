@@ -432,6 +432,11 @@ impl OutQueue {
         self.inner.lock().unwrap().frames.is_empty()
     }
 
+    /// Frames currently queued (the live-telemetry out-queue-depth gauge).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().frames.len()
+    }
+
     /// Write as much queued data as the socket accepts, coalescing up
     /// to [`MAX_IOVS`] frames per `writev`. Nonblocking: stops (with
     /// `blocked`) the moment the socket would block. Fully written

@@ -89,7 +89,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::glb::autotune::{AdaptiveConfig, AdaptiveController, ControllerSample};
 use crate::glb::message::{Effect, Msg, PlaceId};
+use crate::glb::metrics::{MetricsHub, StatsBank, StatsSnapshot};
 use crate::glb::task_queue::{Reducer, TaskQueue};
 use crate::glb::termination::{
     AtomicLedger, CreditHome, CreditLedger, CreditRoot, Ledger, INITIAL_RANK_ATOMS,
@@ -135,6 +137,20 @@ pub struct SocketRunOpts {
     /// semantics byte-for-byte; `> 0` requires a gathered run
     /// ([`run_sockets_reduced`]) with one worker per node.
     pub tolerate_failures: usize,
+    /// Live telemetry: sample this rank's gauges every interval and ship
+    /// them to rank 0 as [`Ctrl::Stats`] frames riding the batched
+    /// control link. Rank 0 prints one aggregated fleet line per
+    /// interval plus a machine-readable `GLB-LIVE-STATS` marker the
+    /// launcher folds into its report. `None` (default) keeps the
+    /// telemetry plane fully disarmed — zero hot-path cost.
+    pub stats_interval: Option<Duration>,
+    /// Close the telemetry loop: each worker runs an
+    /// [`AdaptiveController`] over its own live gauges and retunes loot
+    /// granularity / lifeline arity mid-run when they show persistent
+    /// starvation. Off by default; incompatible with
+    /// `tolerate_failures` (a retune re-knits lifelines over the full
+    /// static fleet shape, which a shrinking membership invalidates).
+    pub adapt: bool,
 }
 
 impl Default for SocketRunOpts {
@@ -149,6 +165,8 @@ impl Default for SocketRunOpts {
             handshake_timeout: Duration::from_secs(30),
             stack_bytes: 2 << 20,
             tolerate_failures: 0,
+            stats_interval: None,
+            adapt: false,
         }
     }
 }
@@ -322,6 +340,140 @@ impl NetCore {
     }
 }
 
+/// Drop every outstanding steal mark whose victim lives on `peer`: the
+/// link (or the rank) is gone, so the marked round-trips can never
+/// complete. A surviving mark would lie in wait for a later steal that
+/// reuses the same `(victim, nonce)` key and pair it against the stale
+/// enqueue time, skewing `steal_latency_us` — the latency books must
+/// only ever see completed round-trips.
+fn purge_peer_marks(marks: &Mutex<HashMap<(u64, u64), Instant>>, topo: &Topology, peer: usize) {
+    marks.lock().unwrap().retain(|&(victim, _), _| topo.node_of(victim as usize) != peer);
+}
+
+/// One rank's armed telemetry plane (`--stats`): the worker gauge hub,
+/// the sequence counter behind every outbound snapshot, and the bank
+/// where rank 0 folds the fleet view. Shared by the worker threads, the
+/// reactor's sample timer, and the teardown path.
+struct StatsShared {
+    rank: usize,
+    interval: Duration,
+    hub: MetricsHub,
+    ledger: FleetLedger,
+    start: Instant,
+    seq: AtomicU64,
+    /// Latest snapshot per rank. Only rank 0 receives remote snapshots;
+    /// every rank banks its own final one so the single-rank degenerate
+    /// case still yields a series.
+    bank: StatsBank,
+}
+
+impl StatsShared {
+    fn new(
+        rank: usize,
+        ranks: usize,
+        workers: usize,
+        interval: Duration,
+        ledger: FleetLedger,
+    ) -> Arc<Self> {
+        Arc::new(Self {
+            rank,
+            interval,
+            hub: MetricsHub::new(workers),
+            ledger,
+            start: Instant::now(),
+            seq: AtomicU64::new(0),
+            bank: StatsBank::new(ranks),
+        })
+    }
+
+    /// Assemble this rank's snapshot: worker gauges from the hub plus
+    /// the rank-level fields (credit pool, wire counters, out-queue
+    /// depths).
+    fn snapshot(&self, net: &NetCore, last: bool) -> StatsSnapshot {
+        let mut s = self.hub.fold();
+        s.rank = self.rank as u64;
+        s.seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        s.elapsed_ms = self.start.elapsed().as_millis() as u64;
+        s.credit_pool = self.ledger.pool_level();
+        let (tx, rx) = wire_bytes();
+        s.wire_tx = tx;
+        s.wire_rx = rx;
+        s.frames_tx = FRAMES_TX.load(Ordering::Relaxed);
+        s.frames_rx = FRAMES_RX.load(Ordering::Relaxed);
+        s.out_queue = net
+            .mesh
+            .iter()
+            .flatten()
+            .chain(net.ctrl.iter())
+            .chain(net.ctrl_peers.iter().flatten())
+            .map(|q| q.len() as u64)
+            .sum();
+        s.last = last;
+        s
+    }
+}
+
+/// Print one fleet-wide stats line (rank 0): a human summary plus the
+/// `GLB-LIVE-STATS` marker the launcher captures into its report's
+/// `"live_stats"` series (marker lines are filtered from echoed rank
+/// output, so users see only the summary).
+fn print_fleet_stats(
+    fleet: &StatsSnapshot,
+    heard: usize,
+    ranks: usize,
+    prev: &Option<StatsSnapshot>,
+) {
+    let p = prev.unwrap_or_default();
+    let dt_ms = fleet.elapsed_ms.saturating_sub(p.elapsed_ms);
+    let rate = |now: u64, then: u64| {
+        if dt_ms == 0 {
+            0.0
+        } else {
+            now.saturating_sub(then) as f64 * 1e3 / dt_ms as f64
+        }
+    };
+    println!(
+        "glb stats t={:.1}s ranks={heard}/{ranks} tasks={} ({:.0}/s) bag={} \
+         steals={}out/{}in loot={}tx/{}rx starv={} credit={} wire={:.0}B/s \
+         frames={:.0}/s outq={}",
+        fleet.elapsed_ms as f64 / 1e3,
+        fleet.items,
+        rate(fleet.items, p.items),
+        fleet.bag_depth,
+        fleet.steals_out,
+        fleet.steals_in,
+        fleet.loot_sent,
+        fleet.loot_recv,
+        fleet.starvations,
+        fleet.credit_pool,
+        rate(fleet.wire_tx + fleet.wire_rx, p.wire_tx + p.wire_rx),
+        rate(fleet.frames_tx + fleet.frames_rx, p.frames_tx + p.frames_rx),
+        fleet.out_queue,
+    );
+    println!(
+        "GLB-LIVE-STATS {{\"t_ms\":{},\"seq\":{},\"ranks_heard\":{heard},\"ranks\":{ranks},\
+         \"tasks\":{},\"bag_depth\":{},\"steals_out\":{},\"steals_in\":{},\"loot_sent\":{},\
+         \"loot_recv\":{},\"starvations\":{},\"credit_pool\":{},\"wire_tx\":{},\"wire_rx\":{},\
+         \"frames_tx\":{},\"frames_rx\":{},\"out_queue\":{},\"last\":{}}}",
+        fleet.elapsed_ms,
+        fleet.seq,
+        fleet.items,
+        fleet.bag_depth,
+        fleet.steals_out,
+        fleet.steals_in,
+        fleet.loot_sent,
+        fleet.loot_recv,
+        fleet.starvations,
+        fleet.credit_pool,
+        fleet.wire_tx,
+        fleet.wire_rx,
+        fleet.frames_tx,
+        fleet.frames_rx,
+        fleet.out_queue,
+        fleet.last,
+    );
+}
+
 /// The work-token ledger, as seen from one fleet process.
 #[derive(Clone)]
 enum FleetLedger {
@@ -329,6 +481,17 @@ enum FleetLedger {
     Local(Arc<AtomicLedger>),
     /// Mesh member: rank-local credit ledger (see module docs).
     Credit(Arc<CreditLedger>),
+}
+
+impl FleetLedger {
+    /// Credit atoms currently pooled locally — the live-telemetry
+    /// `credit_pool` gauge (the plain single-rank counter has no pool).
+    fn pool_level(&self) -> u64 {
+        match self {
+            FleetLedger::Local(_) => 0,
+            FleetLedger::Credit(l) => l.pool(),
+        }
+    }
 }
 
 impl Ledger for FleetLedger {
@@ -954,6 +1117,11 @@ fn emit_ack<Q, P>(
     }
 }
 
+/// How often an adaptive worker feeds its gauges to the controller —
+/// coarse enough to stay off the hot path, fine enough that the dwell
+/// (3 windows by default) reacts within ~100ms of persistent starvation.
+const ADAPT_OBS_INTERVAL: Duration = Duration::from_millis(20);
+
 /// Per-place worker thread body (mirror of the thread runtime's
 /// `place_main`, driving the same engine over the socket fabric).
 fn socket_place_main<Q, P>(
@@ -962,6 +1130,8 @@ fn socket_place_main<Q, P>(
     transport: SocketTransport<Q::Bag>,
     tol: Option<TolerantWorker>,
     plan: P,
+    stats: Option<(Arc<StatsShared>, usize)>,
+    adapt: bool,
 ) -> (Q::Result, crate::glb::WorkerStats)
 where
     Q: TaskQueue,
@@ -974,7 +1144,35 @@ where
     let mut acked_upto: Vec<u64> =
         tol.as_ref().map(|t| vec![0; t.rec.merged.len()]).unwrap_or_default();
     let mut seen_epoch = 0u64;
+    let mut tuner = adapt.then(|| AdaptiveController::new(AdaptiveConfig::default()));
+    let mut last_obs = Instant::now();
     loop {
+        // Publish this worker's gauges (a handful of relaxed stores; the
+        // reactor's stats timer samples them). The loop reaches here with
+        // `Phase::Done` too, so the slot's terminal values equal the
+        // RunLog totals exactly by the time the final snapshot is taken.
+        if let Some((shared, slot)) = &stats {
+            shared.hub.publish(*slot, worker.queue().bag_size(), worker.stats());
+        }
+        // Closed-loop tuning: feed the controller a throttled observation
+        // and apply its recommendation at the next protocol-safe moment
+        // (an unapplied recommendation simply repeats next window).
+        if let Some(t) = &mut tuner {
+            if last_obs.elapsed() >= ADAPT_OBS_INTERVAL {
+                last_obs = Instant::now();
+                let s = worker.stats();
+                let sample = ControllerSample {
+                    items: s.items_processed,
+                    starvations: s.starvations,
+                    bag_depth: worker.queue().bag_size() as u64,
+                };
+                if let Some(r) = t.observe(sample, worker.params().n) {
+                    if worker.try_retune(r.l, r.n) {
+                        t.confirm();
+                    }
+                }
+            }
+        }
         // Safe-point re-knit: only between protocol episodes (Working /
         // Idle — never with a steal outstanding, whose response still
         // references the old victim set). A Wait* phase defers to the
@@ -1120,6 +1318,17 @@ enum Parsed<B> {
     Bad,
 }
 
+/// The reactor's live-telemetry duties (`--stats`): when the next
+/// sample is due, how many ranks the fleet has (for the `heard/ranks`
+/// display), and the previously printed fleet sample (rank 0 derives
+/// rates from consecutive cumulative samples).
+struct ReactorStats {
+    shared: Arc<StatsShared>,
+    next: Instant,
+    ranks: usize,
+    prev: Option<StatsSnapshot>,
+}
+
 /// Poller token for the waker's read end (connections use their index).
 const WAKE_TOKEN: u64 = u64::MAX;
 
@@ -1147,6 +1356,8 @@ struct Reactor<B> {
     local: Mailboxes<B>,
     recovery: Option<Arc<RankRecovery>>,
     role: ReactorRole,
+    /// Armed by `--stats`: the periodic sample/ship/print timer.
+    stats: Option<ReactorStats>,
 }
 
 impl<B> Reactor<B>
@@ -1187,7 +1398,8 @@ where
             if shutdown && self.conns.iter().all(|c| c.read_done && c.wr_closed) {
                 break;
             }
-            self.poller.wait(&mut events, -1).expect("reactor poll");
+            self.poller.wait(&mut events, self.stats_timeout_ms()).expect("reactor poll");
+            self.sample_stats_if_due();
             for ev in events.iter().copied() {
                 if ev.token == WAKE_TOKEN {
                     self.core.waker.drain();
@@ -1195,6 +1407,48 @@ where
                     self.read_ready(ev.token as usize);
                 }
             }
+        }
+        // Teardown: any surviving steal mark belongs to a round-trip the
+        // fleet tore down underneath — it must be discarded, never
+        // sampled (the latency books count completed round-trips only).
+        self.core.steal_marks.lock().unwrap().clear();
+    }
+
+    /// `epoll_wait` timeout: indefinite without `--stats`, else the time
+    /// to the next sample tick (floored at 1ms so a due tick never
+    /// converts the event loop into a busy spin).
+    fn stats_timeout_ms(&self) -> i32 {
+        match &self.stats {
+            None => -1,
+            Some(st) => {
+                let until = st.next.saturating_duration_since(Instant::now());
+                (until.as_millis() as i64).clamp(1, i32::MAX as i64) as i32
+            }
+        }
+    }
+
+    /// Fire the stats timer when due: sample this rank's gauges; rank 0
+    /// banks its own snapshot and prints the fleet view, spokes ship
+    /// theirs to rank 0 on the control queue. Advisory either way — a
+    /// push refused during teardown loses nothing, because the exact
+    /// final snapshot rides the teardown path instead.
+    fn sample_stats_if_due(&mut self) {
+        let Some(st) = &mut self.stats else { return };
+        let now = Instant::now();
+        if now < st.next {
+            return;
+        }
+        while st.next <= now {
+            st.next += st.shared.interval;
+        }
+        let snap = st.shared.snapshot(&self.core, false);
+        if self.my_rank == 0 {
+            st.shared.bank.bank(snap);
+            let (fleet, heard) = st.shared.bank.fleet();
+            print_fleet_stats(&fleet, heard, st.ranks, &st.prev);
+            st.prev = Some(fleet);
+        } else {
+            self.core.send_ctrl(&Ctrl::Stats(snap));
         }
     }
 
@@ -1409,6 +1663,15 @@ where
             Ctrl::Reconcile { rank: r, sent, received } if tol.is_some() => {
                 tol.as_ref().unwrap().reconcile_tx.send((r as usize, sent, received)).is_ok()
             }
+            Ctrl::Stats(s) => {
+                // Advisory telemetry: banked when the root's own stats
+                // plane is armed, harmlessly dropped otherwise (a spoke
+                // may run `--stats` against a root launched without it).
+                if let Some(st) = &self.stats {
+                    st.shared.bank.bank(s);
+                }
+                true
+            }
             _ => false, // protocol violation; drop the link
         }
     }
@@ -1433,6 +1696,12 @@ where
                 true
             }
             Ctrl::Leave { rank: dead, .. } => {
+                // The dead rank's steal responses will never arrive:
+                // purge its marks *before* recovery synthesizes the
+                // refusals those marks were waiting for, so a later
+                // steal reusing a (victim, nonce) key cannot pair with
+                // a stale enqueue time.
+                purge_peer_marks(&self.core.steal_marks, &self.topo, dead as usize);
                 if let Some(tx) = leave_tx {
                     let _ = tx.send(dead as usize);
                 }
@@ -1471,6 +1740,11 @@ where
         self.conns[i].read_done = true;
         match self.conns[i].kind {
             ConnKind::Mesh { peer } => {
+                // Reads from this peer are over, so any steal still
+                // marked toward it can never complete. Purge before the
+                // reader-done latch releases recovery (which synthesizes
+                // the refusal the mark was waiting for).
+                purge_peer_marks(&self.core.steal_marks, &self.topo, peer);
                 if let Some(rec) = &self.recovery {
                     rec.reader_done[peer].mark();
                 }
@@ -1812,6 +2086,12 @@ where
             topo.nodes(),
         );
     }
+    if opts.adapt && opts.tolerate_failures > 0 {
+        bail!(
+            "--adapt cannot be combined with --tolerate-failures: a mid-run retune \
+             re-knits lifelines over the full static fleet shape"
+        );
+    }
     let tolerant = opts.tolerate_failures > 0 && ranks > 1;
     if tolerant && !P::GATHER {
         bail!(
@@ -2024,6 +2304,12 @@ where
         ))
     };
 
+    // Arm the telemetry plane before the reactor takes the sockets, so
+    // its very first poll can already carry a sample timer.
+    let stats: Option<Arc<StatsShared>> = opts
+        .stats_interval
+        .map(|iv| StatsShared::new(rank, ranks, my_places.len(), iv, ledger.clone()));
+
     // --- the reactor: one I/O thread owning every fleet socket ----------
     let mut reactor: Option<std::thread::JoinHandle<()>> = None;
     let mut leave_rx: Option<Receiver<usize>> = None;
@@ -2080,6 +2366,12 @@ where
             local: local_tx.clone(),
             recovery: recovery.clone(),
             role,
+            stats: stats.as_ref().map(|sh| ReactorStats {
+                shared: sh.clone(),
+                next: Instant::now() + sh.interval,
+                ranks,
+                prev: None,
+            }),
         };
         IO_THREADS.fetch_add(1, Ordering::SeqCst);
         IO_THREADS_LIVE.fetch_add(1, Ordering::SeqCst);
@@ -2201,13 +2493,16 @@ where
     let handles: Vec<_> = workers
         .into_iter()
         .zip(rxs)
-        .map(|(worker, rx)| {
+        .enumerate()
+        .map(|(slot, (worker, rx))| {
             let transport = transport.clone();
             let tol = tol_worker.take(); // tolerant fleets run one worker per rank
+            let wstats = stats.clone().map(|sh| (sh, slot));
+            let adapt = opts.adapt;
             std::thread::Builder::new()
                 .name(format!("glb-sock-{}", worker.id()))
                 .stack_size(opts.stack_bytes)
-                .spawn(move || socket_place_main(worker, rx, transport, tol, plan))
+                .spawn(move || socket_place_main(worker, rx, transport, tol, plan, wstats, adapt))
                 .expect("spawn place thread")
         })
         .collect();
@@ -2219,6 +2514,20 @@ where
     let stats: Vec<_> = per_place.iter().map(|(_, s)| *s).collect();
     let local_results: Vec<Q::Result> = per_place.drain(..).map(|(r, _)| r).collect();
     let mut result = reducer.reduce_all(local_results);
+
+    // -- final telemetry snapshot -----------------------------------------
+    // Every worker has published its terminal gauges, so this snapshot's
+    // worker-sourced fields equal the RunLog totals exactly. Spokes ship
+    // it ahead of their Result frame (the control queue is FIFO and the
+    // teardown drain guarantees delivery); rank 0 banks its own.
+    if let Some(sh) = &stats {
+        let snap = sh.snapshot(&net, true);
+        if rank == 0 {
+            sh.bank.bank(snap);
+        } else {
+            let _ = net.send_ctrl(&Ctrl::Stats(snap));
+        }
+    }
 
     // -- result gathering (spoke side; rides the control queue) ----------
     if P::GATHER && ranks > 1 && rank != 0 {
@@ -2246,6 +2555,15 @@ where
     }
     if let Some(h) = spoke_recovery_thread {
         let _ = h.join();
+    }
+
+    // The reactor has drained every peer to EOF, so every rank's final
+    // (`last: true`) snapshot is banked: print the closing fleet line.
+    if let Some(sh) = &stats {
+        if rank == 0 {
+            let (fleet, heard) = sh.bank.fleet();
+            print_fleet_stats(&fleet, heard, ranks, &None);
+        }
     }
 
     if let Some(credit_root) = &root {
@@ -2515,5 +2833,83 @@ mod tests {
             run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(3)), |q| q.init_root(), &SumReducer)
                 .unwrap_err();
         assert!(format!("{err:#}").contains("fleet shape"), "{err:#}");
+    }
+
+    #[test]
+    fn dead_peer_marks_are_purged_not_sampled() {
+        // The steal-latency mark-leak regression at the unit level: a
+        // peer's death must drop exactly its own marks, so a later steal
+        // reusing the (victim, nonce) key can never pair with the stale
+        // enqueue time.
+        let marks = Mutex::new(HashMap::new());
+        let topo = Topology::new(4, 1); // flat: place i lives on rank i
+        marks.lock().unwrap().insert((1u64, 7u64), Instant::now());
+        marks.lock().unwrap().insert((1u64, 8u64), Instant::now());
+        marks.lock().unwrap().insert((2u64, 7u64), Instant::now());
+        purge_peer_marks(&marks, &topo, 1);
+        let m = marks.lock().unwrap();
+        assert!(!m.contains_key(&(1, 7)) && !m.contains_key(&(1, 8)), "dead victim purged");
+        assert!(m.contains_key(&(2, 7)), "other peers' marks survive, same nonce or not");
+    }
+
+    #[test]
+    fn stats_enabled_fleet_matches_sequential() {
+        // The telemetry plane is strictly observational: with a fast
+        // sample timer shipping Ctrl::Stats throughout, the reduction
+        // must be bit-identical to a stats-less run.
+        let port = free_port();
+        let params = GlbParams::default().with_n(64).with_l(2);
+        let run = move |rank: usize| {
+            let cfg = GlbConfig::new(2, params);
+            let opts = SocketRunOpts {
+                rank,
+                ranks: 2,
+                port,
+                stats_interval: Some(Duration::from_millis(2)),
+                ..Default::default()
+            };
+            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(6)), |q| q.init_root(), &SumReducer)
+                .expect("stats fleet rank failed")
+        };
+        let t1 = std::thread::spawn(move || run(1));
+        let r0 = run(0);
+        let r1 = t1.join().unwrap();
+        assert_eq!(r0.result + r1.result, sequential_count(&up(6)));
+    }
+
+    #[test]
+    fn adaptive_fleet_result_is_unchanged() {
+        // A deliberately coarse static point on an irregular tree — the
+        // controller's favorite prey. Whatever it retunes mid-run, the
+        // reduction is invariant.
+        let port = free_port();
+        let params = GlbParams::default().with_n(256);
+        let run = move |rank: usize| {
+            let cfg = GlbConfig::new(2, params);
+            let opts = SocketRunOpts { rank, ranks: 2, port, adapt: true, ..Default::default() };
+            run_sockets(&cfg, &opts, |_, _| UtsQueue::new(up(7)), |q| q.init_root(), &SumReducer)
+                .expect("adaptive fleet rank failed")
+        };
+        let t1 = std::thread::spawn(move || run(1));
+        let r0 = run(0);
+        let r1 = t1.join().unwrap();
+        assert_eq!(r0.result + r1.result, sequential_count(&up(7)));
+    }
+
+    #[test]
+    fn adapt_and_tolerate_are_mutually_exclusive() {
+        let cfg = GlbConfig::new(2, GlbParams::default().with_l(2));
+        let opts = SocketRunOpts {
+            rank: 0,
+            ranks: 2,
+            port: 1,
+            adapt: true,
+            tolerate_failures: 1,
+            ..Default::default()
+        };
+        let err =
+            run_sockets_reduced(&cfg, &opts, |_, _| UtsQueue::new(up(4)), |_| {}, &SumReducer)
+                .expect_err("adaptive tolerant run must be refused");
+        assert!(err.to_string().contains("--adapt"), "{err}");
     }
 }

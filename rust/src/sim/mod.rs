@@ -36,6 +36,7 @@ pub mod arch;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::glb::autotune::{AdaptiveConfig, AdaptiveController, ControllerSample};
 use crate::glb::message::{Effect, Msg};
 use crate::glb::task_queue::{Reducer, TaskQueue};
 use crate::glb::termination::{Ledger, SimLedger};
@@ -131,6 +132,33 @@ where
     run_sim_jitter(cfg, arch, cost, 0, factory, root_init, reducer)
 }
 
+/// [`run_sim`] with the **closed-loop adaptive tuner** armed: every
+/// place runs its own [`AdaptiveController`] over its live gauges,
+/// observed on the virtual clock every `obs_interval_ns` at chunk /
+/// delivery boundaries, and retunes loot granularity and lifeline arity
+/// mid-run when they show persistent starvation — the deterministic
+/// twin of the socket runtime's `--adapt`, used for the static-vs-
+/// adaptive ablation (the reduced result is identical either way; only
+/// the schedule, and with it the virtual makespan, changes).
+pub fn run_sim_adaptive<Q, R, FQ, FI>(
+    cfg: &GlbConfig,
+    arch: &ArchProfile,
+    cost: CostModel,
+    adapt: AdaptiveConfig,
+    obs_interval_ns: u64,
+    factory: FQ,
+    root_init: FI,
+    reducer: &R,
+) -> (RunOutput<Q::Result>, SimReport)
+where
+    Q: TaskQueue,
+    R: Reducer<Q::Result>,
+    FQ: FnMut(usize, usize) -> Q,
+    FI: FnOnce(&mut Q),
+{
+    Sim::new(cfg, arch, cost, 0, Some((adapt, obs_interval_ns)), factory, root_init).run(reducer)
+}
+
 /// [`run_sim`] with **fault/jitter injection**: every message delivery is
 /// delayed by a deterministic pseudo-random extra `0..=jitter_ns`.
 /// Because latencies vary per message, deliveries *reorder across
@@ -152,7 +180,15 @@ where
     FQ: FnMut(usize, usize) -> Q,
     FI: FnOnce(&mut Q),
 {
-    Sim::new(cfg, arch, cost, jitter_ns, factory, root_init).run(reducer)
+    Sim::new(cfg, arch, cost, jitter_ns, None, factory, root_init).run(reducer)
+}
+
+/// The simulator's adaptive-tuning plane: one controller per place plus
+/// a per-place next-observation deadline on the virtual clock.
+struct AdaptPlane {
+    ctrls: Vec<AdaptiveController>,
+    next_obs: Vec<u64>,
+    interval: u64,
 }
 
 struct Sim<Q: TaskQueue> {
@@ -174,6 +210,8 @@ struct Sim<Q: TaskQueue> {
     /// Fault injection: extra pseudo-random delay per delivery.
     jitter_ns: u64,
     jitter_rng: crate::util::SplitMix64,
+    /// Closed-loop tuning, when armed (see [`run_sim_adaptive`]).
+    adapt: Option<AdaptPlane>,
     seq: u64,
     now: u64,
     messages: u64,
@@ -188,6 +226,7 @@ impl<Q: TaskQueue> Sim<Q> {
         arch: &ArchProfile,
         cost: CostModel,
         jitter_ns: u64,
+        adapt: Option<(AdaptiveConfig, u64)>,
         mut factory: FQ,
         root_init: FI,
     ) -> Self
@@ -225,6 +264,11 @@ impl<Q: TaskQueue> Sim<Q> {
             nic_free_at: vec![0; nodes],
             jitter_ns,
             jitter_rng: crate::util::SplitMix64::new(cfg.params.seed ^ 0x7177E2),
+            adapt: adapt.map(|(cfg, interval)| AdaptPlane {
+                ctrls: (0..p).map(|_| AdaptiveController::new(cfg)).collect(),
+                next_obs: vec![interval; p],
+                interval,
+            }),
             seq: 0,
             now: 0,
             messages: 0,
@@ -307,6 +351,32 @@ impl<Q: TaskQueue> Sim<Q> {
         }
     }
 
+    /// Feed place `pl`'s gauges to its controller if its observation
+    /// deadline has passed (virtual time `t`). The controller keeps
+    /// recommending until the retune lands — [`Worker::try_retune`]
+    /// refuses outside `Working`-with-no-outstanding-steal, so a
+    /// starving place picks the change up at its next working boundary.
+    fn observe_adapt(&mut self, pl: usize, t: u64) {
+        let Some(ad) = &mut self.adapt else { return };
+        if t < ad.next_obs[pl] {
+            return;
+        }
+        ad.next_obs[pl] = t + ad.interval;
+        let w = &mut self.workers[pl];
+        let s = w.stats();
+        let sample = ControllerSample {
+            items: s.items_processed,
+            starvations: s.starvations,
+            bag_depth: w.queue().bag_size() as u64,
+        };
+        let n = w.params().n;
+        if let Some(r) = ad.ctrls[pl].observe(sample, n) {
+            if w.try_retune(r.l, r.n) {
+                ad.ctrls[pl].confirm();
+            }
+        }
+    }
+
     fn run<R: Reducer<Q::Result>>(mut self, reducer: &R) -> (RunOutput<Q::Result>, SimReport) {
         let mut fx: Vec<Effect<Q::Bag>> = Vec::with_capacity(8);
         if self.ledger.value() == 0 {
@@ -352,6 +422,7 @@ impl<Q: TaskQueue> Sim<Q> {
                         self.now = end;
                         break;
                     }
+                    self.observe_adapt(pl, end);
                     if self.workers[pl].phase() == Phase::Working {
                         self.schedule_tick(pl, end);
                     }
@@ -371,6 +442,7 @@ impl<Q: TaskQueue> Sim<Q> {
                         self.now = t;
                         break;
                     }
+                    self.observe_adapt(pl, t);
                     if self.workers[pl].phase() == Phase::Working && was != Phase::Working {
                         self.schedule_tick(pl, t);
                     }
@@ -558,6 +630,83 @@ mod tests {
         let (_, four_nodes) = run(64, 10, &BGQ);
         assert!(four_nodes.cross_messages > 0, "4 nodes must exchange work");
         assert!(four_nodes.cross_messages <= four_nodes.messages);
+    }
+
+    /// The static-vs-adaptive ablation fixture: a deliberately
+    /// pathological tuning point for a skewed workload. `l = 64` on 64
+    /// places derives a 1-dimensional lifeline cube — a ring — so
+    /// root-seeded work trickles place-to-place, and `n = 256` keeps
+    /// victims unresponsive between probes. Everything the adaptive
+    /// controller is built to detect and fix.
+    fn skewed_cfg() -> GlbConfig {
+        GlbConfig::new(64, GlbParams::default().with_n(256).with_l(64))
+    }
+
+    fn run_skewed_static() -> (RunOutput<u64>, SimReport) {
+        run_sim(
+            &skewed_cfg(),
+            &K,
+            CostModel::new(100.0, 50, 8),
+            |_, _| TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 },
+            |q| q.bag.push(16),
+            &SumReducer,
+        )
+    }
+
+    fn run_skewed_adaptive() -> (RunOutput<u64>, SimReport) {
+        run_sim_adaptive(
+            &skewed_cfg(),
+            &K,
+            CostModel::new(100.0, 50, 8),
+            crate::glb::AdaptiveConfig::default(),
+            20_000, // observe every 20µs of virtual time
+            |_, _| TreeQueue { bag: ArrayListTaskBag::new(), processed: 0 },
+            |q| q.bag.push(16),
+            &SumReducer,
+        )
+    }
+
+    #[test]
+    fn adaptive_sim_is_deterministic() {
+        let (a, ra) = run_skewed_adaptive();
+        let (b, rb) = run_skewed_adaptive();
+        assert_eq!(a.result, b.result);
+        assert_eq!(a.elapsed_ns, b.elapsed_ns, "adaptive runs must replay exactly");
+        assert_eq!(ra.messages, rb.messages);
+        assert_eq!(ra.events, rb.events);
+    }
+
+    #[test]
+    fn adaptive_sim_reduces_idle_on_skewed_load() {
+        let (stat, _) = run_skewed_static();
+        let (adap, _) = run_skewed_adaptive();
+        // Correctness is schedule-independent: the reduction must match.
+        assert_eq!(adap.result, (1 << 17) - 1);
+        assert_eq!(adap.result, stat.result);
+        // The controller must actually have intervened mid-run.
+        let retunes: u64 = adap.log.per_place.iter().map(|s| s.retunes).sum();
+        assert!(retunes >= 1, "persistent ring starvation must trigger a retune");
+        let static_retunes: u64 = stat.log.per_place.iter().map(|s| s.retunes).sum();
+        assert_eq!(static_retunes, 0, "the static baseline never retunes");
+        // And the intervention must pay: deep-cube lifelines + finer
+        // chunks spread the skewed load faster, so the virtual makespan
+        // (and with it aggregate idle time) shrinks.
+        assert!(
+            adap.elapsed_ns < stat.elapsed_ns,
+            "adaptive {} ns should beat static {} ns on the skewed ring",
+            adap.elapsed_ns,
+            stat.elapsed_ns
+        );
+        let idle = |out: &RunOutput<u64>| {
+            let busy: u64 = out.log.per_place.iter().map(|s| s.busy_ns()).sum();
+            (64 * out.elapsed_ns).saturating_sub(busy)
+        };
+        assert!(
+            idle(&adap) < idle(&stat),
+            "aggregate idle must shrink: adaptive {} vs static {}",
+            idle(&adap),
+            idle(&stat)
+        );
     }
 
     #[test]

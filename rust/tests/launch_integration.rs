@@ -180,6 +180,83 @@ fn eight_rank_fleet_runs_one_io_thread_per_rank() {
     std::fs::remove_file(&report).ok();
 }
 
+/// The live-telemetry acceptance path: a `--stats` fleet's report grows
+/// a `"live_stats"` time series, and the series' final cumulative gauges
+/// equal the post-mortem `RunLog` totals *exactly* — workers publish
+/// their gauges through the final `Done` iteration, so the last
+/// telemetry sample and the teardown accounting are the same numbers,
+/// not two clocks that roughly agree.
+#[test]
+#[ignore = "process fleet: run explicitly via `--ignored --test-threads=1` (see CI)"]
+fn live_stats_series_matches_the_post_mortem_run_log() {
+    const DEPTH: u32 = 7;
+    let bin = env!("CARGO_BIN_EXE_glb");
+    let report = std::env::temp_dir()
+        .join(format!("glb-launch-itest-{}-stats.json", std::process::id()));
+    let output = std::process::Command::new(bin)
+        .args(["launch", "--np", "4", "--stats=100", "uts", "--depth", "7", "--report"])
+        .arg(&report)
+        .output()
+        .expect("run glb launch --stats");
+    assert!(
+        output.status.success(),
+        "glb launch --stats failed ({}):\n--- stdout\n{}\n--- stderr\n{}",
+        output.status,
+        String::from_utf8_lossy(&output.stdout),
+        String::from_utf8_lossy(&output.stderr),
+    );
+    // The human summary lines are echoed; the machine markers are not.
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(stdout.contains("glb stats t="), "echoed human stats line:\n{stdout}");
+    assert!(!stdout.contains("GLB-LIVE-STATS"), "marker lines must be filtered:\n{stdout}");
+
+    let fleet_report = load_fleet_report(&report).expect("fleet report parses");
+    let live = fleet_report.get("live_stats").and_then(Value::as_arr).expect("live_stats series");
+    assert!(!live.is_empty(), "a --stats run must record at least the final sample");
+
+    // The series is a time axis of cumulative gauges: both must be
+    // monotonic, and the closing sample is the fleet-final one.
+    let u = |v: &Value, k: &str| v.get(k).and_then(Value::as_u64).unwrap_or_else(|| panic!("{k}"));
+    for w in live.windows(2) {
+        assert!(u(&w[1], "t_ms") >= u(&w[0], "t_ms"), "t_ms must not go backwards");
+        assert!(u(&w[1], "tasks") >= u(&w[0], "tasks"), "cumulative tasks must not shrink");
+    }
+    let fin = live.last().unwrap();
+    assert_eq!(fin.get("last"), Some(&Value::Bool(true)), "series ends on the final snapshot");
+    assert_eq!(u(fin, "ranks"), 4);
+    assert_eq!(u(fin, "ranks_heard"), 4, "every rank's stats frames must reach rank 0");
+    assert!(u(fin, "wire_tx") > 0, "the fleet moved bytes before the final sample");
+
+    // Exactness: final cumulative telemetry == aggregated RunLog totals.
+    let totals = fleet_report.get("totals").expect("aggregated totals");
+    let t = |k: &str| totals.get(k).and_then(Value::as_u64).unwrap_or_else(|| panic!("{k}"));
+    assert_eq!(u(fin, "tasks"), t("items_processed"), "final tasks == RunLog items");
+    assert_eq!(
+        u(fin, "steals_out"),
+        t("random_steals_sent") + t("lifeline_steals_sent"),
+        "final steals_out == RunLog steal attempts"
+    );
+    assert_eq!(
+        u(fin, "steals_in"),
+        t("random_steals_perpetrated") + t("lifeline_steals_perpetrated"),
+        "final steals_in == RunLog perpetrated steals"
+    );
+    assert_eq!(u(fin, "loot_sent"), t("loot_bags_sent"));
+    assert_eq!(u(fin, "loot_recv"), t("loot_bags_received"));
+    assert_eq!(u(fin, "starvations"), t("starvations"));
+    assert_eq!(u(fin, "bag_depth"), 0, "every bag is dry at termination");
+
+    // Telemetry must not perturb the computation: still bit-identical to
+    // the thread runtime at equal worker count.
+    let up = UtsParams { b0: 4.0, seed: 19, max_depth: DEPTH };
+    let cfg = GlbConfig::new(4, GlbParams::default());
+    let reference = run_threads(&cfg, |_, _| UtsQueue::new(up), |q| q.init_root(), &SumReducer);
+    assert_eq!(reference.result, sequential_count(&up));
+    assert_eq!(fleet_report.get("result").and_then(Value::as_u64), Some(reference.result));
+
+    std::fs::remove_file(&report).ok();
+}
+
 /// A launch spec error must be reported before anything spawns.
 #[test]
 fn glb_launch_rejects_derived_flags_loudly() {

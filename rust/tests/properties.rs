@@ -215,9 +215,38 @@ fn random_str(g: &mut Gen, max: usize) -> String {
     (0..len).map(|_| (b'!' + (g.u64(0..90) as u8)) as char).collect()
 }
 
-/// A random `Ctrl` of the given variant index — the caller loops 0..12
-/// so every run covers every variant, including the fault-tolerance
-/// frames (`Join`/`Leave`/`Ack`/`Reconcile`).
+/// A fully random telemetry snapshot: every gauge independently drawn
+/// over the full u64 range, so a decode that swaps, drops, or sign-bends
+/// any field cannot survive the round-trip comparison.
+fn random_snapshot(g: &mut Gen) -> glb::glb::StatsSnapshot {
+    glb::glb::StatsSnapshot {
+        rank: g.u64(0..u64::MAX),
+        seq: g.u64(0..u64::MAX),
+        elapsed_ms: g.u64(0..u64::MAX),
+        bag_depth: g.u64(0..u64::MAX),
+        items: g.u64(0..u64::MAX),
+        steals_out: g.u64(0..u64::MAX),
+        steals_in: g.u64(0..u64::MAX),
+        loot_sent: g.u64(0..u64::MAX),
+        loot_recv: g.u64(0..u64::MAX),
+        starvations: g.u64(0..u64::MAX),
+        credit_pool: g.u64(0..u64::MAX),
+        wire_tx: g.u64(0..u64::MAX),
+        wire_rx: g.u64(0..u64::MAX),
+        frames_tx: g.u64(0..u64::MAX),
+        frames_rx: g.u64(0..u64::MAX),
+        out_queue: g.u64(0..u64::MAX),
+        last: g.bool(0.5),
+    }
+}
+
+/// How many `Ctrl` variants [`random_ctrl`] covers — loop `0..CTRL_VARIANTS`
+/// so every run exercises every frame type, including the
+/// fault-tolerance frames (`Join`/`Leave`/`Ack`/`Reconcile`) and the
+/// telemetry frame (`Stats`).
+const CTRL_VARIANTS: usize = 13;
+
+/// A random `Ctrl` of the given variant index.
 fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
     use wire::Ctrl;
     match variant {
@@ -248,18 +277,39 @@ fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
                 .map(|_| (g.u64(0..u64::MAX), g.u64(0..u64::MAX)))
                 .collect(),
         },
-        _ => Ctrl::Reconcile {
+        11 => Ctrl::Reconcile {
             rank: g.u64(0..u64::MAX),
             sent: g.u64(0..u64::MAX),
             received: g.u64(0..u64::MAX),
         },
+        _ => Ctrl::Stats(random_snapshot(g)),
     }
+}
+
+#[test]
+fn prop_stats_frame_total_decode() {
+    // The telemetry frame rides the same control links as the
+    // termination-credit protocol; a malformed one must never take the
+    // reactor down. Round-trip over the full gauge range, then every
+    // strict prefix (a peer dying mid-write) errors cleanly, and a
+    // trailing byte is rejected rather than silently carried.
+    check_cases("stats-frame", 200, |g: &mut Gen| {
+        let c = wire::Ctrl::Stats(random_snapshot(g));
+        let body = c.to_body();
+        assert_eq!(wire::Ctrl::decode(&body).expect("decode own encoding"), c);
+        for cut in 0..body.len() {
+            assert!(wire::Ctrl::decode(&body[..cut]).is_err(), "cut {cut}");
+        }
+        let mut long = body.clone();
+        long.push(g.u64(0..256) as u8);
+        assert!(wire::Ctrl::decode(&long).is_err(), "trailing byte");
+    });
 }
 
 #[test]
 fn prop_ctrl_roundtrip_every_variant() {
     check_cases("ctrl-roundtrip", 200, |g: &mut Gen| {
-        for variant in 0..12 {
+        for variant in 0..CTRL_VARIANTS {
             let c = random_ctrl(g, variant);
             let back = wire::Ctrl::decode(&c.to_body()).expect("decode own encoding");
             assert_eq!(back, c);
@@ -270,7 +320,7 @@ fn prop_ctrl_roundtrip_every_variant() {
 #[test]
 fn prop_ctrl_hostile_bytes_error_not_panic() {
     check_cases("ctrl-hostility", 60, |g: &mut Gen| {
-        for variant in 0..12 {
+        for variant in 0..CTRL_VARIANTS {
             let body = random_ctrl(g, variant).to_body();
             // Every strict prefix is a clean error (a survivor reading a
             // dying peer's half-written frame must not panic or misread).
@@ -325,7 +375,7 @@ fn prop_pooled_encode_matches_allocating_encode_byte_for_byte() {
         assert_eq!(buf2, old2, "recycled buffer must encode identically");
         pool.put(buf2);
         // Control frames, every Ctrl variant.
-        for variant in 0..12 {
+        for variant in 0..CTRL_VARIANTS {
             let c = random_ctrl(g, variant);
             let old = wire::frame(c.to_body());
             let mut buf = pool.get();
