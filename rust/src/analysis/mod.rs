@@ -1,0 +1,117 @@
+//! `glb lint` — the protocol/concurrency invariant checker.
+//!
+//! The GLB runtime hides its hardest invariants inside hand-rolled
+//! code: the wire codec's tag registry, the reactor's raw epoll
+//! syscalls, the credit-termination atomics. Convention is not an
+//! enforcement mechanism, so this module machine-checks four rule
+//! families over the source tree (dependency-free — a small scanner in
+//! [`scanner`], rules + allowlists in [`rules`], rendering in
+//! [`report`]):
+//!
+//! 1. **wire-registry** — every `Msg`/`Ctrl` tag constant in
+//!    `glb/wire.rs` is unique and dense, `CTRL_VARIANTS` in
+//!    `rust/tests/properties.rs` matches the registry, every variant is
+//!    constructed by the property generators, and all four coverage
+//!    families (round-trip, split-point truncation, hostile bytes,
+//!    pooled bit-identity) exist and sweep the registry. Adding a tag
+//!    without all four fails the build.
+//! 2. **unsafe-safety** — every `unsafe` region carries a
+//!    `// SAFETY:` justification ( `unsafe_op_in_unsafe_fn` is denied
+//!    at the crate root on top).
+//! 3. **atomic-ordering** — `Ordering::Relaxed` only at allowlisted
+//!    gauge/counter statements, each with a recorded rationale
+//!    ([`rules::RELAXED_ALLOWLIST`]).
+//! 4. **hot-path-panic** — no `unwrap()`/`expect()` in the declared
+//!    reactor event-loop and steady-state socket paths
+//!    ([`rules::HOT_REGIONS`]); test code is exempt.
+//!
+//! Three enforcement surfaces share this one implementation: the
+//! `glb lint` CLI verb, the `analysis_lint` tier-1 test asserting the
+//! real tree lints clean, and a hard CI gate.
+
+pub mod report;
+pub mod rules;
+pub mod scanner;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use report::{render, Finding, Rule};
+use scanner::Source;
+
+/// One input file for [`lint_sources`]: rule applicability is decided
+/// by path suffix, so fixtures can impersonate real tree locations.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Lint an explicit set of sources. Paths containing `tests/` are
+/// exempt from the unsafe/ordering/panic rules (they feed the
+/// wire-registry cross-reference instead); everything else gets all
+/// four families. Findings come back sorted by (path, line).
+pub fn lint_sources(files: &[SourceFile]) -> Vec<Finding> {
+    let sources: Vec<Source> = files
+        .iter()
+        .map(|f| Source::new(f.path.clone(), f.text.clone()))
+        .collect();
+    let mut out = Vec::new();
+    rules::check_wire_registry(&sources, &mut out);
+    for src in &sources {
+        if src.path.contains("tests/") {
+            continue;
+        }
+        rules::check_unsafe_safety(src, &mut out);
+        rules::check_atomic_ordering(src, &mut out);
+    }
+    rules::check_hot_path_panics(&sources, &mut out);
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    out
+}
+
+/// Lint the repo tree rooted at `root` (the directory holding
+/// `rust/src`): every `.rs` under `rust/src` plus the wire property
+/// suite `rust/tests/properties.rs`.
+pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
+    let src_dir = root.join("rust/src");
+    if !src_dir.is_dir() {
+        anyhow::bail!(
+            "{} has no rust/src directory; pass the repo root via --root",
+            root.display()
+        );
+    }
+    let mut paths = Vec::new();
+    collect_rs(&src_dir, &mut paths)?;
+    let props = root.join("rust/tests/properties.rs");
+    if props.is_file() {
+        paths.push(props);
+    }
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let text =
+            fs::read_to_string(&p).with_context(|| format!("read {}", p.display()))?;
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push(SourceFile { path: rel, text });
+    }
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in fs::read_dir(dir).with_context(|| format!("list {}", dir.display()))? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! Findings and rendering for `glb lint`.
+//!
+//! A [`Finding`] is one violated invariant at one source location. The
+//! CLI prints every finding in `path:line: [rule] message` form (the
+//! same shape rustc diagnostics and grep output use, so editors and CI
+//! annotate them for free) followed by a per-rule summary, and exits
+//! nonzero iff any finding exists.
+
+use std::fmt;
+
+/// The four invariant families `glb lint` enforces. See
+/// [`crate::analysis`] for what each one protects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// Wire-tag registry: `Msg`/`Ctrl` tags unique + dense, every
+    /// variant exercised by all four wire property families.
+    WireRegistry,
+    /// Every `unsafe` region carries a `// SAFETY:` justification.
+    UnsafeSafety,
+    /// `Ordering::Relaxed` only at allowlisted gauge/counter sites.
+    AtomicOrdering,
+    /// No `unwrap()`/`expect()` in declared reactor/socket hot regions.
+    HotPathPanic,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::WireRegistry => "wire-registry",
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::AtomicOrdering => "atomic-ordering",
+            Rule::HotPathPanic => "hot-path-panic",
+        }
+    }
+
+    pub const ALL: [Rule; 4] = [
+        Rule::WireRegistry,
+        Rule::UnsafeSafety,
+        Rule::AtomicOrdering,
+        Rule::HotPathPanic,
+    ];
+}
+
+/// One violated invariant at one source location.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    /// Path as given to the linter (repo-relative for `lint_tree`).
+    pub path: String,
+    /// 1-based line number (1 for file-scope findings).
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path,
+            self.line,
+            self.rule.name(),
+            self.message
+        )
+    }
+}
+
+/// Render a full lint report: one line per finding plus a summary line
+/// (always ends with a newline; empty findings render the clean banner).
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.to_string());
+        out.push('\n');
+    }
+    if findings.is_empty() {
+        out.push_str("glb lint: clean (4 rule families, 0 findings)\n");
+    } else {
+        let mut counts = String::new();
+        for rule in Rule::ALL {
+            let n = findings.iter().filter(|f| f.rule == rule).count();
+            if n > 0 {
+                if !counts.is_empty() {
+                    counts.push_str(", ");
+                }
+                counts.push_str(&format!("{} {}", n, rule.name()));
+            }
+        }
+        out.push_str(&format!(
+            "glb lint: {} finding(s) ({counts})\n",
+            findings.len()
+        ));
+    }
+    out
+}

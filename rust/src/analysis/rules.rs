@@ -1,0 +1,604 @@
+//! The four invariant rule families behind `glb lint`.
+//!
+//! Each rule is a function from scanned sources to findings. The
+//! allowlists live here too, next to the code they police, so loosening
+//! an invariant is a reviewed diff to a rationale table — not a silent
+//! drift.
+
+use super::report::{Finding, Rule};
+use super::scanner::{in_ranges, Source};
+
+/// One permitted `Ordering::Relaxed` site: the statement containing the
+/// `Relaxed` must mention `symbol` (or the whole file is cleared with
+/// `"*"`), and the entry records *why* relaxed is correct there.
+pub struct RelaxedAllow {
+    /// Path suffix the entry applies to (e.g. `"place/socket.rs"`).
+    pub path: &'static str,
+    /// Symbol that must appear in the same statement, or `"*"`.
+    pub symbol: &'static str,
+    /// Why no stronger ordering is needed — shown in docs, kept next
+    /// to the grant so reviewers see the argument, not just the hole.
+    pub rationale: &'static str,
+}
+
+/// Every `Ordering::Relaxed` the runtime is allowed to contain.
+///
+/// The shape of a legitimate entry: a **monotonic gauge or counter**
+/// whose readers tolerate staleness and never derive cross-variable
+/// invariants from it. Anything coordinating control flow (shutdown
+/// flags, credit books, retention ledgers) must use Acquire/Release or
+/// SeqCst and therefore never lands here.
+pub const RELAXED_ALLOWLIST: &[RelaxedAllow] = &[
+    RelaxedAllow {
+        path: "glb/metrics.rs",
+        symbol: "*",
+        rationale: "per-worker live gauges: independent cumulative counters published \
+                    wait-free from the hot loop; each field is self-consistent and the \
+                    sampler tolerates inter-field skew by design",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "MISROUTED_FRAMES",
+        rationale: "protocol-violation counter asserted after threads join (join is the \
+                    synchronization edge)",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "WIRE_TX_BYTES",
+        rationale: "monotonic wire-byte counter; fleet conservation is checked only \
+                    after the reactor thread is joined",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "WIRE_RX_BYTES",
+        rationale: "monotonic wire-byte counter; see WIRE_TX_BYTES",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "FRAMES_TX",
+        rationale: "reactor throughput counter feeding telemetry snapshots; staleness \
+                    shifts a rate sample, never correctness",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "FRAMES_RX",
+        rationale: "reactor throughput counter; see FRAMES_TX",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "BATCHES",
+        rationale: "writev batch counter; see FRAMES_TX",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "STEAL_LAT_NS_SUM",
+        rationale: "latency accumulator pair read only for reporting; a torn \
+                    sum/count snapshot skews one sample of an average",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "STEAL_LAT_COUNT",
+        rationale: "latency accumulator pair; see STEAL_LAT_NS_SUM",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "IO_THREADS",
+        rationale: "io-thread spawn accounting: written before spawn / in reactor \
+                    teardown, read after join, so the thread lifecycle already orders \
+                    every access",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "IO_THREADS_LIVE",
+        rationale: "io-thread liveness gauge; see IO_THREADS",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: ".seq",
+        rationale: "per-rank stats sequence number: receiver de-duplicates by value, \
+                    no ordering with the sampled gauges is assumed",
+    },
+    RelaxedAllow {
+        path: "place/network.rs",
+        symbol: "spurious_wakeups",
+        rationale: "test-instrumentation wakeup counter in the legacy router; nothing \
+                    reads it for control flow",
+    },
+];
+
+/// A declared hot region for the panic lint: every body of `fn {func}`
+/// in `path` must be free of `unwrap()`/`expect()`.
+pub struct HotRegion {
+    pub path: &'static str,
+    pub func: &'static str,
+    /// What makes this path hot — printed with the finding.
+    pub why: &'static str,
+}
+
+/// The reactor event loop and the steady-state socket send/receive
+/// paths. One-time setup (bootstrap handshakes, thread spawns) and
+/// worker-side blocking control RPCs are deliberately *not* listed:
+/// panicking there is a loud startup failure, not a mid-run hang.
+pub const HOT_REGIONS: &[HotRegion] = &[
+    HotRegion {
+        path: "place/reactor.rs",
+        func: "wait",
+        why: "poller wait is the reactor's idle point; every frame passes it",
+    },
+    HotRegion {
+        path: "place/reactor.rs",
+        func: "push",
+        why: "worker-side enqueue runs once per outbound frame",
+    },
+    HotRegion {
+        path: "place/reactor.rs",
+        func: "flush",
+        why: "writev flush runs on every writable edge",
+    },
+    HotRegion {
+        path: "place/reactor.rs",
+        func: "wake",
+        why: "cross-thread wakeup rides every enqueue",
+    },
+    HotRegion {
+        path: "place/reactor.rs",
+        func: "drain",
+        why: "waker drain runs on every reactor wakeup",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "run",
+        why: "the reactor event loop: a panic here hangs the whole fleet",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "flush_one",
+        why: "steady-state socket send path",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "read_ready",
+        why: "steady-state socket receive path",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "drain_frames",
+        why: "per-frame decode/dispatch loop",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "on_mesh_msg",
+        why: "per-message mesh dispatch (steal/loot/terminate)",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "on_root_ctrl",
+        why: "credit/ack control frames arrive here throughout the run",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "on_spoke_ctrl",
+        why: "replenish/stats control frames arrive here throughout the run",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "send_wire",
+        why: "worker-side encode+enqueue runs once per outbound message",
+    },
+    HotRegion {
+        path: "place/socket.rs",
+        func: "purge_peer_marks",
+        why: "runs from the reactor on peer close/leave",
+    },
+];
+
+/// The four wire property families every `Msg`/`Ctrl` variant must be
+/// exercised by, and the `rust/tests/properties.rs` fns that carry
+/// each family. A new tag constant fails the build until all four
+/// cover it (enforced via the dense-registry + `CTRL_VARIANTS` +
+/// variant-reference checks below).
+const WIRE_COVERAGE_FAMILIES: &[(&str, &[&str])] = &[
+    (
+        "round-trip",
+        &[
+            "prop_wire_roundtrip_every_msg_variant_uts",
+            "prop_ctrl_roundtrip_every_variant",
+        ],
+    ),
+    (
+        "split-point truncation",
+        &[
+            "prop_wire_truncated_frames_error_not_panic",
+            "prop_frame_assembler_decodes_any_split_points",
+        ],
+    ),
+    ("hostile bytes", &["prop_ctrl_hostile_bytes_error_not_panic"]),
+    (
+        "pooled bit-identity",
+        &["prop_pooled_encode_matches_allocating_encode_byte_for_byte"],
+    ),
+];
+
+/// Property fns that must iterate the whole `Ctrl` registry: each must
+/// reference `CTRL_VARIANTS` in its body, so widening the registry
+/// automatically widens the fuzz loop (or fails the variant-count
+/// check).
+const CTRL_SWEEP_FNS: &[&str] = &[
+    "prop_ctrl_roundtrip_every_variant",
+    "prop_ctrl_hostile_bytes_error_not_panic",
+    "prop_pooled_encode_matches_allocating_encode_byte_for_byte",
+];
+
+/// Rule 1 — wire-tag registry. Needs both `glb/wire.rs` and
+/// `rust/tests/properties.rs` in the lint set; silently inert when
+/// wire.rs is absent (fixture runs for other rules).
+pub fn check_wire_registry(sources: &[Source], out: &mut Vec<Finding>) {
+    let Some(wire) = sources.iter().find(|s| s.path.ends_with("glb/wire.rs")) else {
+        return;
+    };
+    let Some(props) = sources.iter().find(|s| s.path.ends_with("properties.rs")) else {
+        out.push(Finding {
+            rule: Rule::WireRegistry,
+            path: wire.path.clone(),
+            line: 1,
+            message: "wire.rs is in the lint set but rust/tests/properties.rs is not; \
+                      tag coverage cannot be proven"
+                .into(),
+        });
+        return;
+    };
+
+    let msg_tags = parse_tags(wire, "TAG_");
+    let ctrl_tags = parse_tags(wire, "CTRL_");
+    check_dense(wire, "Msg", &msg_tags, out);
+    check_dense(wire, "Ctrl", &ctrl_tags, out);
+
+    // properties.rs must pin the Ctrl variant count: its sweep loops
+    // run 0..CTRL_VARIANTS, so a new tag without a matching bump is a
+    // build break, and a bump without generator arms panics the tests.
+    match parse_usize_const(props, "CTRL_VARIANTS") {
+        None => out.push(Finding {
+            rule: Rule::WireRegistry,
+            path: props.path.clone(),
+            line: 1,
+            message: "properties.rs must declare `const CTRL_VARIANTS: usize = <n>` \
+                      matching the Ctrl tag registry"
+                .into(),
+        }),
+        Some((n, line)) if n != ctrl_tags.len() => out.push(Finding {
+            rule: Rule::WireRegistry,
+            path: props.path.clone(),
+            line,
+            message: format!(
+                "CTRL_VARIANTS is {n} but glb/wire.rs declares {} Ctrl tags; \
+                 the property sweeps no longer span the registry",
+                ctrl_tags.len()
+            ),
+        }),
+        Some(_) => {}
+    }
+
+    // Every tag's enum variant must appear in the property generators.
+    for (family, tags) in [("Msg", &msg_tags), ("Ctrl", &ctrl_tags)] {
+        for tag in tags {
+            let variant = variant_name(&tag.name);
+            let needle = format!("{family}::{variant}");
+            if props.find_str(&needle).is_empty() {
+                out.push(Finding {
+                    rule: Rule::WireRegistry,
+                    path: wire.path.clone(),
+                    line: tag.line,
+                    message: format!(
+                        "{} declares wire tag {} but properties.rs never constructs \
+                         `{needle}`: the variant is outside the round-trip/truncation/\
+                         hostile-bytes/pooled fuzz generators",
+                        wire.path, tag.name
+                    ),
+                });
+            }
+        }
+    }
+
+    // All four coverage families must be present by name…
+    for (family, fns) in WIRE_COVERAGE_FAMILIES {
+        for f in *fns {
+            if props.fn_bodies(f).is_empty() {
+                out.push(Finding {
+                    rule: Rule::WireRegistry,
+                    path: props.path.clone(),
+                    line: 1,
+                    message: format!(
+                        "missing `fn {f}`: the {family} coverage family no longer \
+                         exercises the wire registry"
+                    ),
+                });
+            }
+        }
+    }
+    // …and the Ctrl-sweeping ones must actually loop the registry.
+    for f in CTRL_SWEEP_FNS {
+        for body in props.fn_bodies(f) {
+            let text = &props.code[body.clone()];
+            if !text.contains("CTRL_VARIANTS") {
+                out.push(Finding {
+                    rule: Rule::WireRegistry,
+                    path: props.path.clone(),
+                    line: props.line_of(body.start),
+                    message: format!(
+                        "`fn {f}` does not iterate CTRL_VARIANTS; a new Ctrl tag \
+                         would silently escape this family"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 2 — every `unsafe` region carries a `// SAFETY:` comment, on
+/// the same line or in the comment block directly above.
+pub fn check_unsafe_safety(src: &Source, out: &mut Vec<Finding>) {
+    for at in src.find_word("unsafe") {
+        let line = src.line_of(at);
+        if has_safety_comment(src, line) {
+            continue;
+        }
+        out.push(Finding {
+            rule: Rule::UnsafeSafety,
+            path: src.path.clone(),
+            line,
+            message: "unsafe region without a `// SAFETY:` justification comment \
+                      (same line or the comment block directly above)"
+                .into(),
+        });
+    }
+}
+
+fn has_safety_comment(src: &Source, line: usize) -> bool {
+    if src.line_text(line).contains("SAFETY:") {
+        return true;
+    }
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let text = src.line_text(l);
+        let trimmed = text.trim_start();
+        if trimmed.starts_with("//") {
+            if text.contains("SAFETY:") {
+                return true;
+            }
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Rule 3 — `Ordering::Relaxed` only at allowlisted sites. Matching is
+/// per *statement* (back to the previous `;`/`{`/`}`), so multi-line
+/// `fetch_add` calls still see their symbol.
+pub fn check_atomic_ordering(src: &Source, out: &mut Vec<Finding>) {
+    let tests = src.test_regions();
+    for at in src.find_str("Ordering::Relaxed") {
+        if in_ranges(&tests, at) {
+            continue;
+        }
+        let stmt = &src.code[src.statement_start(at)..at];
+        let allowed = RELAXED_ALLOWLIST.iter().any(|a| {
+            src.path.ends_with(a.path) && (a.symbol == "*" || stmt.contains(a.symbol))
+        });
+        if !allowed {
+            out.push(Finding {
+                rule: Rule::AtomicOrdering,
+                path: src.path.clone(),
+                line: src.line_of(at),
+                message: "Ordering::Relaxed outside the declared gauge/counter \
+                          allowlist; use the weakest ordering that is still correct \
+                          and record the rationale in analysis/rules.rs"
+                    .into(),
+            });
+        }
+    }
+}
+
+/// Rule 4 — no `unwrap()`/`expect()` inside declared hot regions.
+/// Test code inside those files is exempt; a declared region whose fn
+/// disappeared is itself a finding (renames must update the table).
+pub fn check_hot_path_panics(sources: &[Source], out: &mut Vec<Finding>) {
+    for region in HOT_REGIONS {
+        let Some(src) = sources.iter().find(|s| s.path.ends_with(region.path)) else {
+            continue;
+        };
+        let bodies = src.fn_bodies(region.func);
+        if bodies.is_empty() {
+            out.push(Finding {
+                rule: Rule::HotPathPanic,
+                path: src.path.clone(),
+                line: 1,
+                message: format!(
+                    "declared hot region `fn {}` not found (renamed? update \
+                     HOT_REGIONS in analysis/rules.rs)",
+                    region.func
+                ),
+            });
+            continue;
+        }
+        let tests = src.test_regions();
+        for body in bodies {
+            for needle in [".unwrap()", ".expect("] {
+                for at in src.find_str(needle) {
+                    if !body.contains(&at) || in_ranges(&tests, at) {
+                        continue;
+                    }
+                    out.push(Finding {
+                        rule: Rule::HotPathPanic,
+                        path: src.path.clone(),
+                        line: src.line_of(at),
+                        message: format!(
+                            "`{needle}` in hot region `fn {}` ({}); propagate or \
+                             absorb the error instead of panicking mid-run",
+                            region.func, region.why
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// A `const <PREFIX><NAME>: u8 = <value>;` wire-tag declaration.
+struct TagConst {
+    name: String,
+    value: u64,
+    line: usize,
+}
+
+fn parse_tags(src: &Source, prefix: &str) -> Vec<TagConst> {
+    let code = src.code.as_bytes();
+    let mut out = Vec::new();
+    for at in src.find_word("const") {
+        let mut i = at + "const".len();
+        while i < code.len() && code[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        while i < code.len() && (code[i].is_ascii_alphanumeric() || code[i] == b'_') {
+            i += 1;
+        }
+        let name = &src.code[start..i];
+        if !name.starts_with(prefix) {
+            continue;
+        }
+        let rest = &src.code[i..];
+        let Some(tail) = rest.trim_start().strip_prefix(':') else {
+            continue;
+        };
+        let Some(val_text) = tail.trim_start().strip_prefix("u8") else {
+            continue;
+        };
+        let Some(eq) = val_text.trim_start().strip_prefix('=') else {
+            continue;
+        };
+        let digits: String = eq
+            .trim_start()
+            .chars()
+            .take_while(char::is_ascii_digit)
+            .collect();
+        if let Ok(value) = digits.parse::<u64>() {
+            out.push(TagConst {
+                name: name.to_string(),
+                value,
+                line: src.line_of(at),
+            });
+        }
+    }
+    out
+}
+
+fn parse_usize_const(src: &Source, name: &str) -> Option<(usize, usize)> {
+    for at in src.find_word(name) {
+        let rest = &src.code[at + name.len()..];
+        let Some(tail) = rest.trim_start().strip_prefix(':') else {
+            continue;
+        };
+        let Some(val_text) = tail.trim_start().strip_prefix("usize") else {
+            continue;
+        };
+        let Some(eq) = val_text.trim_start().strip_prefix('=') else {
+            continue;
+        };
+        let digits: String = eq
+            .trim_start()
+            .chars()
+            .take_while(char::is_ascii_digit)
+            .collect();
+        if let Ok(v) = digits.parse::<usize>() {
+            return Some((v, src.line_of(at)));
+        }
+    }
+    None
+}
+
+/// Tags must be unique and dense (0..n): a gap or duplicate means a
+/// decoder match arm and the fuzz sweep disagree about the registry.
+fn check_dense(wire: &Source, family: &str, tags: &[TagConst], out: &mut Vec<Finding>) {
+    let mut values: Vec<u64> = tags.iter().map(|t| t.value).collect();
+    values.sort_unstable();
+    for (i, t) in tags.iter().enumerate() {
+        if tags[..i].iter().any(|p| p.value == t.value) {
+            out.push(Finding {
+                rule: Rule::WireRegistry,
+                path: wire.path.clone(),
+                line: t.line,
+                message: format!(
+                    "{family} tag {} reuses wire value {}; tags must be unique",
+                    t.name, t.value
+                ),
+            });
+        }
+    }
+    let dense = values.iter().enumerate().all(|(i, &v)| v == i as u64);
+    if !dense && !tags.is_empty() {
+        out.push(Finding {
+            rule: Rule::WireRegistry,
+            path: wire.path.clone(),
+            line: tags[0].line,
+            message: format!(
+                "{family} tag values are not dense 0..{}; decoders and property \
+                 sweeps assume a gap-free registry",
+                tags.len()
+            ),
+        });
+    }
+}
+
+/// `TAG_STEAL` → `Steal`, `CTRL_PEER_MAP` → `PeerMap`.
+fn variant_name(tag: &str) -> String {
+    let bare = tag.split_once('_').map_or(tag, |(_, rest)| rest);
+    let mut out = String::new();
+    for part in bare.split('_') {
+        let mut chars = part.chars();
+        if let Some(first) = chars.next() {
+            out.push(first.to_ascii_uppercase());
+            for c in chars {
+                out.push(c.to_ascii_lowercase());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_follow_the_codec_naming() {
+        assert_eq!(variant_name("TAG_STEAL"), "Steal");
+        assert_eq!(variant_name("CTRL_PEER_MAP"), "PeerMap");
+        assert_eq!(variant_name("CTRL_STATS"), "Stats");
+    }
+
+    #[test]
+    fn tag_parsing_reads_const_u8_declarations() {
+        let src = Source::new(
+            "glb/wire.rs",
+            "const TAG_A: u8 = 0;\nconst TAG_B: u8 = 1;\nconst OTHER: usize = 9;\n",
+        );
+        let tags = parse_tags(&src, "TAG_");
+        assert_eq!(tags.len(), 2);
+        assert_eq!(tags[1].value, 1);
+        assert_eq!(tags[1].line, 2);
+    }
+
+    #[test]
+    fn dense_check_flags_gaps_and_duplicates() {
+        let src = Source::new(
+            "glb/wire.rs",
+            "const TAG_A: u8 = 0;\nconst TAG_B: u8 = 2;\nconst TAG_C: u8 = 2;\n",
+        );
+        let tags = parse_tags(&src, "TAG_");
+        let mut out = Vec::new();
+        check_dense(&src, "Msg", &tags, &mut out);
+        assert_eq!(out.len(), 2);
+    }
+}

@@ -1,0 +1,427 @@
+//! A lightweight Rust source scanner for the invariant lint.
+//!
+//! This is deliberately **not** a parser: the rules in
+//! [`crate::analysis::rules`] only need to (a) find tokens that are
+//! really code rather than comment/string text, (b) map byte offsets to
+//! lines, (c) recover the extent of a named `fn` body, and (d) know
+//! which regions are test code. So the scanner does one pass that
+//! blanks comment and string *contents* to spaces — preserving byte
+//! offsets and newlines exactly, so every offset into the cleaned text
+//! is also an offset into the raw text — and a few brace-matching
+//! helpers on top. No dependencies, no syntax tree, no surprises when
+//! rustc's grammar grows.
+
+use std::ops::Range;
+
+/// One scanned source file: the raw text plus its cleaned shadow.
+pub struct Source {
+    /// Path as given by the caller (repo-relative under `lint_tree`).
+    pub path: String,
+    /// Original text, used for reading comment lines (SAFETY audit).
+    pub raw: String,
+    /// Same length as `raw`, with comment bodies and string/char
+    /// literal contents replaced by spaces (newlines kept).
+    pub code: String,
+    /// Byte offset of the start of each line, for offset→line mapping.
+    line_starts: Vec<usize>,
+}
+
+impl Source {
+    pub fn new(path: impl Into<String>, raw: impl Into<String>) -> Self {
+        let raw = raw.into();
+        let code = clean(&raw);
+        let mut line_starts = vec![0];
+        for (i, b) in raw.bytes().enumerate() {
+            if b == b'\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        Self {
+            path: path.into(),
+            raw,
+            code,
+            line_starts,
+        }
+    }
+
+    /// 1-based line number containing byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Raw text of 1-based line `line` (without the newline), or ""
+    /// when out of range.
+    pub fn line_text(&self, line: usize) -> &str {
+        if line == 0 || line > self.line_starts.len() {
+            return "";
+        }
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map_or(self.raw.len(), |&next| next.saturating_sub(1));
+        &self.raw[start..end.max(start)]
+    }
+
+    /// Byte offsets of every occurrence of `word` in the cleaned text
+    /// where both neighbours are non-identifier bytes (so `unsafe`
+    /// does not match inside `unsafe_op_in_unsafe_fn`).
+    pub fn find_word(&self, word: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let code = self.code.as_bytes();
+        let mut from = 0;
+        while let Some(rel) = self.code[from..].find(word) {
+            let at = from + rel;
+            let before_ok = at == 0 || !is_ident_byte(code[at - 1]);
+            let end = at + word.len();
+            let after_ok = end >= code.len() || !is_ident_byte(code[end]);
+            if before_ok && after_ok {
+                out.push(at);
+            }
+            from = at + 1;
+        }
+        out
+    }
+
+    /// Byte offsets of every occurrence of `needle` in the cleaned
+    /// text, with no boundary requirements (for `.unwrap()`-style
+    /// punctuation-anchored needles).
+    pub fn find_str(&self, needle: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut from = 0;
+        while let Some(rel) = self.code[from..].find(needle) {
+            out.push(from + rel);
+            from = from + rel + 1;
+        }
+        out
+    }
+
+    /// Start offset of the statement containing `off`: one past the
+    /// previous `;`, `{` or `}` in the cleaned text (0 at file start).
+    /// Lets a rule match a symbol against its whole (possibly
+    /// multi-line) statement rather than a single line.
+    pub fn statement_start(&self, off: usize) -> usize {
+        let code = self.code.as_bytes();
+        let mut i = off;
+        while i > 0 {
+            let b = code[i - 1];
+            if b == b';' || b == b'{' || b == b'}' {
+                return i;
+            }
+            i -= 1;
+        }
+        0
+    }
+
+    /// Body extents (from `{` to the matching `}`, inclusive) of every
+    /// `fn` named exactly `name`. Multiple matches are real in this
+    /// tree: cfg-gated platform backends define the same method twice.
+    pub fn fn_bodies(&self, name: &str) -> Vec<Range<usize>> {
+        let code = self.code.as_bytes();
+        let mut out = Vec::new();
+        for at in self.find_word("fn") {
+            let mut i = at + 2;
+            while i < code.len() && code[i].is_ascii_whitespace() {
+                i += 1;
+            }
+            let ident_start = i;
+            while i < code.len() && is_ident_byte(code[i]) {
+                i += 1;
+            }
+            if &self.code[ident_start..i] != name {
+                continue;
+            }
+            // Walk the signature (generics, params, return type, where
+            // clause) to the body `{`. `->` must not close an angle
+            // bracket; a `;` at top level means a bodyless trait decl.
+            let mut paren = 0i32;
+            let mut angle = 0i32;
+            let mut prev = 0u8;
+            while i < code.len() {
+                let b = code[i];
+                match b {
+                    b'(' => paren += 1,
+                    b')' => paren -= 1,
+                    b'<' => angle += 1,
+                    b'>' if prev != b'-' => angle -= 1,
+                    b'{' if paren == 0 && angle <= 0 => break,
+                    b';' if paren == 0 => break,
+                    _ => {}
+                }
+                if !b.is_ascii_whitespace() {
+                    prev = b;
+                }
+                i += 1;
+            }
+            if i >= code.len() || code[i] != b'{' {
+                continue;
+            }
+            if let Some(end) = match_brace(code, i) {
+                out.push(i..end + 1);
+            }
+        }
+        out
+    }
+
+    /// Extents of test code: every `#[cfg(test)]` or `#[test]`
+    /// attribute's following braced item (the `mod tests { .. }` body
+    /// or the test fn body).
+    pub fn test_regions(&self) -> Vec<Range<usize>> {
+        let code = self.code.as_bytes();
+        let mut out = Vec::new();
+        for marker in ["#[cfg(test)]", "#[test]"] {
+            for at in self.find_str(marker) {
+                let mut i = at + marker.len();
+                while i < code.len() && code[i] != b'{' && code[i] != b';' {
+                    i += 1;
+                }
+                if i >= code.len() || code[i] != b'{' {
+                    continue;
+                }
+                if let Some(end) = match_brace(code, i) {
+                    out.push(at..end + 1);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// True iff `off` falls inside any of `ranges`.
+pub fn in_ranges(ranges: &[Range<usize>], off: usize) -> bool {
+    ranges.iter().any(|r| r.contains(&off))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Offset of the `}` matching the `{` at `open`, if the file is
+/// balanced (the cleaned text has no braces inside literals, so plain
+/// depth counting is exact).
+fn match_brace(code: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (i, &b) in code.iter().enumerate().skip(open) {
+        match b {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Blank comment bodies and string/char contents to spaces, keeping
+/// newlines and all delimiters, so byte offsets and line numbers in the
+/// result match the raw text exactly.
+fn clean(raw: &str) -> String {
+    let b = raw.as_bytes();
+    let mut out = b.to_vec();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                while i < b.len() && b[i] != b'\n' {
+                    out[i] = b' ';
+                    i += 1;
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1usize;
+                out[i] = b' ';
+                out[i + 1] = b' ';
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        out[i] = b' ';
+                        out[i + 1] = b' ';
+                        i += 2;
+                    } else {
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'r' | b'b' => {
+                // r"..", r#".."#, br".." — no escapes; closed by a
+                // quote followed by the same number of hashes. A bare
+                // `b".."` byte string falls through to the `"` arm.
+                if let Some((quote, hashes)) = raw_string_open(b, i) {
+                    i = quote + 1;
+                    while i < b.len() {
+                        if b[i] == b'"' && closes_raw(b, i, hashes) {
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if b[i] != b'\n' {
+                            out[i] = b' ';
+                        }
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            b'"' => {
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => {
+                            out[i] = b' ';
+                            if i + 1 < b.len() && b[i + 1] != b'\n' {
+                                out[i + 1] = b' ';
+                            }
+                            i += 2;
+                        }
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => i += 1,
+                        _ => {
+                            out[i] = b' ';
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            b'\'' => {
+                if b.get(i + 1) == Some(&b'\\') {
+                    // Escaped char literal: blank through the close.
+                    out[i + 1] = b' ';
+                    let mut j = i + 2;
+                    while j < b.len() && b[j] != b'\'' {
+                        if b[j] != b'\n' {
+                            out[j] = b' ';
+                        }
+                        j += 1;
+                    }
+                    i = j + 1;
+                } else if b.get(i + 2) == Some(&b'\'') && b.get(i + 1) != Some(&b'\'') {
+                    // Simple one-byte char literal 'x' (incl. '"').
+                    out[i + 1] = b' ';
+                    i += 3;
+                } else {
+                    // Lifetime: keep the identifier, skip the quote.
+                    i += 1;
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    match String::from_utf8(out) {
+        Ok(s) => s,
+        // Blanking is byte-for-byte and only writes ASCII spaces, so
+        // this arm is unreachable for valid input; fall back to the
+        // raw text rather than panic inside the linter.
+        Err(_) => raw.to_string(),
+    }
+}
+
+/// If `b[i]` starts a raw (byte) string literal token, return the
+/// offset of its opening quote and the hash count.
+fn raw_string_open(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident_byte(b[i - 1]) {
+        return None; // mid-identifier `r`/`b`
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) != Some(&b'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some((j, hashes))
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[u8], quote: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| b.get(quote + k) == Some(&b'#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cleaning_blanks_comments_and_strings_but_keeps_offsets() {
+        let raw = "let a = 1; // trailing unwrap()\nlet s = \"unsafe { }\";\n";
+        let src = Source::new("x.rs", raw);
+        assert_eq!(src.raw.len(), src.code.len());
+        assert!(src.find_word("unsafe").is_empty());
+        assert!(src.find_str(".unwrap()").is_empty());
+        assert_eq!(src.find_word("let").len(), 2);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_do_not_derail_the_scan() {
+        let raw = "fn f<'a>(x: &'a str) -> char { let q = '\"'; let n = '\\n'; q }\n";
+        let src = Source::new("x.rs", raw);
+        // The '"' char literal must not open a string that swallows
+        // the rest of the file.
+        assert_eq!(src.find_word("q").len(), 2);
+        assert_eq!(src.fn_bodies("f").len(), 1);
+    }
+
+    #[test]
+    fn fn_bodies_handles_generics_and_return_arrows() {
+        let raw = "impl T { fn wait<E: Copy>(&self, v: Vec<E>) -> io::Result<()> { v.len(); Ok(()) } }\nfn wait2() {}\n";
+        let src = Source::new("x.rs", raw);
+        let bodies = src.fn_bodies("wait");
+        assert_eq!(bodies.len(), 1);
+        assert!(src.code[bodies[0].clone()].contains("v.len()"));
+        assert!(src.fn_bodies("missing").is_empty());
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods() {
+        let raw = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn helper() { x.unwrap() }\n}\n";
+        let src = Source::new("x.rs", raw);
+        let regions = src.test_regions();
+        assert_eq!(regions.len(), 1);
+        let at = src.find_str(".unwrap()")[0];
+        assert!(in_ranges(&regions, at));
+    }
+
+    #[test]
+    fn statement_start_spans_multi_line_calls() {
+        let raw = "fn f() {\n    COUNTER.fetch_add(\n        1,\n        Ordering::Relaxed,\n    );\n}\n";
+        let src = Source::new("x.rs", raw);
+        let at = src.find_str("Ordering::Relaxed")[0];
+        let span = &src.code[src.statement_start(at)..at];
+        assert!(span.contains("COUNTER"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let raw = "let s = r#\"unsafe .unwrap() \"quoted\" \"#; let t = 1;\n";
+        let src = Source::new("x.rs", raw);
+        assert!(src.find_word("unsafe").is_empty());
+        assert_eq!(src.find_word("t").len(), 1);
+    }
+}

@@ -244,6 +244,9 @@ COMMANDS
              [--baseline bench/baseline.json --band 0.30] (warn-only gate)
   calibrate  print this machine's cost models
   smoke      check the PJRT runtime wiring
+  lint       protocol/concurrency invariant checker over the source tree
+             (wire-tag registry, SAFETY audit, atomic orderings, hot-path
+             panics) — nonzero exit on any finding   [--root DIR]
 
 COMMON OPTIONS
   --threads | --sim      substrate (default: threads for apps, sim for figs)

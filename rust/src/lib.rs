@@ -20,6 +20,13 @@
 //! artifacts via the PJRT C API and the BC task queues invoke them on the
 //! request path.
 
+// Every unsafe operation must sit in its own `unsafe { .. }` block with a
+// `// SAFETY:` justification — enforced mechanically by `glb lint`
+// ([`analysis`]), which also polices atomic orderings, hot-path panics,
+// and the wire-tag/property-test registry.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod apps;
 pub mod baselines;
 pub mod cli;

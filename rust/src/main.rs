@@ -57,6 +57,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             println!("platform={}", glb::smoke()?);
             Ok(())
         }
+        "lint" => cmd_lint(rest),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
 }
@@ -575,5 +576,20 @@ fn cmd_calibrate() -> Result<()> {
     let g = Graph::rmat(RmatParams { scale: 10, ..Default::default() });
     let bc = calibrate_bc_cost(&g);
     println!("bc : {:.2} ns/edge (sparse Brandes, scale-10 R-MAT)", bc.ns_per_unit);
+    Ok(())
+}
+
+/// `glb lint [--root DIR]` — run the protocol/concurrency invariant
+/// checker over the source tree (see [`glb::analysis`]). Exits nonzero
+/// iff any finding survives; CI runs this as a hard gate.
+fn cmd_lint(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["root"])?;
+    let root = args.get("root").unwrap_or(".");
+    let findings = glb::analysis::lint_tree(std::path::Path::new(root))?;
+    print!("{}", glb::analysis::render(&findings));
+    if !findings.is_empty() {
+        bail!("glb lint: {} invariant finding(s)", findings.len());
+    }
     Ok(())
 }

@@ -146,10 +146,10 @@ fn router_loop<B: Send>(
                         // A due-time wakeup; the next loop iteration
                         // forwards it. Waking with nothing due would be
                         // the old idle-poll bug.
-                        if let Some(c) = &spurious {
+                        if let Some(spurious_wakeups) = &spurious {
                             let now = Instant::now();
                             if !heap.peek().is_some_and(|Reverse(e)| e.0 <= now) {
-                                c.fetch_add(1, Ordering::Relaxed);
+                                spurious_wakeups.fetch_add(1, Ordering::Relaxed);
                             }
                         }
                     }

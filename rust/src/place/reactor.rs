@@ -25,9 +25,23 @@ use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::UnixStream;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::glb::wire::BufferPool;
+
+/// Take a mutex guard, absorbing poison. The reactor's shared state
+/// (write queues, poll registrations, steal marks) must stay usable
+/// even if some other thread panicked mid-hold: the I/O loop's job at
+/// that point is to keep driving teardown, not to amplify one worker's
+/// panic into a hung fleet. Every protected structure here is valid
+/// after any partial update (queues of whole frames, registration
+/// tables), so recovering the guard is sound.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
 
 // ---------------------------------------------------------------------
 // syscall surface
@@ -87,6 +101,8 @@ mod sys {
 
     impl Backend {
         pub fn new() -> io::Result<Self> {
+            // SAFETY: epoll_create1 takes no pointers; it returns a new
+            // fd or -1, and both outcomes are handled below.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -97,6 +113,9 @@ mod sys {
         fn ctl(&self, op: i32, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
             let mut ev = EpollEvent { events: mask, data: token };
             let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev };
+            // SAFETY: `arg` is either null (allowed for DEL since Linux
+            // 2.6.9) or a live pointer to `ev`, which outlives the call;
+            // the kernel only reads it.
             if unsafe { epoll_ctl(self.epfd, op, fd, arg) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -117,9 +136,12 @@ mod sys {
 
         pub fn wait(&self, out: &mut Vec<super::Event>, timeout_ms: i32) -> io::Result<()> {
             let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+            let max = buf.len() as i32;
             let n = loop {
-                let rc =
-                    unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms) };
+                // SAFETY: `buf` is a live array of `max` initialized
+                // events and the kernel writes at most `max` entries
+                // into it; `rc` is checked before any entry is read.
+                let rc = unsafe { epoll_wait(self.epfd, buf.as_mut_ptr(), max, timeout_ms) };
                 if rc >= 0 {
                     break rc as usize;
                 }
@@ -144,6 +166,8 @@ mod sys {
 
     impl Drop for Backend {
         fn drop(&mut self) {
+            // SAFETY: `epfd` was returned by epoll_create1, is owned
+            // exclusively by this Backend, and is closed exactly once.
             unsafe { close(self.epfd) };
         }
     }
@@ -193,7 +217,7 @@ mod sys {
         }
 
         pub fn add(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
-            let mut regs = self.regs.lock().unwrap();
+            let mut regs = super::lock_clean(&self.regs);
             if regs.iter().any(|(f, _, _)| *f == fd) {
                 return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd registered"));
             }
@@ -202,7 +226,7 @@ mod sys {
         }
 
         pub fn modify(&self, fd: RawFd, mask: u32, token: u64) -> io::Result<()> {
-            let mut regs = self.regs.lock().unwrap();
+            let mut regs = super::lock_clean(&self.regs);
             match regs.iter_mut().find(|(f, _, _)| *f == fd) {
                 Some(slot) => {
                     *slot = (fd, mask, token);
@@ -213,7 +237,7 @@ mod sys {
         }
 
         pub fn remove(&self, fd: RawFd) -> io::Result<()> {
-            let mut regs = self.regs.lock().unwrap();
+            let mut regs = super::lock_clean(&self.regs);
             let before = regs.len();
             regs.retain(|(f, _, _)| *f != fd);
             if regs.len() == before {
@@ -223,7 +247,7 @@ mod sys {
         }
 
         pub fn wait(&self, out: &mut Vec<super::Event>, timeout_ms: i32) -> io::Result<()> {
-            let snapshot: Vec<(RawFd, u32, u64)> = self.regs.lock().unwrap().clone();
+            let snapshot: Vec<(RawFd, u32, u64)> = super::lock_clean(&self.regs).clone();
             let mut fds: Vec<PollFd> = snapshot
                 .iter()
                 .map(|(fd, mask, _)| {
@@ -238,6 +262,9 @@ mod sys {
                 })
                 .collect();
             loop {
+                // SAFETY: `fds` is a live Vec of `fds.len()` PollFd
+                // entries; the kernel reads `events` and writes
+                // `revents` within those bounds only.
                 let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
                 if rc >= 0 {
                     break;
@@ -414,7 +441,7 @@ impl OutQueue {
     /// is closing — teardown refuses new traffic the same way a dead
     /// link used to.
     pub fn push(&self, frame: Arc<Vec<u8>>) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_clean(&self.inner);
         if inner.closing {
             return false;
         }
@@ -425,16 +452,16 @@ impl OutQueue {
     /// Refuse further pushes; the reactor drains what is queued, then
     /// reports `drained` so the socket can be half-closed.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closing = true;
+        lock_clean(&self.inner).closing = true;
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().frames.is_empty()
+        lock_clean(&self.inner).frames.is_empty()
     }
 
     /// Frames currently queued (the live-telemetry out-queue-depth gauge).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().frames.len()
+        lock_clean(&self.inner).frames.len()
     }
 
     /// Write as much queued data as the socket accepts, coalescing up
@@ -443,7 +470,7 @@ impl OutQueue {
     /// frames are recycled into `pool`.
     pub fn flush(&self, fd: RawFd, pool: &BufferPool) -> io::Result<FlushOutcome> {
         let mut out = FlushOutcome::default();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_clean(&self.inner);
         loop {
             if inner.frames.is_empty() {
                 out.drained = inner.closing;
@@ -455,6 +482,10 @@ impl OutQueue {
                 iovs.push(IoVec { base: f[off..].as_ptr(), len: f.len() - off });
             }
             let written = loop {
+                // SAFETY: each iovec points into an `Arc<Vec<u8>>` held
+                // by `inner.frames` for the whole call (the queue lock is
+                // held, so no frame is popped or recycled concurrently),
+                // and `len` never exceeds the frame's remaining bytes.
                 let rc = unsafe { writev(fd, iovs.as_ptr(), iovs.len() as i32) };
                 if rc >= 0 {
                     break rc as usize;
@@ -477,13 +508,18 @@ impl OutQueue {
             out.bytes += written as u64;
             let mut left = written;
             while left > 0 {
-                let head_remaining = inner.frames[0].len() - inner.head_off;
+                // writev never reports more than it was handed, so the
+                // head frame is present for every byte being accounted;
+                // a bare `break` (not a panic) guards the impossible.
+                let Some(head) = inner.frames.front() else { break };
+                let head_remaining = head.len() - inner.head_off;
                 if left >= head_remaining {
                     left -= head_remaining;
                     inner.head_off = 0;
-                    let done = inner.frames.pop_front().unwrap();
-                    pool.put_arc(done);
-                    out.frames_done += 1;
+                    if let Some(done) = inner.frames.pop_front() {
+                        pool.put_arc(done);
+                        out.frames_done += 1;
+                    }
                 } else {
                     inner.head_off += left;
                     left = 0;

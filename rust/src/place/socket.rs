@@ -79,7 +79,7 @@
 //! or, in tolerant fleets, as a death if no result arrived first.
 
 use std::collections::{HashMap, VecDeque};
-use std::io::{ErrorKind, Read, Write};
+use std::io::{self, ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -101,7 +101,7 @@ use crate::glb::wire::{self, BufferPool, Ctrl, FrameAssembler, WireCodec};
 use crate::glb::worker::{Phase, Worker};
 use crate::glb::{GlbConfig, RunLog, RunOutput};
 use crate::place::membership::{DynamicMembership, MembershipProvider};
-use crate::place::reactor::{Event, OutQueue, Poller, Waker};
+use crate::place::reactor::{lock_clean, Event, OutQueue, Poller, Waker};
 use crate::testkit::chaos;
 
 /// How this process joins the fleet.
@@ -347,7 +347,7 @@ impl NetCore {
 /// enqueue time, skewing `steal_latency_us` — the latency books must
 /// only ever see completed round-trips.
 fn purge_peer_marks(marks: &Mutex<HashMap<(u64, u64), Instant>>, topo: &Topology, peer: usize) {
-    marks.lock().unwrap().retain(|&(victim, _), _| topo.node_of(victim as usize) != peer);
+    lock_clean(marks).retain(|&(victim, _), _| topo.node_of(victim as usize) != peer);
 }
 
 /// One rank's armed telemetry plane (`--stats`): the worker gauge hub,
@@ -657,6 +657,13 @@ impl ReaderDone {
 /// the membership view, per-peer retention ledgers, inbound credit and
 /// merge books, and the mirrored outstanding steal. Shared (non-generic)
 /// across the worker thread, mesh readers, and the recovery thread.
+///
+/// The credit/merge books (`recv_credit`, `merged`) deliberately stay
+/// `SeqCst`: a reconcile solves `granted − deposited + Σsent − Σreceived`
+/// across *several* counters updated by different threads, and the
+/// single total order is the cheapest way to keep those cross-variable
+/// reads mutually consistent without a lock (`glb lint` flags any
+/// attempt to relax them).
 struct RankRecovery {
     rank: usize,
     membership: Arc<DynamicMembership>,
@@ -853,11 +860,7 @@ impl<B: WireCodec> SocketTransport<B> {
             return;
         }
         if let Msg::Steal { nonce, .. } = msg {
-            self.net
-                .steal_marks
-                .lock()
-                .unwrap()
-                .insert((to as u64, *nonce), Instant::now());
+            lock_clean(&self.net.steal_marks).insert((to as u64, *nonce), Instant::now());
         }
         if q.push(Arc::new(buf)) {
             self.net.waker.wake();
@@ -1337,7 +1340,10 @@ struct IoLiveGuard;
 
 impl Drop for IoLiveGuard {
     fn drop(&mut self) {
-        IO_THREADS_LIVE.fetch_sub(1, Ordering::SeqCst);
+        // Relaxed: spawn accounting only — readers observe it after the
+        // reactor thread is joined, and the join edge already orders the
+        // write (see IO_THREADS in the lint allowlist).
+        IO_THREADS_LIVE.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -1364,16 +1370,28 @@ impl<B> Reactor<B>
 where
     B: WireCodec + Send + 'static,
 {
-    fn run(mut self) {
-        self.poller
-            .add(self.core.waker.rx_fd(), WAKE_TOKEN, true, false)
-            .expect("register reactor waker");
+    /// One-time poller registration for the waker and every fleet
+    /// socket. Split out of [`Reactor::run`] so the event loop proper
+    /// stays free of panicking calls (the hot-path lint walks `run`):
+    /// a failure here is a bootstrap error, reported once and fatal.
+    fn arm(&mut self) -> io::Result<()> {
+        self.poller.add(self.core.waker.rx_fd(), WAKE_TOKEN, true, false)?;
         for i in 0..self.conns.len() {
             let c = &mut self.conns[i];
-            c.stream.set_nonblocking(true).expect("nonblocking fleet socket");
-            self.poller
-                .add(c.stream.as_raw_fd(), i as u64, true, false)
-                .expect("register fleet socket");
+            c.stream.set_nonblocking(true)?;
+            self.poller.add(c.stream.as_raw_fd(), i as u64, true, false)?;
+        }
+        Ok(())
+    }
+
+    fn run(mut self) {
+        // A rank whose reactor cannot register (or later poll) its
+        // sockets can never hear the fleet again; fail the process fast
+        // — the launcher's watchdog turns that into a clean fleet abort
+        // — instead of panicking this thread and hanging the join.
+        if let Err(e) = self.arm() {
+            eprintln!("glb: rank {}: reactor setup failed: {e}", self.my_rank);
+            std::process::exit(1);
         }
         let mut events: Vec<Event> = Vec::new();
         loop {
@@ -1383,7 +1401,10 @@ where
             // decision to shut down, and an earlier close could sever a
             // spoke that has not yet entered teardown itself (tolerant
             // spokes treat an unexpected control EOF as fatal).
-            let shutdown = self.core.shutdown.load(Ordering::SeqCst);
+            // Acquire pairs with teardown's Release store: everything
+            // enqueued before the flag (final result/stats frames) is
+            // visible once the reactor observes the shutdown.
+            let shutdown = self.core.shutdown.load(Ordering::Acquire);
             if shutdown {
                 for c in &self.conns {
                     match c.kind {
@@ -1398,7 +1419,10 @@ where
             if shutdown && self.conns.iter().all(|c| c.read_done && c.wr_closed) {
                 break;
             }
-            self.poller.wait(&mut events, self.stats_timeout_ms()).expect("reactor poll");
+            if let Err(e) = self.poller.wait(&mut events, self.stats_timeout_ms()) {
+                eprintln!("glb: rank {}: reactor poll failed: {e}", self.my_rank);
+                std::process::exit(1);
+            }
             self.sample_stats_if_due();
             for ev in events.iter().copied() {
                 if ev.token == WAKE_TOKEN {
@@ -1411,7 +1435,7 @@ where
         // Teardown: any surviving steal mark belongs to a round-trip the
         // fleet tore down underneath — it must be discarded, never
         // sampled (the latency books count completed round-trips only).
-        self.core.steal_marks.lock().unwrap().clear();
+        lock_clean(&self.core.steal_marks).clear();
     }
 
     /// `epoll_wait` timeout: indefinite without `--stats`, else the time
@@ -1583,7 +1607,7 @@ where
         }
         if let Msg::Loot { victim, nonce: Some(n), .. } = &msg {
             // Loot or refusal, the steal round-trip is complete.
-            let mark = self.core.steal_marks.lock().unwrap().remove(&(*victim as u64, *n));
+            let mark = lock_clean(&self.core.steal_marks).remove(&(*victim as u64, *n));
             if let Some(t0) = mark {
                 STEAL_LAT_NS_SUM.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 STEAL_LAT_COUNT.fetch_add(1, Ordering::Relaxed);
@@ -1591,7 +1615,7 @@ where
         }
         if let Some(rec) = &self.recovery {
             if let Msg::Loot { nonce: Some(n), .. } = &msg {
-                let mut p = rec.pending.lock().unwrap();
+                let mut p = lock_clean(&rec.pending);
                 if p.as_ref().is_some_and(|ps| ps.dest_rank == peer && ps.nonce == *n) {
                     *p = None;
                 }
@@ -1635,7 +1659,7 @@ where
                 self.core.send_ctrl_to(peer, &Ctrl::Grant { atoms })
             }
             Ctrl::Result { bytes } => {
-                results.lock().unwrap()[peer] = Some(bytes);
+                lock_clean(results)[peer] = Some(bytes);
                 self.conns[i].saw_result = true;
                 true
             }
@@ -1644,8 +1668,8 @@ where
                 // (victim, merged-count) to its victim so retention
                 // ledgers shrink. Forwarding is best-effort: a victim
                 // already gone keeps (or loses) its ledger harmlessly.
-                let t = tol.as_ref().unwrap();
-                t.shared.ack_bank.lock().unwrap()[peer] = Some(result);
+                let Some(t) = tol.as_ref() else { return false };
+                lock_clean(&t.shared.ack_bank)[peer] = Some(result);
                 for (victim, merged) in acked {
                     if victim == 0 {
                         t.shared.recovery.prune(peer, merged);
@@ -1660,9 +1684,10 @@ where
                 }
                 true
             }
-            Ctrl::Reconcile { rank: r, sent, received } if tol.is_some() => {
-                tol.as_ref().unwrap().reconcile_tx.send((r as usize, sent, received)).is_ok()
-            }
+            Ctrl::Reconcile { rank: r, sent, received } if tol.is_some() => match tol.as_ref() {
+                Some(t) => t.reconcile_tx.send((r as usize, sent, received)).is_ok(),
+                None => false,
+            },
             Ctrl::Stats(s) => {
                 // Advisory telemetry: banked when the root's own stats
                 // plane is armed, harmlessly dropped otherwise (a spoke
@@ -1757,7 +1782,10 @@ where
                 }
             }
             ConnKind::CtrlSpoke => {
-                if self.core.shutdown.load(Ordering::SeqCst) {
+                // Acquire: pairs with teardown's Release store (only the
+                // flag itself matters here, but keep one ordering story
+                // for every shutdown read).
+                if self.core.shutdown.load(Ordering::Acquire) {
                     // Orderly teardown: the root answered our EOF.
                 } else if let ReactorRole::Spoke { tolerant: true, .. } = &self.role {
                     // The root died (or dropped us): always fatal.
@@ -1794,6 +1822,9 @@ where
 }
 
 /// Rank 0's shared crash-tolerance state (tolerant fleets only).
+/// `granted`/`deposited` stay `SeqCst` for the same reason as
+/// [`RankRecovery`]'s books: recovery subtracts them across threads as
+/// one consistent set when reclaiming a dead rank's credit.
 struct RootTolerant {
     recovery: Arc<RankRecovery>,
     /// Credit atoms granted to each rank (initial endowment + mints).
@@ -2373,8 +2404,10 @@ where
                 prev: None,
             }),
         };
-        IO_THREADS.fetch_add(1, Ordering::SeqCst);
-        IO_THREADS_LIVE.fetch_add(1, Ordering::SeqCst);
+        // Relaxed: spawn accounting only. The spawn below and the final
+        // join are the synchronization edges any reader runs behind.
+        IO_THREADS.fetch_add(1, Ordering::Relaxed);
+        IO_THREADS_LIVE.fetch_add(1, Ordering::Relaxed);
         reactor = Some(
             std::thread::Builder::new()
                 .name(format!("glb-io-{rank}"))
@@ -2542,8 +2575,10 @@ where
     // queue, half-closes, and reads every peer to EOF before exiting, so
     // joining it means the fleet's last frames (including the Result
     // above) have landed. From here a control-link EOF is an orderly
-    // shutdown, not a death.
-    net.shutdown.store(true, Ordering::SeqCst);
+    // shutdown, not a death. (Release: pairs with the reactor's Acquire
+    // loads, publishing everything enqueued above — the weakest ordering
+    // that still guarantees the Result frame is visible to the drain.)
+    net.shutdown.store(true, Ordering::Release);
     net.waker.wake();
     if let Some(h) = reactor {
         let _ = h.join();

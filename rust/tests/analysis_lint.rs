@@ -1,0 +1,297 @@
+//! Tests for `glb lint` itself: seeded fixture snippets that must each
+//! produce exactly one finding per rule family, and the self-policing
+//! tier-1 gate — the real source tree must lint clean.
+//!
+//! Fixtures impersonate real tree paths (`glb/wire.rs`,
+//! `rust/tests/properties.rs`, `place/reactor.rs`) because rule
+//! applicability is decided by path suffix.
+
+use glb::analysis::{lint_sources, lint_tree, render, Rule, SourceFile};
+
+fn src(path: &str, text: &str) -> SourceFile {
+    SourceFile { path: path.to_string(), text: text.to_string() }
+}
+
+/// A minimal wire registry: full Msg family, two Ctrl tags.
+const WIRE_FIXTURE: &str = "
+pub const TAG_STEAL: u8 = 0;
+pub const TAG_LOOT: u8 = 1;
+pub const TAG_TERMINATE: u8 = 2;
+const CTRL_REGISTER: u8 = 0;
+const CTRL_GO: u8 = 1;
+";
+
+/// A properties.rs fixture exercising both fixture variants through
+/// every coverage family; tests cut pieces out of it to seed findings.
+fn props_fixture(omit_fn: &str) -> String {
+    let all = [
+        (
+            "prop_wire_roundtrip_every_msg_variant_uts",
+            "let _ = (Msg::Steal { thief: 0, nonce: 1 }, Msg::Loot, Msg::Terminate);",
+        ),
+        ("prop_ctrl_roundtrip_every_variant", "for v in 0..CTRL_VARIANTS { gen(v); }"),
+        ("prop_wire_truncated_frames_error_not_panic", "cut_frames();"),
+        ("prop_frame_assembler_decodes_any_split_points", "split_points();"),
+        ("prop_ctrl_hostile_bytes_error_not_panic", "for v in 0..CTRL_VARIANTS { gen(v); }"),
+        (
+            "prop_pooled_encode_matches_allocating_encode_byte_for_byte",
+            "for v in 0..CTRL_VARIANTS { gen(v); }",
+        ),
+    ];
+    let mut out = String::from(
+        "const CTRL_VARIANTS: usize = 2;\n\
+         fn gen(v: usize) { match v { 0 => use_ctrl(Ctrl::Register), _ => use_ctrl(Ctrl::Go) } }\n",
+    );
+    for (name, body) in all {
+        if name == omit_fn {
+            continue;
+        }
+        out.push_str(&format!("fn {name}() {{ {body} }}\n"));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// rule family 1: wire-tag registry
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_tag_missing_truncation_coverage_is_one_finding() {
+    let files = [
+        src("rust/src/glb/wire.rs", WIRE_FIXTURE),
+        src(
+            "rust/tests/properties.rs",
+            &props_fixture("prop_wire_truncated_frames_error_not_panic"),
+        ),
+    ];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::WireRegistry);
+    assert!(
+        findings[0].message.contains("truncation"),
+        "finding must name the missing family: {}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn complete_wire_coverage_lints_clean() {
+    let files = [
+        src("rust/src/glb/wire.rs", WIRE_FIXTURE),
+        src("rust/tests/properties.rs", &props_fixture("")),
+    ];
+    let findings = lint_sources(&files);
+    assert!(findings.is_empty(), "expected clean:\n{}", render(&findings));
+}
+
+#[test]
+fn new_ctrl_tag_without_property_coverage_fails() {
+    // A PR adds CTRL_SUBMIT but forgets the property suite entirely:
+    // the variant-count pin and the generator reference both fire.
+    let wire = format!("{WIRE_FIXTURE}const CTRL_SUBMIT: u8 = 2;\n");
+    let files = [
+        src("rust/src/glb/wire.rs", &wire),
+        src("rust/tests/properties.rs", &props_fixture("")),
+    ];
+    let findings = lint_sources(&files);
+    assert!(
+        findings.iter().any(|f| f.message.contains("CTRL_VARIANTS")),
+        "variant-count pin must fire:\n{}",
+        render(&findings)
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("Ctrl::Submit")),
+        "generator reference must fire:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn duplicate_and_sparse_tags_are_findings() {
+    let wire = "
+const CTRL_REGISTER: u8 = 0;
+const CTRL_GO: u8 = 0;
+const CTRL_LATE: u8 = 7;
+";
+    let files = [
+        src("rust/src/glb/wire.rs", wire),
+        src(
+            "rust/tests/properties.rs",
+            "const CTRL_VARIANTS: usize = 3;\n\
+             fn g() { (Ctrl::Register, Ctrl::Go, Ctrl::Late); }\n",
+        ),
+    ];
+    let findings = lint_sources(&files);
+    assert!(
+        findings.iter().any(|f| f.message.contains("reuses wire value")),
+        "duplicate must fire:\n{}",
+        render(&findings)
+    );
+    assert!(
+        findings.iter().any(|f| f.message.contains("not dense")),
+        "density must fire:\n{}",
+        render(&findings)
+    );
+}
+
+// ---------------------------------------------------------------------
+// rule family 2: unsafe audit
+// ---------------------------------------------------------------------
+
+#[test]
+fn unsafe_without_safety_comment_is_one_finding() {
+    let files = [src(
+        "rust/src/place/fixture.rs",
+        "fn open() -> i32 {\n    unsafe { raw_open() }\n}\n",
+    )];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::UnsafeSafety);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn unsafe_with_safety_comment_lints_clean() {
+    let files = [src(
+        "rust/src/place/fixture.rs",
+        "fn open() -> i32 {\n    // SAFETY: raw_open takes no pointers.\n    unsafe { raw_open() }\n}\n",
+    )];
+    assert!(lint_sources(&files).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// rule family 3: atomic-ordering allowlist
+// ---------------------------------------------------------------------
+
+#[test]
+fn disallowed_relaxed_is_one_finding() {
+    let files = [src(
+        "rust/src/place/fixture.rs",
+        "fn f(flag: &AtomicBool) {\n    flag.store(true, Ordering::Relaxed);\n}\n",
+    )];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::AtomicOrdering);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn allowlisted_relaxed_symbol_lints_clean() {
+    // spurious_wakeups in place/network.rs is a declared counter site,
+    // even when the call spans lines (statement-span matching).
+    let files = [src(
+        "rust/src/place/network.rs",
+        "fn f() {\n    spurious_wakeups.fetch_add(\n        1,\n        Ordering::Relaxed,\n    );\n}\n",
+    )];
+    assert!(lint_sources(&files).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// rule family 4: hot-path panic lint
+// ---------------------------------------------------------------------
+
+/// A reactor fixture defining every declared hot fn; `flush` carries
+/// the seeded violation.
+const REACTOR_FIXTURE: &str = "
+impl Backend {
+    fn wait(&self) {}
+    fn push(&self) {}
+    fn flush(&self) {
+        self.inner.lock().unwrap();
+    }
+    fn wake(&self) {}
+    fn drain(&self) {}
+}
+fn setup_only() {
+    spawn().expect(\"one-time setup may panic\");
+}
+#[cfg(test)]
+mod tests {
+    fn helper() {
+        q.flush().unwrap();
+    }
+}
+";
+
+#[test]
+fn unwrap_in_hot_region_is_one_finding() {
+    let files = [src("rust/src/place/reactor.rs", REACTOR_FIXTURE)];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::HotPathPanic);
+    assert!(findings[0].message.contains("fn flush"));
+    assert_eq!(findings[0].line, 6);
+}
+
+#[test]
+fn renamed_hot_fn_is_itself_a_finding() {
+    // Dropping a declared fn (say `wake`) must not silently shrink the
+    // lint's coverage.
+    let fixture = REACTOR_FIXTURE.replace("fn wake", "fn wake_renamed").replace(
+        "self.inner.lock().unwrap();",
+        "let _ = self.inner.lock();",
+    );
+    let files = [src("rust/src/place/reactor.rs", &fixture)];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert!(findings[0].message.contains("fn wake"));
+}
+
+// ---------------------------------------------------------------------
+// the self-policing gate + CLI surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn repo_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = lint_tree(root).expect("lint walks the repo tree");
+    assert!(
+        findings.is_empty(),
+        "the source tree must satisfy its own invariants:\n{}",
+        render(&findings)
+    );
+}
+
+#[test]
+fn render_reports_counts_per_rule() {
+    let files = [src(
+        "rust/src/place/fixture.rs",
+        "fn f(flag: &AtomicBool) {\n    flag.store(true, Ordering::Relaxed);\n    unsafe { raw() };\n}\n",
+    )];
+    let findings = lint_sources(&files);
+    let text = render(&findings);
+    assert!(text.contains("2 finding(s)"), "summary line: {text}");
+    assert!(text.contains("unsafe-safety") && text.contains("atomic-ordering"));
+    assert!(render(&[]).contains("clean"));
+}
+
+#[test]
+fn lint_cli_exits_nonzero_on_violations_and_zero_on_the_tree() {
+    let bin = env!("CARGO_BIN_EXE_glb");
+    let root = env!("CARGO_MANIFEST_DIR");
+
+    let ok = std::process::Command::new(bin)
+        .args(["lint", "--root", root])
+        .output()
+        .expect("run glb lint");
+    assert!(
+        ok.status.success(),
+        "glb lint must exit zero on the repo tree:\n{}",
+        String::from_utf8_lossy(&ok.stdout)
+    );
+    assert!(String::from_utf8_lossy(&ok.stdout).contains("clean"));
+
+    // A tree with a seeded violation: nonzero exit, finding on stdout.
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("glb-lint-fixture");
+    let src_dir = dir.join("rust/src");
+    std::fs::create_dir_all(&src_dir).expect("mk fixture tree");
+    std::fs::write(src_dir.join("bad.rs"), "fn f() { unsafe { raw() } }\n")
+        .expect("write fixture");
+    let bad = std::process::Command::new(bin)
+        .args(["lint", "--root", dir.to_str().expect("utf8 temp path")])
+        .output()
+        .expect("run glb lint");
+    assert!(!bad.status.success(), "seeded violation must fail the lint");
+    assert!(String::from_utf8_lossy(&bad.stdout).contains("unsafe-safety"));
+    std::fs::remove_dir_all(&dir).ok();
+}
