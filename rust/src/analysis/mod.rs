@@ -3,7 +3,7 @@
 //! The GLB runtime hides its hardest invariants inside hand-rolled
 //! code: the wire codec's tag registry, the reactor's raw epoll
 //! syscalls, the credit-termination atomics. Convention is not an
-//! enforcement mechanism, so this module machine-checks four rule
+//! enforcement mechanism, so this module machine-checks five rule
 //! families over the source tree (dependency-free — a small scanner in
 //! [`scanner`], rules + allowlists in [`rules`], rendering in
 //! [`report`]):
@@ -15,13 +15,17 @@
 //!    families (round-trip, split-point truncation, hostile bytes,
 //!    pooled bit-identity) exist and sweep the registry. Adding a tag
 //!    without all four fails the build.
-//! 2. **unsafe-safety** — every `unsafe` region carries a
+//! 2. **wire-doc** — the normative protocol spec
+//!    `docs/wire-protocol.md` names every `TAG_`/`CTRL_` constant in
+//!    the registry, and names no tag that the registry lacks. Code and
+//!    spec cannot drift apart silently in either direction.
+//! 3. **unsafe-safety** — every `unsafe` region carries a
 //!    `// SAFETY:` justification ( `unsafe_op_in_unsafe_fn` is denied
 //!    at the crate root on top).
-//! 3. **atomic-ordering** — `Ordering::Relaxed` only at allowlisted
+//! 4. **atomic-ordering** — `Ordering::Relaxed` only at allowlisted
 //!    gauge/counter statements, each with a recorded rationale
 //!    ([`rules::RELAXED_ALLOWLIST`]).
-//! 4. **hot-path-panic** — no `unwrap()`/`expect()` in the declared
+//! 5. **hot-path-panic** — no `unwrap()`/`expect()` in the declared
 //!    reactor event-loop and steady-state socket paths
 //!    ([`rules::HOT_REGIONS`]); test code is exempt.
 //!
@@ -51,14 +55,24 @@ pub struct SourceFile {
 /// Lint an explicit set of sources. Paths containing `tests/` are
 /// exempt from the unsafe/ordering/panic rules (they feed the
 /// wire-registry cross-reference instead); everything else gets all
-/// four families. Findings come back sorted by (path, line).
+/// five families. Findings come back sorted by (path, line).
+///
+/// Markdown files (`.md`) are not Rust: they bypass the scanner (whose
+/// comment/string blanking would mangle prose) and feed only the
+/// wire-doc cross-check as raw text.
 pub fn lint_sources(files: &[SourceFile]) -> Vec<Finding> {
-    let sources: Vec<Source> = files
-        .iter()
-        .map(|f| Source::new(f.path.clone(), f.text.clone()))
-        .collect();
+    let mut docs: Vec<(String, String)> = Vec::new();
+    let mut sources: Vec<Source> = Vec::new();
+    for f in files {
+        if f.path.ends_with(".md") {
+            docs.push((f.path.clone(), f.text.clone()));
+        } else {
+            sources.push(Source::new(f.path.clone(), f.text.clone()));
+        }
+    }
     let mut out = Vec::new();
     rules::check_wire_registry(&sources, &mut out);
+    rules::check_wire_doc(&sources, &docs, &mut out);
     for src in &sources {
         if src.path.contains("tests/") {
             continue;
@@ -72,8 +86,10 @@ pub fn lint_sources(files: &[SourceFile]) -> Vec<Finding> {
 }
 
 /// Lint the repo tree rooted at `root` (the directory holding
-/// `rust/src`): every `.rs` under `rust/src` plus the wire property
-/// suite `rust/tests/properties.rs`.
+/// `rust/src`): every `.rs` under `rust/src`, the wire property suite
+/// `rust/tests/properties.rs`, and the protocol spec
+/// `docs/wire-protocol.md` (whose absence is itself a wire-doc finding
+/// whenever the tree has a wire registry to document).
 pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
     let src_dir = root.join("rust/src");
     if !src_dir.is_dir() {
@@ -88,11 +104,14 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
     if props.is_file() {
         paths.push(props);
     }
+    let doc = root.join("docs/wire-protocol.md");
+    if doc.is_file() {
+        paths.push(doc.clone());
+    }
     paths.sort();
     let mut files = Vec::with_capacity(paths.len());
     for p in paths {
-        let text =
-            fs::read_to_string(&p).with_context(|| format!("read {}", p.display()))?;
+        let text = fs::read_to_string(&p).with_context(|| format!("read {}", p.display()))?;
         let rel = p
             .strip_prefix(root)
             .unwrap_or(&p)
@@ -100,7 +119,19 @@ pub fn lint_tree(root: &Path) -> Result<Vec<Finding>> {
             .replace('\\', "/");
         files.push(SourceFile { path: rel, text });
     }
-    Ok(lint_sources(&files))
+    let mut findings = lint_sources(&files);
+    if !doc.is_file() && src_dir.join("glb/wire.rs").is_file() {
+        findings.push(Finding {
+            rule: Rule::WireDoc,
+            path: "docs/wire-protocol.md".to_string(),
+            line: 1,
+            message: "missing protocol spec: every wire tag in rust/src/glb/wire.rs \
+                      must be documented in docs/wire-protocol.md"
+                .to_string(),
+        });
+        findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    }
+    Ok(findings)
 }
 
 fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {

@@ -8,13 +8,16 @@
 
 use std::fmt;
 
-/// The four invariant families `glb lint` enforces. See
+/// The five invariant families `glb lint` enforces. See
 /// [`crate::analysis`] for what each one protects.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Rule {
     /// Wire-tag registry: `Msg`/`Ctrl` tags unique + dense, every
     /// variant exercised by all four wire property families.
     WireRegistry,
+    /// Every wire tag in the registry is documented in
+    /// `docs/wire-protocol.md`, and the doc names no stale tags.
+    WireDoc,
     /// Every `unsafe` region carries a `// SAFETY:` justification.
     UnsafeSafety,
     /// `Ordering::Relaxed` only at allowlisted gauge/counter sites.
@@ -27,14 +30,16 @@ impl Rule {
     pub fn name(self) -> &'static str {
         match self {
             Rule::WireRegistry => "wire-registry",
+            Rule::WireDoc => "wire-doc",
             Rule::UnsafeSafety => "unsafe-safety",
             Rule::AtomicOrdering => "atomic-ordering",
             Rule::HotPathPanic => "hot-path-panic",
         }
     }
 
-    pub const ALL: [Rule; 4] = [
+    pub const ALL: [Rule; 5] = [
         Rule::WireRegistry,
+        Rule::WireDoc,
         Rule::UnsafeSafety,
         Rule::AtomicOrdering,
         Rule::HotPathPanic,
@@ -74,7 +79,7 @@ pub fn render(findings: &[Finding]) -> String {
         out.push('\n');
     }
     if findings.is_empty() {
-        out.push_str("glb lint: clean (4 rule families, 0 findings)\n");
+        out.push_str("glb lint: clean (5 rule families, 0 findings)\n");
     } else {
         let mut counts = String::new();
         for rule in Rule::ALL {

@@ -1,4 +1,4 @@
-//! The four invariant rule families behind `glb lint`.
+//! The five invariant rule families behind `glb lint`.
 //!
 //! Each rule is a function from scanned sources to findings. The
 //! allowlists live here too, next to the code they police, so loosening
@@ -41,6 +41,13 @@ pub const RELAXED_ALLOWLIST: &[RelaxedAllow] = &[
         symbol: "MISROUTED_FRAMES",
         rationale: "protocol-violation counter asserted after threads join (join is the \
                     synchronization edge)",
+    },
+    RelaxedAllow {
+        path: "place/socket.rs",
+        symbol: "CROSS_EPOCH_FRAMES",
+        rationale: "cross-epoch audit counter: the fence barrier makes stale frames \
+                    structurally unreachable, so this only tallies would-be leaks for \
+                    tests that assert zero after threads join",
     },
     RelaxedAllow {
         path: "place/socket.rs",
@@ -443,6 +450,87 @@ pub fn check_hot_path_panics(sources: &[Source], out: &mut Vec<Finding>) {
             }
         }
     }
+}
+
+/// Rule 2 — wire-protocol doc cross-check. The normative spec in
+/// `docs/wire-protocol.md` must name every `TAG_`/`CTRL_` constant in
+/// `glb/wire.rs` (a tag the doc lacks means the spec drifted behind
+/// the code), and every tag-shaped token in the doc must exist in the
+/// registry (a tag the code lacks means the spec describes frames the
+/// runtime cannot produce). Inert when either file is absent from the
+/// lint set — [`super::lint_tree`] turns a missing doc into a finding
+/// itself, so fixture runs for other rules stay clean.
+pub fn check_wire_doc(sources: &[Source], docs: &[(String, String)], out: &mut Vec<Finding>) {
+    let Some(wire) = sources.iter().find(|s| s.path.ends_with("glb/wire.rs")) else {
+        return;
+    };
+    let Some((doc_path, doc_text)) = docs.iter().find(|(p, _)| p.ends_with("wire-protocol.md"))
+    else {
+        return;
+    };
+    let mut tags = parse_tags(wire, "TAG_");
+    tags.extend(parse_tags(wire, "CTRL_"));
+    for tag in &tags {
+        if !doc_text.contains(&tag.name) {
+            out.push(Finding {
+                rule: Rule::WireDoc,
+                path: wire.path.clone(),
+                line: tag.line,
+                message: format!(
+                    "wire tag {} is not documented in {doc_path}; the protocol spec \
+                     has drifted behind the registry",
+                    tag.name
+                ),
+            });
+        }
+    }
+    let known: Vec<&str> = tags.iter().map(|t| t.name.as_str()).collect();
+    for (idx, line) in doc_text.lines().enumerate() {
+        for token in tag_tokens(line) {
+            // CTRL_VARIANTS is the property-suite pin, not a tag; the
+            // doc is allowed (encouraged) to explain it.
+            if token == "CTRL_VARIANTS" || known.contains(&token) {
+                continue;
+            }
+            out.push(Finding {
+                rule: Rule::WireDoc,
+                path: doc_path.clone(),
+                line: idx + 1,
+                message: format!(
+                    "{token} is documented but not declared in glb/wire.rs; remove \
+                     or rename the stale spec entry"
+                ),
+            });
+        }
+    }
+}
+
+/// Tag-shaped tokens in one doc line: maximal identifier runs that
+/// start with `TAG_` or `CTRL_` and use only the registry's
+/// SCREAMING_SNAKE alphabet.
+fn tag_tokens(line: &str) -> Vec<&str> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_' {
+            let start = i;
+            while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                i += 1;
+            }
+            let word = &line[start..i];
+            if (word.starts_with("TAG_") || word.starts_with("CTRL_"))
+                && word
+                    .bytes()
+                    .all(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_')
+            {
+                out.push(word);
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
 }
 
 /// A `const <PREFIX><NAME>: u8 = <value>;` wire-tag declaration.

@@ -4,11 +4,16 @@
 //! ```text
 //! glb uts      --places 8 --depth 10 [--threads|--sim --arch bgq] [--log]
 //! glb bc       --places 8 --scale 10 [--engine sparse|dense] [--log]
-//! glb fib      --n 30 --places 4
-//! glb nqueens  --n 10 --places 4
+//! glb fib      --fib-n 30 --places 4
+//! glb nqueens  --board 10 --places 4
 //! glb fig      --id 2..=10 [--csv] [--places 1,2,4,...]
-//! glb calibrate
+//! glb launch   --np 4 uts --depth 10 [--report fleet.json]
+//! glb serve    --rank R --peers N [--port 7117]
+//! glb submit   uts --depth 8 [--repeat 100] [--shutdown]
+//! glb bench | calibrate | smoke | lint
 //! ```
+//!
+//! See [`USAGE`] for the full option reference (also `glb --help`).
 
 use std::collections::HashMap;
 
@@ -239,6 +244,23 @@ COMMANDS
                --port P --timeout SECS --report OUT.json
              everything else passes through to the app; --rank/--peers/
              --host/--bind/--advertise are derived per rank
+  serve      boot this rank of a *resident* fleet: the mesh stays up and
+             processes streamed jobs until a client shuts it down
+               glb serve --rank 0 --peers 4 &   # … ranks 1..3 likewise
+               glb launch --np 4 serve          # launcher derives the flags
+             options: --rank R --peers N --port P --host H --bind A
+                      --advertise IP  (same meanings as --transport tcp);
+             rank 0 prints one GLB-SERVE-REPORT line per job (aggregated
+             into glb-serve-fleet/v1 by `glb launch --report`)
+  submit     ship jobs to a resident fleet and print each result:
+               glb submit uts --depth 10            # one job
+               glb submit bc --scale 9 --repeat 50  # 50 back-to-back jobs
+               glb submit fib --fib-n 24 --shutdown # run, then retire fleet
+               glb submit --shutdown                # just retire the fleet
+             options: --host H --port P --timeout SECS --repeat K
+                      --shutdown, app knobs (--depth --b0 --seed-tree |
+                      --scale | --fib-n) and GLB knobs (--n --w --l --z
+                      --seed)
   bench      run the pinned perf configs via the launcher and write
              BENCH_glb.json   [--repeats 3 --warmup 1 --np 2]
              [--baseline bench/baseline.json --band 0.30] (warn-only gate)

@@ -309,15 +309,30 @@ struct RootState {
 /// The credit root: tracks minted vs recovered atoms and fires the
 /// quiescence hook exactly once when they meet (see module docs for why
 /// equality is exact and never early).
+///
+/// A root is bound to one *job epoch*: a resident fleet (`glb serve`)
+/// builds a fresh root per submitted job, so atoms minted for one job
+/// can never balance another job's books. One-shot runs use epoch 0.
 #[derive(Default)]
 pub struct CreditRoot {
+    epoch: u64,
     state: Mutex<RootState>,
     on_quiescent: OnceLock<Box<dyn Fn() + Send + Sync>>,
 }
 
 impl CreditRoot {
     pub fn new() -> Arc<Self> {
-        Arc::new(Self::default())
+        Self::for_epoch(0)
+    }
+
+    /// A fresh root for the given job epoch (see type docs).
+    pub fn for_epoch(epoch: u64) -> Arc<Self> {
+        Arc::new(Self { epoch, ..Self::default() })
+    }
+
+    /// The job epoch this root's books belong to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Register the callback run (once, on whichever thread detects) when
@@ -527,6 +542,18 @@ mod tests {
         l.import_credit(attached);
         assert!(!l.decr());
         assert!(!l.decr());
+        assert!(root.quiescent());
+    }
+
+    #[test]
+    fn credit_roots_are_bound_to_their_job_epoch() {
+        assert_eq!(CreditRoot::new().epoch(), 0, "one-shot runs are epoch 0");
+        let root = CreditRoot::for_epoch(7);
+        assert_eq!(root.epoch(), 7);
+        // Epoch changes nothing about the books themselves.
+        root.grant(3);
+        root.arm();
+        root.deposit(3);
         assert!(root.quiescent());
     }
 

@@ -25,10 +25,16 @@
 //! transport actually puts on the wire.
 //!
 //! The socket runtime wraps message bodies in a *data frame* that leads
-//! with the destination place ([`DATA_ROUTE_BYTES`]) — mesh links are
-//! per-rank, and a rank may host several places. Its control plane
-//! (bootstrap, credit deposits/replenishes, result gathering) speaks
-//! [`Ctrl`] frames over the rank-0 control link.
+//! with the destination place ([`DATA_ROUTE_BYTES`]) and the job epoch
+//! ([`DATA_JOB_BYTES`]) — mesh links are per-rank, a rank may host
+//! several places, and a resident fleet (`glb serve`) runs a stream of
+//! jobs over the same links, so every mesh frame names the job it
+//! belongs to. A route word of [`FENCE_ROUTE`] marks a *fence*: the
+//! sender promises no further frames for that job, which is how a
+//! per-job reactor knows the link is drained without closing it. The
+//! control plane (bootstrap, job submission, credit
+//! deposits/replenishes, result gathering) speaks [`Ctrl`] frames over
+//! the rank-0 control link.
 //!
 //! Decoding is total: truncated or malformed input returns a
 //! [`WireError`], never panics and never allocates proportionally to a
@@ -52,6 +58,14 @@ pub const BAG_LEN_BYTES: usize = 4;
 /// Destination-place prefix of a mesh data frame (a rank can host
 /// several places, so frames are addressed per *place*).
 pub const DATA_ROUTE_BYTES: usize = 8;
+/// Job-epoch word of a mesh data frame, after the route. One-shot runs
+/// are job `0`; a resident fleet stamps every frame with the current
+/// job so back-to-back jobs can never cross-steal or cross-credit.
+pub const DATA_JOB_BYTES: usize = 8;
+/// Route sentinel of a *fence* frame: not a place, but the sender's
+/// promise that no more frames for the named job will follow on this
+/// link. The body is exactly the route word plus the job word.
+pub const FENCE_ROUTE: u64 = u64::MAX;
 /// Upper bound accepted by [`read_frame`] (a corrupt length field must
 /// not trigger a giant allocation).
 pub const MAX_FRAME_BYTES: usize = 1 << 28;
@@ -319,21 +333,46 @@ pub fn decode_msg_body<B: WireCodec>(buf: &[u8]) -> Result<Msg<B>, WireError> {
     }
 }
 
-/// Encode a mesh data-frame body: destination place + message body.
-pub fn encode_data_frame_body<B: WireCodec>(to: PlaceId, msg: &Msg<B>) -> Vec<u8> {
-    let mut body = Vec::with_capacity(DATA_ROUTE_BYTES + MSG_FIXED_BYTES);
+/// Encode a mesh data-frame body: destination place + job epoch +
+/// message body.
+pub fn encode_data_frame_body<B: WireCodec>(to: PlaceId, job: u64, msg: &Msg<B>) -> Vec<u8> {
+    let mut body = Vec::with_capacity(DATA_ROUTE_BYTES + DATA_JOB_BYTES + MSG_FIXED_BYTES);
     put_u64(&mut body, to as u64);
+    put_u64(&mut body, job);
     encode_msg_body(msg, &mut body);
     body
 }
 
-/// Decode a mesh data-frame body into `(destination place, message)`.
-pub fn decode_data_frame_body<B: WireCodec>(buf: &[u8]) -> Result<(PlaceId, Msg<B>), WireError> {
+/// Decode a mesh data-frame body into `(destination place, job, message)`.
+/// The route word must not be the fence sentinel (fences carry no
+/// message — check [`fence_job`] first).
+pub fn decode_data_frame_body<B: WireCodec>(
+    buf: &[u8],
+) -> Result<(PlaceId, u64, Msg<B>), WireError> {
     let mut r = Reader::new(buf);
-    let to = r.u64()? as PlaceId;
+    let route = r.u64()?;
+    if route == FENCE_ROUTE {
+        return Err(WireError::Invalid("fence frame where a message was expected"));
+    }
+    let job = r.u64()?;
     let rest = r.remaining();
     let msg = decode_msg_body(r.bytes(rest)?)?;
-    Ok((to, msg))
+    Ok((route as PlaceId, job, msg))
+}
+
+/// If `body` is a fence frame, its job epoch. Fences are exactly the
+/// [`FENCE_ROUTE`] route word plus the job word — anything else under a
+/// fence route is a corrupt peer, reported as an error.
+pub fn fence_job(body: &[u8]) -> Result<Option<u64>, WireError> {
+    let mut r = Reader::new(body);
+    if r.u64()? != FENCE_ROUTE {
+        return Ok(None);
+    }
+    let job = r.u64()?;
+    match r.remaining() {
+        0 => Ok(Some(job)),
+        n => Err(WireError::Trailing(n)),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -353,6 +392,9 @@ const CTRL_LEAVE: u8 = 9;
 const CTRL_ACK: u8 = 10;
 const CTRL_RECONCILE: u8 = 11;
 const CTRL_STATS: u8 = 12;
+const CTRL_SUBMIT: u8 = 13;
+const CTRL_JOB_RESULT: u8 = 14;
+const CTRL_SHUTDOWN: u8 = 15;
 
 /// Fleet control-plane messages, exchanged as length-prefixed frames on
 /// each rank's control link to rank 0. Rank 0 is bootstrap + credit root
@@ -374,14 +416,17 @@ pub enum Ctrl {
     /// root → rank: the whole fleet is ready; start the steal protocol.
     Go,
     /// rank → root: this rank went idle; here is its whole credit pool.
-    Deposit { atoms: u64 },
-    /// rank → root: credit pool exhausted; mint `want` fresh atoms.
-    Replenish { want: u64 },
+    /// `job` names the epoch the atoms belong to (0 for one-shot runs),
+    /// so a resident fleet's credit books never mix jobs.
+    Deposit { job: u64, atoms: u64 },
+    /// rank → root: credit pool exhausted; mint `want` fresh atoms for
+    /// job `job`.
+    Replenish { job: u64, want: u64 },
     /// root → rank: the freshly minted atoms (reply to `Replenish`).
-    Grant { atoms: u64 },
-    /// rank → root: the rank's encoded local result, for the fleet-wide
-    /// reduction at rank 0.
-    Result { bytes: Vec<u8> },
+    Grant { job: u64, atoms: u64 },
+    /// rank → root: the rank's encoded local result for job `job`, for
+    /// the fleet-wide reduction at rank 0.
+    Result { job: u64, bytes: Vec<u8> },
     /// rank → root: a (re)joining rank announces its mesh address under
     /// the membership epoch it last saw. Carried by the dynamic
     /// membership provider; the socket runtime does not accept joins
@@ -408,6 +453,20 @@ pub enum Ctrl {
     /// advisory — losing one skews nothing, since every field is a
     /// cumulative counter or an instantaneous level.
     Stats(StatsSnapshot),
+    /// submitter → root, then root → ranks: run job `job`. `spec` is
+    /// the job's `key=value` description (see
+    /// [`crate::place::service::JobSpec`]) and `bag` the serialized
+    /// root task bag, decoded and merged into place 0's queue (empty
+    /// when every rank derives its own share from the spec, as BC
+    /// does).
+    Submit { job: u64, spec: String, bag: Vec<u8> },
+    /// root → submitter: job `job` finished; `bytes` is the encoded
+    /// fleet-wide reduced result.
+    JobResult { job: u64, bytes: Vec<u8> },
+    /// submitter → root, then root → ranks: drain and exit. The resident
+    /// fleet finishes in-flight work, then every rank tears down
+    /// cleanly.
+    Shutdown,
 }
 
 fn put_str(out: &mut Vec<u8>, s: &str) {
@@ -443,20 +502,24 @@ impl Ctrl {
                 put_u64(out, *rank);
             }
             Ctrl::Go => put_u8(out, CTRL_GO),
-            Ctrl::Deposit { atoms } => {
+            Ctrl::Deposit { job, atoms } => {
                 put_u8(out, CTRL_DEPOSIT);
+                put_u64(out, *job);
                 put_u64(out, *atoms);
             }
-            Ctrl::Replenish { want } => {
+            Ctrl::Replenish { job, want } => {
                 put_u8(out, CTRL_REPLENISH);
+                put_u64(out, *job);
                 put_u64(out, *want);
             }
-            Ctrl::Grant { atoms } => {
+            Ctrl::Grant { job, atoms } => {
                 put_u8(out, CTRL_GRANT);
+                put_u64(out, *job);
                 put_u64(out, *atoms);
             }
-            Ctrl::Result { bytes } => {
+            Ctrl::Result { job, bytes } => {
                 put_u8(out, CTRL_RESULT);
+                put_u64(out, *job);
                 put_u32(out, bytes.len() as u32);
                 out.extend_from_slice(bytes);
             }
@@ -488,6 +551,20 @@ impl Ctrl {
                 put_u64(out, *sent);
                 put_u64(out, *received);
             }
+            Ctrl::Submit { job, spec, bag } => {
+                put_u8(out, CTRL_SUBMIT);
+                put_u64(out, *job);
+                put_str(out, spec);
+                put_u32(out, bag.len() as u32);
+                out.extend_from_slice(bag);
+            }
+            Ctrl::JobResult { job, bytes } => {
+                put_u8(out, CTRL_JOB_RESULT);
+                put_u64(out, *job);
+                put_u32(out, bytes.len() as u32);
+                out.extend_from_slice(bytes);
+            }
+            Ctrl::Shutdown => put_u8(out, CTRL_SHUTDOWN),
             Ctrl::Stats(s) => {
                 put_u8(out, CTRL_STATS);
                 put_u64(out, s.rank);
@@ -535,12 +612,13 @@ impl Ctrl {
             }
             CTRL_READY => Ctrl::Ready { rank: r.u64()? },
             CTRL_GO => Ctrl::Go,
-            CTRL_DEPOSIT => Ctrl::Deposit { atoms: r.u64()? },
-            CTRL_REPLENISH => Ctrl::Replenish { want: r.u64()? },
-            CTRL_GRANT => Ctrl::Grant { atoms: r.u64()? },
+            CTRL_DEPOSIT => Ctrl::Deposit { job: r.u64()?, atoms: r.u64()? },
+            CTRL_REPLENISH => Ctrl::Replenish { job: r.u64()?, want: r.u64()? },
+            CTRL_GRANT => Ctrl::Grant { job: r.u64()?, atoms: r.u64()? },
             CTRL_RESULT => {
+                let job = r.u64()?;
                 let len = r.u32()? as usize;
-                Ctrl::Result { bytes: r.bytes(len)?.to_vec() }
+                Ctrl::Result { job, bytes: r.bytes(len)?.to_vec() }
             }
             CTRL_JOIN => {
                 Ctrl::Join { epoch: r.u64()?, rank: r.u64()?, addr: get_str(&mut r)? }
@@ -560,6 +638,18 @@ impl Ctrl {
             CTRL_RECONCILE => {
                 Ctrl::Reconcile { rank: r.u64()?, sent: r.u64()?, received: r.u64()? }
             }
+            CTRL_SUBMIT => {
+                let job = r.u64()?;
+                let spec = get_str(&mut r)?;
+                let len = r.u32()? as usize;
+                Ctrl::Submit { job, spec, bag: r.bytes(len)?.to_vec() }
+            }
+            CTRL_JOB_RESULT => {
+                let job = r.u64()?;
+                let len = r.u32()? as usize;
+                Ctrl::JobResult { job, bytes: r.bytes(len)?.to_vec() }
+            }
+            CTRL_SHUTDOWN => Ctrl::Shutdown,
             CTRL_STATS => Ctrl::Stats(StatsSnapshot {
                 rank: r.u64()?,
                 seq: r.u64()?,
@@ -614,14 +704,29 @@ pub fn end_frame(out: &mut Vec<u8>, at: usize) -> usize {
     body_len
 }
 
-/// Encode a complete mesh data frame (length prefix + route + message
-/// body) into `out`, appending. Returns the frame's *body* length (what
-/// the length prefix says), so callers can enforce [`MAX_FRAME_BYTES`]
-/// sender-side like [`write_frame`] does.
-pub fn encode_data_frame_into<B: WireCodec>(to: PlaceId, msg: &Msg<B>, out: &mut Vec<u8>) -> usize {
+/// Encode a complete mesh data frame (length prefix + route + job +
+/// message body) into `out`, appending. Returns the frame's *body*
+/// length (what the length prefix says), so callers can enforce
+/// [`MAX_FRAME_BYTES`] sender-side like [`write_frame`] does.
+pub fn encode_data_frame_into<B: WireCodec>(
+    to: PlaceId,
+    job: u64,
+    msg: &Msg<B>,
+    out: &mut Vec<u8>,
+) -> usize {
     let at = begin_frame(out);
     put_u64(out, to as u64);
+    put_u64(out, job);
     encode_msg_body(msg, out);
+    end_frame(out, at)
+}
+
+/// Encode a complete fence frame (length prefix + [`FENCE_ROUTE`] + job
+/// word) into `out`, appending. Returns the frame's body length.
+pub fn encode_fence_frame_into(job: u64, out: &mut Vec<u8>) -> usize {
+    let at = begin_frame(out);
+    put_u64(out, FENCE_ROUTE);
+    put_u64(out, job);
     end_frame(out, at)
 }
 
@@ -1009,15 +1114,36 @@ mod tests {
             nonce: Some(3),
             credit: 7,
         };
-        let body = encode_data_frame_body(11, &msg);
-        assert_eq!(body.len(), DATA_ROUTE_BYTES + MSG_FIXED_BYTES + BAG_LEN_BYTES + 16);
-        let (to, back) = decode_data_frame_body::<Bag>(&body).expect("decode");
-        assert_eq!(to, 11);
+        let body = encode_data_frame_body(11, 42, &msg);
+        assert_eq!(
+            body.len(),
+            DATA_ROUTE_BYTES + DATA_JOB_BYTES + MSG_FIXED_BYTES + BAG_LEN_BYTES + 16
+        );
+        assert_eq!(fence_job(&body), Ok(None), "a routed frame is not a fence");
+        let (to, job, back) = decode_data_frame_body::<Bag>(&body).expect("decode");
+        assert_eq!((to, job), (11, 42));
         assert_eq!(back, msg);
         // Truncation safety: every strict prefix errors.
         for cut in 0..body.len() {
             assert!(decode_data_frame_body::<Bag>(&body[..cut]).is_err(), "cut at {cut}");
         }
+    }
+
+    #[test]
+    fn fence_frames_roundtrip_and_reject_messages() {
+        let mut out = Vec::new();
+        let body_len = encode_fence_frame_into(7, &mut out);
+        assert_eq!(body_len, DATA_ROUTE_BYTES + DATA_JOB_BYTES);
+        let body = &out[FRAME_LEN_BYTES..];
+        assert_eq!(fence_job(body), Ok(Some(7)));
+        // A fence body is not a message: the data-frame decoder refuses
+        // it instead of conjuring a place out of the sentinel.
+        assert!(decode_data_frame_body::<Bag>(body).is_err());
+        // A fence with trailing bytes is a corrupt peer, not a fence.
+        let mut long = body.to_vec();
+        long.push(0);
+        assert!(fence_job(&long).is_err());
+        assert_eq!(fence_job(&[1]), Err(WireError::Truncated));
     }
 
     #[test]
@@ -1031,11 +1157,16 @@ mod tests {
             Ctrl::PeerMap { epoch: 3, addrs: vec!["127.0.0.1:7117".into(), String::new()] },
             Ctrl::Ready { rank: 2 },
             Ctrl::Go,
-            Ctrl::Deposit { atoms: u64::MAX },
-            Ctrl::Replenish { want: 1 << 20 },
-            Ctrl::Grant { atoms: 1 << 20 },
-            Ctrl::Result { bytes: vec![1, 2, 3, 0xFF] },
-            Ctrl::Result { bytes: Vec::new() },
+            Ctrl::Deposit { job: 0, atoms: u64::MAX },
+            Ctrl::Replenish { job: 3, want: 1 << 20 },
+            Ctrl::Grant { job: 3, atoms: 1 << 20 },
+            Ctrl::Result { job: 1, bytes: vec![1, 2, 3, 0xFF] },
+            Ctrl::Result { job: 0, bytes: Vec::new() },
+            Ctrl::Submit { job: 9, spec: "app=uts depth=8".into(), bag: vec![0xAA, 0, 1] },
+            Ctrl::Submit { job: 0, spec: String::new(), bag: Vec::new() },
+            Ctrl::JobResult { job: 9, bytes: vec![4, 5, 6] },
+            Ctrl::JobResult { job: u64::MAX, bytes: Vec::new() },
+            Ctrl::Shutdown,
             Ctrl::Join { epoch: 2, rank: 5, addr: "10.1.2.3:999".into() },
             Ctrl::Leave { epoch: 7, rank: 2 },
             Ctrl::Ack { rank: 1, result: vec![0xAB, 0xCD], acked: vec![(0, 3), (2, 17)] },
@@ -1056,10 +1187,12 @@ mod tests {
             Ctrl::Register { rank: 1, addr: "192.168.0.1:81".into() },
             Ctrl::PeerMap { epoch: 1, addrs: vec!["a:1".into(), "b:2".into()] },
             Ctrl::Ready { rank: 9 },
-            Ctrl::Deposit { atoms: 77 },
-            Ctrl::Replenish { want: 5 },
-            Ctrl::Grant { atoms: 5 },
-            Ctrl::Result { bytes: vec![9; 32] },
+            Ctrl::Deposit { job: 2, atoms: 77 },
+            Ctrl::Replenish { job: 2, want: 5 },
+            Ctrl::Grant { job: 2, atoms: 5 },
+            Ctrl::Result { job: 2, bytes: vec![9; 32] },
+            Ctrl::Submit { job: 4, spec: "app=fib n=30".into(), bag: vec![1, 2, 3] },
+            Ctrl::JobResult { job: 4, bytes: vec![8; 12] },
             Ctrl::Join { epoch: 4, rank: 6, addr: "c:3".into() },
             Ctrl::Leave { epoch: 5, rank: 1 },
             Ctrl::Ack { rank: 2, result: vec![7; 9], acked: vec![(1, 2), (3, 4)] },
@@ -1084,8 +1217,13 @@ mod tests {
         assert_eq!(Ctrl::decode(&lying_bool), Err(WireError::BadTag(2)));
         // A lying Result length cannot over-allocate: the byte slice is
         // bounds-checked before the copy.
-        let mut lying = Ctrl::Result { bytes: vec![1] }.to_body();
-        let len_at = 1;
+        let mut lying = Ctrl::Result { job: 0, bytes: vec![1] }.to_body();
+        let len_at = 1 + 8; // tag, job
+        lying[len_at..len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Ctrl::decode(&lying), Err(WireError::Truncated));
+        // Same for a lying Submit bag length (spec "x" is 1 byte).
+        let mut lying = Ctrl::Submit { job: 0, spec: "x".into(), bag: vec![1] }.to_body();
+        let len_at = 1 + 8 + 4 + 1; // tag, job, spec len, spec bytes
         lying[len_at..len_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert_eq!(Ctrl::decode(&lying), Err(WireError::Truncated));
     }
@@ -1151,9 +1289,9 @@ mod tests {
             Msg::<Bag>::Terminate,
         ];
         for msg in msgs {
-            let old = frame(encode_data_frame_body(5, &msg));
+            let old = frame(encode_data_frame_body(5, 13, &msg));
             let mut new = Vec::new();
-            let body_len = encode_data_frame_into(5, &msg, &mut new);
+            let body_len = encode_data_frame_into(5, 13, &msg, &mut new);
             assert_eq!(new, old, "{}", msg.kind());
             assert_eq!(body_len + FRAME_LEN_BYTES, old.len());
         }
@@ -1164,11 +1302,11 @@ mod tests {
         // Batched sends stack several frames in one buffer; each must
         // patch only its own length prefix.
         let mut buf = Vec::new();
-        encode_ctrl_frame_into(&Ctrl::Deposit { atoms: 3 }, &mut buf);
+        encode_ctrl_frame_into(&Ctrl::Deposit { job: 0, atoms: 3 }, &mut buf);
         let first = buf.clone();
-        encode_ctrl_frame_into(&Ctrl::Grant { atoms: 9 }, &mut buf);
+        encode_ctrl_frame_into(&Ctrl::Grant { job: 0, atoms: 9 }, &mut buf);
         assert_eq!(&buf[..first.len()], &first[..]);
-        assert_eq!(buf[first.len()..], frame(Ctrl::Grant { atoms: 9 }.to_body()));
+        assert_eq!(buf[first.len()..], frame(Ctrl::Grant { job: 0, atoms: 9 }.to_body()));
     }
 
     #[test]
@@ -1209,7 +1347,7 @@ mod tests {
     #[test]
     fn assembler_reassembles_frames_across_arbitrary_splits() {
         let bodies: Vec<Vec<u8>> = vec![
-            Ctrl::Deposit { atoms: 1 }.to_body(),
+            Ctrl::Deposit { job: 0, atoms: 1 }.to_body(),
             Ctrl::Register { rank: 2, addr: "10.0.0.9:1234".into() }.to_body(),
             Vec::new(), // zero-length body is a legal frame
             Ctrl::Ack { rank: 1, result: vec![1; 60], acked: vec![(0, 2)] }.to_body(),
@@ -1238,7 +1376,7 @@ mod tests {
 
     #[test]
     fn assembler_read_space_commit_path_matches_feed() {
-        let body = Ctrl::Replenish { want: 1 << 20 }.to_body();
+        let body = Ctrl::Replenish { job: 0, want: 1 << 20 }.to_body();
         let bytes = frame(body.clone());
         let mut asm = FrameAssembler::new(MAX_FRAME_BYTES);
         let mut sent = 0;

@@ -73,6 +73,7 @@ pub struct EngineOpts {
 fn is_marker_line(line: &str) -> bool {
     line.starts_with(report::RANK_REPORT_MARKER)
         || line.starts_with(report::LIVE_STATS_MARKER)
+        || line.starts_with(report::SERVE_REPORT_MARKER)
         || line.starts_with(crate::testkit::fleet::LOG_PREFIX)
 }
 
@@ -326,6 +327,23 @@ pub fn cmd_launch(rest: &[String]) -> Result<()> {
         },
     )?;
     let wall_time_s = t0.elapsed().as_secs_f64();
+    if spec.app() == "serve" {
+        // A resident fleet runs until a client retires it; its record is
+        // rank 0's per-job report lines, not one rank report at exit.
+        let jobs = report::extract_serve_reports(&runs[0].stdout)?;
+        let fleet =
+            report::aggregate_serve_fleet(plan.ranks, &spec.app_argv, jobs, wall_time_s);
+        if let Some(path) = &spec.report {
+            std::fs::write(path, fleet.render_pretty())
+                .with_context(|| format!("write serve report {}", path.display()))?;
+            println!("serve report -> {}", path.display());
+        }
+        println!(
+            "resident fleet retired after {wall_time_s:.3}s: {} job(s) served",
+            fleet.get("jobs_served").and_then(Value::as_u64).unwrap_or(0),
+        );
+        return Ok(());
+    }
     let dead: Vec<usize> = runs.iter().filter(|r| r.died).map(|r| r.rank).collect();
     if !dead.is_empty() {
         println!("fleet absorbed {} rank death(s): {dead:?}", dead.len());

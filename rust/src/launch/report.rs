@@ -23,12 +23,20 @@ pub const RANK_REPORT_MARKER: &str = "GLB-RANK-REPORT ";
 /// Marker prefix of rank 0's per-interval live-telemetry JSON lines
 /// (emitted by `--stats` runs; see `crate::place::socket`).
 pub const LIVE_STATS_MARKER: &str = "GLB-LIVE-STATS ";
+/// Marker prefix of a resident fleet's per-job JSON report lines
+/// (emitted by rank 0 of a `glb serve` fleet after every job; see
+/// `crate::place::service`).
+pub const SERVE_REPORT_MARKER: &str = "GLB-SERVE-REPORT ";
 /// Environment variable the launcher sets so ranks emit report lines.
 pub const RANK_REPORT_ENV: &str = "GLB_RANK_REPORT";
 
 pub const RANK_SCHEMA: &str = "glb-rank-report/v1";
 pub const FLEET_SCHEMA: &str = "glb-fleet-report/v1";
 pub const BENCH_SCHEMA: &str = "glb-bench/v1";
+/// One job's report line from a resident fleet's rank 0.
+pub const SERVE_JOB_SCHEMA: &str = "glb-serve-report/v1";
+/// The aggregated document a launched `glb serve` fleet leaves behind.
+pub const SERVE_FLEET_SCHEMA: &str = "glb-serve-fleet/v1";
 
 /// Whether this process was asked (by a launcher parent) to emit its
 /// rank report line.
@@ -221,6 +229,48 @@ pub fn attach_live_stats(fleet: &mut Value, series: Vec<Value>) {
     if let Value::Obj(pairs) = fleet {
         pairs.push(("live_stats".into(), Value::Arr(series)));
     }
+}
+
+/// Parse (and schema-check) every per-job serve-report marker line in a
+/// resident fleet's rank-0 stdout, in submission order. As with live
+/// stats, an unparsable marker is an error (the emitter is ours); a
+/// stream with no markers is a fleet that served no jobs.
+pub fn extract_serve_reports(stdout: &[String]) -> Result<Vec<Value>> {
+    stdout
+        .iter()
+        .filter_map(|l| l.strip_prefix(SERVE_REPORT_MARKER))
+        .map(|body| {
+            let v = Value::parse(body).map_err(|e| anyhow!("serve report line: {e}"))?;
+            match v.get("schema").and_then(Value::as_str) {
+                Some(SERVE_JOB_SCHEMA) => Ok(v),
+                other => bail!("serve report schema {other:?} (expected {SERVE_JOB_SCHEMA:?})"),
+            }
+        })
+        .collect()
+}
+
+/// Fold a retired resident fleet's per-job reports into one document:
+/// the serve analogue of [`aggregate_fleet`], keyed by jobs instead of
+/// ranks (`wall_time_s` spans boot to shutdown; `busy_ns` sums the
+/// per-job elapsed times, so `busy_ns / wall_time` is the fleet's duty
+/// cycle).
+pub fn aggregate_serve_fleet(
+    ranks: usize,
+    app_argv: &[String],
+    jobs: Vec<Value>,
+    wall_time_s: f64,
+) -> Value {
+    let busy_ns: i64 =
+        jobs.iter().filter_map(|j| j.get("elapsed_ns").and_then(Value::as_i64)).sum();
+    Value::obj(vec![
+        ("schema", Value::Str(SERVE_FLEET_SCHEMA.into())),
+        ("argv", Value::Arr(app_argv.iter().map(|a| Value::Str(a.clone())).collect())),
+        ("ranks", Value::Int(ranks as i64)),
+        ("jobs_served", Value::Int(jobs.len() as i64)),
+        ("wall_time_s", Value::Float(wall_time_s)),
+        ("busy_ns", Value::Int(busy_ns)),
+        ("jobs", Value::Arr(jobs)),
+    ])
 }
 
 /// Read and schema-check a fleet report written by `--report`.
@@ -543,6 +593,47 @@ mod tests {
         assert_eq!(extract_live_stats(&["plain".to_string()]).unwrap().len(), 0);
         // A corrupt marker line is a bug in the emitter, not noise.
         assert!(extract_live_stats(&[format!("{LIVE_STATS_MARKER}{{oops")]).is_err());
+    }
+
+    #[test]
+    fn serve_reports_extract_and_aggregate() {
+        let stdout = vec![
+            "glb serve: fleet of 4 rank(s) resident on port 7117".to_string(),
+            format!(
+                "{SERVE_REPORT_MARKER}{{\"schema\":\"glb-serve-report/v1\",\"job\":1,\
+                 \"spec\":\"app=fib fib-n=20\",\"ranks\":4,\"elapsed_ns\":1000,\
+                 \"result\":{{\"kind\":\"u64\",\"value\":6765}}}}"
+            ),
+            "job 1 ...".to_string(),
+            format!(
+                "{SERVE_REPORT_MARKER}{{\"schema\":\"glb-serve-report/v1\",\"job\":2,\
+                 \"spec\":\"app=bc scale=7\",\"ranks\":4,\"elapsed_ns\":2500,\
+                 \"result\":{{\"kind\":\"vec_f64\",\"len\":128,\"sum\":1.25e3}}}}"
+            ),
+        ];
+        let jobs = extract_serve_reports(&stdout).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("job").and_then(Value::as_u64), Some(1));
+        assert_eq!(
+            jobs[1].get("result").and_then(|r| r.get("sum")).and_then(Value::as_f64),
+            Some(1250.0),
+            "exponent floats must parse"
+        );
+        let fleet =
+            aggregate_serve_fleet(4, &["serve".to_string()], jobs, 9.5);
+        assert_eq!(fleet.get("schema").and_then(Value::as_str), Some(SERVE_FLEET_SCHEMA));
+        assert_eq!(fleet.get("jobs_served").and_then(Value::as_u64), Some(2));
+        assert_eq!(fleet.get("busy_ns").and_then(Value::as_u64), Some(3500));
+        assert_eq!(fleet.get("ranks").and_then(Value::as_u64), Some(4));
+        assert_eq!(Value::parse(&fleet.render_pretty()).unwrap(), fleet);
+        // No markers: a fleet that served nothing, not an error.
+        assert_eq!(extract_serve_reports(&["plain".to_string()]).unwrap().len(), 0);
+        // Corrupt or wrong-schema markers are bugs in the emitter.
+        assert!(extract_serve_reports(&[format!("{SERVE_REPORT_MARKER}{{oops")]).is_err());
+        assert!(extract_serve_reports(&[format!(
+            "{SERVE_REPORT_MARKER}{{\"schema\":\"nope\"}}"
+        )])
+        .is_err());
     }
 
     #[test]

@@ -29,8 +29,10 @@ const LAUNCHER_OPTS: &[&str] =
 /// error, not a silent override.
 const DERIVED_OPTS: &[&str] = &["rank", "peers", "host", "bind", "advertise"];
 
-/// Apps that speak the tcp fleet protocol (and emit rank reports).
-const FLEET_APPS: &[&str] = &["uts", "bc", "fib", "nqueens"];
+/// Apps that speak the tcp fleet protocol (and emit rank reports),
+/// plus `serve` — the resident fleet, which emits per-job serve
+/// reports instead of one rank report at exit.
+const FLEET_APPS: &[&str] = &["uts", "bc", "fib", "nqueens", "serve"];
 
 /// Where the ranks run.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -181,15 +183,30 @@ impl FleetSpec {
         }
 
         // A launched fleet is by definition tcp; fill the flag in when
-        // the user leaves it implicit, reject contradictions.
-        match option_value(&passthrough, "transport") {
-            None => {
-                passthrough.push("--transport".into());
-                passthrough.push("tcp".into());
+        // the user leaves it implicit, reject contradictions. `serve`
+        // is the exception: it is tcp by construction and takes no
+        // --transport flag at all.
+        let resident = app == "serve";
+        if resident {
+            if option_value(&passthrough, "transport").is_some() {
+                bail!("`glb serve` is always tcp; drop --transport");
             }
-            Some("tcp") => {}
-            Some(other) => {
-                bail!("`glb launch` runs --transport tcp fleets, not --transport {other}")
+            if tolerate_failures > 0 {
+                bail!("a resident `glb serve` fleet does not support --tolerate-failures yet");
+            }
+            if stats_interval_ms.is_some() {
+                bail!("a resident `glb serve` fleet does not support --stats yet");
+            }
+        } else {
+            match option_value(&passthrough, "transport") {
+                None => {
+                    passthrough.push("--transport".into());
+                    passthrough.push("tcp".into());
+                }
+                Some("tcp") => {}
+                Some(other) => {
+                    bail!("`glb launch` runs --transport tcp fleets, not --transport {other}")
+                }
             }
         }
 
@@ -203,6 +220,10 @@ impl FleetSpec {
                 }
                 p
             }
+            // A resident fleet's port is its service address — submit
+            // clients must be able to find it, so default it to the
+            // well-known port instead of an ephemeral one.
+            (Placement::Local { .. }, None) if resident => 7117,
             (Placement::Local { .. }, None) => 0, // ephemeral, picked at plan time
             (Placement::Hosts { .. }, None) => 7117,
         };
@@ -477,6 +498,30 @@ mod tests {
         // A zero interval is a user error, not a divide-by-zero later.
         let err = FleetSpec::parse(&s(&["--np", "2", "--stats=0", "uts"])).unwrap_err();
         assert!(format!("{err:#}").contains(">= 1"), "{err:#}");
+    }
+
+    #[test]
+    fn serve_fleets_are_resident_and_keep_a_fixed_port() {
+        let spec = FleetSpec::parse(&s(&["--np", "4", "serve"])).unwrap();
+        assert_eq!(spec.app(), "serve");
+        assert_eq!(spec.port, 7117, "submit clients need a well-known port");
+        // serve takes no --transport flag; none may be injected.
+        assert_eq!(option_value(&spec.app_argv, "transport"), None);
+        let r0 = spec.rank_argv(0, 4, 7117);
+        assert_eq!(option_value(&r0, "rank"), Some("0"));
+        assert_eq!(option_value(&r0, "peers"), Some("4"));
+        assert_eq!(option_value(&r0, "bind"), Some("0.0.0.0"));
+        // An explicit port still wins.
+        let spec = FleetSpec::parse(&s(&["--np", "2", "--port", "7300", "serve"])).unwrap();
+        assert_eq!(spec.port, 7300);
+        // Unsupported launcher knobs fail loudly instead of wedging ranks.
+        for argv in [
+            vec!["--np", "2", "--tolerate-failures", "1", "serve"],
+            vec!["--np", "2", "--stats", "serve"],
+            vec!["--np", "2", "serve", "--transport", "tcp"],
+        ] {
+            assert!(FleetSpec::parse(&s(&argv)).is_err(), "{argv:?}");
+        }
     }
 
     #[test]

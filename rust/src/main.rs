@@ -1,6 +1,7 @@
 //! The `glb` launcher binary. See [`glb::cli::USAGE`].
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -13,7 +14,10 @@ use glb::glb::task_queue::{SumReducer, VecSumReducer};
 use glb::glb::GlbConfig;
 use glb::harness::{calibrate_bc_cost, calibrate_uts_cost, fig_bc_perf, fig_bc_workload, fig_uts, FigOpts};
 use glb::launch::report::{build_rank_report, rank_report_line, rank_report_requested};
-use glb::place::{net_stats, run_sockets_reduced, run_threads, wire_bytes, NetStats, SocketRunOpts};
+use glb::place::{
+    net_stats, run_sockets_reduced, run_threads, serve, wire_bytes, JobSpec, NetStats,
+    SocketRunOpts, SubmitClient,
+};
 use glb::runtime::{default_artifact_dir, DeviceService};
 use glb::sim::{run_sim, ArchProfile, BGQ};
 use glb::util::json::Value;
@@ -50,6 +54,8 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         "fib" => cmd_fib(rest),
         "nqueens" => cmd_nqueens(rest),
         "fig" => cmd_fig(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "launch" => glb::launch::cmd_launch(rest),
         "bench" => glb::launch::cmd_bench(rest),
         "calibrate" => cmd_calibrate(),
@@ -566,6 +572,70 @@ fn cmd_fig(rest: &[String]) -> Result<()> {
             }
         }
         _ => unreachable!(),
+    }
+    Ok(())
+}
+
+/// `glb serve` — boot this rank of a resident fleet and process
+/// streamed jobs until a client sends `Ctrl::Shutdown`. One process per
+/// rank, exactly like the one-shot tcp transport, but the mesh and
+/// control links outlive every job.
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    args.ensure_known(&["rank", "peers", "port", "host", "bind", "advertise"])?;
+    let t = tcp_opts_from(&args)?;
+    serve(&socket_opts_from(&t))
+}
+
+/// `glb submit <uts|bc|fib> …` — ship one job (or `--repeat N` copies)
+/// to a resident fleet started with `glb serve`, block for each result,
+/// and print it. `--shutdown` retires the fleet afterwards.
+fn cmd_submit(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &["shutdown"])?;
+    args.ensure_known(&[
+        "host", "port", "timeout", "repeat", "shutdown", // client knobs
+        "depth", "b0", "seed-tree", "fib-n", "scale", // app knobs
+        "n", "w", "l", "z", "seed", // GLB knobs
+    ])?;
+    let host = args.get("host").unwrap_or("127.0.0.1");
+    let port: u16 = args.parse_opt("port", 7117u16)?;
+    let timeout = Duration::from_secs(args.parse_opt("timeout", 30u64)?);
+    let repeat: usize = args.parse_opt("repeat", 1usize)?;
+    let spec = match args.positional.first().map(String::as_str) {
+        Some("uts") => JobSpec::uts(
+            UtsParams {
+                b0: args.parse_opt("b0", 4.0f64)?,
+                seed: args.parse_opt("seed-tree", 19u32)?,
+                max_depth: args.parse_opt("depth", 10u32)?,
+            },
+            glb_params_from(&args)?,
+        ),
+        Some("fib") => JobSpec::fib(args.parse_opt("fib-n", 24u64)?, glb_params_from(&args)?),
+        Some("bc") => JobSpec::bc(args.parse_opt("scale", 9u32)?, glb_params_from(&args)?),
+        Some(other) => bail!("unknown app {other:?} (uts|bc|fib)"),
+        None if args.flag("shutdown") => {
+            // Bare `glb submit --shutdown`: retire the fleet, no job.
+            let client = SubmitClient::connect(host, port, timeout)?;
+            client.shutdown()?;
+            println!("fleet at {host}:{port} asked to shut down");
+            return Ok(());
+        }
+        None => bail!("submit needs an app: glb submit <uts|bc|fib> [options]\n\n{USAGE}"),
+    };
+    let mut client = SubmitClient::connect(host, port, timeout)?;
+    for i in 1..=repeat {
+        let t0 = Instant::now();
+        let res = client.submit(&spec)?;
+        println!(
+            "job {i}/{repeat} [{}] -> {}  elapsed={}",
+            spec.format(),
+            res.summary(),
+            fmt_ns(t0.elapsed().as_nanos() as u64),
+        );
+    }
+    if args.flag("shutdown") {
+        client.shutdown()?;
+        println!("fleet at {host}:{port} asked to shut down");
     }
     Ok(())
 }

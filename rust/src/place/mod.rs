@@ -27,12 +27,17 @@ pub mod membership;
 pub mod network;
 pub mod reactor;
 pub mod runtime;
+pub mod service;
 pub mod socket;
 
 pub use membership::{DynamicMembership, FixedMembership, MembershipProvider, MembershipView};
 pub use network::Transport;
 pub use runtime::{run_threads, run_threads_opts, ThreadRunOpts};
+pub use service::{
+    serve, serve_with, JobApp, JobReport, JobSpec, ServiceBag, ServiceQueue, ServiceReducer,
+    ServiceResult, SubmitClient,
+};
 pub use socket::{
-    io_threads_live, io_threads_spawned, misrouted_frames, net_stats, run_sockets,
-    run_sockets_reduced, wire_bytes, NetStats, SocketRunOpts,
+    cross_epoch_frames, io_threads_live, io_threads_spawned, misrouted_frames, net_stats,
+    run_sockets, run_sockets_reduced, wire_bytes, NetStats, SocketRunOpts,
 };

@@ -1,0 +1,1272 @@
+//! The resident fleet service: GLB-as-a-service over warm ranks.
+//!
+//! One-shot socket runs ([`crate::place::run_sockets`]) pay the full
+//! fleet bootstrap — process launch, handshake, mesh knitting — per
+//! computation. This module separates the *fleet* lifecycle from the
+//! *job* lifecycle: `glb serve` boots every rank once and keeps it
+//! resident, and each `glb submit` ships one job (a [`JobSpec`] plus an
+//! optional serialized root bag) to rank 0 over a client control link.
+//!
+//! Per job, the fleet runs the unmodified lifeline protocol:
+//!
+//! 1. rank 0 assigns the job a fresh **epoch** (monotonic from 1; 0 is
+//!    reserved for one-shot runs) and forwards the submission to every
+//!    spoke over the retained control links;
+//! 2. every rank builds a fresh queue/worker/ledger, the fleet runs a
+//!    Ready/Go barrier over the (momentarily blocking) control links,
+//!    and each rank spawns a per-job reactor in resident mode
+//!    ([`crate::place::socket`]'s `run_resident`) over the *same*
+//!    sockets;
+//! 3. every data and credit frame is stamped with the epoch, so a stray
+//!    frame from a previous job is dropped and counted
+//!    ([`crate::place::socket::cross_epoch_frames`]) instead of
+//!    corrupting the current one — and per-job Mattern termination runs
+//!    against a fresh per-epoch credit root;
+//! 4. end-of-job epoch fences mark the last frame of the job on every
+//!    mesh link (links are never closed), the reactors hand their
+//!    sockets back, and rank 0 streams the reduced result to the client
+//!    as a [`Ctrl::JobResult`] frame.
+//!
+//! Cross-epoch isolation is structural, not just counted: a rank's
+//! job-N reactor exits only after every peer's job-N fence arrived, and
+//! TCP links are FIFO, so every job-N frame is consumed within job N.
+//! The epoch stamps (and the counter the serve tests assert stays zero)
+//! are belt and braces.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::apps::bc::bag::BcBag;
+use crate::apps::bc::graph::{Graph, RmatParams};
+use crate::apps::bc::queue::BcQueue;
+use crate::apps::fib::FibQueue;
+use crate::apps::uts::bag::UtsBag;
+use crate::apps::uts::queue::UtsQueue;
+use crate::apps::uts::tree::UtsParams;
+use crate::glb::message::Msg;
+use crate::glb::task_bag::{ArrayListTaskBag, TaskBag};
+use crate::glb::task_queue::{ProcessOutcome, Reducer, TaskQueue};
+use crate::glb::termination::{CreditLedger, CreditRoot, INITIAL_RANK_ATOMS};
+use crate::glb::wire::{self, BufferPool, Ctrl, FrameAssembler, Reader, WireCodec, WireError};
+use crate::glb::worker::Worker;
+use crate::glb::{GlbConfig, GlbParams, WorkerStats};
+use crate::place::reactor::{OutQueue, Poller};
+use crate::place::runtime::run_threads;
+use crate::place::socket::{
+    accept_handshake, connect_retry, handshake_bytes, pump, socket_place_main, ConnKind,
+    FleetGate, FleetLedger, GatherWire, Mailboxes, NetCore, QueueHome, Reactor, ReactorConn,
+    ReactorRole, ResidentReactor, ResultPlan, ResultSlots, RootHome, SocketRunOpts,
+    SocketTransport, HS_CLIENT, HS_CTRL, HS_MESH,
+};
+use crate::testkit::chaos;
+
+// ---------------------------------------------------------------------------
+// Job specification
+// ---------------------------------------------------------------------------
+
+/// Which application a submitted job runs, with its app parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobApp {
+    /// Unbalanced Tree Search (geometric law).
+    Uts(UtsParams),
+    /// Naive recursive Fibonacci.
+    Fib { n: u64 },
+    /// Betweenness centrality over an SSCA2 R-MAT graph of `2^scale`
+    /// vertices. The fleet caches the generated graph per scale, so
+    /// repeated submissions at one scale pay generation once.
+    Bc { scale: u32 },
+}
+
+/// One submitted job: the application plus the GLB knobs of the run.
+/// Travels inside [`Ctrl::Submit`] as a space-separated `key=value`
+/// string (see [`JobSpec::format`] / [`JobSpec::parse`]) so the wire
+/// format stays app-agnostic.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub app: JobApp,
+    /// GLB parameters for the run. `workers_per_node` is always 1 in a
+    /// resident fleet (one place per rank).
+    pub glb: GlbParams,
+}
+
+impl JobSpec {
+    pub fn uts(params: UtsParams, glb: GlbParams) -> Self {
+        Self { app: JobApp::Uts(params), glb: Self::flat(glb) }
+    }
+
+    pub fn fib(n: u64, glb: GlbParams) -> Self {
+        Self { app: JobApp::Fib { n }, glb: Self::flat(glb) }
+    }
+
+    pub fn bc(scale: u32, glb: GlbParams) -> Self {
+        Self { app: JobApp::Bc { scale }, glb: Self::flat(glb) }
+    }
+
+    fn flat(mut glb: GlbParams) -> GlbParams {
+        glb.workers_per_node = 1;
+        glb
+    }
+
+    /// The wire form carried by [`Ctrl::Submit`]'s `spec` field.
+    pub fn format(&self) -> String {
+        let g = &self.glb;
+        let app = match &self.app {
+            JobApp::Uts(u) => {
+                format!("app=uts depth={} b0={} seed-tree={}", u.max_depth, u.b0, u.seed)
+            }
+            JobApp::Fib { n } => format!("app=fib fib-n={n}"),
+            JobApp::Bc { scale } => format!("app=bc scale={scale}"),
+        };
+        format!("{app} n={} w={} l={} z={} seed={}", g.n, g.w, g.l, g.z, g.seed)
+    }
+
+    /// Parse the wire form back. Unknown keys are rejected so a client
+    /// typo (or a newer client's knob) fails loudly instead of silently
+    /// running a different job than asked.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for tok in s.split_whitespace() {
+            let (k, v) = tok.split_once('=').ok_or_else(|| anyhow!("bad spec token {tok:?}"))?;
+            if kv.insert(k, v).is_some() {
+                bail!("duplicate spec key {k:?}");
+            }
+        }
+        let mut take = |k: &str| kv.remove(k);
+        let app = match take("app") {
+            Some("uts") => {
+                let mut u = UtsParams::default();
+                if let Some(v) = take("depth") {
+                    u.max_depth = v.parse().context("spec depth")?;
+                }
+                if let Some(v) = take("b0") {
+                    u.b0 = v.parse().context("spec b0")?;
+                }
+                if let Some(v) = take("seed-tree") {
+                    u.seed = v.parse().context("spec seed-tree")?;
+                }
+                JobApp::Uts(u)
+            }
+            Some("fib") => {
+                let n = take("fib-n").map(|v| v.parse()).transpose().context("spec fib-n")?;
+                JobApp::Fib { n: n.unwrap_or(24) }
+            }
+            Some("bc") => {
+                let s = take("scale").map(|v| v.parse()).transpose().context("spec scale")?;
+                JobApp::Bc { scale: s.unwrap_or(9) }
+            }
+            Some(a) => bail!("unknown app {a:?} in job spec"),
+            None => bail!("job spec has no app=... key"),
+        };
+        let mut glb = GlbParams { workers_per_node: 1, ..GlbParams::default() };
+        if let Some(v) = take("n") {
+            glb.n = v.parse().context("spec n")?;
+        }
+        if let Some(v) = take("w") {
+            glb.w = v.parse().context("spec w")?;
+        }
+        if let Some(v) = take("l") {
+            glb.l = v.parse().context("spec l")?;
+        }
+        if let Some(v) = take("z") {
+            glb.z = v.parse().context("spec z")?;
+        }
+        if let Some(v) = take("seed") {
+            glb.seed = v.parse().context("spec seed")?;
+        }
+        if let Some(k) = kv.keys().next() {
+            bail!("unknown job spec key {k:?}");
+        }
+        Ok(Self { app, glb })
+    }
+
+    /// The root bag a client ships inside [`Ctrl::Submit`]. Only fib
+    /// expresses its root work as a plain bag; UTS must *not* ship one
+    /// (`UtsQueue::init_root` also counts the root node, which a bag
+    /// merge would miss) and BC's per-rank vertex slices are derived
+    /// from the spec on every rank.
+    pub fn root_bag(&self) -> Option<ServiceBag> {
+        match &self.app {
+            JobApp::Fib { n } => Some(ServiceBag::Fib(ArrayListTaskBag::from_vec(vec![*n]))),
+            JobApp::Uts(_) | JobApp::Bc { .. } => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The polymorphic queue the fleet runs every job through
+// ---------------------------------------------------------------------------
+
+/// The task bag of a resident fleet: a tagged union of every app's bag,
+/// so one fleet (one mesh, one bag type on the wire) can run any
+/// supported app per job. Wire form: a 1-byte app discriminant followed
+/// by the app bag's own encoding.
+#[derive(Debug, Clone)]
+pub enum ServiceBag {
+    Uts(UtsBag),
+    Fib(ArrayListTaskBag<u64>),
+    Bc(BcBag),
+}
+
+const BAG_UTS: u8 = 0;
+const BAG_FIB: u8 = 1;
+const BAG_BC: u8 = 2;
+
+impl TaskBag for ServiceBag {
+    fn size(&self) -> usize {
+        match self {
+            ServiceBag::Uts(b) => b.size(),
+            ServiceBag::Fib(b) => b.size(),
+            ServiceBag::Bc(b) => b.size(),
+        }
+    }
+
+    fn split(&mut self) -> Option<Self> {
+        match self {
+            ServiceBag::Uts(b) => b.split().map(ServiceBag::Uts),
+            ServiceBag::Fib(b) => b.split().map(ServiceBag::Fib),
+            ServiceBag::Bc(b) => b.split().map(ServiceBag::Bc),
+        }
+    }
+
+    fn merge(&mut self, other: Self) {
+        match (self, other) {
+            (ServiceBag::Uts(a), ServiceBag::Uts(b)) => a.merge(b),
+            (ServiceBag::Fib(a), ServiceBag::Fib(b)) => a.merge(b),
+            (ServiceBag::Bc(a), ServiceBag::Bc(b)) => a.merge(b),
+            // Epoch fencing makes cross-app loot structurally impossible:
+            // every rank switches apps in lockstep at the job boundary.
+            _ => panic!("cross-app loot merged into a service bag"),
+        }
+    }
+}
+
+impl WireCodec for ServiceBag {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ServiceBag::Uts(b) => {
+                wire::put_u8(out, BAG_UTS);
+                b.encode(out);
+            }
+            ServiceBag::Fib(b) => {
+                wire::put_u8(out, BAG_FIB);
+                b.encode(out);
+            }
+            ServiceBag::Bc(b) => {
+                wire::put_u8(out, BAG_BC);
+                b.encode(out);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            BAG_UTS => Ok(ServiceBag::Uts(UtsBag::decode(r)?)),
+            BAG_FIB => Ok(ServiceBag::Fib(ArrayListTaskBag::decode(r)?)),
+            BAG_BC => Ok(ServiceBag::Bc(BcBag::decode(r)?)),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+/// Per-place result of a service job, mirroring [`ServiceBag`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServiceResult {
+    /// UTS node count / fib value.
+    U64(u64),
+    /// BC per-vertex centrality shares.
+    VecF64(Vec<f64>),
+}
+
+const RES_U64: u8 = 0;
+const RES_VEC: u8 = 1;
+
+impl ServiceResult {
+    /// A one-line human form for logs and the `glb submit` CLI.
+    pub fn summary(&self) -> String {
+        match self {
+            ServiceResult::U64(v) => format!("{v}"),
+            ServiceResult::VecF64(v) => {
+                format!("vec[{}] sum={:.6e}", v.len(), v.iter().sum::<f64>())
+            }
+        }
+    }
+}
+
+impl WireCodec for ServiceResult {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ServiceResult::U64(v) => {
+                wire::put_u8(out, RES_U64);
+                v.encode(out);
+            }
+            ServiceResult::VecF64(v) => {
+                wire::put_u8(out, RES_VEC);
+                v.encode(out);
+            }
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match r.u8()? {
+            RES_U64 => Ok(ServiceResult::U64(u64::decode(r)?)),
+            RES_VEC => Ok(ServiceResult::VecF64(Vec::<f64>::decode(r)?)),
+            t => Err(WireError::BadTag(t)),
+        }
+    }
+}
+
+/// Folds per-place [`ServiceResult`]s: sums for the counting apps,
+/// elementwise vector sum for BC (each place holds the full-length
+/// vector with its sources' contributions, exactly like
+/// [`crate::glb::VecSumReducer`]).
+pub struct ServiceReducer;
+
+impl Reducer<ServiceResult> for ServiceReducer {
+    fn identity(&self) -> ServiceResult {
+        ServiceResult::U64(0)
+    }
+
+    fn reduce(&self, a: ServiceResult, b: ServiceResult) -> ServiceResult {
+        match (a, b) {
+            (ServiceResult::U64(a), ServiceResult::U64(b)) => ServiceResult::U64(a + b),
+            (ServiceResult::VecF64(mut a), ServiceResult::VecF64(b)) => {
+                if a.is_empty() {
+                    return ServiceResult::VecF64(b);
+                }
+                if b.is_empty() {
+                    return ServiceResult::VecF64(a);
+                }
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += y;
+                }
+                ServiceResult::VecF64(a)
+            }
+            // The identity is U64(0); let it vanish against vectors so
+            // reduce_all works for BC jobs too.
+            (ServiceResult::U64(0), v) | (v, ServiceResult::U64(0)) => v,
+            _ => panic!("cross-app results reduced together"),
+        }
+    }
+}
+
+/// The queue a resident rank runs a job through: dispatches to the
+/// app's own queue, moving work in [`ServiceBag`]s.
+pub enum ServiceQueue {
+    Uts(UtsQueue),
+    Fib(FibQueue),
+    Bc(BcQueue),
+}
+
+impl TaskQueue for ServiceQueue {
+    type Bag = ServiceBag;
+    type Result = ServiceResult;
+
+    fn process(&mut self, n: usize) -> ProcessOutcome {
+        match self {
+            ServiceQueue::Uts(q) => q.process(n),
+            ServiceQueue::Fib(q) => q.process(n),
+            ServiceQueue::Bc(q) => q.process(n),
+        }
+    }
+
+    fn split(&mut self) -> Option<ServiceBag> {
+        match self {
+            ServiceQueue::Uts(q) => q.split().map(ServiceBag::Uts),
+            ServiceQueue::Fib(q) => q.split().map(ServiceBag::Fib),
+            ServiceQueue::Bc(q) => q.split().map(ServiceBag::Bc),
+        }
+    }
+
+    fn merge(&mut self, bag: ServiceBag) {
+        match (self, bag) {
+            (ServiceQueue::Uts(q), ServiceBag::Uts(b)) => q.merge(b),
+            (ServiceQueue::Fib(q), ServiceBag::Fib(b)) => q.merge(b),
+            (ServiceQueue::Bc(q), ServiceBag::Bc(b)) => q.merge(b),
+            _ => panic!("cross-app loot merged into a service queue"),
+        }
+    }
+
+    fn result(&self) -> ServiceResult {
+        match self {
+            ServiceQueue::Uts(q) => ServiceResult::U64(q.result()),
+            ServiceQueue::Fib(q) => ServiceResult::U64(q.result()),
+            ServiceQueue::Bc(q) => ServiceResult::VecF64(q.result()),
+        }
+    }
+
+    fn bag_size(&self) -> usize {
+        match self {
+            ServiceQueue::Uts(q) => q.bag_size(),
+            ServiceQueue::Fib(q) => q.bag_size(),
+            ServiceQueue::Bc(q) => q.bag_size(),
+        }
+    }
+}
+
+/// Build this rank's queue for one job, seeded exactly like the
+/// corresponding one-shot run so results are bit-identical:
+///
+/// - UTS: rank 0 calls `init_root()` (bag *and* node count);
+/// - fib: rank 0 merges the client-shipped root bag (or derives it from
+///   the spec when the client sent none);
+/// - BC: every rank self-assigns its vertex slice `[i*per, ...)` over
+///   the cached graph, mirroring the one-shot `seeded_queue`.
+fn build_queue(
+    spec: &JobSpec,
+    rank: usize,
+    ranks: usize,
+    graph: Option<&Arc<Graph>>,
+    root_bag: &[u8],
+) -> Result<ServiceQueue> {
+    match &spec.app {
+        JobApp::Uts(u) => {
+            if !root_bag.is_empty() {
+                bail!("uts jobs derive their root from the spec; unexpected root bag");
+            }
+            let mut q = UtsQueue::new(*u);
+            if rank == 0 {
+                q.init_root();
+            }
+            Ok(ServiceQueue::Uts(q))
+        }
+        JobApp::Fib { n } => {
+            let mut q = FibQueue::new();
+            if rank == 0 {
+                if root_bag.is_empty() {
+                    q.init(*n);
+                } else {
+                    let (bag, used) = ServiceBag::decode_slice(root_bag)
+                        .map_err(|e| anyhow!("decode root bag: {e}"))?;
+                    if used != root_bag.len() {
+                        bail!("trailing bytes after the root bag");
+                    }
+                    match bag {
+                        ServiceBag::Fib(b) => {
+                            let mut sq = ServiceQueue::Fib(q);
+                            sq.merge(ServiceBag::Fib(b));
+                            return Ok(sq);
+                        }
+                        _ => bail!("fib job shipped a non-fib root bag"),
+                    }
+                }
+            }
+            Ok(ServiceQueue::Fib(q))
+        }
+        JobApp::Bc { .. } => {
+            if !root_bag.is_empty() {
+                bail!("bc jobs derive their vertex slices from the spec; unexpected root bag");
+            }
+            let g = graph.expect("bc jobs resolve their graph before queue construction");
+            let n = g.n() as u32;
+            let mut q = BcQueue::sparse(g.clone());
+            let per = n / ranks as u32;
+            let lo = rank as u32 * per;
+            let hi = if rank == ranks - 1 { n } else { lo + per };
+            q.assign(lo, hi);
+            Ok(ServiceQueue::Bc(q))
+        }
+    }
+}
+
+/// Resolve (generating + caching on first use) the graph a BC job runs
+/// over. Non-BC jobs have no graph.
+fn resolve_graph(
+    spec: &JobSpec,
+    graphs: &mut HashMap<u32, Arc<Graph>>,
+) -> Option<Arc<Graph>> {
+    match &spec.app {
+        JobApp::Bc { scale } => Some(
+            graphs
+                .entry(*scale)
+                .or_insert_with(|| {
+                    Arc::new(Graph::rmat(RmatParams { scale: *scale, ..Default::default() }))
+                })
+                .clone(),
+        ),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-job accounting
+// ---------------------------------------------------------------------------
+
+/// What one rank did for one job — handed to the observer of
+/// [`serve_with`] after every job (the serve tests sum loot counters
+/// across ranks per epoch to assert fleet TX == RX).
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    /// The fleet-internal job epoch.
+    pub epoch: u64,
+    /// The job's wire spec, as submitted.
+    pub spec: String,
+    /// The reporting rank.
+    pub rank: usize,
+    /// This rank's worker counters for the job.
+    pub stats: WorkerStats,
+    /// Wall-clock for the job on this rank.
+    pub elapsed_ns: u64,
+    /// The fleet-wide reduced result (rank 0 only).
+    pub result: Option<ServiceResult>,
+}
+
+// ---------------------------------------------------------------------------
+// Retained fleet links
+// ---------------------------------------------------------------------------
+
+/// One fleet socket retained across jobs, with its staged read buffer
+/// (a frame may straddle a job boundary).
+struct Link {
+    stream: TcpStream,
+    asm: FrameAssembler,
+}
+
+impl Link {
+    fn fresh(stream: TcpStream) -> Self {
+        Self { stream, asm: FrameAssembler::new(wire::MAX_FRAME_BYTES) }
+    }
+
+    /// Blocking control-frame write (between jobs the stream may still
+    /// be nonblocking from the previous reactor's tenure).
+    fn write_ctrl(&mut self, c: &Ctrl) -> Result<()> {
+        self.stream.set_nonblocking(false)?;
+        wire::write_frame(&mut self.stream, &c.to_body())?;
+        Ok(())
+    }
+
+    /// Blocking control-frame read through the staged buffer. `None`
+    /// means the peer closed cleanly at a frame boundary.
+    fn read_ctrl(&mut self) -> Result<Option<Ctrl>> {
+        self.stream.set_nonblocking(false)?;
+        self.stream.set_read_timeout(None)?;
+        loop {
+            if let Some(body) = self.asm.next_frame().map_err(|e| anyhow!("fleet frame: {e}"))? {
+                let c = Ctrl::decode(body).map_err(|e| anyhow!("fleet control frame: {e}"))?;
+                return Ok(Some(c));
+            }
+            let n = {
+                let space = self.asm.read_space(4096);
+                match self.stream.read(space) {
+                    Ok(n) => n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e.into()),
+                }
+            };
+            if n == 0 {
+                if self.asm.buffered() != 0 {
+                    bail!("fleet link closed mid-frame");
+                }
+                return Ok(None);
+            }
+            self.asm.commit(n);
+        }
+    }
+}
+
+/// Every socket a resident rank retains across jobs.
+struct FleetLinks {
+    /// Mesh data links, indexed by peer rank.
+    mesh: Vec<Option<Link>>,
+    /// Rank 0 only: control links to each spoke.
+    to_spokes: Vec<Option<Link>>,
+    /// Spokes only: the control link to rank 0.
+    to_root: Option<Link>,
+}
+
+// ---------------------------------------------------------------------------
+// One job on one rank
+// ---------------------------------------------------------------------------
+
+/// Run one job's share on this rank: fresh queue/worker/credit, a
+/// Ready/Go barrier over the blocking control links, then a per-job
+/// resident reactor over the retained sockets. Returns the (fleet-wide
+/// on rank 0, local elsewhere) result, this rank's worker counters, and
+/// any next-job control frames the reactor picked up early.
+fn run_job(
+    epoch: u64,
+    spec: &JobSpec,
+    root_bag: &[u8],
+    rank: usize,
+    ranks: usize,
+    links: &mut FleetLinks,
+    graphs: &mut HashMap<u32, Arc<Graph>>,
+) -> Result<(ServiceResult, WorkerStats, Vec<Ctrl>)> {
+    let cfg = GlbConfig::new(ranks, spec.glb);
+    let topo = cfg.topology();
+
+    // -- per-job mailbox + net core --------------------------------------
+    let mut local_tx: Vec<Option<Sender<Msg<ServiceBag>>>> = (0..ranks).map(|_| None).collect();
+    let (tx, rx) = channel();
+    local_tx[rank] = Some(tx);
+    let local: Mailboxes<ServiceBag> = Arc::new(local_tx);
+
+    let pool = Arc::new(BufferPool::default());
+    let mut net = NetCore::new(ranks, pool);
+    for (r, l) in links.mesh.iter().enumerate() {
+        if l.is_some() {
+            net.mesh[r] = Some(Arc::new(OutQueue::new()));
+        }
+    }
+    let results: ResultSlots = Arc::new(Mutex::new((0..ranks).map(|_| None).collect()));
+    let mut root: Option<Arc<CreditRoot>> = None;
+    let mut grant_tx: Option<Sender<u64>> = None;
+    let mut grants_rx: Option<Receiver<u64>> = None;
+    if rank == 0 {
+        for (r, l) in links.to_spokes.iter().enumerate() {
+            if l.is_some() {
+                net.ctrl_peers[r] = Some(Arc::new(OutQueue::new()));
+            }
+        }
+        let cr = CreditRoot::for_epoch(epoch);
+        cr.grant(ranks as u64 * INITIAL_RANK_ATOMS);
+        root = Some(cr);
+    } else {
+        net.ctrl = Some(Arc::new(OutQueue::new()));
+        let (gtx, grx) = channel();
+        grant_tx = Some(gtx);
+        grants_rx = Some(grx);
+    }
+    let net = Arc::new(net);
+
+    let ledger = if rank == 0 {
+        let cr = root.clone().expect("rank 0 hosts the credit root");
+        FleetLedger::Credit(CreditLedger::new(Arc::new(RootHome { root: cr }), INITIAL_RANK_ATOMS))
+    } else {
+        let grants = grants_rx.take().expect("spokes hold the grant channel");
+        FleetLedger::Credit(CreditLedger::new(
+            Arc::new(QueueHome { net: net.clone(), grants: Mutex::new(grants), job: epoch }),
+            INITIAL_RANK_ATOMS,
+        ))
+    };
+
+    let transport: SocketTransport<ServiceBag> = SocketTransport {
+        rank,
+        topo,
+        p: ranks,
+        local: local.clone(),
+        net: net.clone(),
+        recovery: None,
+        job: epoch,
+    };
+    if let Some(cr) = &root {
+        let t = transport.clone();
+        cr.on_quiescent(move || t.terminate_fleet());
+    }
+
+    // -- queue + worker (tokens acquired before the barrier) -------------
+    let graph = resolve_graph(spec, graphs);
+    let queue = build_queue(spec, rank, ranks, graph.as_ref(), root_bag)?;
+    let mut worker = Worker::new(rank, ranks, spec.glb, queue, ledger);
+
+    // -- per-job Ready/Go barrier over the blocking control links --------
+    // No Ready/Go ever flows through a resident reactor: the barrier
+    // completes before the reactors take the sockets.
+    if rank == 0 {
+        for r in 1..ranks {
+            let l = links.to_spokes[r].as_mut().expect("resident fleet keeps every spoke link");
+            match l.read_ctrl()? {
+                Some(Ctrl::Ready { rank: rr }) if rr as usize == r => {}
+                other => bail!("rank {r}: expected job readiness, got {other:?}"),
+            }
+        }
+        // Arm before any Go: deposits only start after Go, so detection
+        // can never race the job start.
+        root.as_ref().expect("rank 0 hosts the credit root").arm();
+        for l in links.to_spokes.iter_mut().flatten() {
+            l.write_ctrl(&Ctrl::Go)?;
+        }
+    } else {
+        let l = links.to_root.as_mut().expect("spokes keep their root link");
+        l.write_ctrl(&Ctrl::Ready { rank: rank as u64 })?;
+        match l.read_ctrl()? {
+            Some(Ctrl::Go) => {}
+            other => bail!("expected job go, got {other:?}"),
+        }
+    }
+
+    // -- per-job reactor over the retained sockets -----------------------
+    let mut conns: Vec<ReactorConn> = Vec::new();
+    for (r, l) in links.mesh.iter_mut().enumerate() {
+        if let Some(l) = l.take() {
+            let q = net.mesh[r].clone().expect("mesh link has a queue");
+            conns.push(ReactorConn::resume(l.stream, ConnKind::Mesh { peer: r }, l.asm, q));
+        }
+    }
+    let role = if rank == 0 {
+        for (r, l) in links.to_spokes.iter_mut().enumerate() {
+            if let Some(l) = l.take() {
+                let q = net.ctrl_peers[r].clone().expect("control link has a queue");
+                conns.push(ReactorConn::resume(l.stream, ConnKind::CtrlRoot { peer: r }, l.asm, q));
+            }
+        }
+        ReactorRole::Root {
+            root: root.clone().expect("rank 0 hosts the credit root"),
+            results: results.clone(),
+            gate: Arc::new(FleetGate::default()),
+            tol: None,
+        }
+    } else {
+        let l = links.to_root.take().expect("spokes keep their root link");
+        let q = net.ctrl.clone().expect("spokes hold a control queue");
+        conns.push(ReactorConn::resume(l.stream, ConnKind::CtrlSpoke, l.asm, q));
+        ReactorRole::Spoke {
+            gate: Arc::new(FleetGate::default()),
+            grant_tx: grant_tx.take(),
+            tolerant: false,
+            leave_tx: None,
+        }
+    };
+    let reactor = Reactor::<ServiceBag> {
+        poller: Poller::new().context("create job reactor poller")?,
+        conns,
+        core: net.clone(),
+        my_rank: rank,
+        topo,
+        local,
+        recovery: None,
+        role,
+        stats: None,
+        job: epoch,
+        resident: Some(ResidentReactor::new(ranks)),
+    };
+    let io = std::thread::Builder::new()
+        .name(format!("glb-serve-io-{rank}"))
+        .spawn(move || reactor.run_resident())
+        .context("spawn job reactor")?;
+
+    // -- run the job's share ---------------------------------------------
+    let mut fx = Vec::new();
+    worker.kick_if_empty(&mut fx);
+    pump(rank, &mut fx, &transport);
+    let (result, stats) = socket_place_main(worker, rx, transport, None, GatherWire, None, false);
+
+    if rank != 0 {
+        let sent = net.send_ctrl(&Ctrl::Result { job: epoch, bytes: GatherWire.encode(&result) });
+        if !sent {
+            bail!("fleet control link closed before the job result was sent");
+        }
+    }
+
+    // -- end of job: fence, drain, reclaim the sockets -------------------
+    net.shutdown.store(true, Ordering::Release);
+    net.waker.wake();
+    let exit = io.join().map_err(|_| anyhow!("job reactor panicked"))?;
+    for c in exit.conns {
+        let link = Link { stream: c.stream, asm: c.asm };
+        match c.kind {
+            ConnKind::Mesh { peer } => links.mesh[peer] = Some(link),
+            ConnKind::CtrlRoot { peer } => links.to_spokes[peer] = Some(link),
+            ConnKind::CtrlSpoke => links.to_root = Some(link),
+        }
+    }
+
+    let fleet_result = if rank == 0 {
+        let cr = root.expect("rank 0 hosts the credit root");
+        debug_assert!(cr.quiescent(), "job ended without credit quiescence");
+        let mut all = vec![result];
+        let mut slots = results.lock().expect("result slots poisoned");
+        for (r, slot) in slots.iter_mut().enumerate().skip(1) {
+            let bytes =
+                slot.take().with_context(|| format!("rank {r} sent no result for job {epoch}"))?;
+            all.push(GatherWire.decode(&bytes)?);
+        }
+        ServiceReducer.reduce_all(all)
+    } else {
+        result
+    };
+    Ok((fleet_result, stats, exit.carryover))
+}
+
+// ---------------------------------------------------------------------------
+// The resident service
+// ---------------------------------------------------------------------------
+
+/// Boot this rank of a resident fleet and serve jobs until a client
+/// sends [`Ctrl::Shutdown`]. Rank 0 additionally owns the client plane:
+/// it accepts `glb submit` connections on the fleet's rendezvous port
+/// and streams each job's reduced result back as a
+/// [`Ctrl::JobResult`].
+pub fn serve(opts: &SocketRunOpts) -> Result<()> {
+    serve_with(opts, |_| {})
+}
+
+/// [`serve`] with a per-job observer — called on every rank after every
+/// job with that rank's [`JobReport`]. The serve integration tests use
+/// it to cross-check per-epoch loot conservation fleet-wide.
+pub fn serve_with(opts: &SocketRunOpts, mut on_job: impl FnMut(&JobReport)) -> Result<()> {
+    let (rank, ranks) = (opts.rank, opts.ranks);
+    if ranks == 0 {
+        bail!("a fleet needs at least one rank");
+    }
+    if rank >= ranks {
+        bail!("--rank {rank} out of range for --peers {ranks}");
+    }
+    if opts.tolerate_failures > 0 {
+        bail!("glb serve does not support --tolerate-failures yet");
+    }
+    if opts.stats_interval.is_some() || opts.adapt {
+        bail!("glb serve does not support --stats/--adapt yet");
+    }
+    chaos::arm(rank);
+    if rank == 0 {
+        serve_root(opts, &mut on_job)
+    } else {
+        serve_spoke(opts, &mut on_job)
+    }
+}
+
+/// Rank 0: boot the fleet once, then loop accepting clients and running
+/// their jobs.
+fn serve_root(opts: &SocketRunOpts, on_job: &mut dyn FnMut(&JobReport)) -> Result<()> {
+    let ranks = opts.ranks;
+    let deadline = Instant::now() + opts.handshake_timeout;
+
+    // -- one-time fleet bootstrap (the one-shot handshake, with the
+    //    listener retained for the client plane) ------------------------
+    let bind_addr = opts.bind.clone().unwrap_or_else(|| opts.host.clone());
+    let listener = TcpListener::bind((bind_addr.as_str(), opts.port))
+        .with_context(|| format!("bind fleet bootstrap on {bind_addr}:{}", opts.port))?;
+    listener.set_nonblocking(true)?;
+    let port = listener.local_addr()?.port();
+
+    let mut links = FleetLinks {
+        mesh: (0..ranks).map(|_| None).collect(),
+        to_spokes: (0..ranks).map(|_| None).collect(),
+        to_root: None,
+    };
+    if ranks > 1 {
+        let mut addrs: Vec<Option<String>> = (0..ranks).map(|_| None).collect();
+        addrs[0] = Some(format!("{}:{port}", opts.host));
+        for _ in 0..2 * (ranks - 1) {
+            let (mut s, kind, r) = accept_handshake(&listener, deadline, opts.handshake_timeout)?;
+            if r == 0 || r >= ranks {
+                bail!("fleet handshake from invalid rank {r}");
+            }
+            match kind {
+                HS_CTRL => {
+                    if links.to_spokes[r].is_some() {
+                        bail!("duplicate control link from rank {r}");
+                    }
+                    let body = wire::read_frame(&mut s, wire::MAX_FRAME_BYTES)
+                        .context("read rank registration")?
+                        .ok_or_else(|| anyhow!("rank {r} closed before registering"))?;
+                    match Ctrl::decode(&body) {
+                        Ok(Ctrl::Register { rank: rr, addr }) if rr as usize == r => {
+                            addrs[r] = Some(addr);
+                        }
+                        other => bail!("rank {r}: expected registration, got {other:?}"),
+                    }
+                    s.set_read_timeout(None)?;
+                    links.to_spokes[r] = Some(Link::fresh(s));
+                }
+                HS_MESH => {
+                    if links.mesh[r].is_some() {
+                        bail!("duplicate mesh link from rank {r}");
+                    }
+                    s.set_read_timeout(None)?;
+                    links.mesh[r] = Some(Link::fresh(s));
+                }
+                k => bail!("bad fleet handshake kind {k}"),
+            }
+        }
+        let addrs: Vec<String> = addrs
+            .into_iter()
+            .collect::<Option<Vec<_>>>()
+            .context("fleet bootstrap finished with unregistered ranks")?;
+        let map = Ctrl::PeerMap { epoch: 0, addrs };
+        for r in 1..ranks {
+            let l = links.to_spokes[r].as_mut().expect("every spoke registered");
+            l.write_ctrl(&map).with_context(|| format!("send peer map to rank {r}"))?;
+        }
+    }
+    println!("glb serve: fleet of {ranks} rank(s) resident on port {port}");
+
+    // -- the client plane ------------------------------------------------
+    let mut graphs: HashMap<u32, Arc<Graph>> = HashMap::new();
+    let mut epoch: u64 = 0;
+    loop {
+        let mut client = accept_client(&listener)?;
+        'jobs: loop {
+            let body = match wire::read_frame(&mut client, wire::MAX_FRAME_BYTES) {
+                Ok(Some(b)) => b,
+                Ok(None) => break 'jobs, // clean goodbye; next client
+                Err(e) => {
+                    eprintln!("glb serve: client read failed: {e}");
+                    break 'jobs;
+                }
+            };
+            let ctrl = match Ctrl::decode(&body) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("glb serve: bad client frame: {e}");
+                    break 'jobs;
+                }
+            };
+            match ctrl {
+                Ctrl::Submit { job: client_job, spec, bag } => {
+                    let parsed = match JobSpec::parse(&spec) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("glb serve: rejected job spec {spec:?}: {e}");
+                            break 'jobs;
+                        }
+                    };
+                    epoch += 1;
+                    for r in 1..ranks {
+                        let l = links.to_spokes[r].as_mut().expect("resident spoke link");
+                        l.write_ctrl(&Ctrl::Submit {
+                            job: epoch,
+                            spec: spec.clone(),
+                            bag: bag.clone(),
+                        })
+                        .with_context(|| format!("forward job {epoch} to rank {r}"))?;
+                    }
+                    let t0 = Instant::now();
+                    let (result, stats) = if ranks == 1 {
+                        run_job_single(&parsed, &bag, &mut graphs)?
+                    } else {
+                        let (result, stats, carry) =
+                            run_job(epoch, &parsed, &bag, 0, ranks, &mut links, &mut graphs)?;
+                        debug_assert!(carry.is_empty(), "rank 0 never sees early submissions");
+                        (result, stats)
+                    };
+                    let elapsed_ns = t0.elapsed().as_nanos() as u64;
+                    println!(
+                        "glb serve: job {epoch} [{spec}] -> {} in {:.1} ms",
+                        result.summary(),
+                        elapsed_ns as f64 / 1e6,
+                    );
+                    print_job_report(epoch, &spec, ranks, elapsed_ns, &result);
+                    on_job(&JobReport {
+                        epoch,
+                        spec: spec.clone(),
+                        rank: 0,
+                        stats,
+                        elapsed_ns,
+                        result: Some(result.clone()),
+                    });
+                    let reply =
+                        Ctrl::JobResult { job: client_job, bytes: GatherWire.encode(&result) };
+                    if let Err(e) = wire::write_frame(&mut client, &reply.to_body()) {
+                        eprintln!("glb serve: client went away before job {epoch}'s result: {e}");
+                        break 'jobs;
+                    }
+                }
+                Ctrl::Shutdown => {
+                    for r in 1..ranks {
+                        let l = links.to_spokes[r].as_mut().expect("resident spoke link");
+                        l.write_ctrl(&Ctrl::Shutdown)
+                            .with_context(|| format!("forward shutdown to rank {r}"))?;
+                    }
+                    println!("glb serve: fleet shut down after {epoch} job(s)");
+                    return Ok(());
+                }
+                other => {
+                    eprintln!("glb serve: unexpected client frame {other:?}");
+                    break 'jobs;
+                }
+            }
+        }
+    }
+}
+
+/// A spoke: boot once, then run every job rank 0 forwards until the
+/// shutdown frame arrives.
+fn serve_spoke(opts: &SocketRunOpts, on_job: &mut dyn FnMut(&JobReport)) -> Result<()> {
+    let (rank, ranks) = (opts.rank, opts.ranks);
+    let deadline = Instant::now() + opts.handshake_timeout;
+
+    // -- one-time fleet bootstrap (identical to the one-shot spoke) ------
+    let listener = TcpListener::bind(("0.0.0.0", 0)).context("bind mesh listener")?;
+    let mesh_port = listener.local_addr()?.port();
+    let mut ctrl = connect_retry(&opts.host, opts.port, deadline)?;
+    ctrl.write_all(&handshake_bytes(HS_CTRL, rank)).context("send control handshake")?;
+    let advertise_ip = match &opts.advertise {
+        Some(a) => a.clone(),
+        None => ctrl.local_addr()?.ip().to_string(),
+    };
+    let mut links = FleetLinks {
+        mesh: (0..ranks).map(|_| None).collect(),
+        to_spokes: Vec::new(),
+        to_root: None,
+    };
+    let mut to_hub = connect_retry(&opts.host, opts.port, deadline)?;
+    to_hub.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
+    links.mesh[0] = Some(Link::fresh(to_hub));
+    let reg = Ctrl::Register { rank: rank as u64, addr: format!("{advertise_ip}:{mesh_port}") };
+    wire::write_frame(&mut ctrl, &reg.to_body()).context("send registration")?;
+    ctrl.set_read_timeout(Some(opts.handshake_timeout))?;
+    let body = wire::read_frame(&mut ctrl, wire::MAX_FRAME_BYTES)
+        .context("read peer map")?
+        .ok_or_else(|| anyhow!("bootstrap closed before the peer map"))?;
+    let addrs = match Ctrl::decode(&body) {
+        Ok(Ctrl::PeerMap { epoch: 0, addrs }) if addrs.len() == ranks => addrs,
+        other => bail!("expected a {ranks}-rank peer map, got {other:?}"),
+    };
+    for (r, addr) in addrs.iter().enumerate().take(rank).skip(1) {
+        let (host, port) = addr
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow!("malformed mesh address {addr:?} for rank {r}"))?;
+        let port: u16 = port.parse().with_context(|| format!("mesh port in {addr:?}"))?;
+        let mut s = connect_retry(host, port, deadline)?;
+        s.write_all(&handshake_bytes(HS_MESH, rank)).context("send mesh handshake")?;
+        links.mesh[r] = Some(Link::fresh(s));
+    }
+    listener.set_nonblocking(true)?;
+    for _ in 0..ranks - 1 - rank {
+        let (s, kind, r) = accept_handshake(&listener, deadline, opts.handshake_timeout)?;
+        s.set_read_timeout(None)?;
+        if kind != HS_MESH || r <= rank || r >= ranks {
+            bail!("bad mesh handshake (kind {kind}, rank {r})");
+        }
+        if links.mesh[r].is_some() {
+            bail!("duplicate mesh link from rank {r}");
+        }
+        links.mesh[r] = Some(Link::fresh(s));
+    }
+    ctrl.set_read_timeout(None)?;
+    links.to_root = Some(Link::fresh(ctrl));
+
+    // -- the job loop ----------------------------------------------------
+    let mut graphs: HashMap<u32, Arc<Graph>> = HashMap::new();
+    let mut pending: VecDeque<Ctrl> = VecDeque::new();
+    loop {
+        let next = match pending.pop_front() {
+            Some(c) => c,
+            None => {
+                let l = links.to_root.as_mut().expect("spokes keep their root link");
+                l.read_ctrl()?
+                    .ok_or_else(|| anyhow!("lost the fleet control link while resident"))?
+            }
+        };
+        match next {
+            Ctrl::Submit { job, spec, bag } => {
+                let parsed = JobSpec::parse(&spec)
+                    .with_context(|| format!("rank {rank}: job {job} spec"))?;
+                let t0 = Instant::now();
+                let (_local, stats, carry) =
+                    run_job(job, &parsed, &bag, rank, ranks, &mut links, &mut graphs)?;
+                pending.extend(carry);
+                on_job(&JobReport {
+                    epoch: job,
+                    spec,
+                    rank,
+                    stats,
+                    elapsed_ns: t0.elapsed().as_nanos() as u64,
+                    result: None,
+                });
+            }
+            Ctrl::Shutdown => return Ok(()),
+            other => bail!("rank {rank}: unexpected control frame between jobs: {other:?}"),
+        }
+    }
+}
+
+/// A single-rank fleet runs each job in-process (there is no mesh), with
+/// the same seeding as a one-shot single-rank run.
+fn run_job_single(
+    spec: &JobSpec,
+    root_bag: &[u8],
+    graphs: &mut HashMap<u32, Arc<Graph>>,
+) -> Result<(ServiceResult, WorkerStats)> {
+    let cfg = GlbConfig::new(1, spec.glb);
+    let graph = resolve_graph(spec, graphs);
+    let spec2 = spec.clone();
+    let bag2 = root_bag.to_vec();
+    let out = run_threads(
+        &cfg,
+        move |i, np| {
+            build_queue(&spec2, i, np, graph.as_ref(), &bag2)
+                .expect("validated job spec builds a queue")
+        },
+        |_| {},
+        &ServiceReducer,
+    );
+    Ok((out.result, out.log.total()))
+}
+
+/// Print the per-job machine-readable fleet report marker (schema
+/// `glb-serve-report/v1`, documented in `docs/operations.md`).
+fn print_job_report(epoch: u64, spec: &str, ranks: usize, elapsed_ns: u64, result: &ServiceResult) {
+    let result_json = match result {
+        ServiceResult::U64(v) => format!("{{\"kind\":\"u64\",\"value\":{v}}}"),
+        ServiceResult::VecF64(v) => format!(
+            "{{\"kind\":\"vec_f64\",\"len\":{},\"sum\":{:.17e}}}",
+            v.len(),
+            v.iter().sum::<f64>()
+        ),
+    };
+    println!(
+        "GLB-SERVE-REPORT {{\"schema\":\"glb-serve-report/v1\",\"job\":{epoch},\
+         \"spec\":\"{spec}\",\"ranks\":{ranks},\"elapsed_ns\":{elapsed_ns},\
+         \"result\":{result_json}}}"
+    );
+}
+
+/// Accept one `glb submit` client on the retained rendezvous listener
+/// (blocking indefinitely — a resident fleet waits for work).
+fn accept_client(listener: &TcpListener) -> Result<TcpStream> {
+    loop {
+        match listener.accept() {
+            Ok((mut s, _addr)) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                s.set_read_timeout(Some(Duration::from_secs(30)))?;
+                let mut hs = [0u8; 9];
+                if s.read_exact(&mut hs).is_err() {
+                    continue; // port scanner / dead dialer
+                }
+                if hs[0] != HS_CLIENT {
+                    eprintln!(
+                        "glb serve: rejected non-client handshake (kind {}) after bootstrap",
+                        hs[0]
+                    );
+                    continue;
+                }
+                s.set_read_timeout(None)?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The submit client
+// ---------------------------------------------------------------------------
+
+/// A `glb submit` connection to a resident fleet's rank 0. Jobs run
+/// sequentially: [`SubmitClient::submit`] blocks until the fleet
+/// streams the job's reduced result back.
+pub struct SubmitClient {
+    stream: TcpStream,
+    next_job: u64,
+}
+
+impl SubmitClient {
+    /// Dial the fleet (retrying until `timeout` so a submit racing the
+    /// fleet boot just waits) and handshake as a client.
+    pub fn connect(host: &str, port: u16, timeout: Duration) -> Result<Self> {
+        let mut stream = connect_retry(host, port, Instant::now() + timeout)?;
+        stream.write_all(&handshake_bytes(HS_CLIENT, 0)).context("send client handshake")?;
+        Ok(Self { stream, next_job: 1 })
+    }
+
+    /// Ship one job and block for its fleet-wide result.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<ServiceResult> {
+        let job = self.next_job;
+        self.next_job += 1;
+        let mut bag = Vec::new();
+        if let Some(b) = spec.root_bag() {
+            b.encode(&mut bag);
+        }
+        let frame = Ctrl::Submit { job, spec: spec.format(), bag };
+        wire::write_frame(&mut self.stream, &frame.to_body()).context("submit job")?;
+        let body = wire::read_frame(&mut self.stream, wire::MAX_FRAME_BYTES)
+            .context("read job result")?
+            .ok_or_else(|| anyhow!("fleet closed before the job result"))?;
+        match Ctrl::decode(&body) {
+            Ok(Ctrl::JobResult { job: j, bytes }) if j == job => GatherWire.decode(&bytes),
+            other => bail!("expected the result of job {job}, got {other:?}"),
+        }
+    }
+
+    /// Shut the whole fleet down (every rank exits cleanly).
+    pub fn shutdown(mut self) -> Result<()> {
+        wire::write_frame(&mut self.stream, &Ctrl::Shutdown.to_body()).context("send shutdown")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn glb_defaults() -> GlbParams {
+        GlbParams::default()
+    }
+
+    #[test]
+    fn job_spec_round_trips() {
+        let specs = [
+            JobSpec::uts(UtsParams { b0: 4.0, seed: 19, max_depth: 8 }, glb_defaults()),
+            JobSpec::fib(24, glb_defaults()),
+            JobSpec::bc(7, GlbParams { n: 127, w: 2, ..GlbParams::default() }),
+        ];
+        for s in specs {
+            let wire = s.format();
+            let back = JobSpec::parse(&wire).expect("round trip");
+            assert_eq!(back, s, "spec {wire:?}");
+        }
+    }
+
+    #[test]
+    fn job_spec_rejects_junk() {
+        assert!(JobSpec::parse("depth=8").is_err(), "missing app");
+        assert!(JobSpec::parse("app=quux").is_err(), "unknown app");
+        assert!(JobSpec::parse("app=fib fib-n=3 bogus=1").is_err(), "unknown key");
+        assert!(JobSpec::parse("app=fib fib-n=3 fib-n=4").is_err(), "duplicate key");
+    }
+
+    #[test]
+    fn service_bag_codec_round_trips() {
+        let bags = [
+            ServiceBag::Fib(ArrayListTaskBag::from_vec(vec![24, 7, 3])),
+            ServiceBag::Uts(UtsBag::new()),
+            ServiceBag::Bc(BcBag::from_intervals(vec![(3, 9)])),
+        ];
+        for b in bags {
+            let mut buf = Vec::new();
+            b.encode(&mut buf);
+            let (back, used) = ServiceBag::decode_slice(&buf).expect("decode");
+            assert_eq!(used, buf.len());
+            assert_eq!(back.size(), b.size());
+            let mut buf2 = Vec::new();
+            back.encode(&mut buf2);
+            assert_eq!(buf, buf2, "canonical re-encode");
+        }
+    }
+
+    #[test]
+    fn service_reducer_folds_both_kinds() {
+        let r = ServiceReducer;
+        assert_eq!(
+            r.reduce_all([ServiceResult::U64(2), ServiceResult::U64(5)]),
+            ServiceResult::U64(7)
+        );
+        let v = r.reduce_all([
+            ServiceResult::VecF64(vec![1.0, 2.0]),
+            ServiceResult::VecF64(vec![0.5, 0.25]),
+        ]);
+        assert_eq!(v, ServiceResult::VecF64(vec![1.5, 2.25]));
+    }
+
+    #[test]
+    #[should_panic(expected = "cross-app")]
+    fn service_reducer_rejects_cross_app() {
+        ServiceReducer.reduce(ServiceResult::U64(1), ServiceResult::VecF64(vec![1.0]));
+    }
+
+    #[test]
+    fn single_rank_jobs_match_one_shot() {
+        let mut graphs = HashMap::new();
+        let spec = JobSpec::fib(16, glb_defaults());
+        let bag = spec.root_bag().map(|b| {
+            let mut buf = Vec::new();
+            b.encode(&mut buf);
+            buf
+        });
+        let (res, _) = run_job_single(&spec, bag.as_deref().unwrap_or(&[]), &mut graphs).unwrap();
+        assert_eq!(res, ServiceResult::U64(crate::apps::fib::fib(16)));
+    }
+}

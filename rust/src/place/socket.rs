@@ -22,11 +22,15 @@
 //!    every lower rank and accepts every higher one, building one duplex
 //!    TCP link per pair (dials succeed through listen backlogs, so the
 //!    strict ordering cannot deadlock);
-//! 3. data frames are `[to: u64][msg body]` under a length prefix, sent
-//!    on the pair's own link and decoded only at the destination — a
-//!    frame for a place the receiving rank does not host is a protocol
-//!    violation (counted in [`misrouted_frames`], asserted zero by the
-//!    fleet tests).
+//! 3. data frames are `[to: u64][job: u64][msg body]` under a length
+//!    prefix, sent on the pair's own link and decoded only at the
+//!    destination — a frame for a place the receiving rank does not host
+//!    is a protocol violation (counted in [`misrouted_frames`], asserted
+//!    zero by the fleet tests), and a frame whose job epoch differs from
+//!    the receiver's current job is dropped and counted in
+//!    [`cross_epoch_frames`] (one-shot runs use epoch 0 everywhere; the
+//!    resident service of [`crate::place::service`] stamps every job
+//!    with its own epoch).
 //!
 //! Rank 0 keeps binding separate from advertising: it binds
 //! [`SocketRunOpts::bind`] (default: the advertised host) so
@@ -172,8 +176,11 @@ impl Default for SocketRunOpts {
 }
 
 // Handshake connection kinds.
-const HS_CTRL: u8 = 0;
-const HS_MESH: u8 = 1;
+pub(crate) const HS_CTRL: u8 = 0;
+pub(crate) const HS_MESH: u8 = 1;
+/// A `glb submit` client dialing a resident fleet's rank 0 (see
+/// [`crate::place::service`]).
+pub(crate) const HS_CLIENT: u8 = 2;
 
 /// Data frames that arrived at a rank not hosting their destination
 /// place — star-style relay traffic, which the mesh must never produce.
@@ -185,6 +192,19 @@ static MISROUTED_FRAMES: AtomicU64 = AtomicU64::new(0);
 /// [`MISROUTED_FRAMES`]). Zero on every rank of a healthy mesh.
 pub fn misrouted_frames() -> u64 {
     MISROUTED_FRAMES.load(Ordering::Relaxed)
+}
+
+/// Frames whose job epoch did not match the receiver's current job —
+/// dropped on arrival so one job's loot or credit can never leak into
+/// another. The epoch fences of the resident service make a non-zero
+/// count structurally impossible; the serve integration tests assert it
+/// stays zero on every rank.
+static CROSS_EPOCH_FRAMES: AtomicU64 = AtomicU64::new(0);
+
+/// Frames this process dropped for carrying another job's epoch (see
+/// [`CROSS_EPOCH_FRAMES`]). Zero on every rank of a healthy fleet.
+pub fn cross_epoch_frames() -> u64 {
+    CROSS_EPOCH_FRAMES.load(Ordering::Relaxed)
 }
 
 /// Bytes this process has put on / taken off the wire through the
@@ -270,37 +290,37 @@ pub fn io_threads_live() -> u64 {
 }
 
 /// Mailbox sender per *global* place id (`None` for remote places).
-type Mailboxes<B> = Arc<Vec<Option<Sender<Msg<B>>>>>;
+pub(crate) type Mailboxes<B> = Arc<Vec<Option<Sender<Msg<B>>>>>;
 /// Per-rank slots for gathered result payloads (rank 0 only).
-type ResultSlots = Arc<Mutex<Vec<Option<Vec<u8>>>>>;
+pub(crate) type ResultSlots = Arc<Mutex<Vec<Option<Vec<u8>>>>>;
 
 /// One rank's handle on its reactor: per-peer write queues, the waker
 /// that nudges the event loop after an enqueue, and the frame-buffer
 /// pool every send encodes into. Shared by workers, service threads,
 /// and the reactor itself; the sockets live inside the reactor only.
-struct NetCore {
+pub(crate) struct NetCore {
     /// Mesh write queue per peer rank (`None` for self / unconnected).
-    mesh: Vec<Option<Arc<OutQueue>>>,
+    pub(crate) mesh: Vec<Option<Arc<OutQueue>>>,
     /// Spoke → rank 0 control queue (`None` on rank 0).
-    ctrl: Option<Arc<OutQueue>>,
+    pub(crate) ctrl: Option<Arc<OutQueue>>,
     /// Rank 0 → spoke control queues (`None` slots on spokes; slot 0
     /// always `None`).
-    ctrl_peers: Vec<Option<Arc<OutQueue>>>,
+    pub(crate) ctrl_peers: Vec<Option<Arc<OutQueue>>>,
     /// Wakes the reactor out of `epoll_wait` after a queue push.
-    waker: Waker,
+    pub(crate) waker: Waker,
     /// Recycled frame buffers: encode paths `get()`, the reactor
     /// `put_arc()`s once a frame is flushed and unretained.
-    pool: Arc<BufferPool>,
+    pub(crate) pool: Arc<BufferPool>,
     /// Set by teardown; tells the reactor to drain queues, half-close,
     /// read every peer to EOF, and exit.
-    shutdown: AtomicBool,
+    pub(crate) shutdown: AtomicBool,
     /// Outstanding steal round-trips: `(victim place, nonce)` → enqueue
     /// time, resolved when the matching Loot/refusal is dispatched.
     steal_marks: Mutex<HashMap<(u64, u64), Instant>>,
 }
 
 impl NetCore {
-    fn new(ranks: usize, pool: Arc<BufferPool>) -> Self {
+    pub(crate) fn new(ranks: usize, pool: Arc<BufferPool>) -> Self {
         Self {
             mesh: (0..ranks).map(|_| None).collect(),
             ctrl: None,
@@ -314,7 +334,7 @@ impl NetCore {
 
     /// Enqueue a control frame to rank 0 (spokes). `false` when the
     /// queue is gone or already closed — the fleet is tearing down.
-    fn send_ctrl(&self, c: &Ctrl) -> bool {
+    pub(crate) fn send_ctrl(&self, c: &Ctrl) -> bool {
         let Some(q) = &self.ctrl else { return false };
         let mut buf = self.pool.get();
         wire::encode_ctrl_frame_into(c, &mut buf);
@@ -326,7 +346,7 @@ impl NetCore {
     }
 
     /// Enqueue a control frame to spoke `rank` (rank 0 only).
-    fn send_ctrl_to(&self, rank: usize, c: &Ctrl) -> bool {
+    pub(crate) fn send_ctrl_to(&self, rank: usize, c: &Ctrl) -> bool {
         let Some(q) = self.ctrl_peers.get(rank).and_then(|q| q.as_ref()) else {
             return false;
         };
@@ -354,7 +374,7 @@ fn purge_peer_marks(marks: &Mutex<HashMap<(u64, u64), Instant>>, topo: &Topology
 /// the sequence counter behind every outbound snapshot, and the bank
 /// where rank 0 folds the fleet view. Shared by the worker threads, the
 /// reactor's sample timer, and the teardown path.
-struct StatsShared {
+pub(crate) struct StatsShared {
     rank: usize,
     interval: Duration,
     hub: MetricsHub,
@@ -476,7 +496,7 @@ fn print_fleet_stats(
 
 /// The work-token ledger, as seen from one fleet process.
 #[derive(Clone)]
-enum FleetLedger {
+pub(crate) enum FleetLedger {
     /// Single-rank fleet: the plain in-process counter.
     Local(Arc<AtomicLedger>),
     /// Mesh member: rank-local credit ledger (see module docs).
@@ -537,14 +557,17 @@ impl Ledger for FleetLedger {
 /// Panics when the control path is gone mid-run — a dead control link
 /// loses termination credit, which is unrecoverable (the fleet could
 /// never quiesce), and all credit traffic stops before teardown.
-struct QueueHome {
-    net: Arc<NetCore>,
-    grants: Mutex<Receiver<u64>>,
+pub(crate) struct QueueHome {
+    pub(crate) net: Arc<NetCore>,
+    pub(crate) grants: Mutex<Receiver<u64>>,
+    /// The job epoch stamped on every credit frame (0 for one-shot
+    /// fleets; the resident service threads each job's epoch through).
+    pub(crate) job: u64,
 }
 
 impl CreditHome for QueueHome {
     fn deposit(&self, atoms: u64) {
-        if !self.net.send_ctrl(&Ctrl::Deposit { atoms }) {
+        if !self.net.send_ctrl(&Ctrl::Deposit { job: self.job, atoms }) {
             panic!("fleet control link lost (deposit)");
         }
         chaos::die_point(chaos::DURING_DEPOSIT);
@@ -555,7 +578,7 @@ impl CreditHome for QueueHome {
         // replenishes (one worker per node today, but cheap to keep
         // correct) pair each Grant with its Replenish.
         let rx = self.grants.lock().unwrap();
-        if !self.net.send_ctrl(&Ctrl::Replenish { want }) {
+        if !self.net.send_ctrl(&Ctrl::Replenish { job: self.job, want }) {
             panic!("fleet control link lost (replenish)");
         }
         rx.recv().expect("fleet control link closed awaiting grant")
@@ -563,8 +586,8 @@ impl CreditHome for QueueHome {
 }
 
 /// Rank 0's credit home: the root lives in-process.
-struct RootHome {
-    root: Arc<CreditRoot>,
+pub(crate) struct RootHome {
+    pub(crate) root: Arc<CreditRoot>,
 }
 
 impl CreditHome for RootHome {
@@ -664,7 +687,7 @@ impl ReaderDone {
 /// single total order is the cheapest way to keep those cross-variable
 /// reads mutually consistent without a lock (`glb lint` flags any
 /// attempt to relax them).
-struct RankRecovery {
+pub(crate) struct RankRecovery {
     rank: usize,
     membership: Arc<DynamicMembership>,
     ledgers: Vec<Mutex<PeerLedger>>,
@@ -738,7 +761,7 @@ impl RankRecovery {
 /// rank 0's reactor counts the Readys, and rank 0's main thread sends
 /// Go to every spoke once all have arrived *and* its own workers exist.
 #[derive(Default)]
-struct FleetGate {
+pub(crate) struct FleetGate {
     st: Mutex<GateSt>,
     cv: Condvar,
 }
@@ -793,14 +816,17 @@ impl FleetGate {
 /// The per-process message fabric: local mailboxes for this rank's
 /// places, one direct mesh write queue per remote rank (the reactor
 /// flushes them).
-struct SocketTransport<B> {
-    rank: usize,
-    topo: Topology,
-    p: usize,
-    local: Mailboxes<B>,
-    net: Arc<NetCore>,
+pub(crate) struct SocketTransport<B> {
+    pub(crate) rank: usize,
+    pub(crate) topo: Topology,
+    pub(crate) p: usize,
+    pub(crate) local: Mailboxes<B>,
+    pub(crate) net: Arc<NetCore>,
     /// Crash-tolerance books; `None` keeps the fail-fast send path.
-    recovery: Option<Arc<RankRecovery>>,
+    pub(crate) recovery: Option<Arc<RankRecovery>>,
+    /// The job epoch stamped on every outbound data frame (0 for
+    /// one-shot fleets).
+    pub(crate) job: u64,
 }
 
 impl<B> Clone for SocketTransport<B> {
@@ -812,6 +838,7 @@ impl<B> Clone for SocketTransport<B> {
             local: self.local.clone(),
             net: self.net.clone(),
             recovery: self.recovery.clone(),
+            job: self.job,
         }
     }
 }
@@ -854,7 +881,7 @@ impl<B: WireCodec> SocketTransport<B> {
             return;
         };
         let mut buf = self.net.pool.get();
-        let body_len = wire::encode_data_frame_into(to, msg, &mut buf);
+        let body_len = wire::encode_data_frame_into(to, self.job, msg, &mut buf);
         if body_len > wire::MAX_FRAME_BYTES {
             self.net.pool.put(buf);
             return;
@@ -925,7 +952,7 @@ impl<B: WireCodec> SocketTransport<B> {
                 // `dead` above — never neither.
                 let msg = Msg::Loot { victim, bag: Some(bag), lifeline, nonce, credit };
                 let mut buf = self.net.pool.get();
-                let body_len = wire::encode_data_frame_into(to, &msg, &mut buf);
+                let body_len = wire::encode_data_frame_into(to, self.job, &msg, &mut buf);
                 let frame = Arc::new(buf);
                 guard.sent += 1;
                 guard.attached += credit;
@@ -961,7 +988,7 @@ impl<B: WireCodec> SocketTransport<B> {
             // decode route + message, and lift the bag back out.
             let decoded = wire::decode_data_frame_body::<B>(&e.frame[wire::FRAME_LEN_BYTES..]);
             let bag = match decoded {
-                Ok((_, Msg::Loot { bag: Some(b), .. })) => b,
+                Ok((_, _, Msg::Loot { bag: Some(b), .. })) => b,
                 Ok(_) => {
                     eprintln!("glb: retained frame for dead rank {dead} is not a loot bag");
                     std::process::exit(1);
@@ -1024,7 +1051,11 @@ impl<B: WireCodec> SocketTransport<B> {
 }
 
 /// Carry out a worker's requested effects.
-fn pump<B: WireCodec>(me: PlaceId, fx: &mut Vec<Effect<B>>, transport: &SocketTransport<B>) {
+pub(crate) fn pump<B: WireCodec>(
+    me: PlaceId,
+    fx: &mut Vec<Effect<B>>,
+    transport: &SocketTransport<B>,
+) {
     for e in fx.drain(..) {
         match e {
             Effect::Send { to, msg } => {
@@ -1037,7 +1068,7 @@ fn pump<B: WireCodec>(me: PlaceId, fx: &mut Vec<Effect<B>>, transport: &SocketTr
 }
 
 /// The crash-tolerance hooks one worker thread carries.
-struct TolerantWorker {
+pub(crate) struct TolerantWorker {
     rec: Arc<RankRecovery>,
     ack: AckOut,
 }
@@ -1127,7 +1158,7 @@ const ADAPT_OBS_INTERVAL: Duration = Duration::from_millis(20);
 
 /// Per-place worker thread body (mirror of the thread runtime's
 /// `place_main`, driving the same engine over the socket fabric).
-fn socket_place_main<Q, P>(
+pub(crate) fn socket_place_main<Q, P>(
     mut worker: Worker<Q, FleetLedger>,
     rx: Receiver<Msg<Q::Bag>>,
     transport: SocketTransport<Q::Bag>,
@@ -1236,7 +1267,7 @@ where
 
 /// Which fleet socket a reactor connection is.
 #[derive(Clone, Copy)]
-enum ConnKind {
+pub(crate) enum ConnKind {
     /// Mesh data link to `peer`.
     Mesh { peer: usize },
     /// Rank 0's control link to spoke `peer`.
@@ -1247,11 +1278,11 @@ enum ConnKind {
 
 /// One socket inside the reactor: the stream, its staged read buffer,
 /// and its write queue.
-struct ReactorConn {
-    stream: TcpStream,
-    kind: ConnKind,
-    asm: FrameAssembler,
-    out: Arc<OutQueue>,
+pub(crate) struct ReactorConn {
+    pub(crate) stream: TcpStream,
+    pub(crate) kind: ConnKind,
+    pub(crate) asm: FrameAssembler,
+    pub(crate) out: Arc<OutQueue>,
     /// `EPOLLOUT` currently armed (the last flush hit `WouldBlock`).
     out_armed: bool,
     /// Peer EOF / error / protocol violation: reads are over.
@@ -1267,10 +1298,22 @@ struct ReactorConn {
 
 impl ReactorConn {
     fn new(stream: TcpStream, kind: ConnKind, out: Arc<OutQueue>) -> Self {
+        Self::resume(stream, kind, FrameAssembler::new(wire::MAX_FRAME_BYTES), out)
+    }
+
+    /// Rebuild a connection around a stream retained across jobs by the
+    /// resident service, carrying its staged read buffer (a frame may
+    /// straddle the job boundary) into the next job's reactor.
+    pub(crate) fn resume(
+        stream: TcpStream,
+        kind: ConnKind,
+        asm: FrameAssembler,
+        out: Arc<OutQueue>,
+    ) -> Self {
         Self {
             stream,
             kind,
-            asm: FrameAssembler::new(wire::MAX_FRAME_BYTES),
+            asm,
             out,
             out_armed: false,
             read_done: false,
@@ -1284,14 +1327,14 @@ impl ReactorConn {
 /// Rank 0's crash-tolerance handles inside the reactor. The channel
 /// senders live only here, so the coordinator's `death_rx` disconnects
 /// — and its thread exits — exactly when the reactor does.
-struct RootReactorTol {
+pub(crate) struct RootReactorTol {
     shared: Arc<RootTolerant>,
     death_tx: Sender<usize>,
     reconcile_tx: Sender<(usize, u64, u64)>,
 }
 
 /// The reactor's rank-specific control-plane duties.
-enum ReactorRole {
+pub(crate) enum ReactorRole {
     /// Rank 0: inline credit root, result slots, barrier bookkeeping.
     Root {
         root: Arc<CreditRoot>,
@@ -1315,7 +1358,10 @@ enum ReactorRole {
 /// A frame lifted off a connection, owned (so the staged buffer borrow
 /// ends before any dispatch side effect).
 enum Parsed<B> {
-    Data(PlaceId, Msg<B>),
+    Data(PlaceId, u64, Msg<B>),
+    /// A resident fleet's end-of-job fence on a mesh link (see
+    /// [`wire::encode_fence_frame_into`]), carrying its job epoch.
+    Fence(u64),
     Ctrl(Ctrl),
     /// Undecodable: protocol violation, drop the link's read side.
     Bad,
@@ -1325,7 +1371,7 @@ enum Parsed<B> {
 /// sample is due, how many ranks the fleet has (for the `heard/ranks`
 /// display), and the previously printed fleet sample (rank 0 derives
 /// rates from consecutive cumulative samples).
-struct ReactorStats {
+pub(crate) struct ReactorStats {
     shared: Arc<StatsShared>,
     next: Instant,
     ranks: usize,
@@ -1353,17 +1399,52 @@ impl Drop for IoLiveGuard {
 /// per-peer write queues in `writev` batches. Never blocks on anything
 /// but the poller: blocking recovery work is handed to dedicated
 /// threads over channels.
-struct Reactor<B> {
-    poller: Poller,
-    conns: Vec<ReactorConn>,
-    core: Arc<NetCore>,
-    my_rank: usize,
-    topo: Topology,
-    local: Mailboxes<B>,
-    recovery: Option<Arc<RankRecovery>>,
-    role: ReactorRole,
+pub(crate) struct Reactor<B> {
+    pub(crate) poller: Poller,
+    pub(crate) conns: Vec<ReactorConn>,
+    pub(crate) core: Arc<NetCore>,
+    pub(crate) my_rank: usize,
+    pub(crate) topo: Topology,
+    pub(crate) local: Mailboxes<B>,
+    pub(crate) recovery: Option<Arc<RankRecovery>>,
+    pub(crate) role: ReactorRole,
     /// Armed by `--stats`: the periodic sample/ship/print timer.
-    stats: Option<ReactorStats>,
+    pub(crate) stats: Option<ReactorStats>,
+    /// The job epoch this reactor serves: inbound frames stamped with a
+    /// different epoch are dropped (and counted). One-shot fleets run
+    /// everything as job 0.
+    pub(crate) job: u64,
+    /// `Some` puts the reactor in resident mode ([`Reactor::run_resident`]):
+    /// links are kept open across jobs and the end of a job is marked by
+    /// epoch fences instead of EOFs.
+    pub(crate) resident: Option<ResidentReactor>,
+}
+
+/// The resident-mode bookkeeping of a per-job reactor (see
+/// [`Reactor::run_resident`]).
+pub(crate) struct ResidentReactor {
+    /// Per-rank: this job's fence arrived on the mesh link from that
+    /// peer (self and unconnected slots count as already fenced).
+    fences: Vec<bool>,
+    /// Control frames that belong to the *next* job (a `Submit` or
+    /// `Shutdown` the root sent while our current job was still
+    /// draining), handed back to the service loop at exit.
+    carryover: Vec<Ctrl>,
+}
+
+impl ResidentReactor {
+    pub(crate) fn new(ranks: usize) -> Self {
+        Self { fences: vec![false; ranks], carryover: Vec::new() }
+    }
+}
+
+/// What a resident reactor hands back to the service loop when its job
+/// ends: every fleet socket (with staged read bytes intact) for the
+/// next job's reactor, plus any next-job control frames that arrived
+/// early.
+pub(crate) struct ResidentExit {
+    pub(crate) conns: Vec<ReactorConn>,
+    pub(crate) carryover: Vec<Ctrl>,
 }
 
 impl<B> Reactor<B>
@@ -1436,6 +1517,93 @@ where
         // fleet tore down underneath — it must be discarded, never
         // sampled (the latency books count completed round-trips only).
         lock_clean(&self.core.steal_marks).clear();
+    }
+
+    /// The resident-fleet variant of [`Reactor::run`]: drive one job to
+    /// completion *without* ever closing a fleet socket, then hand every
+    /// stream back for the next job.
+    ///
+    /// End-of-job differs from one-shot teardown in exactly one way: no
+    /// link is half-closed and no EOF is expected. Instead, when this
+    /// rank's workers are done (the shutdown flag flips) the reactor
+    /// enqueues one epoch fence behind everything already queued on each
+    /// mesh link; FIFO delivery means a peer that has seen our fence has
+    /// seen every frame our job sent it. The loop exits once the flag is
+    /// set, our fences are out and fully flushed, every mesh peer's
+    /// fence arrived, every spoke's result arrived (root only), and all
+    /// write queues are empty. An EOF on any link mid-service means a
+    /// rank died — always fatal, as for a one-shot root.
+    pub(crate) fn run_resident(mut self) -> ResidentExit {
+        if let Err(e) = self.arm() {
+            eprintln!("glb: rank {}: reactor setup failed: {e}", self.my_rank);
+            std::process::exit(1);
+        }
+        let mut events: Vec<Event> = Vec::new();
+        let mut fences_sent = false;
+        loop {
+            let shutdown = self.core.shutdown.load(Ordering::Acquire);
+            if shutdown && !fences_sent {
+                fences_sent = true;
+                for c in &self.conns {
+                    if let ConnKind::Mesh { .. } = c.kind {
+                        let mut buf = self.core.pool.get();
+                        wire::encode_fence_frame_into(self.job, &mut buf);
+                        c.out.push(Arc::new(buf));
+                    }
+                }
+            }
+            for i in 0..self.conns.len() {
+                self.flush_one(i);
+            }
+            if self.conns.iter().any(|c| c.read_done || c.wr_closed) {
+                eprintln!("glb: rank {}: lost a fleet link mid-service", self.my_rank);
+                std::process::exit(1);
+            }
+            if shutdown && fences_sent && self.resident_quiet() {
+                break;
+            }
+            if let Err(e) = self.poller.wait(&mut events, -1) {
+                eprintln!("glb: rank {}: reactor poll failed: {e}", self.my_rank);
+                std::process::exit(1);
+            }
+            for ev in events.iter().copied() {
+                if ev.token == WAKE_TOKEN {
+                    self.core.waker.drain();
+                } else if ev.readable && !self.conns[ev.token as usize].read_done {
+                    self.read_ready(ev.token as usize);
+                }
+            }
+        }
+        // Same mark hygiene as one-shot teardown; a fresh NetCore serves
+        // the next job, but the latency books are process-wide.
+        lock_clean(&self.core.steal_marks).clear();
+        for c in &self.conns {
+            let _ = self.poller.remove(c.stream.as_raw_fd());
+        }
+        let carryover = match self.resident.take() {
+            Some(res) => res.carryover,
+            None => Vec::new(),
+        };
+        ResidentExit { conns: self.conns, carryover }
+    }
+
+    /// Resident end-of-job condition beyond the shutdown flag and our
+    /// own fences being enqueued: every peer fence and spoke result is
+    /// in, and every write queue is fully on the wire
+    /// ([`OutQueue::flush`] pops a frame only once its last byte is
+    /// written, so an empty, unarmed queue has nothing in flight).
+    fn resident_quiet(&self) -> bool {
+        let Some(res) = &self.resident else { return false };
+        let fenced = self.conns.iter().all(|c| match c.kind {
+            ConnKind::Mesh { peer } => res.fences.get(peer).copied().unwrap_or(true),
+            _ => true,
+        });
+        let results_in = self.conns.iter().all(|c| match c.kind {
+            ConnKind::CtrlRoot { .. } => c.saw_result,
+            _ => true,
+        });
+        let flushed = self.conns.iter().all(|c| c.out.is_empty() && !c.out_armed);
+        fenced && results_in && flushed
     }
 
     /// `epoll_wait` timeout: indefinite without `--stats`, else the time
@@ -1565,12 +1733,14 @@ where
                         );
                         FRAMES_RX.fetch_add(1, Ordering::Relaxed);
                         match kind {
-                            ConnKind::Mesh { .. } => {
-                                match wire::decode_data_frame_body::<B>(body) {
-                                    Ok((to, msg)) => Parsed::Data(to, msg),
+                            ConnKind::Mesh { .. } => match wire::fence_job(body) {
+                                Ok(Some(job)) => Parsed::Fence(job),
+                                Ok(None) => match wire::decode_data_frame_body::<B>(body) {
+                                    Ok((to, job, msg)) => Parsed::Data(to, job, msg),
                                     Err(_) => Parsed::Bad,
-                                }
-                            }
+                                },
+                                Err(_) => Parsed::Bad,
+                            },
                             _ => match Ctrl::decode(body) {
                                 Ok(c) => Parsed::Ctrl(c),
                                 Err(_) => Parsed::Bad,
@@ -1581,7 +1751,10 @@ where
             };
             let ok = match (parsed, kind) {
                 (Parsed::Bad, _) => false,
-                (Parsed::Data(to, msg), ConnKind::Mesh { peer }) => self.on_mesh_msg(peer, to, msg),
+                (Parsed::Data(to, job, msg), ConnKind::Mesh { peer }) => {
+                    self.on_mesh_msg(peer, to, job, msg)
+                }
+                (Parsed::Fence(job), ConnKind::Mesh { peer }) => self.on_fence(peer, job),
                 (Parsed::Ctrl(c), ConnKind::CtrlRoot { peer }) => self.on_root_ctrl(i, peer, c),
                 (Parsed::Ctrl(c), ConnKind::CtrlSpoke) => self.on_spoke_ctrl(c),
                 _ => false,
@@ -1597,13 +1770,21 @@ where
     /// outstanding steal when the real response lands (so a later
     /// synthesized refusal can never be stale) and count the credit
     /// delivered from this peer.
-    fn on_mesh_msg(&mut self, peer: usize, to: PlaceId, msg: Msg<B>) -> bool {
+    fn on_mesh_msg(&mut self, peer: usize, to: PlaceId, job: u64, msg: Msg<B>) -> bool {
         if to >= self.topo.places() || self.topo.node_of(to) != self.my_rank {
             // A frame for a place this rank does not host would need
             // star-style forwarding — which the mesh must never produce.
             MISROUTED_FRAMES.fetch_add(1, Ordering::Relaxed);
             debug_assert!(false, "data frame for place {to} arrived at rank {}", self.my_rank);
             return false;
+        }
+        if job != self.job {
+            // Another job's loot or steal can never enter this job's
+            // books: drop the frame, keep the link (the epoch fences
+            // make this structurally unreachable; the counter is the
+            // belt-and-braces audit the serve tests assert zero).
+            CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+            return true;
         }
         if let Msg::Loot { victim, nonce: Some(n), .. } = &msg {
             // Loot or refusal, the steal round-trip is complete.
@@ -1630,6 +1811,23 @@ where
         true
     }
 
+    /// A mesh epoch fence: in resident mode it marks the peer's job-N
+    /// traffic as fully delivered (FIFO links put it after every data
+    /// frame of the job). A one-shot fleet must never see one.
+    fn on_fence(&mut self, peer: usize, job: u64) -> bool {
+        let Some(res) = &mut self.resident else {
+            return false; // protocol violation outside resident mode
+        };
+        if job != self.job {
+            CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        if let Some(f) = res.fences.get_mut(peer) {
+            *f = true;
+        }
+        true
+    }
+
     /// Rank 0's control-plane duties, inline (every handler is
     /// non-blocking): barrier arrivals, credit deposits/replenishes,
     /// result collection, ack banking/forwarding, reconcile routing.
@@ -1642,7 +1840,11 @@ where
                 gate.ready_arrived();
                 true
             }
-            Ctrl::Deposit { atoms } => {
+            Ctrl::Deposit { job, atoms } => {
+                if job != self.job {
+                    CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
                 if let Some(t) = tol {
                     t.shared.deposited[peer].fetch_add(atoms, Ordering::SeqCst);
                 }
@@ -1651,14 +1853,22 @@ where
                 root.deposit(atoms);
                 true
             }
-            Ctrl::Replenish { want } => {
+            Ctrl::Replenish { job, want } => {
+                if job != self.job {
+                    CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
                 let atoms = root.mint(want);
                 if let Some(t) = tol {
                     t.shared.granted[peer].fetch_add(atoms, Ordering::SeqCst);
                 }
-                self.core.send_ctrl_to(peer, &Ctrl::Grant { atoms })
+                self.core.send_ctrl_to(peer, &Ctrl::Grant { job, atoms })
             }
-            Ctrl::Result { bytes } => {
+            Ctrl::Result { job, bytes } => {
+                if job != self.job {
+                    CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
                 lock_clean(results)[peer] = Some(bytes);
                 self.conns[i].saw_result = true;
                 true
@@ -1713,7 +1923,11 @@ where
                 gate.go();
                 true
             }
-            Ctrl::Grant { atoms } => {
+            Ctrl::Grant { job, atoms } => {
+                if job != self.job {
+                    CROSS_EPOCH_FRAMES.fetch_add(1, Ordering::Relaxed);
+                    return true;
+                }
                 // Receiver gone means no ledger is waiting: ignore.
                 if let Some(tx) = grant_tx {
                     let _ = tx.send(atoms);
@@ -1747,6 +1961,14 @@ where
                 // Post-recovery epoch republication: informational (the
                 // Leave already carried the transition); accepted so a
                 // future join path can reuse the frame.
+                true
+            }
+            queued @ (Ctrl::Submit { .. } | Ctrl::Shutdown) if self.resident.is_some() => {
+                // The root already moved on to the next job while ours
+                // still drains: park the frame for the service loop.
+                if let Some(res) = &mut self.resident {
+                    res.carryover.push(queued);
+                }
                 true
             }
             other => {
@@ -1940,7 +2162,7 @@ fn root_coordinator<B>(
 /// `deadline`: the stream comes back blocking, nodelay, with its
 /// 9-byte `[kind, rank]` handshake already read (under `timeout`, which
 /// is left set — callers clear it once their per-kind setup is done).
-fn accept_handshake(
+pub(crate) fn accept_handshake(
     listener: &TcpListener,
     deadline: Instant,
     timeout: Duration,
@@ -1967,7 +2189,7 @@ fn accept_handshake(
     }
 }
 
-fn connect_retry(host: &str, port: u16, deadline: Instant) -> Result<TcpStream> {
+pub(crate) fn connect_retry(host: &str, port: u16, deadline: Instant) -> Result<TcpStream> {
     loop {
         match TcpStream::connect((host, port)) {
             Ok(s) => {
@@ -1984,7 +2206,7 @@ fn connect_retry(host: &str, port: u16, deadline: Instant) -> Result<TcpStream> 
     }
 }
 
-fn handshake_bytes(kind: u8, rank: usize) -> [u8; 9] {
+pub(crate) fn handshake_bytes(kind: u8, rank: usize) -> [u8; 9] {
     let mut hs = [0u8; 9];
     hs[0] = kind;
     hs[1..].copy_from_slice(&(rank as u64).to_le_bytes());
@@ -1992,7 +2214,7 @@ fn handshake_bytes(kind: u8, rank: usize) -> [u8; 9] {
 }
 
 /// How (whether) per-rank results funnel to rank 0 after the run.
-trait ResultPlan<R>: Copy {
+pub(crate) trait ResultPlan<R>: Copy {
     const GATHER: bool;
     fn encode(&self, result: &R) -> Vec<u8>;
     fn decode(&self, bytes: &[u8]) -> Result<R>;
@@ -2015,7 +2237,7 @@ impl<R> ResultPlan<R> for LocalOnly {
 /// [`run_sockets_reduced`]: results travel the control link as their
 /// wire encoding and rank 0 folds the fleet.
 #[derive(Clone, Copy)]
-struct GatherWire;
+pub(crate) struct GatherWire;
 
 impl<R: WireCodec> ResultPlan<R> for GatherWire {
     const GATHER: bool = true;
@@ -2330,7 +2552,7 @@ where
     } else {
         let grants = grants_rx.take().expect("spokes hold the grant channel");
         FleetLedger::Credit(CreditLedger::new(
-            Arc::new(QueueHome { net: net.clone(), grants: Mutex::new(grants) }),
+            Arc::new(QueueHome { net: net.clone(), grants: Mutex::new(grants), job: 0 }),
             INITIAL_RANK_ATOMS,
         ))
     };
@@ -2403,6 +2625,8 @@ where
                 ranks,
                 prev: None,
             }),
+            job: 0,
+            resident: None,
         };
         // Relaxed: spawn accounting only. The spawn below and the final
         // join are the synchronization edges any reader runs behind.
@@ -2426,6 +2650,7 @@ where
         local: local_tx,
         net: net.clone(),
         recovery: recovery.clone(),
+        job: 0,
     };
 
     // The detector broadcasts Terminate to every place the moment all
@@ -2564,7 +2789,7 @@ where
 
     // -- result gathering (spoke side; rides the control queue) ----------
     if P::GATHER && ranks > 1 && rank != 0 {
-        let sent = net.send_ctrl(&Ctrl::Result { bytes: plan.encode(&result) });
+        let sent = net.send_ctrl(&Ctrl::Result { job: 0, bytes: plan.encode(&result) });
         if !sent {
             bail!("fleet control link closed before the result was sent");
         }

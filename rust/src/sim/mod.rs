@@ -316,11 +316,13 @@ impl<Q: TaskQueue> Sim<Q> {
                         self.cross_messages += 1;
                         // Cross-node messages serialize what the socket
                         // transport actually frames: the codec envelope
-                        // plus the mesh data frame's destination prefix.
+                        // plus the mesh data frame's destination and
+                        // job-epoch prefix words.
                         let bytes = msg.wire_bytes(self.cost.item_bytes, |b: &Q::Bag| {
                             use crate::glb::task_bag::TaskBag;
                             b.size()
-                        }) + crate::glb::wire::DATA_ROUTE_BYTES;
+                        }) + crate::glb::wire::DATA_ROUTE_BYTES
+                            + crate::glb::wire::DATA_JOB_BYTES;
                         // Occupy the source NIC: per-message overhead +
                         // serialization, shared by the node's places.
                         let occupy = self.arch.nic_msg_overhead_ns

@@ -84,6 +84,84 @@ fn complete_wire_coverage_lints_clean() {
     assert!(findings.is_empty(), "expected clean:\n{}", render(&findings));
 }
 
+// ---- rule 2: wire-protocol doc cross-check -------------------------
+
+/// A spec fixture documenting every tag in [`WIRE_FIXTURE`], plus the
+/// `CTRL_VARIANTS` pin (exempt from the stale-tag direction).
+const DOC_FIXTURE: &str = "# Wire protocol\n\n\
+Msg tags: TAG_STEAL, TAG_LOOT, TAG_TERMINATE.\n\
+Ctrl tags: CTRL_REGISTER, CTRL_GO.\n\
+The property suite pins the registry size via CTRL_VARIANTS.\n";
+
+#[test]
+fn documented_registry_lints_clean() {
+    let files = [
+        src("rust/src/glb/wire.rs", WIRE_FIXTURE),
+        src("rust/tests/properties.rs", &props_fixture("")),
+        src("docs/wire-protocol.md", DOC_FIXTURE),
+    ];
+    let findings = lint_sources(&files);
+    assert!(findings.is_empty(), "expected clean:\n{}", render(&findings));
+}
+
+#[test]
+fn undocumented_wire_tag_is_one_finding() {
+    let doc = DOC_FIXTURE.replace(", TAG_TERMINATE", "");
+    let files = [
+        src("rust/src/glb/wire.rs", WIRE_FIXTURE),
+        src("rust/tests/properties.rs", &props_fixture("")),
+        src("docs/wire-protocol.md", &doc),
+    ];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::WireDoc);
+    assert_eq!(findings[0].path, "rust/src/glb/wire.rs");
+    assert!(
+        findings[0].message.contains("TAG_TERMINATE"),
+        "finding must name the undocumented tag: {}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn stale_doc_tag_is_one_finding() {
+    let doc = format!("{DOC_FIXTURE}Retired: CTRL_HANDSHAKE2 framing.\n");
+    let files = [
+        src("rust/src/glb/wire.rs", WIRE_FIXTURE),
+        src("rust/tests/properties.rs", &props_fixture("")),
+        src("docs/wire-protocol.md", &doc),
+    ];
+    let findings = lint_sources(&files);
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::WireDoc);
+    assert_eq!(findings[0].path, "docs/wire-protocol.md");
+    assert_eq!(findings[0].line, 6, "stale tag sits on the appended line");
+    assert!(
+        findings[0].message.contains("CTRL_HANDSHAKE2"),
+        "finding must name the stale tag: {}",
+        findings[0].message
+    );
+}
+
+#[test]
+fn missing_protocol_doc_fails_the_tree_lint() {
+    // A tree with a wire registry but no docs/wire-protocol.md: the
+    // tree walk itself reports the absent spec.
+    let dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("glb-wire-doc-fixture");
+    let glb_dir = dir.join("rust/src/glb");
+    std::fs::create_dir_all(&glb_dir).expect("mk fixture tree");
+    std::fs::write(glb_dir.join("wire.rs"), WIRE_FIXTURE).expect("write wire fixture");
+    std::fs::create_dir_all(dir.join("rust/tests")).expect("mk tests dir");
+    std::fs::write(dir.join("rust/tests/properties.rs"), props_fixture(""))
+        .expect("write props fixture");
+    let findings = lint_tree(&dir).expect("lint walks the fixture tree");
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(findings.len(), 1, "unexpected findings:\n{}", render(&findings));
+    assert_eq!(findings[0].rule, Rule::WireDoc);
+    assert_eq!(findings[0].path, "docs/wire-protocol.md");
+    assert!(findings[0].message.contains("missing protocol spec"));
+}
+
 #[test]
 fn new_ctrl_tag_without_property_coverage_fails() {
     // A PR adds CTRL_SUBMIT but forgets the property suite entirely:

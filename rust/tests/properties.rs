@@ -242,9 +242,10 @@ fn random_snapshot(g: &mut Gen) -> glb::glb::StatsSnapshot {
 
 /// How many `Ctrl` variants [`random_ctrl`] covers — loop `0..CTRL_VARIANTS`
 /// so every run exercises every frame type, including the
-/// fault-tolerance frames (`Join`/`Leave`/`Ack`/`Reconcile`) and the
-/// telemetry frame (`Stats`).
-const CTRL_VARIANTS: usize = 13;
+/// fault-tolerance frames (`Join`/`Leave`/`Ack`/`Reconcile`), the
+/// telemetry frame (`Stats`), and the resident-fleet service frames
+/// (`Submit`/`JobResult`/`Shutdown`).
+const CTRL_VARIANTS: usize = 16;
 
 /// A random `Ctrl` of the given variant index.
 fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
@@ -260,10 +261,13 @@ fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
         },
         2 => Ctrl::Ready { rank: g.u64(0..u64::MAX) },
         3 => Ctrl::Go,
-        4 => Ctrl::Deposit { atoms: g.u64(0..u64::MAX) },
-        5 => Ctrl::Replenish { want: g.u64(0..u64::MAX) },
-        6 => Ctrl::Grant { atoms: g.u64(0..u64::MAX) },
-        7 => Ctrl::Result { bytes: (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect() },
+        4 => Ctrl::Deposit { job: g.u64(0..u64::MAX), atoms: g.u64(0..u64::MAX) },
+        5 => Ctrl::Replenish { job: g.u64(0..u64::MAX), want: g.u64(0..u64::MAX) },
+        6 => Ctrl::Grant { job: g.u64(0..u64::MAX), atoms: g.u64(0..u64::MAX) },
+        7 => Ctrl::Result {
+            job: g.u64(0..u64::MAX),
+            bytes: (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect(),
+        },
         8 => Ctrl::Join {
             epoch: g.u64(0..u64::MAX),
             rank: g.u64(0..u64::MAX),
@@ -282,7 +286,17 @@ fn random_ctrl(g: &mut Gen, variant: usize) -> wire::Ctrl {
             sent: g.u64(0..u64::MAX),
             received: g.u64(0..u64::MAX),
         },
-        _ => Ctrl::Stats(random_snapshot(g)),
+        12 => Ctrl::Stats(random_snapshot(g)),
+        13 => Ctrl::Submit {
+            job: g.u64(0..u64::MAX),
+            spec: random_str(g, 64),
+            bag: (0..g.usize(0..96)).map(|_| g.u64(0..256) as u8).collect(),
+        },
+        14 => Ctrl::JobResult {
+            job: g.u64(0..u64::MAX),
+            bytes: (0..g.usize(0..64)).map(|_| g.u64(0..256) as u8).collect(),
+        },
+        _ => Ctrl::Shutdown,
     }
 }
 
@@ -357,11 +371,12 @@ fn prop_pooled_encode_matches_allocating_encode_byte_for_byte() {
         // Data frames, every Msg variant: encode_data_frame_into on a
         // recycled pool buffer vs the allocating body + frame() pair.
         let to = g.usize(0..1 << 20);
+        let job = g.u64(0..u64::MAX);
         let bag = random_uts_bag(g);
         let msg = random_msg(g, bag);
-        let old = wire::frame(wire::encode_data_frame_body(to, &msg));
+        let old = wire::frame(wire::encode_data_frame_body(to, job, &msg));
         let mut buf = pool.get();
-        let body_len = wire::encode_data_frame_into(to, &msg, &mut buf);
+        let body_len = wire::encode_data_frame_into(to, job, &msg, &mut buf);
         assert_eq!(buf, old, "pooled data frame must be bit-identical");
         assert_eq!(body_len + wire::FRAME_LEN_BYTES, old.len());
         // Recycle and re-encode a different message: a dirty recycled
@@ -369,9 +384,9 @@ fn prop_pooled_encode_matches_allocating_encode_byte_for_byte() {
         pool.put(buf);
         let bag2 = random_uts_bag(g);
         let msg2 = random_msg(g, bag2);
-        let old2 = wire::frame(wire::encode_data_frame_body(to, &msg2));
+        let old2 = wire::frame(wire::encode_data_frame_body(to, job, &msg2));
         let mut buf2 = pool.get();
-        wire::encode_data_frame_into(to, &msg2, &mut buf2);
+        wire::encode_data_frame_into(to, job, &msg2, &mut buf2);
         assert_eq!(buf2, old2, "recycled buffer must encode identically");
         pool.put(buf2);
         // Control frames, every Ctrl variant.
@@ -398,10 +413,11 @@ fn prop_frame_assembler_decodes_any_split_points() {
         let mut stream = Vec::new();
         for _ in 0..count {
             let to = g.usize(0..1 << 20);
+            let job = g.u64(0..u64::MAX);
             let bag = random_uts_bag(g);
             let msg = random_msg(g, bag);
-            wire::encode_data_frame_into(to, &msg, &mut stream);
-            msgs.push((to, msg));
+            wire::encode_data_frame_into(to, job, &msg, &mut stream);
+            msgs.push((to, job, msg));
         }
         // Feed it in arbitrary chunks (1..=17 bytes, including splits
         // inside length prefixes) and require the exact frame sequence.
@@ -432,10 +448,10 @@ fn prop_wire_bytes_pin_sim_accounting_to_codec() {
         let bag = random_uts_bag(g);
         let msg = random_msg(g, bag);
         let encoded = wire::encode_frame(&msg).len();
-        // The mesh data frame adds exactly the destination prefix the
-        // simulator charges on cross-node sends.
-        let framed = wire::frame(wire::encode_data_frame_body(3, &msg)).len();
-        assert_eq!(framed, encoded + wire::DATA_ROUTE_BYTES);
+        // The mesh data frame adds exactly the destination and job-epoch
+        // prefix words the simulator charges on cross-node sends.
+        let framed = wire::frame(wire::encode_data_frame_body(3, 0, &msg)).len();
+        assert_eq!(framed, encoded + wire::DATA_ROUTE_BYTES + wire::DATA_JOB_BYTES);
         match &msg {
             Msg::Loot { bag: Some(b), .. } => {
                 assert_eq!(

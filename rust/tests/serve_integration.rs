@@ -1,0 +1,221 @@
+//! Resident-fleet (`glb serve`) integration tests.
+//!
+//! A fleet boots **once** and then serves a stream of jobs submitted
+//! over the client plane ([`SubmitClient`] speaking `Ctrl::Submit` /
+//! `Ctrl::JobResult` to rank 0). These tests run every rank as an
+//! in-process thread — the ranks still talk real localhost TCP through
+//! the same bootstrap, mesh, and control links as a process fleet, but
+//! a single process lets the tests observe process-global audit
+//! counters ([`cross_epoch_frames`]) and per-rank [`JobReport`]s across
+//! the whole fleet.
+//!
+//! What must hold:
+//!
+//! - results match one-shot runs (UTS counts the sequential tree
+//!   bit-identically, fib computes fib(n) exactly, BC reductions agree
+//!   within the repo-wide float tolerance — their f64 summation
+//!   grouping follows the steal schedule),
+//! - back-to-back jobs never cross-steal or cross-credit: the
+//!   cross-epoch audit counter stays zero and loot conservation holds
+//!   *per epoch* (fleet-wide bags sent == bags received within every
+//!   job),
+//! - the fleet survives hundreds of queued jobs without restarting a
+//!   rank (the soak test, `--ignored`, exercised by CI).
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use glb::apps::uts::{sequential_count, UtsParams};
+use glb::glb::GlbParams;
+use glb::place::{
+    cross_epoch_frames, serve_with, JobSpec, ServiceResult, SocketRunOpts, SubmitClient,
+};
+use glb::testkit::fleet;
+
+const CONNECT_DEADLINE: Duration = Duration::from_secs(30);
+
+fn up() -> UtsParams {
+    UtsParams { b0: 4.0, seed: 19, max_depth: 6 }
+}
+
+fn params() -> GlbParams {
+    GlbParams::default().with_n(64).with_l(2)
+}
+
+fn fib(n: u64) -> u64 {
+    let (mut a, mut b) = (0u64, 1u64);
+    for _ in 0..n {
+        (a, b) = (b, a + b);
+    }
+    a
+}
+
+/// One collected per-rank, per-job observation.
+struct Obs {
+    epoch: u64,
+    rank: usize,
+    loot_sent: u64,
+    loot_recv: u64,
+}
+
+/// Boot an in-process fleet of `ranks` serve threads on `port` and
+/// return their join handles plus the shared observation log.
+fn spawn_fleet(ranks: usize, port: u16) -> (Vec<thread::JoinHandle<()>>, Arc<Mutex<Vec<Obs>>>) {
+    let log: Arc<Mutex<Vec<Obs>>> = Arc::new(Mutex::new(Vec::new()));
+    let handles = (0..ranks)
+        .map(|rank| {
+            let log = Arc::clone(&log);
+            thread::spawn(move || {
+                let opts = SocketRunOpts {
+                    rank,
+                    ranks,
+                    port,
+                    host: "127.0.0.1".to_string(),
+                    ..Default::default()
+                };
+                serve_with(&opts, |report| {
+                    log.lock().unwrap().push(Obs {
+                        epoch: report.epoch,
+                        rank: report.rank,
+                        loot_sent: report.stats.loot_bags_sent,
+                        loot_recv: report.stats.loot_bags_received,
+                    });
+                })
+                .unwrap_or_else(|e| panic!("serve rank {rank} failed: {e}"));
+            })
+        })
+        .collect();
+    (handles, log)
+}
+
+/// Dial rank 0's client plane, retrying while the fleet bootstraps.
+fn connect(port: u16) -> SubmitClient {
+    let deadline = Instant::now() + CONNECT_DEADLINE;
+    loop {
+        match SubmitClient::connect("127.0.0.1", port, CONNECT_DEADLINE) {
+            Ok(c) => return c,
+            Err(_) if Instant::now() < deadline => thread::sleep(Duration::from_millis(20)),
+            Err(e) => panic!("submit client could not reach the fleet: {e}"),
+        }
+    }
+}
+
+/// Fleet-wide loot conservation *within* every epoch, and full rank
+/// participation in every job. A frame leaking across jobs would break
+/// the per-epoch balance (its bag is sent in one epoch, merged — or
+/// dropped — in another).
+fn assert_epoch_isolation(log: &[Obs], ranks: usize, jobs: u64) {
+    for epoch in 1..=jobs {
+        let in_epoch: Vec<&Obs> = log.iter().filter(|o| o.epoch == epoch).collect();
+        assert_eq!(in_epoch.len(), ranks, "every rank reports exactly once for job {epoch}");
+        let mut seen: Vec<usize> = in_epoch.iter().map(|o| o.rank).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..ranks).collect::<Vec<_>>());
+        let sent: u64 = in_epoch.iter().map(|o| o.loot_sent).sum();
+        let recv: u64 = in_epoch.iter().map(|o| o.loot_recv).sum();
+        assert_eq!(sent, recv, "loot conservation within job {epoch}");
+    }
+    assert_eq!(log.len() as u64, jobs * ranks as u64, "no reports outside the submitted epochs");
+}
+
+#[test]
+fn back_to_back_jobs_are_epoch_isolated_and_bit_identical() {
+    let port = fleet::free_port();
+    let (handles, log) = spawn_fleet(2, port);
+    let mut client = connect(port);
+
+    // Two identical UTS jobs back to back, then a fib chaser: the
+    // counts must repeat bit-for-bit and match the sequential tree.
+    let spec = JobSpec::uts(up(), params());
+    let expect = sequential_count(&up());
+    for job in 1..=2u64 {
+        match client.submit(&spec).expect("submit uts") {
+            ServiceResult::U64(v) => {
+                assert_eq!(v, expect, "job {job} must count the sequential tree")
+            }
+            other => panic!("uts returned {other:?}"),
+        }
+    }
+    match client.submit(&JobSpec::fib(20, params())).expect("submit fib") {
+        ServiceResult::U64(v) => assert_eq!(v, fib(20)),
+        other => panic!("fib returned {other:?}"),
+    }
+
+    client.shutdown().expect("shutdown fleet");
+    for h in handles {
+        h.join().expect("serve thread panicked");
+    }
+
+    let log = log.lock().unwrap();
+    assert_epoch_isolation(&log, 2, 3);
+    assert_eq!(cross_epoch_frames(), 0, "no frame may land outside its own job epoch");
+}
+
+#[test]
+#[ignore = "many-jobs soak: run explicitly via `--ignored` (see CI serve-smoke)"]
+fn resident_fleet_soaks_hundreds_of_mixed_jobs() {
+    let port = fleet::free_port();
+    let ranks = 4;
+    let (handles, log) = spawn_fleet(ranks, port);
+    let mut client = connect(port);
+
+    let uts = JobSpec::uts(up(), params());
+    let fib_spec = JobSpec::fib(20, params());
+    let bc = JobSpec::bc(7, params());
+    let uts_expect = sequential_count(&up());
+    let fib_expect = fib(20);
+
+    // Round-robin through the three apps for 120 jobs on one warm
+    // fleet. Every UTS/fib answer has a closed-form reference; BC's
+    // f64 summation grouping follows the steal schedule, so its
+    // reductions agree within the repo-wide relative tolerance rather
+    // than bit-for-bit — a cross-job leak would still show up as a
+    // wildly drifting vector (a bag merged into the wrong job's run).
+    let mut bc_reference: Option<Vec<f64>> = None;
+    let jobs = 120u64;
+    for job in 1..=jobs {
+        match job % 3 {
+            0 => match client.submit(&bc).expect("submit bc") {
+                ServiceResult::VecF64(v) => {
+                    assert!(!v.is_empty(), "job {job}: empty BC reduction");
+                    match &bc_reference {
+                        None => bc_reference = Some(v),
+                        Some(first) => {
+                            assert_eq!(v.len(), first.len(), "job {job}");
+                            for (i, (a, b)) in v.iter().zip(first).enumerate() {
+                                let scale = b.abs().max(1e-12);
+                                assert!(
+                                    ((a - b) / scale).abs() < 1e-3,
+                                    "job {job}: BC[{i}] drifted: {a} vs {b}"
+                                );
+                            }
+                        }
+                    }
+                }
+                other => panic!("job {job}: bc returned {other:?}"),
+            },
+            1 => match client.submit(&uts).expect("submit uts") {
+                ServiceResult::U64(v) => assert_eq!(v, uts_expect, "job {job}"),
+                other => panic!("job {job}: uts returned {other:?}"),
+            },
+            _ => match client.submit(&fib_spec).expect("submit fib") {
+                ServiceResult::U64(v) => assert_eq!(v, fib_expect, "job {job}"),
+                other => panic!("job {job}: fib returned {other:?}"),
+            },
+        }
+    }
+
+    client.shutdown().expect("shutdown fleet");
+    for h in handles {
+        h.join().expect("serve thread panicked");
+    }
+
+    let log = log.lock().unwrap();
+    assert_epoch_isolation(&log, ranks, jobs);
+    assert_eq!(
+        cross_epoch_frames(),
+        0,
+        "no frame may land outside its own job epoch across {jobs} jobs"
+    );
+}
